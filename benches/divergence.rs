@@ -1,0 +1,40 @@
+//! `cargo bench --bench divergence` — cost of the analysis-path primitives:
+//! full proposal expansion, KL / Rényi computation, gradient-bias estimate.
+
+use midx::sampler::{self, SamplerKind, SamplerParams};
+use midx::stats::divergence::{empirical_kl, renyi_d2, softmax_dist};
+use midx::util::bench::bench_ms;
+use midx::util::check::rand_matrix;
+use midx::util::Rng;
+
+fn main() {
+    let (n, d) = (5_000usize, 64usize);
+    let mut rng = Rng::new(5);
+    let table = rand_matrix(&mut rng, n, d, 0.3);
+    let z = rand_matrix(&mut rng, 1, d, 0.3);
+    let freqs: Vec<f32> = (0..n).map(|i| 1.0 / (i + 1) as f32).collect();
+
+    bench_ms("stats/softmax_dist/n5000", 200, || {
+        let _ = softmax_dist(&z, &table, n, d);
+    });
+
+    let p = softmax_dist(&z, &table, n, d);
+    let q = vec![1.0 / n as f32; n];
+    bench_ms("stats/empirical_kl/n5000", 100, || {
+        let _ = empirical_kl(&q, &p);
+    });
+    bench_ms("stats/renyi_d2/n5000", 100, || {
+        let _ = renyi_d2(&p, &q);
+    });
+
+    for kind in [SamplerKind::MidxPq, SamplerKind::MidxRq, SamplerKind::Sphere] {
+        let params =
+            SamplerParams { k_codewords: 64, frequencies: freqs.clone(), ..Default::default() };
+        let mut s = sampler::build(kind, n, &params);
+        s.rebuild(&table, n, d, &mut rng);
+        let mut out = vec![0.0f32; n];
+        bench_ms(&format!("stats/proposal_dist/{}", kind.name()), 200, || {
+            s.proposal_dist(&z, &mut out);
+        });
+    }
+}

@@ -1,0 +1,36 @@
+//! `cargo bench --bench quantization` — index-construction cost: k-means,
+//! PQ/RQ builds and inverted multi-index assembly (the per-epoch rebuild on
+//! the training path — paper §4.4 initialization column of Table 1).
+
+use midx::index::InvertedMultiIndex;
+use midx::quant::{kmeans, ProductQuantizer, Quantizer, ResidualQuantizer};
+use midx::util::bench::bench_ms;
+use midx::util::check::rand_matrix;
+use midx::util::Rng;
+
+fn main() {
+    let d = 64;
+    let mut rng = Rng::new(3);
+
+    for &n in &[2_000usize, 10_000] {
+        let table = rand_matrix(&mut rng, n, d, 0.3);
+        for &k in &[32usize, 64] {
+            let mut seed = Rng::new(11);
+            bench_ms(&format!("kmeans/n{n}/k{k}"), 300, || {
+                let _ = kmeans(&table, n, d, k, 5, &mut seed);
+            });
+            let mut seed = Rng::new(11);
+            bench_ms(&format!("pq_build/n{n}/k{k}"), 300, || {
+                let _ = ProductQuantizer::build(&table, n, d, k, 5, &mut seed);
+            });
+            let mut seed = Rng::new(11);
+            bench_ms(&format!("rq_build/n{n}/k{k}"), 300, || {
+                let _ = ResidualQuantizer::build(&table, n, d, k, 5, &mut seed);
+            });
+            let pq = ProductQuantizer::build(&table, n, d, k, 5, &mut Rng::new(11));
+            bench_ms(&format!("index_build/n{n}/k{k}"), 100, || {
+                let _ = InvertedMultiIndex::build(&pq, n);
+            });
+        }
+    }
+}

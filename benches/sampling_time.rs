@@ -1,0 +1,43 @@
+//! `cargo bench --bench sampling_time` — per-sampler draw latency across N
+//! (the micro-benchmark behind Figure 6 / Table 1). In-tree harness; prints
+//! `bench <name> median=… mean=…` lines.
+
+use midx::sampler::{self, SamplerKind, SamplerParams};
+use midx::util::bench::bench_ms;
+use midx::util::check::rand_matrix;
+use midx::util::Rng;
+
+fn main() {
+    let d = 64;
+    let m = 100;
+    let mut rng = Rng::new(1);
+
+    for &n in &[1_000usize, 10_000, 100_000] {
+        let table = rand_matrix(&mut rng, n, d, 0.3);
+        let z = rand_matrix(&mut rng, 1, d, 0.3);
+        let freqs: Vec<f32> = (0..n).map(|i| 1.0 / (i + 1) as f32).collect();
+        for kind in [
+            SamplerKind::Uniform,
+            SamplerKind::Unigram,
+            SamplerKind::Lsh,
+            SamplerKind::Sphere,
+            SamplerKind::Rff,
+            SamplerKind::MidxPq,
+            SamplerKind::MidxRq,
+        ] {
+            let params = SamplerParams {
+                k_codewords: 64,
+                frequencies: freqs.clone(),
+                ..Default::default()
+            };
+            let mut s = sampler::build(kind, n, &params);
+            s.rebuild(&table, n, d, &mut rng);
+            let mut ids = vec![0u32; m];
+            let mut lq = vec![0.0f32; m];
+            let mut local_rng = Rng::new(7);
+            bench_ms(&format!("sample/{}/n{}", kind.name(), n), 120, || {
+                s.sample_into(&z, u32::MAX, &mut local_rng, &mut ids, &mut lq);
+            });
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! `cargo bench --bench train_step` — end-to-end training-step latency per
+//! sampler on the real artifacts (the paper's headline efficiency claim:
+//! sampled steps with MIDX are far cheaper than Full, and MIDX sampling
+//! itself is cheap relative to the XLA step).
+//!
+//! Requires `make artifacts`; skips gracefully otherwise.
+
+use midx::coordinator::{build_sampler, build_task, ExperimentSpec};
+use midx::runtime::load_model;
+use midx::sampler::SamplerKind;
+use midx::train::{TrainConfig, Trainer};
+use midx::util::bench::time_once;
+use midx::util::Rng;
+
+fn main() {
+    if !std::path::Path::new("artifacts/index.json").exists() {
+        eprintln!("skipping train_step bench: run `make artifacts` first");
+        return;
+    }
+    let model = "lm_ptb_lstm";
+    for sampler in [
+        None,
+        Some(SamplerKind::Uniform),
+        Some(SamplerKind::Sphere),
+        Some(SamplerKind::MidxPq),
+        Some(SamplerKind::MidxRq),
+    ] {
+        let spec = ExperimentSpec::new(model, sampler);
+        let manifest = load_model(model).unwrap();
+        let task = build_task(&manifest, spec.dataset_seed).unwrap();
+        let s = build_sampler(&spec, &manifest, &task);
+        let label = spec.sampler_label();
+        let mut trainer = Trainer::new(manifest, s, TrainConfig::default()).unwrap();
+        trainer.rebuild_sampler();
+
+        let mut rng = Rng::new(1);
+        // warmup (compilation already done at load; first run warms buffers)
+        let batch = task.train_batch(&mut rng);
+        trainer.train_on(&batch).unwrap();
+
+        let steps = 20;
+        let (_, ns) = time_once(&format!("train_step/{label}/{steps}steps"), || {
+            for _ in 0..steps {
+                let b = task.train_batch(&mut rng);
+                trainer.train_on(&b).unwrap();
+            }
+        });
+        let t = trainer.timing();
+        println!(
+            "  breakdown {label}: {:.2} ms/step (encode {:.2} + sample {:.2} + xla-step {:.2} + adam {:.2})",
+            ns / 1e6 / steps as f64,
+            t.encode_s * 1e3 / t.steps as f64,
+            t.sample_s * 1e3 / t.steps as f64,
+            t.step_s * 1e3 / t.steps as f64,
+            t.update_s * 1e3 / t.steps as f64,
+        );
+    }
+}

@@ -1,0 +1,58 @@
+//! Quickstart — the end-to-end driver: train a language model with the
+//! MIDX-rq sampler against the Full-softmax and Uniform baselines on the
+//! synthetic PTB corpus, and print the loss curves + final perplexities.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Everything after `make artifacts` is pure rust + PJRT: the encoder
+//! forward, the sampled-softmax loss (through the Pallas-lowered HLO), the
+//! gradients, the Adam update and the MIDX index maintenance.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use midx::coordinator::{build_sampler, build_task, fmt, ExperimentSpec, Table};
+use midx::runtime::load_model;
+use midx::sampler::SamplerKind;
+use midx::train::{TrainConfig, Trainer};
+
+fn main() -> Result<()> {
+    let model = "lm_ptb_lstm";
+    let cfg = TrainConfig {
+        epochs: 4,
+        steps_per_epoch: 100,
+        eval_cap: 12,
+        verbose: true,
+        ..TrainConfig::default()
+    };
+
+    let mut table = Table::new(
+        "quickstart — lm_ptb_lstm, 4 epochs × 100 steps",
+        &["sampler", "epoch-0 loss", "final loss", "test ppl", "ms/step", "sample ms/step"],
+    );
+
+    for sampler in [Some(SamplerKind::MidxRq), Some(SamplerKind::Uniform), None] {
+        let spec = ExperimentSpec::new(model, sampler);
+        let manifest = load_model(model)?;
+        let task = build_task(&manifest, spec.dataset_seed)?;
+        let s = build_sampler(&spec, &manifest, &task);
+        let label = spec.sampler_label();
+        println!("--- training with {label} ---");
+        let trainer = Trainer::new(manifest, s, cfg.clone())?;
+        let res = trainer.run(Arc::new(task))?;
+        table.row(vec![
+            label,
+            fmt(res.train_loss[0]),
+            fmt(*res.train_loss.last().unwrap()),
+            fmt(res.test.get("ppl").unwrap_or(f64::NAN)),
+            fmt(res.timing.per_step_ms()),
+            fmt(res.timing.sample_s * 1e3 / res.timing.steps.max(1) as f64),
+        ]);
+    }
+
+    print!("{}", table.render_text());
+    println!("\nmidx-rq should land close to full-softmax quality at a fraction of the per-step cost; uniform converges visibly slower (higher ppl).");
+    Ok(())
+}

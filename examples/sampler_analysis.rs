@@ -1,0 +1,89 @@
+//! Sampler analysis — no artifacts required. Exercises the sampler suite on
+//! synthetic embeddings and prints the theory-facing quantities of §5:
+//! KL(Q‖P), Rényi d₂(P‖Q), gradient bias vs the Theorem 6 bound, and raw
+//! sampling throughput.
+//!
+//! ```bash
+//! cargo run --release --example sampler_analysis
+//! ```
+
+use std::time::Instant;
+
+use anyhow::Result;
+use midx::coordinator::{fmt, Table};
+use midx::sampler::{self, SamplerKind, SamplerParams};
+use midx::stats::divergence::{empirical_kl, renyi_d2, softmax_dist};
+use midx::stats::grad_bias::grad_bias_estimate;
+use midx::util::check::rand_matrix;
+use midx::util::Rng;
+
+fn main() -> Result<()> {
+    let (n, d, m) = (2000usize, 32usize, 20usize);
+    let mut rng = Rng::new(2025);
+
+    // "trained-like" embeddings: clustered with a popularity-scaled norm
+    let centers = rand_matrix(&mut rng, 16, d, 0.8);
+    let mut table = vec![0.0f32; n * d];
+    for i in 0..n {
+        let c = i % 16;
+        let pop = 1.0 + 0.5 / (1.0 + i as f32 / 100.0);
+        for j in 0..d {
+            table[i * d + j] = (centers[c * d + j] + rng.normal_f32(0.15)) * pop;
+        }
+    }
+    let z = rand_matrix(&mut rng, 1, d, 0.6);
+    let freqs: Vec<f32> = (0..n).map(|i| 1.0 / (i + 1) as f32).collect();
+    let p = softmax_dist(&z, &table, n, d);
+
+    let mut t = Table::new(
+        &format!("sampler analysis (N={n}, D={d}, M={m}, clustered embeddings)"),
+        &["sampler", "KL(Q‖P)", "d₂(P‖Q)", "grad bias", "Thm6 bound", "µs/query"],
+    );
+
+    for kind in [
+        SamplerKind::Uniform,
+        SamplerKind::Unigram,
+        SamplerKind::Lsh,
+        SamplerKind::Sphere,
+        SamplerKind::Rff,
+        SamplerKind::MidxPq,
+        SamplerKind::MidxRq,
+        SamplerKind::ExactMidx,
+    ] {
+        let params = SamplerParams {
+            k_codewords: 32,
+            frequencies: freqs.clone(),
+            ..Default::default()
+        };
+        let mut s = sampler::build(kind, n, &params);
+        s.rebuild(&table, n, d, &mut rng);
+
+        let mut q = vec![0.0f32; n];
+        s.proposal_dist(&z, &mut q);
+        let kl = empirical_kl(&q, &p);
+        let d2 = renyi_d2(&p, &q);
+        let gb = grad_bias_estimate(s.as_mut(), &z, &table, n, d, m, 200, 0, &mut rng);
+
+        let mut ids = vec![0u32; m];
+        let mut lq = vec![0.0f32; m];
+        let t0 = Instant::now();
+        let reps = 200;
+        for _ in 0..reps {
+            s.sample_into(&z, u32::MAX, &mut rng, &mut ids, &mut lq);
+        }
+        let us = t0.elapsed().as_secs_f64() * 1e6 / reps as f64;
+
+        t.row(vec![
+            kind.name().into(),
+            fmt(kl),
+            fmt(d2),
+            fmt(gb.measured),
+            fmt(gb.bound),
+            fmt(us),
+        ]);
+    }
+
+    print!("{}", t.render_text());
+    println!("\nreading guide: exact-midx has KL≈0, d₂≈1 (it IS the softmax); midx-rq ≤ midx-pq ≤ static samplers in KL; measured bias ≤ Thm6 bound everywhere.");
+    Ok(())
+}

@@ -1,0 +1,175 @@
+"""AOT compile path: lower every experiment model to HLO text + manifest.
+
+Run once by ``make artifacts`` (no-op if up to date). Emits, per experiment
+config, a directory ``artifacts/<name>/`` containing:
+
+  encode.hlo.txt       z = enc(params, batch)                 (fwd only)
+  train_step.hlo.txt   (loss, grads…) — sampled softmax via the L1 kernel
+  full_step.hlo.txt    (loss, grads…) — O(N) full-softmax baseline (optional)
+  eval_scores.hlo.txt  z·Qᵀ full score matrix (metrics / stats)
+  manifest.json        param layout, input specs, dims — the rust-side ABI
+
+plus, for the flagship LM config, the MIDX-specific artifacts:
+  midx_probs.hlo.txt       joint codeword proposal via the Pallas kernel
+  codebook_pq/rq.hlo.txt   learnable-codebook step (paper §6.2.3)
+
+Interchange is HLO **text**, not ``.serialize()``: jax ≥ 0.5 emits protos
+with 64-bit instruction ids which xla_extension 0.5.1 (the version behind the
+``xla`` rust crate) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Experiment registry — one entry per model the benches/examples drive.
+# Sizes are scaled for the single-core CPU testbed (see DESIGN.md §2);
+# relative comparisons across samplers are preserved.
+# ---------------------------------------------------------------------------
+
+CONFIGS = [
+    # Language models (paper Table 4): synthetic-PTB (V=2000), synthetic-WT2 (V=4000)
+    M.ModelCfg("lm_ptb_lstm", "lstm", n_classes=2000, batch=16, seq_len=16, m_neg=20),
+    M.ModelCfg("lm_ptb_transformer", "transformer", n_classes=2000, batch=16, seq_len=16, m_neg=20),
+    M.ModelCfg("lm_wt2_lstm", "lstm", n_classes=4000, batch=16, seq_len=16, m_neg=20),
+    M.ModelCfg("lm_wt2_transformer", "transformer", n_classes=4000, batch=16, seq_len=16, m_neg=20),
+    # M-sweep variants for Figure 7 (M is baked into artifact shapes)
+    M.ModelCfg("lm_ptb_lstm_m5", "lstm", n_classes=2000, batch=16, seq_len=16, m_neg=5),
+    M.ModelCfg("lm_ptb_lstm_m10", "lstm", n_classes=2000, batch=16, seq_len=16, m_neg=10),
+    M.ModelCfg("lm_ptb_lstm_m50", "lstm", n_classes=2000, batch=16, seq_len=16, m_neg=50),
+    M.ModelCfg("lm_ptb_lstm_m100", "lstm", n_classes=2000, batch=16, seq_len=16, m_neg=100),
+    # Sequential recommenders (paper Table 7): SASRec == transformer, GRU4Rec == gru
+    M.ModelCfg("rec_ml_sasrec", "transformer", n_classes=3000, batch=16, seq_len=12, m_neg=32),
+    M.ModelCfg("rec_ml_gru", "gru", n_classes=3000, batch=16, seq_len=12, m_neg=32),
+    M.ModelCfg("rec_gowalla_sasrec", "transformer", n_classes=8000, batch=16, seq_len=12, m_neg=32, emit_full=False),
+    M.ModelCfg("rec_gowalla_gru", "gru", n_classes=8000, batch=16, seq_len=12, m_neg=32, emit_full=False),
+    M.ModelCfg("rec_amazon_sasrec", "transformer", n_classes=6000, batch=16, seq_len=12, m_neg=32, emit_full=False),
+    M.ModelCfg("rec_amazon_gru", "gru", n_classes=6000, batch=16, seq_len=12, m_neg=32, emit_full=False),
+    # Extreme classification (paper Table 9)
+    M.ModelCfg("xmc_amazoncat", "bag", n_classes=4000, batch=64, m_neg=64, bag_nnz=32, bag_features=4096),
+    M.ModelCfg("xmc_wiki", "bag", n_classes=12000, batch=64, m_neg=96, bag_nnz=32, bag_features=8192, emit_full=False),
+]
+
+# Config that also gets the MIDX kernel + learnable-codebook artifacts.
+FLAGSHIP = "lm_ptb_lstm"
+
+
+def lower_config(cfg: M.ModelCfg, out_root: pathlib.Path, verbose=True):
+    out = out_root / cfg.name
+    out.mkdir(parents=True, exist_ok=True)
+    params = M.example_params(cfg)
+    inputs = M.example_inputs(cfg)
+    sampling = M.example_sampling(cfg)
+
+    artifacts = {}
+
+    def emit(tag, fn, args):
+        t0 = time.time()
+        text = to_hlo_text(jax.jit(fn, keep_unused=True).lower(*args))
+        fname = f"{tag}.hlo.txt"
+        (out / fname).write_text(text)
+        artifacts[tag] = fname
+        if verbose:
+            print(f"  {cfg.name}/{fname}  ({len(text)//1024} KiB, {time.time()-t0:.1f}s)", flush=True)
+
+    emit("encode", M.make_encode_fn(cfg), params + inputs)
+    emit("train_step", M.make_train_step_fn(cfg), params + inputs + sampling)
+    emit("eval_scores", M.make_eval_scores_fn(cfg), params + inputs)
+    if cfg.emit_full:
+        emit("full_step", M.make_full_step_fn(cfg), params + inputs + sampling[:1])
+
+    if cfg.name == FLAGSHIP:
+        k, d, bq = cfg.k_codewords, cfg.d, cfg.bq
+        f32 = lambda s: jax.ShapeDtypeStruct(tuple(s), jax.numpy.float32)
+        emit(
+            "midx_probs",
+            M.make_midx_probs_fn(cfg, "pq"),
+            [f32([bq, d]), f32([k, d // 2]), f32([k, d // 2]), f32([k, k])],
+        )
+        n = cfg.n_classes
+        emit(
+            "codebook_pq",
+            M.make_codebook_step_fn(cfg, "pq"),
+            [f32([k, d // 2]), f32([k, d // 2]), f32([n, d]), f32([bq, d])],
+        )
+        emit(
+            "codebook_rq",
+            M.make_codebook_step_fn(cfg, "rq"),
+            [f32([k, d]), f32([k, d]), f32([n, d]), f32([bq, d])],
+        )
+
+    manifest = {
+        "name": cfg.name,
+        "arch": cfg.arch,
+        "dims": {
+            "n_classes": cfg.n_classes,
+            "d": cfg.d,
+            "hidden": cfg.hidden,
+            "layers": cfg.layers,
+            "heads": cfg.heads,
+            "ff": cfg.ff,
+            "seq_len": cfg.seq_len,
+            "batch": cfg.batch,
+            "m_neg": cfg.m_neg,
+            "bq": cfg.bq,
+            "bag_nnz": cfg.bag_nnz,
+            "bag_features": cfg.bag_features,
+            "k_codewords": cfg.k_codewords,
+        },
+        "params": M.param_specs(cfg),
+        "inputs": M.input_specs(cfg),
+        "sampling_inputs": [
+            {"name": "pos_ids", "dtype": "i32", "shape": [cfg.bq]},
+            {"name": "neg_ids", "dtype": "i32", "shape": [cfg.bq, cfg.m_neg]},
+            {"name": "log_q", "dtype": "f32", "shape": [cfg.bq, cfg.m_neg]},
+        ],
+        "artifacts": artifacts,
+    }
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts root")
+    ap.add_argument("--only", default=None, help="comma-separated config names")
+    args = ap.parse_args()
+
+    out_root = pathlib.Path(args.out)
+    out_root.mkdir(parents=True, exist_ok=True)
+    wanted = set(args.only.split(",")) if args.only else None
+
+    index = []
+    t0 = time.time()
+    for cfg in CONFIGS:
+        if wanted and cfg.name not in wanted:
+            continue
+        print(f"[aot] lowering {cfg.name} (arch={cfg.arch}, N={cfg.n_classes})", flush=True)
+        lower_config(cfg, out_root)
+        index.append(cfg.name)
+
+    if wanted is None:
+        (out_root / "index.json").write_text(json.dumps(index, indent=1))
+        (out_root / ".stamp").write_text(str(time.time()))
+    print(f"[aot] done: {len(index)} configs in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: fast-MIDX joint codeword proposal probabilities.
+
+Computes, for a batch of queries, the full ``[K, K]`` joint proposal table of
+paper Theorem 2:
+
+    Q(k1, k2 | z) ∝ exp(z1·c1_{k1}) · |Ω_{k1,k2}| · exp(z2·c2_{k2})
+
+This is the "sampling probabilities on the GPU" path the paper describes
+(§4.4): the scoring stage only touches the K×D codebooks, never the N×D class
+table, so it is O(K·D + K²) per query. The rust coordinator also carries a
+native implementation (`sampler/midx.rs`); integration tests check parity
+between the two.
+
+Tiling: grid over query tiles; the codebooks and the log-bucket-size table are
+small (K ≤ 128) and stay resident in VMEM across grid steps.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .sampled_softmax import _pick_tile
+
+
+def _joint_kernel(z1_ref, z2_ref, c1_ref, c2_ref, logw_ref, out_ref):
+    z1 = z1_ref[...]  # [TB, D1]
+    z2 = z2_ref[...]  # [TB, D2]
+    c1 = c1_ref[...]  # [K, D1]
+    c2 = c2_ref[...]  # [K, D2]
+    logw = logw_ref[...]  # [K, K]
+
+    s1 = jnp.dot(z1, c1.T)  # [TB, K]
+    s2 = jnp.dot(z2, c2.T)  # [TB, K]
+    logits = s1[:, :, None] + s2[:, None, :] + logw[None, :, :]  # [TB, K, K]
+
+    tb = logits.shape[0]
+    flat = logits.reshape(tb, -1)
+    flat = flat - jnp.max(flat, axis=1, keepdims=True)
+    e = jnp.exp(flat)
+    p = e / jnp.sum(e, axis=1, keepdims=True)
+    out_ref[...] = p.reshape(logits.shape)
+
+
+def midx_joint_probs(z1, z2, c1, c2, log_w):
+    """Joint proposal probabilities [B, K, K]; each query slice sums to 1.
+
+    Args:
+      z1: [B, D1], z2: [B, D2] query subvectors (product quantization splits
+          the query; residual quantization passes the same full vector twice).
+      c1: [K, D1], c2: [K, D2] codebooks.
+      log_w: [K, K] log bucket sizes (empty buckets: large negative).
+    """
+    b, d1 = z1.shape
+    d2 = z2.shape[1]
+    k = c1.shape[0]
+    tb = _pick_tile(b, preferred=32)
+    grid = (b // tb,)
+    return pl.pallas_call(
+        _joint_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, d1), lambda i: (i, 0)),
+            pl.BlockSpec((tb, d2), lambda i: (i, 0)),
+            pl.BlockSpec((k, d1), lambda i: (0, 0)),
+            pl.BlockSpec((k, d2), lambda i: (0, 0)),
+            pl.BlockSpec((k, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, k, k), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k, k), z1.dtype),
+        interpret=True,
+    )(z1, z2, c1, c2, log_w)

@@ -1,0 +1,402 @@
+"""L2: JAX model zoo — encoders + sampled/full softmax training steps.
+
+Build-time only: every function here is lowered once by ``aot.py`` to HLO
+text and executed from rust via PJRT. Python never runs on the training path.
+
+Model family (one per paper task):
+  * ``lstm`` / ``gru`` / ``transformer`` — sequence encoders used for the
+    language-model task (§6.2) and the sequential-recommendation task (§6.3;
+    SASRec == transformer encoder, GRU4Rec == gru encoder). Every position
+    predicts the next token/item, so the flattened query batch is B*T rows.
+  * ``bag`` — embedding-bag + MLP encoder over sparse BOW features for the
+    extreme-classification task (§6.4).
+
+Conventions shared with the rust side (see rust/src/runtime/manifest.rs):
+  * every lowered function takes ``(*params, *inputs)`` positionally, params
+    first, in the exact order of ``param_specs(cfg)``;
+  * the class-embedding table ``q_table [N, D]`` is always the LAST param;
+  * outputs are returned as a tuple (lowered with return_tuple=True).
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .kernels.sampled_softmax import sampled_softmax_loss
+from .kernels.codeword_scores import midx_joint_probs
+
+
+@dataclass
+class ModelCfg:
+    """Static shape/architecture configuration for one experiment model."""
+
+    name: str
+    arch: str  # "lstm" | "gru" | "transformer" | "bag"
+    n_classes: int  # vocab size (LM) / item count (rec) / label count (XMC)
+    d: int = 64  # query/class embedding dim
+    hidden: int = 64
+    layers: int = 2
+    heads: int = 4
+    ff: int = 128
+    seq_len: int = 16  # T (sequence models)
+    batch: int = 16  # B
+    m_neg: int = 20  # M sampled negatives
+    bag_nnz: int = 32  # S (bag encoder): max nonzeros per sample
+    bag_features: int = 4096  # hashed feature vocabulary (bag encoder)
+    k_codewords: int = 32  # K, for codebook_step / midx_probs artifacts
+    emit_full: bool = True  # emit the O(N) full-softmax baseline artifact
+
+    @property
+    def bq(self) -> int:
+        """Flattened query-batch size (rows of z)."""
+        if self.arch == "bag":
+            return self.batch
+        return self.batch * self.seq_len
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs — single source of truth for the rust parameter store
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelCfg) -> List[dict]:
+    """Ordered parameter descriptors: name, shape, init ('normal:<std>'|'zeros'|'ones')."""
+    d, h = cfg.d, cfg.hidden
+    specs: List[dict] = []
+
+    def p(name, shape, init=None):
+        if init is None:
+            fan_in = shape[0] if len(shape) > 1 else shape[-1]
+            init = f"normal:{1.0 / np.sqrt(max(fan_in, 1)):.6f}"
+        specs.append({"name": name, "shape": list(shape), "init": init})
+
+    if cfg.arch in ("lstm", "gru"):
+        ngates = 4 if cfg.arch == "lstm" else 3
+        p("tok_emb", (cfg.n_classes, d), f"normal:{1.0 / np.sqrt(d):.6f}")
+        for l in range(cfg.layers):
+            din = d if l == 0 else h
+            p(f"l{l}.wx", (din, ngates * h))
+            p(f"l{l}.wh", (h, ngates * h))
+            p(f"l{l}.b", (ngates * h,), "zeros")
+        p("w_out", (h, d))
+    elif cfg.arch == "transformer":
+        p("tok_emb", (cfg.n_classes, d), f"normal:{1.0 / np.sqrt(d):.6f}")
+        p("pos_emb", (cfg.seq_len, d), "normal:0.02")
+        for l in range(cfg.layers):
+            p(f"l{l}.ln1.g", (d,), "ones")
+            p(f"l{l}.ln1.b", (d,), "zeros")
+            p(f"l{l}.wqkv", (d, 3 * d))
+            p(f"l{l}.wo", (d, d))
+            p(f"l{l}.ln2.g", (d,), "ones")
+            p(f"l{l}.ln2.b", (d,), "zeros")
+            p(f"l{l}.w1", (d, cfg.ff))
+            p(f"l{l}.b1", (cfg.ff,), "zeros")
+            p(f"l{l}.w2", (cfg.ff, d))
+            p(f"l{l}.b2", (d,), "zeros")
+        p("lnf.g", (d,), "ones")
+        p("lnf.b", (d,), "zeros")
+    elif cfg.arch == "bag":
+        p("feat_emb", (cfg.bag_features, d), f"normal:{1.0 / np.sqrt(d):.6f}")
+        p("w1", (d, h))
+        p("b1", (h,), "zeros")
+        p("w2", (h, d))
+        p("b2", (d,), "zeros")
+    else:
+        raise ValueError(f"unknown arch {cfg.arch}")
+
+    # Class (output) embedding table — ALWAYS last, by convention.
+    p("q_table", (cfg.n_classes, d), f"normal:{1.0 / np.sqrt(d):.6f}")
+    return specs
+
+
+def input_specs(cfg: ModelCfg) -> List[dict]:
+    """Encoder input descriptors (excludes sampling inputs)."""
+    if cfg.arch == "bag":
+        return [
+            {"name": "feat_ids", "dtype": "i32", "shape": [cfg.batch, cfg.bag_nnz]},
+            {"name": "feat_vals", "dtype": "f32", "shape": [cfg.batch, cfg.bag_nnz]},
+        ]
+    return [{"name": "tokens", "dtype": "i32", "shape": [cfg.batch, cfg.seq_len]}]
+
+
+# ---------------------------------------------------------------------------
+# Encoders
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _lstm_layer(x, wx, wh, b, h0, c0):
+    """x: [B, T, Din] -> h_seq [B, T, H] via lax.scan over time."""
+    hdim = wh.shape[0]
+
+    def step(carry, xt):
+        h, c = carry
+        gates = xt @ wx + h @ wh + b  # [B, 4H]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    xs = jnp.swapaxes(x, 0, 1)  # [T, B, Din]
+    (_, _), hs = lax.scan(step, (h0, c0), xs)
+    del hdim
+    return jnp.swapaxes(hs, 0, 1)  # [B, T, H]
+
+
+def _gru_layer(x, wx, wh, b, h0):
+    def step(h, xt):
+        xg = xt @ wx + b  # [B, 3H]
+        hg = h @ wh
+        xr, xz, xn = jnp.split(xg, 3, axis=-1)
+        hr, hz, hn = jnp.split(hg, 3, axis=-1)
+        r = jax.nn.sigmoid(xr + hr)
+        u = jax.nn.sigmoid(xz + hz)
+        n = jnp.tanh(xn + r * hn)
+        h = (1.0 - u) * n + u * h
+        return h, h
+
+    xs = jnp.swapaxes(x, 0, 1)
+    _, hs = lax.scan(step, h0, xs)
+    return jnp.swapaxes(hs, 0, 1)
+
+
+def _attention(x, wqkv, wo, heads):
+    b, t, d = x.shape
+    dh = d // heads
+    qkv = x @ wqkv  # [B, T, 3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def split_heads(u):
+        return jnp.swapaxes(u.reshape(b, t, heads, dh), 1, 2)  # [B, H, T, dh]
+
+    q, k, v = split_heads(q), split_heads(k), split_heads(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(dh)
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    att = jnp.where(mask[None, None], att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = jnp.swapaxes(out, 1, 2).reshape(b, t, d)
+    return out @ wo
+
+
+def encode(cfg: ModelCfg, params: List[jnp.ndarray], inputs: Tuple[jnp.ndarray, ...]):
+    """Run the encoder; returns query embeddings z of shape [Bq, D].
+
+    ``params`` is the full ordered parameter list (including the trailing
+    q_table, which the encoder itself does not touch).
+    """
+    names = [s["name"] for s in param_specs(cfg)]
+    p = dict(zip(names, params))
+    d, h = cfg.d, cfg.hidden
+
+    if cfg.arch in ("lstm", "gru"):
+        (tokens,) = inputs
+        x = jnp.take(p["tok_emb"], tokens, axis=0)  # [B, T, D]
+        bsz = tokens.shape[0]
+        for l in range(cfg.layers):
+            if cfg.arch == "lstm":
+                h0 = jnp.zeros((bsz, h), x.dtype)
+                c0 = jnp.zeros((bsz, h), x.dtype)
+                x = _lstm_layer(x, p[f"l{l}.wx"], p[f"l{l}.wh"], p[f"l{l}.b"], h0, c0)
+            else:
+                h0 = jnp.zeros((bsz, h), x.dtype)
+                x = _gru_layer(x, p[f"l{l}.wx"], p[f"l{l}.wh"], p[f"l{l}.b"], h0)
+        z = x @ p["w_out"]  # [B, T, D]
+        return z.reshape(-1, d)
+
+    if cfg.arch == "transformer":
+        (tokens,) = inputs
+        x = jnp.take(p["tok_emb"], tokens, axis=0) + p["pos_emb"][None]
+        for l in range(cfg.layers):
+            x = x + _attention(
+                _layer_norm(x, p[f"l{l}.ln1.g"], p[f"l{l}.ln1.b"]),
+                p[f"l{l}.wqkv"],
+                p[f"l{l}.wo"],
+                cfg.heads,
+            )
+            hdd = _layer_norm(x, p[f"l{l}.ln2.g"], p[f"l{l}.ln2.b"])
+            hdd = jax.nn.relu(hdd @ p[f"l{l}.w1"] + p[f"l{l}.b1"])
+            x = x + hdd @ p[f"l{l}.w2"] + p[f"l{l}.b2"]
+        x = _layer_norm(x, p["lnf.g"], p["lnf.b"])
+        return x.reshape(-1, d)
+
+    if cfg.arch == "bag":
+        feat_ids, feat_vals = inputs
+        emb = jnp.take(p["feat_emb"], feat_ids, axis=0)  # [B, S, D]
+        bag = jnp.sum(emb * feat_vals[:, :, None], axis=1)  # [B, D]
+        hid = jax.nn.relu(bag @ p["w1"] + p["b1"])
+        return hid @ p["w2"] + p["b2"]
+
+    raise ValueError(cfg.arch)
+
+
+# ---------------------------------------------------------------------------
+# Lowerable entry points (each becomes one HLO artifact)
+# ---------------------------------------------------------------------------
+
+
+def make_encode_fn(cfg: ModelCfg):
+    np_ = len(param_specs(cfg))
+
+    def fn(*args):
+        params, inputs = list(args[:np_]), tuple(args[np_:])
+        return (encode(cfg, params, inputs),)
+
+    return fn
+
+
+def make_train_step_fn(cfg: ModelCfg):
+    """(params…, inputs…, pos_ids, neg_ids, log_q) -> (loss, grads…).
+
+    The sampled-softmax loss runs through the L1 Pallas kernel (custom_vjp),
+    so the hand-written backward kernel is on the lowered gradient path.
+    """
+    np_ = len(param_specs(cfg))
+    ni = len(input_specs(cfg))
+
+    def fn(*args):
+        params = list(args[:np_])
+        inputs = tuple(args[np_ : np_ + ni])
+        pos_ids, neg_ids, log_q = args[np_ + ni :]
+
+        def loss_fn(ps):
+            z = encode(cfg, ps, inputs)  # [Bq, D]
+            q_table = ps[-1]
+            pos_e = jnp.take(q_table, pos_ids, axis=0)
+            neg_e = jnp.take(q_table, neg_ids, axis=0)
+            per_query = sampled_softmax_loss(z, pos_e, neg_e, log_q)
+            return jnp.mean(per_query)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        return (loss, *grads)
+
+    return fn
+
+
+def make_full_step_fn(cfg: ModelCfg):
+    """Full-softmax baseline: O(N) partition function per query."""
+    np_ = len(param_specs(cfg))
+    ni = len(input_specs(cfg))
+
+    def fn(*args):
+        params = list(args[:np_])
+        inputs = tuple(args[np_ : np_ + ni])
+        (pos_ids,) = args[np_ + ni :]
+
+        def loss_fn(ps):
+            z = encode(cfg, ps, inputs)
+            scores = z @ ps[-1].T  # [Bq, N]
+            lse = jax.nn.logsumexp(scores, axis=1)
+            o_pos = jnp.take_along_axis(scores, pos_ids[:, None], axis=1)[:, 0]
+            return jnp.mean(lse - o_pos)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        return (loss, *grads)
+
+    return fn
+
+
+def make_eval_scores_fn(cfg: ModelCfg):
+    """(params…, inputs…) -> full score matrix z·Qᵀ [Bq, N] (eval only)."""
+    np_ = len(param_specs(cfg))
+
+    def fn(*args):
+        params, inputs = list(args[:np_]), tuple(args[np_:])
+        z = encode(cfg, params, inputs)
+        return (z @ params[-1].T,)
+
+    return fn
+
+
+def make_midx_probs_fn(cfg: ModelCfg, quantizer: str = "pq"):
+    """(z, c1, c2, log_w) -> joint proposal [Bq, K, K] via the L1 kernel.
+
+    pq: the query is split into two halves to match the split codebooks.
+    rq: both stages score the full query against full-dimension codebooks.
+    """
+
+    def fn(z, c1, c2, log_w):
+        if quantizer == "pq":
+            half = cfg.d // 2
+            z1, z2 = z[:, :half], z[:, half:]
+        else:
+            z1, z2 = z, z
+        return (midx_joint_probs(z1, z2, c1, c2, log_w),)
+
+    return fn
+
+
+def make_codebook_step_fn(cfg: ModelCfg, quantizer: str = "pq"):
+    """Learnable-codebook objective (paper §6.2.3): recon + KL losses.
+
+    (c1, c2, q_table, z) -> (total_loss, kl_loss, recon_loss, g_c1, g_c2)
+
+    Codewords are treated as trainable parameters; q_table and z arrive as
+    constants (stop-gradient semantics — they are inputs, not params).
+    """
+
+    def soft_assign(x, c):
+        w = jax.nn.softmax(x @ c.T, axis=1)  # [N, K]
+        return w @ c  # [N, Dc]
+
+    def fn(c1, c2, q_table, z):
+        def losses(cs):
+            c1_, c2_ = cs
+            if quantizer == "pq":
+                half = cfg.d // 2
+                qhat = jnp.concatenate(
+                    [soft_assign(q_table[:, :half], c1_), soft_assign(q_table[:, half:], c2_)],
+                    axis=1,
+                )
+            else:
+                qhat1 = soft_assign(q_table, c1_)
+                qhat = qhat1 + soft_assign(q_table - qhat1, c2_)
+            recon = jnp.mean(jnp.sum((qhat - q_table) ** 2, axis=1))
+            p_log = jax.nn.log_softmax(z @ q_table.T, axis=1)  # [Bq, N]
+            p = jnp.exp(p_log)
+            ph_log = jax.nn.log_softmax(z @ qhat.T, axis=1)
+            kl = jnp.mean(jnp.sum(p * (p_log - ph_log), axis=1))
+            return recon + kl, (kl, recon)
+
+        (total, (kl, recon)), grads = jax.value_and_grad(losses, has_aux=True)((c1, c2))
+        return (total, kl, recon, grads[0], grads[1])
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Example-argument builders (for jax.jit(...).lower(...))
+# ---------------------------------------------------------------------------
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def example_params(cfg: ModelCfg):
+    return [_spec(s["shape"]) for s in param_specs(cfg)]
+
+
+def example_inputs(cfg: ModelCfg):
+    out = []
+    for s in input_specs(cfg):
+        out.append(_spec(s["shape"], jnp.int32 if s["dtype"] == "i32" else jnp.float32))
+    return out
+
+
+def example_sampling(cfg: ModelCfg):
+    bq, m = cfg.bq, cfg.m_neg
+    return [
+        _spec([bq], jnp.int32),  # pos_ids
+        _spec([bq, m], jnp.int32),  # neg_ids
+        _spec([bq, m], jnp.float32),  # log_q
+    ]

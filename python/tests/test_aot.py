@@ -1,0 +1,72 @@
+"""AOT emission checks: HLO text well-formedness + manifest/ABI consistency."""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "index.json").exists(), reason="run `make artifacts` first"
+)
+
+
+def configs():
+    index = json.loads((ART / "index.json").read_text())
+    return [c for c in aot.CONFIGS if c.name in index]
+
+
+def test_index_lists_all_configs():
+    index = json.loads((ART / "index.json").read_text())
+    assert set(index) == {c.name for c in aot.CONFIGS}
+
+
+@pytest.mark.parametrize("cfg", configs(), ids=lambda c: c.name)
+def test_manifest_matches_model(cfg):
+    man = json.loads((ART / cfg.name / "manifest.json").read_text())
+    assert man["arch"] == cfg.arch
+    assert man["dims"]["n_classes"] == cfg.n_classes
+    assert man["dims"]["bq"] == cfg.bq
+    specs = M.param_specs(cfg)
+    assert [s["name"] for s in man["params"]] == [s["name"] for s in specs]
+    assert [s["shape"] for s in man["params"]] == [s["shape"] for s in specs]
+    assert man["params"][-1]["name"] == "q_table"
+    # every listed artifact file exists and looks like HLO text
+    for tag, fname in man["artifacts"].items():
+        text = (ART / cfg.name / fname).read_text()
+        assert "ENTRY" in text and "HloModule" in text, f"{cfg.name}/{tag}"
+
+
+@pytest.mark.parametrize("cfg", configs(), ids=lambda c: c.name)
+def test_train_step_param_count(cfg):
+    """train_step HLO must take exactly |params| + |inputs| + 3 parameters."""
+    man = json.loads((ART / cfg.name / "manifest.json").read_text())
+    text = (ART / cfg.name / man["artifacts"]["train_step"]).read_text()
+    want = len(man["params"]) + len(man["inputs"]) + 3
+    # count parameter declarations in the entry computation
+    entry = text[text.index("ENTRY") :]
+    n_params = entry.count("parameter(")
+    assert n_params == want, f"{cfg.name}: {n_params} != {want}"
+
+
+def test_full_step_emitted_where_promised():
+    for cfg in configs():
+        man = json.loads((ART / cfg.name / "manifest.json").read_text())
+        assert ("full_step" in man["artifacts"]) == cfg.emit_full
+
+
+def test_init_specs_parse():
+    for cfg in configs():
+        man = json.loads((ART / cfg.name / "manifest.json").read_text())
+        for s in man["params"]:
+            init = s["init"]
+            if init.startswith("normal:"):
+                assert float(init.split(":")[1]) > 0
+            else:
+                assert init in ("zeros", "ones")
+            assert int(np.prod(s["shape"])) > 0

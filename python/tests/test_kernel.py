@@ -1,0 +1,213 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes; explicit tests pin down gradients, numerical
+stability, and the importance-sampling correction semantics.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.codeword_scores import midx_joint_probs
+from compile.kernels.sampled_softmax import (
+    _pick_tile,
+    sampled_softmax_loss,
+    sampled_softmax_probs,
+)
+
+RTOL, ATOL = 1e-4, 1e-5
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+def make_case(seed, b, m, d):
+    rng = np.random.default_rng(seed)
+    z = _rand(rng, b, d)
+    pos = _rand(rng, b, d)
+    neg = _rand(rng, b, m, d)
+    # plausible log proposal probs (log of a normalized-ish distribution)
+    log_q = jnp.asarray(rng.uniform(-8.0, -1.0, size=(b, m)), jnp.float32)
+    return z, pos, neg, log_q
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 96),
+    m=st.integers(1, 40),
+    d=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fwd_matches_ref_hypothesis(b, m, d, seed):
+    z, pos, neg, log_q = make_case(seed, b, m, d)
+    got = sampled_softmax_loss(z, pos, neg, log_q)
+    want = ref.sampled_softmax_loss_ref(z, pos, neg, log_q)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("b,m,d", [(1, 1, 1), (64, 20, 64), (33, 7, 17), (256, 100, 64)])
+def test_fwd_matches_ref_fixed(b, m, d):
+    z, pos, neg, log_q = make_case(0, b, m, d)
+    got = sampled_softmax_loss(z, pos, neg, log_q)
+    want = ref.sampled_softmax_loss_ref(z, pos, neg, log_q)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_loss_nonnegative_lower_bound():
+    # loss = lse(o') - o_pos >= 0 since o_pos is one of the logits.
+    z, pos, neg, log_q = make_case(3, 128, 10, 32)
+    loss = sampled_softmax_loss(z, pos, neg, log_q)
+    assert float(jnp.min(loss)) >= -1e-6
+
+
+def test_probs_sum_to_one():
+    z, pos, neg, log_q = make_case(4, 64, 15, 24)
+    p = sampled_softmax_probs(z, pos, neg, log_q)
+    np.testing.assert_allclose(np.asarray(p.sum(axis=1)), 1.0, rtol=1e-5)
+    assert p.shape == (64, 16)
+
+
+def test_numerical_stability_large_logits():
+    rng = np.random.default_rng(7)
+    z = _rand(rng, 16, 8) * 50.0  # logits in the hundreds
+    pos = _rand(rng, 16, 8)
+    neg = _rand(rng, 16, 5, 8)
+    log_q = jnp.full((16, 5), -3.0, jnp.float32)
+    loss = sampled_softmax_loss(z, pos, neg, log_q)
+    assert bool(jnp.all(jnp.isfinite(loss)))
+    want = ref.sampled_softmax_loss_ref(z, pos, neg, log_q)
+    np.testing.assert_allclose(loss, want, rtol=1e-4, atol=1e-3)
+
+
+def test_correction_semantics():
+    """Doubling q of a negative must shift its corrected logit by -ln 2."""
+    z, pos, neg, log_q = make_case(9, 8, 4, 16)
+    base = ref.corrected_logits_ref(z, pos, neg, log_q)
+    bumped = ref.corrected_logits_ref(z, pos, neg, log_q + jnp.log(2.0))
+    np.testing.assert_allclose(bumped[:, 1:], base[:, 1:] - np.log(2.0), rtol=1e-5)
+    # positive logit untouched
+    np.testing.assert_allclose(bumped[:, 0], base[:, 0], rtol=1e-6)
+
+
+def test_uniform_proposal_recovers_full_softmax():
+    """With q uniform over all N classes and the negatives being ALL classes,
+    the sampled loss equals the full softmax loss (self-normalization)."""
+    rng = np.random.default_rng(11)
+    n, d, b = 32, 8, 4
+    q_table = _rand(rng, n, d)
+    z = _rand(rng, b, d)
+    pos_ids = jnp.asarray(rng.integers(0, n, size=b), jnp.int32)
+    neg_ids = jnp.tile(jnp.arange(n, dtype=jnp.int32)[None], (b, 1))
+    log_q = jnp.full((b, n), -np.log(n), jnp.float32)
+    pos_e = q_table[pos_ids]
+    neg_e = q_table[neg_ids]
+    sampled = sampled_softmax_loss(z, pos_e, neg_e, log_q)
+    # o'_j = o_j - ln(N * 1/N) = o_j, and the duplicated positive adds
+    # exp(o_pos) once more: lse([o_pos, o_1..o_N]) vs lse([o_1..o_N]).
+    scores = z @ q_table.T
+    o_pos = jnp.take_along_axis(scores, pos_ids[:, None], 1)[:, 0]
+    full = ref._lse(jnp.concatenate([o_pos[:, None], scores], axis=1)) - o_pos
+    np.testing.assert_allclose(sampled, full, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# backward (custom_vjp kernel vs jax.grad of the oracle)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 48),
+    m=st.integers(1, 16),
+    d=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bwd_matches_ref_hypothesis(b, m, d, seed):
+    z, pos, neg, log_q = make_case(seed, b, m, d)
+    f_kernel = lambda *a: jnp.mean(sampled_softmax_loss(*a))
+    f_ref = lambda *a: jnp.mean(ref.sampled_softmax_loss_ref(*a))
+    g_kernel = jax.grad(f_kernel, argnums=(0, 1, 2))(z, pos, neg, log_q)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(z, pos, neg, log_q)
+    for a, b_ in zip(g_kernel, g_ref):
+        np.testing.assert_allclose(a, b_, rtol=RTOL, atol=ATOL)
+
+
+def test_bwd_weighted_cotangent():
+    """Non-uniform upstream cotangents must be handled per-row."""
+    z, pos, neg, log_q = make_case(21, 12, 6, 10)
+    w = jnp.asarray(np.random.default_rng(5).uniform(0.1, 2.0, size=12), jnp.float32)
+    f_kernel = lambda *a: jnp.sum(w * sampled_softmax_loss(*a))
+    f_ref = lambda *a: jnp.sum(w * ref.sampled_softmax_loss_ref(*a))
+    g_kernel = jax.grad(f_kernel, argnums=(0, 1, 2))(z, pos, neg, log_q)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(z, pos, neg, log_q)
+    for a, b_ in zip(g_kernel, g_ref):
+        np.testing.assert_allclose(a, b_, rtol=RTOL, atol=ATOL)
+
+
+def test_bwd_finite_difference():
+    """Kernel gradient vs central finite differences on a tiny case."""
+    z, pos, neg, log_q = make_case(31, 3, 2, 4)
+    f = lambda zz: float(jnp.sum(sampled_softmax_loss(zz, pos, neg, log_q)))
+    g = jax.grad(lambda zz: jnp.sum(sampled_softmax_loss(zz, pos, neg, log_q)))(z)
+    eps = 1e-3
+    z_np = np.asarray(z)
+    for idx in [(0, 0), (1, 2), (2, 3)]:
+        zp, zm = z_np.copy(), z_np.copy()
+        zp[idx] += eps
+        zm[idx] -= eps
+        fd = (f(jnp.asarray(zp)) - f(jnp.asarray(zm))) / (2 * eps)
+        assert abs(fd - float(g[idx])) < 5e-3
+
+
+# ---------------------------------------------------------------------------
+# MIDX joint-proposal kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 64),
+    k=st.integers(2, 32),
+    d=st.integers(2, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_joint_probs_match_ref(b, k, d, seed):
+    rng = np.random.default_rng(seed)
+    z1, z2 = _rand(rng, b, d), _rand(rng, b, d)
+    c1, c2 = _rand(rng, k, d), _rand(rng, k, d)
+    sizes = rng.integers(0, 10, size=(k, k)).astype(np.float64)
+    log_w = jnp.asarray(np.where(sizes > 0, np.log(np.maximum(sizes, 1)), -1e9), jnp.float32)
+    got = midx_joint_probs(z1, z2, c1, c2, log_w)
+    want = ref.midx_joint_probs_ref(z1, z2, c1, c2, log_w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got.sum(axis=(1, 2))), 1.0, rtol=1e-4)
+
+
+def test_joint_probs_empty_buckets_zero():
+    rng = np.random.default_rng(1)
+    k, d, b = 8, 6, 16
+    z1, z2 = _rand(rng, b, d), _rand(rng, b, d)
+    c1, c2 = _rand(rng, k, d), _rand(rng, k, d)
+    sizes = rng.integers(0, 4, size=(k, k))
+    log_w = jnp.asarray(np.where(sizes > 0, np.log(np.maximum(sizes, 1)), -1e9), jnp.float32)
+    p = np.asarray(midx_joint_probs(z1, z2, c1, c2, log_w))
+    assert np.all(p[:, sizes == 0] < 1e-12)
+
+
+def test_pick_tile():
+    assert _pick_tile(256) == 64
+    assert _pick_tile(48) == 48
+    assert _pick_tile(1) == 1
+    assert _pick_tile(97) == 1  # prime
+    for b in [1, 7, 33, 64, 97, 256, 300]:
+        t = _pick_tile(b)
+        assert b % t == 0 and 1 <= t <= 64

@@ -1,0 +1,43 @@
+//! Figure 2 — convergence: validation perplexity per epoch per sampler on
+//! the PTB-like corpus (LSTM).
+
+use anyhow::Result;
+
+use super::{run_cell, Budget};
+use crate::coordinator::{fmt, Table};
+
+pub fn run(budget: &Budget) -> Result<()> {
+    let model = "lm_ptb_lstm";
+    let mut t = Table::new(
+        "Figure 2 — validation ppl per epoch (lm_ptb_lstm)",
+        &{
+            let mut h = vec!["sampler"];
+            // epochs columns built dynamically below; pre-build strings
+            h.extend(["e0", "e1", "e2", "e3", "e4", "e5", "e6", "e7"][..budget.epochs.min(8)].iter());
+            h
+        },
+    );
+
+    for sampler in super::table4::samplers() {
+        let label = sampler.map(|s| s.name()).unwrap_or("full");
+        match run_cell(model, sampler, budget, 32) {
+            Ok(res) => {
+                let mut row = vec![label.to_string()];
+                for e in 0..budget.epochs.min(8) {
+                    row.push(
+                        res.valid
+                            .get(e)
+                            .and_then(|v| v.get("ppl"))
+                            .map(fmt)
+                            .unwrap_or_else(|| "-".into()),
+                    );
+                }
+                t.row(row);
+            }
+            Err(e) => println!("[fig2] skipping {label}: {e}"),
+        }
+    }
+    t.emit(super::experiments_md().as_deref());
+    println!("expectation: midx curves track the full-softmax curve; static samplers plateau higher.");
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Figure 3 — effect of the number of codewords K ∈ {8,…,128} on MIDX
+//! perplexity (k-means codebooks vs learnable codebooks, cf. §6.2.3).
+
+use anyhow::Result;
+
+use super::{run_cell, Budget};
+use crate::coordinator::{fmt, Table};
+use crate::sampler::SamplerKind;
+
+pub fn run(budget: &Budget) -> Result<()> {
+    let model = "lm_ptb_lstm";
+    let ks: &[usize] = if budget.quick { &[8, 32, 128] } else { &[8, 16, 32, 64, 128] };
+
+    let mut t = Table::new(
+        "Figure 3 — test ppl vs #codewords K (lm_ptb_lstm)",
+        &["sampler", "K", "test ppl", "distortion-proxy"],
+    );
+
+    for kind in [SamplerKind::MidxPq, SamplerKind::MidxRq] {
+        for &k in ks {
+            match run_cell(model, Some(kind), budget, k) {
+                Ok(res) => {
+                    t.row(vec![
+                        kind.name().into(),
+                        k.to_string(),
+                        fmt(res.test.get("ppl").unwrap_or(f64::NAN)),
+                        "-".into(),
+                    ]);
+                }
+                Err(e) => println!("[fig3] skipping {}/K={k}: {e}", kind.name()),
+            }
+        }
+    }
+    t.emit(super::experiments_md().as_deref());
+    println!("expectation: ppl improves (decreases) as K grows — distortion bound ∝ K^(−2/D).");
+    Ok(())
+}

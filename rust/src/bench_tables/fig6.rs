@@ -1,0 +1,79 @@
+//! Figure 6 — sampling time vs number of classes: 100 samples for a batch
+//! of 256 queries, N swept to 100k (paper §6.2.6; K = 64 as in the paper).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::Budget;
+use crate::coordinator::{fmt, Table};
+use crate::sampler::{self, SamplerKind, SamplerParams};
+use crate::util::check::rand_matrix;
+use crate::util::Rng;
+
+pub fn run(budget: &Budget) -> Result<()> {
+    let ns: &[usize] = if budget.quick {
+        &[1_000, 10_000]
+    } else {
+        &[1_000, 5_000, 10_000, 50_000, 100_000]
+    };
+    let d = 64;
+    let m = 100;
+    let batch = if budget.quick { 64 } else { 256 };
+
+    let mut t = Table::new(
+        &format!("Figure 6 — sampling time for {batch} queries × {m} draws (ms, excl. init)"),
+        &["sampler", "N=1k", "N=5k", "N=10k", "N=50k", "N=100k"],
+    );
+
+    let kinds = [
+        SamplerKind::Uniform,
+        SamplerKind::Unigram,
+        SamplerKind::Lsh,
+        SamplerKind::Sphere,
+        SamplerKind::Rff,
+        SamplerKind::MidxPq,
+        SamplerKind::MidxRq,
+    ];
+
+    let mut rng = Rng::new(13);
+    // per (kind) row of per-N timings
+    let mut rows: Vec<Vec<String>> = kinds.iter().map(|k| vec![k.name().to_string()]).collect();
+
+    for &n in ns {
+        let table = rand_matrix(&mut rng, n, d, 0.3);
+        let zs = rand_matrix(&mut rng, batch, d, 0.3);
+        let freqs: Vec<f32> = (0..n).map(|i| 1.0 / (i + 1) as f32).collect();
+        for (ki, &kind) in kinds.iter().enumerate() {
+            let params = SamplerParams {
+                k_codewords: 64,
+                frequencies: freqs.clone(),
+                ..Default::default()
+            };
+            let mut s = sampler::build(kind, n, &params);
+            s.rebuild(&table, n, d, &mut rng);
+            let mut ids = vec![0u32; m];
+            let mut lq = vec![0.0f32; m];
+            let t0 = Instant::now();
+            for q in 0..batch {
+                s.sample_into(&zs[q * d..(q + 1) * d], u32::MAX, &mut rng, &mut ids, &mut lq);
+            }
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            rows[ki].push(fmt(ms));
+        }
+        println!("[fig6] N={n} done");
+    }
+
+    // pad missing columns in quick mode
+    for r in &mut rows {
+        while r.len() < 6 {
+            r.push("-".into());
+        }
+    }
+    for r in rows {
+        t.row(r);
+    }
+    t.emit(super::experiments_md().as_deref());
+    println!("expectation: uniform/unigram flat; midx flat-ish (scales with K not N); sphere/rff/lsh grow with N.");
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Benchmark harnesses: one module per table/figure of the paper's
+//! evaluation section. Each regenerates the same rows/series the paper
+//! reports (on the scaled synthetic substrates — absolute numbers differ,
+//! the comparisons are what must hold) and appends its results to
+//! EXPERIMENTS.md.
+//!
+//! | paper artifact | module   | CLI                 |
+//! |----------------|----------|---------------------|
+//! | Table 1        | `table1` | `midx bench table1` |
+//! | Table 2        | `table2` | `midx bench table2` |
+//! | Table 3        | `table3` | `midx bench table3` |
+//! | Table 4        | `table4` | `midx bench table4` |
+//! | Table 5        | `table5` | `midx bench table5` |
+//! | Table 7        | `table7` | `midx bench table7` |
+//! | Table 9        | `table9` | `midx bench table9` |
+//! | Figure 2       | `fig2`   | `midx bench fig2`   |
+//! | Figure 3       | `fig3`   | `midx bench fig3`   |
+//! | Figures 4–5    | `fig45`  | `midx bench fig45`  |
+//! | Figure 6       | `fig6`   | `midx bench fig6`   |
+//! | Figure 7       | `fig7`   | `midx bench fig7`   |
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig45;
+pub mod fig6;
+pub mod fig7;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table7;
+pub mod table9;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::{ExperimentSpec, run_experiment};
+use crate::sampler::SamplerKind;
+use crate::train::{RunResult, TrainConfig};
+
+/// Shared budget knobs (CLI: --quick shrinks everything).
+#[derive(Clone, Copy, Debug)]
+pub struct Budget {
+    pub epochs: usize,
+    pub steps: usize,
+    pub eval_cap: usize,
+    pub quick: bool,
+}
+
+impl Budget {
+    pub fn standard() -> Self {
+        Budget { epochs: 5, steps: 100, eval_cap: 20, quick: false }
+    }
+    pub fn quick() -> Self {
+        Budget { epochs: 2, steps: 30, eval_cap: 6, quick: true }
+    }
+}
+
+/// Where bench results are appended.
+pub fn experiments_md() -> Option<PathBuf> {
+    Some(PathBuf::from("EXPERIMENTS.md"))
+}
+
+/// Run one (model, sampler) cell under a budget.
+pub fn run_cell(
+    model: &str,
+    sampler: Option<SamplerKind>,
+    budget: &Budget,
+    k_codewords: usize,
+) -> Result<RunResult> {
+    let mut spec = ExperimentSpec::new(model, sampler);
+    spec.k_codewords = k_codewords;
+    spec.train = TrainConfig {
+        epochs: budget.epochs,
+        steps_per_epoch: budget.steps,
+        eval_cap: budget.eval_cap,
+        verbose: true,
+        ..TrainConfig::default()
+    };
+    run_experiment(&spec)
+}
+
+/// Dispatch by bench name.
+pub fn run_bench(name: &str, budget: Budget) -> Result<()> {
+    match name {
+        "table1" => table1::run(&budget),
+        "table2" => table2::run(&budget),
+        "table3" => table3::run(&budget),
+        "table4" => table4::run(&budget),
+        "table5" => table5::run(&budget),
+        "table7" => table7::run(&budget),
+        "table9" => table9::run(&budget),
+        "fig2" => fig2::run(&budget),
+        "fig3" => fig3::run(&budget),
+        "fig45" => fig45::run(&budget),
+        "fig6" => fig6::run(&budget),
+        "fig7" => fig7::run(&budget),
+        "all" => {
+            for b in [
+                "table1", "table2", "table3", "fig6", "fig45", "table4", "fig2", "fig3",
+                "fig7", "table5", "table7", "table9",
+            ] {
+                println!("\n################ bench {b} ################");
+                run_bench(b, budget)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown bench '{other}' (see `midx bench --help`)"),
+    }
+}

@@ -1,0 +1,84 @@
+//! Table 1 — time & space complexity of sampling M classes per proposal.
+//!
+//! The paper states asymptotics; we print them next to MEASURED init time,
+//! per-query sampling time and index memory on a fixed workload, so the
+//! asymptotic claims are auditable on this testbed.
+
+use anyhow::Result;
+
+use super::Budget;
+use crate::coordinator::{fmt, Table};
+use crate::sampler::{self, SamplerKind, SamplerParams};
+use crate::util::check::rand_matrix;
+use crate::util::Rng;
+use std::time::Instant;
+
+struct Row {
+    kind: SamplerKind,
+    init_formula: &'static str,
+    sample_formula: &'static str,
+    space_formula: &'static str,
+}
+
+const ROWS: &[Row] = &[
+    Row { kind: SamplerKind::Uniform, init_formula: "-", sample_formula: "M", space_formula: "1" },
+    Row { kind: SamplerKind::Unigram, init_formula: "N", sample_formula: "M", space_formula: "N" },
+    Row { kind: SamplerKind::Lsh, init_formula: "N·T·b·D", sample_formula: "T·b·D + M", space_formula: "N·T" },
+    Row { kind: SamplerKind::Sphere, init_formula: "N·D", sample_formula: "N·D + M log N", space_formula: "N·D" },
+    Row { kind: SamplerKind::Rff, init_formula: "N·R·D", sample_formula: "N·R + M log N", space_formula: "N·R" },
+    Row { kind: SamplerKind::ExactMidx, init_formula: "K·N·D·t", sample_formula: "N·D + M", space_formula: "N·D" },
+    Row { kind: SamplerKind::MidxPq, init_formula: "K·N·D·t", sample_formula: "K·D + K² + M", space_formula: "K·D + K² + N" },
+    Row { kind: SamplerKind::MidxRq, init_formula: "K·N·D·t", sample_formula: "K·D + K² + M", space_formula: "K·D + K² + N" },
+];
+
+pub fn run(budget: &Budget) -> Result<()> {
+    let n = if budget.quick { 5_000 } else { 20_000 };
+    let d = 64;
+    let m = 100;
+    let queries = if budget.quick { 32 } else { 128 };
+
+    let mut rng = Rng::new(42);
+    let table = rand_matrix(&mut rng, n, d, 0.3);
+    let zs = rand_matrix(&mut rng, queries, d, 0.3);
+    let freqs: Vec<f32> = (0..n).map(|i| 1.0 / (i + 1) as f32).collect();
+
+    let mut t = Table::new(
+        &format!("Table 1 — sampling complexity (measured @ N={n}, D={d}, M={m}, K=64)"),
+        &["sampler", "init(paper)", "sample(paper)", "space(paper)", "init ms", "µs/query", "ns/draw"],
+    );
+
+    for row in ROWS {
+        let params = SamplerParams {
+            k_codewords: 64,
+            frequencies: freqs.clone(),
+            ..Default::default()
+        };
+        let mut s = sampler::build(row.kind, n, &params);
+
+        let t0 = Instant::now();
+        s.rebuild(&table, n, d, &mut rng);
+        let init_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let mut ids = vec![0u32; m];
+        let mut lq = vec![0.0f32; m];
+        let t1 = Instant::now();
+        for q in 0..queries {
+            s.sample_into(&zs[q * d..(q + 1) * d], u32::MAX, &mut rng, &mut ids, &mut lq);
+        }
+        let total = t1.elapsed().as_secs_f64();
+        let per_query_us = total * 1e6 / queries as f64;
+        let per_draw_ns = total * 1e9 / (queries * m) as f64;
+
+        t.row(vec![
+            row.kind.name().into(),
+            row.init_formula.into(),
+            row.sample_formula.into(),
+            row.space_formula.into(),
+            fmt(init_ms),
+            fmt(per_query_us),
+            fmt(per_draw_ns),
+        ]);
+    }
+    t.emit(super::experiments_md().as_deref());
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Table 4 — language-model perplexity: 2 synthetic corpora × {LSTM,
+//! Transformer} × every sampler (+ the Full softmax baseline). Paper
+//! reference values printed alongside for shape comparison.
+
+use anyhow::Result;
+
+use super::{run_cell, Budget};
+use crate::coordinator::{fmt, Table};
+use crate::sampler::SamplerKind;
+
+/// Paper Table 4 values (PTB columns; WT2 in the same row order).
+pub fn paper_ppl(model: &str, sampler: &str) -> Option<f64> {
+    let col = match model {
+        "lm_ptb_lstm" => 0,
+        "lm_ptb_transformer" => 1,
+        "lm_wt2_lstm" => 2,
+        "lm_wt2_transformer" => 3,
+        _ => return None,
+    };
+    let row: [f64; 4] = match sampler {
+        "full" => [109.1965, 143.8422, 123.3047, 180.8331],
+        "uniform" => [159.9701, 181.5720, 211.5420, 259.4951],
+        "unigram" => [139.7837, 166.4322, 171.6996, 218.4348],
+        "lsh" => [145.8054, 167.9671, 176.8901, 221.4062],
+        "sphere" => [143.2146, 179.2362, 162.4147, 273.8121],
+        "rff" => [145.5703, 189.1259, 232.0854, 278.9223],
+        "midx-pq" => [121.5477, 149.6586, 136.6786, 199.7429],
+        "midx-rq" => [117.8317, 147.3405, 132.2591, 180.9055],
+        _ => return None,
+    };
+    Some(row[col])
+}
+
+pub fn samplers() -> Vec<Option<SamplerKind>> {
+    let mut v: Vec<Option<SamplerKind>> = vec![None];
+    v.extend(SamplerKind::all().iter().map(|&k| Some(k)));
+    v
+}
+
+pub fn run(budget: &Budget) -> Result<()> {
+    let models: &[&str] = if budget.quick {
+        &["lm_ptb_lstm"]
+    } else {
+        &["lm_ptb_lstm", "lm_ptb_transformer", "lm_wt2_lstm", "lm_wt2_transformer"]
+    };
+
+    let mut t = Table::new(
+        "Table 4 — LM perplexity (synthetic corpora; paper values for shape reference)",
+        &["model", "sampler", "test ppl", "paper ppl", "ms/step"],
+    );
+
+    for &model in models {
+        for sampler in samplers() {
+            let label = sampler.map(|s| s.name()).unwrap_or("full");
+            match run_cell(model, sampler, budget, 32) {
+                Ok(res) => {
+                    let ppl = res.test.get("ppl").unwrap_or(f64::NAN);
+                    t.row(vec![
+                        model.into(),
+                        label.into(),
+                        fmt(ppl),
+                        paper_ppl(model, label).map(fmt).unwrap_or_else(|| "-".into()),
+                        fmt(res.timing.per_step_ms()),
+                    ]);
+                }
+                Err(e) => {
+                    println!("[table4] skipping {model}/{label}: {e}");
+                }
+            }
+        }
+    }
+    t.emit(super::experiments_md().as_deref());
+    println!("expectation: full < midx-rq < midx-pq < other samplers (lower ppl better); uniform worst.");
+    Ok(())
+}

@@ -1,0 +1,182 @@
+//! Table 5 — learnable codebooks (§6.2.3): k-means codebooks vs codebooks
+//! trained by gradient descent on the recon + KL objective (the
+//! `codebook_pq`/`codebook_rq` artifacts), reporting final KL-loss and
+//! test perplexity for each variant.
+//!
+//! The MIDX-Learn loop per epoch:
+//!   1. z-batch from the live encoder (encode artifact)
+//!   2. several gradient steps on (C¹, C²) via the codebook artifact
+//!   3. install the codebooks into the sampler (`set_codebooks`) — classes
+//!      re-assigned to nearest codewords, inverted multi-index rebuilt
+//!   4. normal training steps
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::Budget;
+use crate::coordinator::{build_sampler, build_task, fmt, ExperimentSpec, Table};
+use crate::quant::{self, QuantKind, Quantizer};
+use crate::runtime::{lit_f32, load_model, to_f32, to_scalar_f32, Executable};
+use crate::sampler::SamplerKind;
+use crate::train::{TrainConfig, Trainer};
+use crate::util::Rng;
+
+struct CodebookState {
+    c1: Vec<f32>,
+    c2: Vec<f32>,
+    k: usize,
+    dc: usize,
+}
+
+/// One gradient pass over the codebooks; returns (total, kl).
+fn codebook_steps(
+    exe: &Executable,
+    state: &mut CodebookState,
+    q_table: &[f32],
+    n: usize,
+    d: usize,
+    z: &[f32],
+    bq: usize,
+    iters: usize,
+    lr: f32,
+) -> Result<(f64, f64)> {
+    let mut total = 0.0;
+    let mut kl = 0.0;
+    for _ in 0..iters {
+        let args = vec![
+            lit_f32(&state.c1, &[state.k, state.dc])?,
+            lit_f32(&state.c2, &[state.k, state.dc])?,
+            lit_f32(q_table, &[n, d])?,
+            lit_f32(z, &[bq, d])?,
+        ];
+        let out = exe.run(&args)?;
+        total = to_scalar_f32(&out[0])? as f64;
+        kl = to_scalar_f32(&out[1])? as f64;
+        let g1 = to_f32(&out[3])?;
+        let g2 = to_f32(&out[4])?;
+        for (c, g) in state.c1.iter_mut().zip(&g1) {
+            *c -= lr * g;
+        }
+        for (c, g) in state.c2.iter_mut().zip(&g2) {
+            *c -= lr * g;
+        }
+    }
+    Ok((total, kl))
+}
+
+fn run_variant(quantizer: QuantKind, learn: bool, budget: &Budget) -> Result<(f64, f64)> {
+    let kind = match quantizer {
+        QuantKind::Product => SamplerKind::MidxPq,
+        QuantKind::Residual => SamplerKind::MidxRq,
+    };
+    let manifest = load_model("lm_ptb_lstm")?;
+    let (n, d, bq, k) = (
+        manifest.dims.n_classes,
+        manifest.dims.d,
+        manifest.dims.bq,
+        manifest.dims.k_codewords,
+    );
+    let dc = if quantizer == QuantKind::Product { d / 2 } else { d };
+    let tag = if quantizer == QuantKind::Product { "codebook_pq" } else { "codebook_rq" };
+
+    let spec = ExperimentSpec::new("lm_ptb_lstm", Some(kind));
+    let task = build_task(&manifest, spec.dataset_seed)?;
+    let sampler = build_sampler(&spec, &manifest, &task);
+    let cfg = TrainConfig {
+        epochs: if budget.quick { 2 } else { budget.epochs },
+        steps_per_epoch: budget.steps,
+        eval_cap: budget.eval_cap,
+        verbose: true,
+        ..TrainConfig::default()
+    };
+    let cb_path = manifest.artifact_path(tag)?;
+    let mut trainer = Trainer::new(manifest, sampler, cfg)?;
+    let cb_exe = trainer.engine().load_hlo(&cb_path)?;
+    let task = Arc::new(task);
+    let mut rng = Rng::new(55);
+
+    let epochs = trainer.config().epochs;
+    let steps = trainer.config().steps_per_epoch;
+    let mut state: Option<CodebookState> = None;
+    let mut final_kl = f64::NAN;
+
+    for e in 0..epochs {
+        if learn {
+            // init from k-means at first epoch, then refine by gradient
+            if state.is_none() {
+                let q = quant::build(quantizer, trainer.params.q_table(), n, d, k, 10, &mut rng);
+                state = Some(CodebookState {
+                    c1: q.codebook1().to_vec(),
+                    c2: q.codebook2().to_vec(),
+                    k,
+                    dc,
+                });
+            }
+            let batch = task.train_batch(&mut rng);
+            let z = trainer.encode_batch(&batch)?;
+            let st = state.as_mut().unwrap();
+            let q_table = trainer.params.q_table().to_vec();
+            let (_, kl) = codebook_steps(
+                &cb_exe,
+                st,
+                &q_table,
+                n,
+                d,
+                &z,
+                bq,
+                if budget.quick { 4 } else { 10 },
+                0.05,
+            )?;
+            final_kl = kl;
+            trainer
+                .sampler_mut()
+                .unwrap()
+                .set_codebooks(&st.c1, &st.c2, &q_table, n, d);
+        } else {
+            trainer.rebuild_sampler();
+        }
+        let loss = trainer.run_steps(&task, steps, e as u64)?;
+        println!("[table5 {}-{}] epoch {e}: loss {loss:.4}", tag, if learn { "learn" } else { "kmeans" });
+    }
+
+    if !learn {
+        // measure the KL loss of the final k-means codebooks via the artifact
+        let q = quant::build(quantizer, trainer.params.q_table(), n, d, k, 10, &mut rng);
+        let mut st = CodebookState {
+            c1: q.codebook1().to_vec(),
+            c2: q.codebook2().to_vec(),
+            k,
+            dc,
+        };
+        let batch = task.train_batch(&mut rng);
+        let z = trainer.encode_batch(&batch)?;
+        let q_table = trainer.params.q_table().to_vec();
+        let (_, kl) = codebook_steps(&cb_exe, &mut st, &q_table, n, d, &z, bq, 1, 0.0)?;
+        final_kl = kl;
+    }
+
+    let test = trainer.evaluate(&task, true)?;
+    Ok((final_kl, test.get("ppl").unwrap_or(f64::NAN)))
+}
+
+pub fn run(budget: &Budget) -> Result<()> {
+    let mut t = Table::new(
+        "Table 5 — learnable codebooks (lm_ptb_lstm): KL-loss and test ppl",
+        &["sampler", "KL-loss", "PPL"],
+    );
+    for (quantizer, learn, label) in [
+        (QuantKind::Product, false, "MIDX-pq"),
+        (QuantKind::Residual, false, "MIDX-rq"),
+        (QuantKind::Product, true, "MIDX-Learn-pq"),
+        (QuantKind::Residual, true, "MIDX-Learn-rq"),
+    ] {
+        match run_variant(quantizer, learn, budget) {
+            Ok((kl, ppl)) => t.row(vec![label.into(), fmt(kl), fmt(ppl)]),
+            Err(e) => println!("[table5] {label} failed: {e}"),
+        }
+    }
+    t.emit(super::experiments_md().as_deref());
+    println!("expectation: MIDX-Learn-* rows show lower KL-loss and lower ppl than their k-means counterparts.");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Table 9 — extreme classification: synthetic AmazonCat/WikiLSHTC-like
+//! datasets, P@{1,3,5} per sampler.
+
+use anyhow::Result;
+
+use super::{run_cell, Budget};
+use crate::coordinator::{fmt, Table};
+
+/// Paper Table 9 (P@1, P@3, P@5) for shape reference.
+pub fn paper_row(model: &str, sampler: &str) -> Option<[f64; 3]> {
+    let rows: &[(&str, &str, [f64; 3])] = &[
+        ("xmc_amazoncat", "full", [0.8478, 0.7169, 0.5770]),
+        ("xmc_amazoncat", "uniform", [0.7242, 0.6284, 0.5152]),
+        ("xmc_amazoncat", "unigram", [0.8105, 0.6819, 0.5502]),
+        ("xmc_amazoncat", "lsh", [0.7936, 0.6704, 0.5405]),
+        ("xmc_amazoncat", "sphere", [0.8176, 0.6950, 0.5602]),
+        ("xmc_amazoncat", "rff", [0.7484, 0.6441, 0.5285]),
+        ("xmc_amazoncat", "midx-pq", [0.8352, 0.7055, 0.5652]),
+        ("xmc_amazoncat", "midx-rq", [0.8478, 0.7166, 0.5739]),
+        ("xmc_wiki", "full", [0.1805, 0.0867, 0.0596]),
+        ("xmc_wiki", "uniform", [0.1006, 0.0495, 0.0356]),
+        ("xmc_wiki", "unigram", [0.1504, 0.0676, 0.0457]),
+        ("xmc_wiki", "lsh", [0.1462, 0.0659, 0.0447]),
+        ("xmc_wiki", "sphere", [0.1662, 0.0744, 0.0501]),
+        ("xmc_wiki", "rff", [0.1455, 0.0652, 0.0445]),
+        ("xmc_wiki", "midx-pq", [0.1661, 0.0779, 0.0531]),
+        ("xmc_wiki", "midx-rq", [0.1593, 0.0758, 0.0518]),
+    ];
+    rows.iter()
+        .find(|(m, s, _)| *m == model && *s == sampler)
+        .map(|(_, _, v)| *v)
+}
+
+pub fn run(budget: &Budget) -> Result<()> {
+    let models: &[&str] =
+        if budget.quick { &["xmc_amazoncat"] } else { &["xmc_amazoncat", "xmc_wiki"] };
+
+    let mut t = Table::new(
+        "Table 9 — extreme classification (synthetic; paper P@k for shape)",
+        &["model", "sampler", "P@1", "P@3", "P@5", "paper P@1"],
+    );
+
+    for &model in models {
+        for sampler in super::table4::samplers() {
+            let label = sampler.map(|s| s.name()).unwrap_or("full");
+            match run_cell(model, sampler, budget, 32) {
+                Ok(res) => {
+                    let g = |k: &str| res.test.get(k).unwrap_or(f64::NAN);
+                    t.row(vec![
+                        model.into(),
+                        label.into(),
+                        fmt(g("p@1")),
+                        fmt(g("p@3")),
+                        fmt(g("p@5")),
+                        paper_row(model, label).map(|p| fmt(p[0])).unwrap_or_else(|| "-".into()),
+                    ]);
+                }
+                Err(e) => println!("[table9] skipping {model}/{label}: {e}"),
+            }
+        }
+    }
+    t.emit(super::experiments_md().as_deref());
+    println!("expectation: midx-rq ≈ full > midx-pq > sphere/unigram > lsh/rff > uniform.");
+    Ok(())
+}

@@ -1,0 +1,167 @@
+//! Experiment driver: binds an artifact model to its synthetic dataset,
+//! builds the requested sampler, and runs the trainer.
+//!
+//! The model-name prefix selects the dataset substrate:
+//!   lm_ptb_* / lm_wt2_*   → LmCorpus (synthetic PTB / Wikitext-2)
+//!   rec_ml_* / rec_gowalla_* / rec_amazon_* → RecDataset presets
+//!   xmc_amazoncat / xmc_wiki → XmcDataset presets
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::extreme::XmcConfig;
+use crate::data::lm::LmConfig;
+use crate::data::recsys::RecConfig;
+use crate::data::{LmCorpus, RecDataset, XmcDataset};
+use crate::runtime::{load_model, Manifest};
+use crate::sampler::{self, SamplerKind, SamplerParams};
+use crate::train::{RunResult, TaskData, TrainConfig, Trainer};
+
+#[derive(Clone, Debug)]
+pub struct ExperimentSpec {
+    /// artifact directory name, e.g. "lm_ptb_lstm"
+    pub model: String,
+    /// None ⇒ Full-softmax baseline
+    pub sampler: Option<SamplerKind>,
+    pub train: TrainConfig,
+    /// MIDX codebook size (paper default 32; Fig 3 sweeps it)
+    pub k_codewords: usize,
+    pub dataset_seed: u64,
+}
+
+impl ExperimentSpec {
+    pub fn new(model: &str, sampler: Option<SamplerKind>) -> Self {
+        ExperimentSpec {
+            model: model.to_string(),
+            sampler,
+            train: TrainConfig::default(),
+            k_codewords: 32,
+            dataset_seed: 1234,
+        }
+    }
+
+    pub fn sampler_label(&self) -> String {
+        self.sampler.map(|s| s.name().to_string()).unwrap_or_else(|| "full".into())
+    }
+}
+
+/// Build the synthetic dataset matching a model manifest.
+pub fn build_task(manifest: &Manifest, dataset_seed: u64) -> Result<TaskData> {
+    let dims = manifest.dims.clone();
+    let name = manifest.name.as_str();
+    if name.starts_with("lm_") {
+        let (train_tokens, valid_tokens, test_tokens) = if name.contains("wt2") {
+            (200_000, 16_000, 16_000) // "twice as large as PTB"
+        } else {
+            (100_000, 10_000, 10_000)
+        };
+        let corpus = LmCorpus::generate(LmConfig {
+            vocab: dims.n_classes,
+            train_tokens,
+            valid_tokens,
+            test_tokens,
+            seed: dataset_seed,
+            ..Default::default()
+        });
+        Ok(TaskData::Lm { corpus, dims })
+    } else if name.starts_with("rec_") {
+        let seq = dims.seq_len + 1;
+        let mut cfg = if name.contains("gowalla") {
+            RecConfig::gowalla(seq)
+        } else if name.contains("amazon") {
+            RecConfig::amazon(seq)
+        } else {
+            RecConfig::movielens(seq)
+        };
+        cfg.n_items = dims.n_classes;
+        cfg.seed = dataset_seed;
+        Ok(TaskData::Rec { data: RecDataset::generate(cfg), dims })
+    } else if name.starts_with("xmc_") {
+        let cfg = XmcConfig {
+            n_classes: dims.n_classes,
+            n_features: dims.bag_features,
+            nnz: dims.bag_nnz,
+            n_train: if name.contains("wiki") { 30_000 } else { 40_000 },
+            n_test: 4_000,
+            seed: dataset_seed,
+            ..Default::default()
+        };
+        Ok(TaskData::Xmc { data: XmcDataset::generate(cfg), dims })
+    } else {
+        Err(anyhow!("cannot infer dataset for model '{name}'"))
+    }
+}
+
+/// Build the sampler for a spec (needs the task for unigram frequencies).
+pub fn build_sampler(
+    spec: &ExperimentSpec,
+    manifest: &Manifest,
+    task: &TaskData,
+) -> Option<Box<dyn sampler::Sampler>> {
+    spec.sampler.map(|kind| {
+        let params = SamplerParams {
+            k_codewords: spec.k_codewords,
+            frequencies: task.frequencies(),
+            ..Default::default()
+        };
+        sampler::build(kind, manifest.dims.n_classes, &params)
+    })
+}
+
+/// Run one experiment end to end.
+pub fn run_experiment(spec: &ExperimentSpec) -> Result<RunResult> {
+    let manifest = load_model(&spec.model)?;
+    let task = build_task(&manifest, spec.dataset_seed)?;
+    let sampler = build_sampler(spec, &manifest, &task);
+    let trainer = Trainer::new(manifest, sampler, spec.train.clone())?;
+    trainer.run(Arc::new(task))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Dims;
+
+    fn fake_manifest(name: &str, dims: Dims) -> Manifest {
+        Manifest {
+            name: name.into(),
+            arch: "lstm".into(),
+            dims,
+            params: vec![],
+            inputs: vec![],
+            artifacts: Default::default(),
+            dir: std::path::PathBuf::new(),
+        }
+    }
+
+    #[test]
+    fn task_inference_by_prefix() {
+        let dims = Dims {
+            n_classes: 120,
+            d: 8,
+            batch: 4,
+            seq_len: 6,
+            m_neg: 4,
+            bq: 24,
+            bag_nnz: 8,
+            bag_features: 128,
+            ..Default::default()
+        };
+        let lm = build_task(&fake_manifest("lm_ptb_lstm", dims.clone()), 1).unwrap();
+        assert!(matches!(lm, TaskData::Lm { .. }));
+        let rec = build_task(&fake_manifest("rec_gowalla_gru", dims.clone()), 1).unwrap();
+        assert!(matches!(rec, TaskData::Rec { .. }));
+        let xmc = build_task(&fake_manifest("xmc_wiki", dims.clone()), 1).unwrap();
+        assert!(matches!(xmc, TaskData::Xmc { .. }));
+        assert!(build_task(&fake_manifest("mystery", dims), 1).is_err());
+    }
+
+    #[test]
+    fn spec_labels() {
+        let s = ExperimentSpec::new("lm_ptb_lstm", Some(SamplerKind::MidxRq));
+        assert_eq!(s.sampler_label(), "midx-rq");
+        let f = ExperimentSpec::new("lm_ptb_lstm", None);
+        assert_eq!(f.sampler_label(), "full");
+    }
+}

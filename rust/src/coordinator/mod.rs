@@ -1,0 +1,9 @@
+//! Coordination layer: experiment driver, batch pipeline, reporting.
+
+pub mod experiment;
+pub mod pipeline;
+pub mod report;
+
+pub use experiment::{build_sampler, build_task, run_experiment, ExperimentSpec};
+pub use pipeline::Prefetcher;
+pub use report::{fmt, Table};

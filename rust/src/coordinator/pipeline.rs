@@ -1,0 +1,73 @@
+//! Batch-prefetch pipeline: a worker thread generates upcoming batches
+//! while the main thread drives the XLA executables (offline environment —
+//! std::thread + bounded channel instead of tokio; same dataflow).
+
+use std::sync::mpsc;
+use std::thread;
+
+/// Produces `total` items from `gen(i)` on a background thread, buffered by
+/// a bounded channel of depth `depth`. Iterating yields them in order.
+pub struct Prefetcher<T> {
+    rx: Option<mpsc::Receiver<T>>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl<T: Send + 'static> Prefetcher<T> {
+    pub fn spawn<F>(depth: usize, total: usize, gen: F) -> Self
+    where
+        F: Fn(usize) -> T + Send + 'static,
+    {
+        let (tx, rx) = mpsc::sync_channel(depth.max(1));
+        let handle = thread::spawn(move || {
+            for i in 0..total {
+                if tx.send(gen(i)).is_err() {
+                    break; // consumer dropped early
+                }
+            }
+        });
+        Prefetcher { rx: Some(rx), handle: Some(handle) }
+    }
+}
+
+impl<T> Iterator for Prefetcher<T> {
+    type Item = T;
+    fn next(&mut self) -> Option<T> {
+        self.rx.as_ref().and_then(|rx| rx.recv().ok())
+    }
+}
+
+impl<T> Drop for Prefetcher<T> {
+    fn drop(&mut self) {
+        // Drop the receiver FIRST so a worker blocked in send() gets a
+        // SendError and exits; only then join.
+        drop(self.rx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn yields_all_items_in_order() {
+        let p = Prefetcher::spawn(2, 50, |i| i * i);
+        let got: Vec<usize> = p.collect();
+        assert_eq!(got, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn early_drop_does_not_hang() {
+        let mut p = Prefetcher::spawn(1, 1_000_000, |i| i);
+        assert_eq!(p.next(), Some(0));
+        drop(p); // must not deadlock
+    }
+
+    #[test]
+    fn zero_total() {
+        let p = Prefetcher::spawn(2, 0, |i| i);
+        assert_eq!(p.count(), 0);
+    }
+}

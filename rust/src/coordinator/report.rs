@@ -1,0 +1,128 @@
+//! Report rendering: aligned text tables for stdout + markdown appended to
+//! EXPERIMENTS.md so every bench run leaves an auditable record.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Aligned plain-text rendering (stdout).
+    pub fn render_text(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |cells: &[String], w: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.header, &w));
+        let _ = writeln!(out, "{}", w.iter().map(|&x| "-".repeat(x)).collect::<Vec<_>>().join("  "));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", line(r, &w));
+        }
+        out
+    }
+
+    /// Markdown rendering (EXPERIMENTS.md).
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "\n### {}\n", self.title);
+        let _ = writeln!(out, "| {} |", self.header.join(" | "));
+        let _ = writeln!(out, "|{}|", self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for r in &self.rows {
+            let _ = writeln!(out, "| {} |", r.join(" | "));
+        }
+        out
+    }
+
+    /// Print to stdout and append the markdown to `path` (best effort).
+    pub fn emit(&self, path: Option<&Path>) {
+        print!("{}", self.render_text());
+        if let Some(p) = path {
+            if let Ok(mut existing) = std::fs::read_to_string(p) {
+                existing.push_str(&self.render_markdown());
+                let _ = std::fs::write(p, existing);
+            } else {
+                let _ = std::fs::write(p, self.render_markdown());
+            }
+        }
+    }
+}
+
+/// Format a float with sensible precision for metric tables.
+pub fn fmt(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1000.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 10.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_text_and_markdown() {
+        let mut t = Table::new("Demo", &["sampler", "ppl"]);
+        t.row(vec!["midx-rq".into(), fmt(117.8317)]);
+        t.row(vec!["uniform".into(), fmt(159.9701)]);
+        let txt = t.render_text();
+        assert!(txt.contains("== Demo =="));
+        assert!(txt.contains("midx-rq"));
+        let md = t.render_markdown();
+        assert!(md.contains("| sampler | ppl |"));
+        assert!(md.contains("| uniform | 159.97 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt(0.0), "0");
+        assert_eq!(fmt(0.1234567), "0.1235");
+        assert_eq!(fmt(42.556), "42.56");
+        assert_eq!(fmt(12345.6), "12346");
+    }
+}

@@ -1,0 +1,103 @@
+//! Epoch batcher: seeded shuffle, fixed batch size, exactly-once coverage
+//! per epoch (trailing partial batch dropped — artifacts have fixed shapes).
+
+use crate::util::Rng;
+
+pub struct Batcher {
+    n: usize,
+    batch: usize,
+    perm: Vec<usize>,
+    cursor: usize,
+    epoch: u64,
+    seed: u64,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch: usize, seed: u64) -> Self {
+        assert!(batch > 0 && n >= batch, "need n >= batch ({n} vs {batch})");
+        let mut b = Batcher { n, batch, perm: (0..n).collect(), cursor: 0, epoch: 0, seed };
+        b.reshuffle();
+        b
+    }
+
+    fn reshuffle(&mut self) {
+        let mut rng = Rng::new(self.seed ^ self.epoch.wrapping_mul(0x9E3779B97F4A7C15));
+        self.perm = (0..self.n).collect();
+        rng.shuffle(&mut self.perm);
+        self.cursor = 0;
+    }
+
+    /// Next batch of indices, or None when the epoch is exhausted.
+    pub fn next_batch(&mut self) -> Option<&[usize]> {
+        if self.cursor + self.batch > self.n {
+            return None;
+        }
+        let out = &self.perm[self.cursor..self.cursor + self.batch];
+        self.cursor += self.batch;
+        Some(out)
+    }
+
+    /// Advance to the next epoch (reshuffles).
+    pub fn next_epoch(&mut self) {
+        self.epoch += 1;
+        self.reshuffle();
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.n / self.batch
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::for_all;
+
+    #[test]
+    fn prop_epoch_covers_each_index_at_most_once_and_most_indices() {
+        for_all("batcher exactly-once coverage", |rng, case| {
+            let n = 10 + rng.below(200);
+            let b = 1 + rng.below(n.min(16));
+            let mut batcher = Batcher::new(n, b, case);
+            let mut seen = vec![false; n];
+            let mut count = 0;
+            while let Some(idx) = batcher.next_batch() {
+                for &i in idx {
+                    if seen[i] {
+                        return Err(format!("index {i} twice in one epoch"));
+                    }
+                    seen[i] = true;
+                    count += 1;
+                }
+            }
+            let want = (n / b) * b;
+            if count != want {
+                return Err(format!("covered {count}, want {want}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn epochs_shuffle_differently_but_deterministically() {
+        let mut a = Batcher::new(50, 5, 3);
+        let first: Vec<usize> = a.next_batch().unwrap().to_vec();
+        a.next_epoch();
+        let second: Vec<usize> = a.next_batch().unwrap().to_vec();
+        assert_ne!(first, second);
+
+        let mut b = Batcher::new(50, 5, 3);
+        let first_b: Vec<usize> = b.next_batch().unwrap().to_vec();
+        assert_eq!(first, first_b);
+    }
+
+    #[test]
+    fn batches_per_epoch() {
+        let b = Batcher::new(103, 10, 0);
+        assert_eq!(b.batches_per_epoch(), 10);
+    }
+}

@@ -1,0 +1,190 @@
+//! Synthetic extreme-classification data: sparse BOW features with
+//! class-signature structure (substitutes AmazonCat-13K / WikiLSHTC-325K,
+//! scaled — DESIGN.md §2).
+//!
+//! Every class owns a signature set of feature ids; a sample from class c
+//! mixes signature features (learnable signal) with global-Zipf noise
+//! features. Labels follow a Zipf prior, matching the long-tailed label
+//! distributions of the real datasets.
+
+use super::{zipf_weights, BagBatch};
+use crate::sampler::AliasTable;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct XmcConfig {
+    pub n_classes: usize,
+    /// hashed feature vocabulary (model-side embedding rows)
+    pub n_features: usize,
+    /// nonzeros per sample (fixed S for the fixed-shape artifact)
+    pub nnz: usize,
+    /// signature features per class
+    pub signature: usize,
+    /// fraction of nonzeros drawn from the class signature
+    pub signal: f64,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub label_zipf_s: f64,
+    pub seed: u64,
+}
+
+impl Default for XmcConfig {
+    fn default() -> Self {
+        XmcConfig {
+            n_classes: 4000,
+            n_features: 4096,
+            nnz: 32,
+            signature: 12,
+            signal: 0.7,
+            n_train: 40_000,
+            n_test: 4_000,
+            label_zipf_s: 0.9,
+            seed: 99,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct XmcSample {
+    pub feat_ids: Vec<u32>,
+    pub feat_vals: Vec<f32>,
+    pub label: u32,
+}
+
+pub struct XmcDataset {
+    pub cfg: XmcConfig,
+    pub train: Vec<XmcSample>,
+    pub test: Vec<XmcSample>,
+    pub frequencies: Vec<f32>,
+}
+
+impl XmcDataset {
+    pub fn generate(cfg: XmcConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        // class signatures
+        let mut signatures = Vec::with_capacity(cfg.n_classes);
+        for _ in 0..cfg.n_classes {
+            let sig: Vec<u32> = (0..cfg.signature)
+                .map(|_| rng.below(cfg.n_features) as u32)
+                .collect();
+            signatures.push(sig);
+        }
+        let label_alias = AliasTable::new(&zipf_weights(cfg.n_classes, cfg.label_zipf_s));
+        let noise_alias = AliasTable::new(&zipf_weights(cfg.n_features, 0.7));
+
+        let mut frequencies = vec![0.0f32; cfg.n_classes];
+        let mut gen = |n: usize, rng: &mut Rng, freq: Option<&mut Vec<f32>>| {
+            let mut freq = freq;
+            let mut out = Vec::with_capacity(n);
+            for _ in 0..n {
+                let label = label_alias.sample(rng);
+                let sig = &signatures[label as usize];
+                let mut feat_ids = Vec::with_capacity(cfg.nnz);
+                let mut feat_vals = Vec::with_capacity(cfg.nnz);
+                for _ in 0..cfg.nnz {
+                    let (id, val) = if rng.next_f64() < cfg.signal {
+                        (sig[rng.below(sig.len())], 0.8 + 0.7 * rng.next_f32())
+                    } else {
+                        (noise_alias.sample(rng), 0.2 + 0.6 * rng.next_f32())
+                    };
+                    feat_ids.push(id);
+                    feat_vals.push(val);
+                }
+                if let Some(f) = freq.as_deref_mut() {
+                    f[label as usize] += 1.0;
+                }
+                out.push(XmcSample { feat_ids, feat_vals, label });
+            }
+            out
+        };
+
+        let train = gen(cfg.n_train, &mut rng, Some(&mut frequencies));
+        let test = gen(cfg.n_test, &mut rng, None);
+        XmcDataset { cfg, train, test, frequencies }
+    }
+
+    /// Assemble a batch from sample indices (used with `Batcher`).
+    pub fn batch_from(&self, samples: &[XmcSample], idx: &[usize]) -> BagBatch {
+        let s = self.cfg.nnz;
+        let b = idx.len();
+        let mut feat_ids = Vec::with_capacity(b * s);
+        let mut feat_vals = Vec::with_capacity(b * s);
+        let mut targets = Vec::with_capacity(b);
+        for &i in idx {
+            let smp = &samples[i];
+            feat_ids.extend(smp.feat_ids.iter().map(|&x| x as i32));
+            feat_vals.extend_from_slice(&smp.feat_vals);
+            targets.push(smp.label as i32);
+        }
+        BagBatch { feat_ids, feat_vals, targets, b, s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> XmcConfig {
+        XmcConfig {
+            n_classes: 100,
+            n_features: 256,
+            nnz: 8,
+            n_train: 2000,
+            n_test: 200,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn reproducible_and_well_formed() {
+        let a = XmcDataset::generate(small());
+        let b = XmcDataset::generate(small());
+        assert_eq!(a.train.len(), 2000);
+        assert_eq!(a.train[0].feat_ids, b.train[0].feat_ids);
+        for s in a.train.iter().take(100) {
+            assert_eq!(s.feat_ids.len(), 8);
+            assert!(s.feat_ids.iter().all(|&f| (f as usize) < 256));
+            assert!((s.label as usize) < 100);
+            assert!(s.feat_vals.iter().all(|&v| v > 0.0));
+        }
+    }
+
+    #[test]
+    fn signature_features_dominate_within_class() {
+        let d = XmcDataset::generate(small());
+        // samples of the same class must share features far above chance
+        let mut by_class: std::collections::HashMap<u32, Vec<&XmcSample>> = Default::default();
+        for s in &d.train {
+            by_class.entry(s.label).or_default().push(s);
+        }
+        let (_, samples) = by_class.iter().max_by_key(|(_, v)| v.len()).unwrap();
+        assert!(samples.len() > 20);
+        let mut counts = vec![0usize; 256];
+        for s in samples.iter().take(50) {
+            for &f in &s.feat_ids {
+                counts[f as usize] += 1;
+            }
+        }
+        let max = *counts.iter().max().unwrap();
+        // uniform would put ~50*8/256 ≈ 1.6 per feature; signatures repeat
+        assert!(max > 10, "max feature count {max}");
+    }
+
+    #[test]
+    fn label_skew() {
+        let d = XmcDataset::generate(small());
+        let mut f = d.frequencies.clone();
+        f.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        assert!(f[0] > 5.0 * f[50].max(1.0));
+    }
+
+    #[test]
+    fn batch_assembly() {
+        let d = XmcDataset::generate(small());
+        let b = d.batch_from(&d.train, &[0, 1, 2]);
+        assert_eq!(b.b, 3);
+        assert_eq!(b.feat_ids.len(), 24);
+        assert_eq!(b.targets.len(), 3);
+        assert_eq!(b.targets[0], d.train[0].label as i32);
+    }
+}

@@ -1,0 +1,5 @@
+//! Inverted multi-index (Babenko & Lempitsky 2014) over a quantizer.
+
+pub mod multi_index;
+
+pub use multi_index::InvertedMultiIndex;

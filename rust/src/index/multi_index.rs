@@ -1,0 +1,176 @@
+//! The inverted multi-index: Ω buckets, |Ω| table, CSR layout.
+//!
+//! Given a two-stage quantizer with K codewords per codebook, every class
+//! lands in exactly one of the K² buckets Ω_{k1,k2} (paper §4.1/Thm 1). The
+//! MIDX samplers draw (k1, k2) from the codeword proposal and then a class
+//! uniformly from the bucket, so bucket membership must be O(1) to access —
+//! we store a CSR (offsets + members) over the flattened K² bucket grid.
+
+use crate::quant::Quantizer;
+
+#[derive(Clone, Debug)]
+pub struct InvertedMultiIndex {
+    pub k: usize,
+    /// CSR offsets: bucket b = k1*K + k2 owns members[offsets[b]..offsets[b+1]]
+    pub offsets: Vec<u32>,
+    /// class ids, grouped by bucket
+    pub members: Vec<u32>,
+    /// |Ω_{k1,k2}| as f32 (the ω weights of Theorem 2's uniform variant)
+    pub sizes: Vec<f32>,
+    /// ln |Ω_{k1,k2}|, with empty buckets at -inf (never sampled)
+    pub log_sizes: Vec<f32>,
+}
+
+impl InvertedMultiIndex {
+    /// Build from quantizer codes; `n` classes.
+    pub fn build(quant: &dyn Quantizer, n: usize) -> Self {
+        let k = quant.k();
+        let (a1, a2) = quant.codes();
+        assert_eq!(a1.len(), n);
+        assert_eq!(a2.len(), n);
+
+        let nb = k * k;
+        let mut counts = vec![0u32; nb];
+        for i in 0..n {
+            counts[a1[i] as usize * k + a2[i] as usize] += 1;
+        }
+
+        let mut offsets = vec![0u32; nb + 1];
+        for b in 0..nb {
+            offsets[b + 1] = offsets[b] + counts[b];
+        }
+
+        let mut members = vec![0u32; n];
+        let mut cursor = offsets[..nb].to_vec();
+        for i in 0..n {
+            let b = a1[i] as usize * k + a2[i] as usize;
+            members[cursor[b] as usize] = i as u32;
+            cursor[b] += 1;
+        }
+
+        let sizes: Vec<f32> = counts.iter().map(|&c| c as f32).collect();
+        let log_sizes: Vec<f32> = counts
+            .iter()
+            .map(|&c| if c == 0 { f32::NEG_INFINITY } else { (c as f32).ln() })
+            .collect();
+
+        InvertedMultiIndex { k, offsets, members, sizes, log_sizes }
+    }
+
+    #[inline]
+    pub fn bucket(&self, k1: usize, k2: usize) -> &[u32] {
+        let b = k1 * self.k + k2;
+        &self.members[self.offsets[b] as usize..self.offsets[b + 1] as usize]
+    }
+
+    #[inline]
+    pub fn bucket_size(&self, k1: usize, k2: usize) -> usize {
+        self.sizes[k1 * self.k + k2] as usize
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Number of non-empty buckets (diagnostic: index balance).
+    pub fn occupied_buckets(&self) -> usize {
+        self.sizes.iter().filter(|&&s| s > 0.0).count()
+    }
+
+    /// Largest bucket size (diagnostic: worst-case uniform-stage bias).
+    pub fn max_bucket(&self) -> usize {
+        self.sizes.iter().cloned().fold(0.0, f32::max) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{ProductQuantizer, Quantizer, ResidualQuantizer};
+    use crate::util::check::{for_all, rand_matrix};
+    use crate::util::Rng;
+
+    fn build_index(seed: u64, n: usize, d: usize, k: usize, pq: bool) -> (InvertedMultiIndex, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let table = rand_matrix(&mut rng, n, d, 1.0);
+        let idx = if pq {
+            let q = ProductQuantizer::build(&table, n, d, k, 15, &mut rng);
+            InvertedMultiIndex::build(&q, n)
+        } else {
+            let q = ResidualQuantizer::build(&table, n, d, k, 15, &mut rng);
+            InvertedMultiIndex::build(&q, n)
+        };
+        (idx, table)
+    }
+
+    #[test]
+    fn prop_buckets_partition_classes() {
+        for_all("Ω buckets partition [N]", |rng, case| {
+            let n = 20 + rng.below(200);
+            let k = 2 + rng.below(8);
+            let (idx, _) = build_index(case, n, 6, k, case % 2 == 0);
+            let mut seen = vec![false; n];
+            for k1 in 0..idx.k {
+                for k2 in 0..idx.k {
+                    for &c in idx.bucket(k1, k2) {
+                        if seen[c as usize] {
+                            return Err(format!("class {c} in two buckets"));
+                        }
+                        seen[c as usize] = true;
+                    }
+                }
+            }
+            if seen.iter().all(|&s| s) {
+                Ok(())
+            } else {
+                Err("some class unassigned".into())
+            }
+        });
+    }
+
+    #[test]
+    fn sizes_consistent_with_members() {
+        let (idx, _) = build_index(1, 100, 8, 4, true);
+        for k1 in 0..idx.k {
+            for k2 in 0..idx.k {
+                assert_eq!(idx.bucket(k1, k2).len(), idx.bucket_size(k1, k2));
+            }
+        }
+        let total: usize = (0..idx.k)
+            .flat_map(|a| (0..idx.k).map(move |b| (a, b)))
+            .map(|(a, b)| idx.bucket_size(a, b))
+            .sum();
+        assert_eq!(total, 100);
+        assert_eq!(idx.n_classes(), 100);
+    }
+
+    #[test]
+    fn log_sizes_match() {
+        let (idx, _) = build_index(2, 64, 6, 3, false);
+        for b in 0..idx.k * idx.k {
+            if idx.sizes[b] == 0.0 {
+                assert_eq!(idx.log_sizes[b], f32::NEG_INFINITY);
+            } else {
+                assert!((idx.log_sizes[b] - idx.sizes[b].ln()).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_members_share_codes() {
+        let mut rng = Rng::new(3);
+        let n = 80;
+        let table = rand_matrix(&mut rng, n, 6, 1.0);
+        let q = ProductQuantizer::build(&table, n, 6, 4, 15, &mut rng);
+        let idx = InvertedMultiIndex::build(&q, n);
+        let (a1, a2) = q.codes();
+        for k1 in 0..idx.k {
+            for k2 in 0..idx.k {
+                for &c in idx.bucket(k1, k2) {
+                    assert_eq!(a1[c as usize] as usize, k1);
+                    assert_eq!(a2[c as usize] as usize, k2);
+                }
+            }
+        }
+    }
+}

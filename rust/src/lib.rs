@@ -1,0 +1,28 @@
+//! # midx — Adaptive Sampled Softmax with Inverted Multi-Index
+//!
+//! Rust + JAX + Pallas reproduction of the MIDX sampler paper (Chen et al.,
+//! cs.LG 2025). Architecture (see DESIGN.md):
+//!
+//! * **L3 (this crate)** — training framework: sampler suite (uniform,
+//!   unigram, LSH, sphere, RFF, exact-MIDX, MIDX-pq/rq), quantizers +
+//!   inverted multi-index, synthetic data substrates, Adam, metrics,
+//!   experiment coordinator, bench harnesses for every paper table/figure.
+//! * **L2 (python/compile/model.py, build-time)** — JAX encoders + sampled
+//!   softmax loss, AOT-lowered to HLO text (`make artifacts`).
+//! * **L1 (python/compile/kernels/, build-time)** — Pallas kernels for the
+//!   corrected-logit sampled softmax (fwd+bwd) and the MIDX codeword
+//!   proposal, verified against pure-jnp oracles.
+//!
+//! Python never runs on the training path: the `runtime` module loads the
+//! HLO artifacts through PJRT and the rust loop drives everything.
+
+pub mod bench_tables;
+pub mod coordinator;
+pub mod data;
+pub mod index;
+pub mod quant;
+pub mod runtime;
+pub mod sampler;
+pub mod stats;
+pub mod train;
+pub mod util;

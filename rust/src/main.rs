@@ -1,0 +1,190 @@
+//! `midx` — CLI entrypoint.
+//!
+//! ```text
+//! midx list                         # models available in artifacts/
+//! midx info  --model NAME          # manifest summary
+//! midx train --model NAME --sampler midx-rq [--epochs 6 --steps 120 ...]
+//! midx bench table4 [--quick]      # regenerate a paper table/figure
+//! midx bench all [--quick]
+//! ```
+//!
+//! (Arg parsing is hand-rolled — the offline build environment carries no
+//! clap; see DESIGN.md §2.)
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use midx::bench_tables::{run_bench, Budget};
+use midx::coordinator::{fmt, run_experiment, ExperimentSpec, Table};
+use midx::runtime::{list_models, load_model};
+use midx::sampler::SamplerKind;
+use midx::train::TrainConfig;
+
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args(raw: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < raw.len() {
+        let a = &raw[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), raw[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+    fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+    fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+const USAGE: &str = "usage:
+  midx list
+  midx info  --model NAME
+  midx train --model NAME [--sampler full|uniform|unigram|lsh|sphere|rff|midx-pq|midx-rq|exact-midx]
+             [--epochs N] [--steps N] [--lr F] [--seed N] [--k N] [--eval-cap N] [--patience N]
+  midx bench table1|table2|table3|table4|table5|table7|table9|fig2|fig3|fig45|fig6|fig7|all [--quick]
+             [--epochs N] [--steps N] [--eval-cap N]";
+
+fn cmd_list() -> Result<()> {
+    let mut t = Table::new("models (artifacts/)", &["model", "arch", "N", "D", "Bq", "M", "params"]);
+    for name in list_models()? {
+        let m = load_model(&name)?;
+        t.row(vec![
+            m.name.clone(),
+            m.arch.clone(),
+            m.dims.n_classes.to_string(),
+            m.dims.d.to_string(),
+            m.dims.bq.to_string(),
+            m.dims.m_neg.to_string(),
+            m.total_params().to_string(),
+        ]);
+    }
+    print!("{}", t.render_text());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+    let m = load_model(name)?;
+    println!("model    : {}", m.name);
+    println!("arch     : {}", m.arch);
+    println!(
+        "dims     : N={} D={} hidden={} layers={} T={} B={} Bq={} M={}",
+        m.dims.n_classes,
+        m.dims.d,
+        m.dims.hidden,
+        m.dims.layers,
+        m.dims.seq_len,
+        m.dims.batch,
+        m.dims.bq,
+        m.dims.m_neg
+    );
+    println!("params   : {} tensors, {} floats", m.params.len(), m.total_params());
+    println!("artifacts:");
+    for (tag, file) in &m.artifacts.files {
+        println!("  {tag:<12} {file}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+    let sampler = match args.get("sampler").unwrap_or("midx-rq") {
+        "full" => None,
+        s => Some(SamplerKind::parse(s).ok_or_else(|| anyhow!("unknown sampler '{s}'"))?),
+    };
+    let mut spec = ExperimentSpec::new(model, sampler);
+    spec.k_codewords = args.usize_or("k", 32);
+    spec.train = TrainConfig {
+        epochs: args.usize_or("epochs", 6),
+        steps_per_epoch: args.usize_or("steps", 120),
+        lr: args.f32_or("lr", 2e-3),
+        seed: args.u64_or("seed", 2024),
+        eval_cap: args.usize_or("eval-cap", 20),
+        patience: args.usize_or("patience", 0),
+        prefetch: 2,
+        verbose: true,
+    };
+    let res = run_experiment(&spec)?;
+
+    let mut t =
+        Table::new(&format!("{} / {}", res.model, res.sampler_name), &["metric", "value"]);
+    for (k, v) in &res.test.values {
+        t.row(vec![k.clone(), fmt(*v)]);
+    }
+    t.row(vec!["ms/step".into(), fmt(res.timing.per_step_ms())]);
+    t.row(vec![
+        "sample ms/step".into(),
+        fmt(res.timing.sample_s * 1e3 / res.timing.steps.max(1) as f64),
+    ]);
+    t.row(vec!["rebuild s total".into(), fmt(res.timing.rebuild_s)]);
+    print!("{}", t.render_text());
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("bench name required\n{USAGE}"))?
+        .clone();
+    let mut budget = if args.has("quick") { Budget::quick() } else { Budget::standard() };
+    if args.has("epochs") {
+        budget.epochs = args.usize_or("epochs", budget.epochs);
+    }
+    if args.has("steps") {
+        budget.steps = args.usize_or("steps", budget.steps);
+    }
+    if args.has("eval-cap") {
+        budget.eval_cap = args.usize_or("eval-cap", budget.eval_cap);
+    }
+    run_bench(&name, budget)
+}
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = parse_args(&raw);
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("list") => cmd_list(),
+        Some("info") => cmd_info(&args),
+        Some("train") => cmd_train(&args),
+        Some("bench") => cmd_bench(&args),
+        _ => {
+            println!("{USAGE}");
+            if args.positional.is_empty() {
+                Ok(())
+            } else {
+                bail!("unknown command '{}'", args.positional[0])
+            }
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Quantizer around externally-provided codebooks (the MIDX-Learn variant,
+//! paper §6.2.3): codewords are learned by gradient descent on the
+//! recon + KL objective (the `codebook_*` artifacts) instead of k-means;
+//! this struct just assigns every class to its nearest codeword pair and
+//! serves the standard `Quantizer` interface.
+
+use super::{QuantKind, Quantizer};
+use crate::util::math::{dist2, dot};
+
+#[derive(Clone, Debug)]
+pub struct FixedQuantizer {
+    pub kind: QuantKind,
+    pub k: usize,
+    pub d: usize,
+    d1: usize,
+    c1: Vec<f32>,
+    c2: Vec<f32>,
+    assign1: Vec<u32>,
+    assign2: Vec<u32>,
+    distortion: f64,
+}
+
+fn nearest(x: &[f32], codebook: &[f32], dc: usize) -> (u32, f32) {
+    let k = codebook.len() / dc;
+    let mut best = 0u32;
+    let mut best_d = f32::INFINITY;
+    for c in 0..k {
+        let dd = dist2(x, &codebook[c * dc..(c + 1) * dc]);
+        if dd < best_d {
+            best_d = dd;
+            best = c as u32;
+        }
+    }
+    (best, best_d)
+}
+
+impl FixedQuantizer {
+    /// `c1`/`c2` layouts: PQ → [k, d/2] each; RQ → [k, d] each.
+    pub fn from_codebooks(
+        kind: QuantKind,
+        c1: Vec<f32>,
+        c2: Vec<f32>,
+        table: &[f32],
+        n: usize,
+        d: usize,
+    ) -> Self {
+        let (d1, dc1, dc2) = match kind {
+            QuantKind::Product => (d / 2, d / 2, d - d / 2),
+            QuantKind::Residual => (d, d, d),
+        };
+        let k = c1.len() / dc1;
+        assert_eq!(c2.len() % dc2, 0);
+
+        let mut assign1 = vec![0u32; n];
+        let mut assign2 = vec![0u32; n];
+        let mut distortion = 0.0f64;
+        match kind {
+            QuantKind::Product => {
+                for i in 0..n {
+                    let row = &table[i * d..(i + 1) * d];
+                    let (a1, e1) = nearest(&row[..d1], &c1, dc1);
+                    let (a2, e2) = nearest(&row[d1..], &c2, dc2);
+                    assign1[i] = a1;
+                    assign2[i] = a2;
+                    distortion += (e1 + e2) as f64;
+                }
+            }
+            QuantKind::Residual => {
+                let mut resid = vec![0.0f32; d];
+                for i in 0..n {
+                    let row = &table[i * d..(i + 1) * d];
+                    let (a1, _) = nearest(row, &c1, d);
+                    for j in 0..d {
+                        resid[j] = row[j] - c1[a1 as usize * d + j];
+                    }
+                    let (a2, e2) = nearest(&resid, &c2, d);
+                    assign1[i] = a1;
+                    assign2[i] = a2;
+                    distortion += e2 as f64;
+                }
+            }
+        }
+        FixedQuantizer { kind, k, d, d1, c1, c2, assign1, assign2, distortion }
+    }
+}
+
+impl Quantizer for FixedQuantizer {
+    fn k(&self) -> usize {
+        self.k
+    }
+    fn d(&self) -> usize {
+        self.d
+    }
+    fn codes(&self) -> (&[u32], &[u32]) {
+        (&self.assign1, &self.assign2)
+    }
+    fn stage1_scores(&self, z: &[f32], out: &mut [f32]) {
+        let dc = if self.kind == QuantKind::Product { self.d1 } else { self.d };
+        let zz = if self.kind == QuantKind::Product { &z[..self.d1] } else { z };
+        for c in 0..self.k {
+            out[c] = dot(zz, &self.c1[c * dc..(c + 1) * dc]);
+        }
+    }
+    fn stage2_scores(&self, z: &[f32], out: &mut [f32]) {
+        let dc = if self.kind == QuantKind::Product { self.d - self.d1 } else { self.d };
+        let zz = if self.kind == QuantKind::Product { &z[self.d1..] } else { z };
+        for c in 0..self.c2.len() / dc {
+            out[c] = dot(zz, &self.c2[c * dc..(c + 1) * dc]);
+        }
+    }
+    fn reconstruct(&self, i: usize, out: &mut [f32]) {
+        let a1 = self.assign1[i] as usize;
+        let a2 = self.assign2[i] as usize;
+        match self.kind {
+            QuantKind::Product => {
+                let d2 = self.d - self.d1;
+                out[..self.d1].copy_from_slice(&self.c1[a1 * self.d1..(a1 + 1) * self.d1]);
+                out[self.d1..].copy_from_slice(&self.c2[a2 * d2..(a2 + 1) * d2]);
+            }
+            QuantKind::Residual => {
+                for j in 0..self.d {
+                    out[j] = self.c1[a1 * self.d + j] + self.c2[a2 * self.d + j];
+                }
+            }
+        }
+    }
+    fn distortion(&self) -> f64 {
+        self.distortion
+    }
+    fn codebook1(&self) -> &[f32] {
+        &self.c1
+    }
+    fn codebook2(&self) -> &[f32] {
+        &self.c2
+    }
+    fn family(&self) -> &'static str {
+        match self.kind {
+            QuantKind::Product => "pq-fixed",
+            QuantKind::Residual => "rq-fixed",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::ProductQuantizer;
+    use crate::util::check::rand_matrix;
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_pq_when_given_pq_codebooks() {
+        let mut rng = Rng::new(1);
+        let (n, d, k) = (50, 8, 4);
+        let table = rand_matrix(&mut rng, n, d, 1.0);
+        let pq = ProductQuantizer::build(&table, n, d, k, 20, &mut rng);
+        let fixed = FixedQuantizer::from_codebooks(
+            QuantKind::Product,
+            pq.c1.clone(),
+            pq.c2.clone(),
+            &table,
+            n,
+            d,
+        );
+        // nearest-codeword assignment must agree with k-means output
+        assert_eq!(fixed.codes().0, pq.assign1.as_slice());
+        assert_eq!(fixed.codes().1, pq.assign2.as_slice());
+        assert!((fixed.distortion() - pq.distortion).abs() < 1e-2);
+    }
+
+    #[test]
+    fn rq_residual_assignment() {
+        let mut rng = Rng::new(2);
+        let (n, d, k) = (30, 6, 3);
+        let table = rand_matrix(&mut rng, n, d, 1.0);
+        let c1 = rand_matrix(&mut rng, k, d, 1.0);
+        let c2 = rand_matrix(&mut rng, k, d, 0.3);
+        let q = FixedQuantizer::from_codebooks(QuantKind::Residual, c1, c2, &table, n, d);
+        let mut rec = vec![0.0; d];
+        let mut total = 0.0f64;
+        for i in 0..n {
+            q.reconstruct(i, &mut rec);
+            total += dist2(&table[i * d..(i + 1) * d], &rec) as f64;
+        }
+        assert!((total - q.distortion()).abs() < 1e-2);
+    }
+}

@@ -1,0 +1,236 @@
+//! Lloyd's K-means with k-means++ seeding — the codeword learner of the
+//! paper's inverted multi-index (§4.1: "K-Means clustering is commonly
+//! employed, using all candidate vectors as input").
+
+use crate::util::math::dist2;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct KMeans {
+    /// [k, d] centroids, row-major.
+    pub centroids: Vec<f32>,
+    /// assignment of each input row to its nearest centroid.
+    pub assign: Vec<u32>,
+    pub k: usize,
+    pub d: usize,
+    /// sum of squared distances to assigned centroids (the distortion E of
+    /// paper §5.1.3).
+    pub inertia: f64,
+    pub iterations_run: usize,
+}
+
+/// k-means++ seeding: spread initial centroids proportionally to squared
+/// distance from the ones already chosen.
+fn seed_pp(data: &[f32], n: usize, d: usize, k: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut centroids = Vec::with_capacity(k * d);
+    let first = rng.below(n);
+    centroids.extend_from_slice(&data[first * d..(first + 1) * d]);
+
+    let mut best_d2: Vec<f32> = (0..n)
+        .map(|i| dist2(&data[i * d..(i + 1) * d], &centroids[0..d]))
+        .collect();
+
+    for c in 1..k {
+        let total: f64 = best_d2.iter().map(|&x| x as f64).sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut u = rng.next_f64() * total;
+            let mut pick = n - 1;
+            for (i, &x) in best_d2.iter().enumerate() {
+                u -= x as f64;
+                if u <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            pick
+        };
+        centroids.extend_from_slice(&data[pick * d..(pick + 1) * d]);
+        let new_c = &centroids[c * d..(c + 1) * d];
+        for i in 0..n {
+            let nd = dist2(&data[i * d..(i + 1) * d], new_c);
+            if nd < best_d2[i] {
+                best_d2[i] = nd;
+            }
+        }
+    }
+    centroids
+}
+
+/// Run k-means on `n` rows of dimension `d`. `k` is clamped to `n`.
+pub fn kmeans(data: &[f32], n: usize, d: usize, k: usize, max_iters: usize, rng: &mut Rng) -> KMeans {
+    assert_eq!(data.len(), n * d, "data shape mismatch");
+    assert!(n > 0 && d > 0 && k > 0);
+    let k = k.min(n);
+
+    let mut centroids = seed_pp(data, n, d, k, rng);
+    let mut assign = vec![0u32; n];
+    let mut inertia = f64::INFINITY;
+    let mut iterations_run = 0;
+
+    for it in 0..max_iters {
+        // assignment step
+        let mut new_inertia = 0.0f64;
+        for i in 0..n {
+            let row = &data[i * d..(i + 1) * d];
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for c in 0..k {
+                let dd = dist2(row, &centroids[c * d..(c + 1) * d]);
+                if dd < best_d {
+                    best_d = dd;
+                    best = c;
+                }
+            }
+            assign[i] = best as u32;
+            new_inertia += best_d as f64;
+        }
+
+        // update step
+        let mut sums = vec![0.0f64; k * d];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let c = assign[i] as usize;
+            counts[c] += 1;
+            let row = &data[i * d..(i + 1) * d];
+            for j in 0..d {
+                sums[c * d + j] += row[j] as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // reseed empty cluster at the point farthest from its centroid
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da = dist2(&data[a * d..(a + 1) * d], &centroids[assign[a] as usize * d..(assign[a] as usize + 1) * d]);
+                        let db = dist2(&data[b * d..(b + 1) * d], &centroids[assign[b] as usize * d..(assign[b] as usize + 1) * d]);
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap_or(0);
+                centroids[c * d..(c + 1) * d].copy_from_slice(&data[far * d..(far + 1) * d]);
+            } else {
+                for j in 0..d {
+                    centroids[c * d + j] = (sums[c * d + j] / counts[c] as f64) as f32;
+                }
+            }
+        }
+
+        iterations_run = it + 1;
+        let improved = inertia - new_inertia;
+        inertia = new_inertia;
+        if improved.abs() < 1e-7 * (1.0 + inertia) {
+            break;
+        }
+    }
+
+    // final assignment against the last centroid update
+    let mut final_inertia = 0.0f64;
+    for i in 0..n {
+        let row = &data[i * d..(i + 1) * d];
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for c in 0..k {
+            let dd = dist2(row, &centroids[c * d..(c + 1) * d]);
+            if dd < best_d {
+                best_d = dd;
+                best = c;
+            }
+        }
+        assign[i] = best as u32;
+        final_inertia += best_d as f64;
+    }
+
+    KMeans { centroids, assign, k, d, inertia: final_inertia, iterations_run }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{for_all, rand_matrix};
+
+    fn blobs(rng: &mut Rng, per: usize, d: usize, centers: &[f32]) -> Vec<f32> {
+        let k = centers.len() / d;
+        let mut out = Vec::with_capacity(per * k * d);
+        for c in 0..k {
+            for _ in 0..per {
+                for j in 0..d {
+                    out.push(centers[c * d + j] + rng.normal_f32(0.05));
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let mut rng = Rng::new(1);
+        let centers = vec![0.0f32, 0.0, 10.0, 10.0, -10.0, 10.0];
+        let data = blobs(&mut rng, 50, 2, &centers);
+        let km = kmeans(&data, 150, 2, 3, 50, &mut rng);
+        // all points of one blob share an assignment
+        for b in 0..3 {
+            let a0 = km.assign[b * 50];
+            for i in 0..50 {
+                assert_eq!(km.assign[b * 50 + i], a0, "blob {b} split");
+            }
+        }
+        assert!(km.inertia / 150.0 < 0.1, "inertia {}", km.inertia);
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let mut rng = Rng::new(2);
+        let data = rand_matrix(&mut rng, 3, 4, 1.0);
+        let km = kmeans(&data, 3, 4, 10, 20, &mut rng);
+        assert_eq!(km.k, 3);
+        assert!(km.inertia < 1e-6); // every point its own centroid
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Rng::new(7);
+        let data = rand_matrix(&mut r1, 100, 8, 1.0);
+        let a = kmeans(&data, 100, 8, 5, 25, &mut Rng::new(9));
+        let b = kmeans(&data, 100, 8, 5, 25, &mut Rng::new(9));
+        assert_eq!(a.assign, b.assign);
+        assert_eq!(a.centroids, b.centroids);
+    }
+
+    #[test]
+    fn prop_inertia_nonincreasing_in_k() {
+        for_all("inertia decreases with k", |rng, _| {
+            let n = 40 + rng.below(60);
+            let d = 2 + rng.below(6);
+            let data = rand_matrix(rng, n, d, 1.0);
+            let k2 = kmeans(&data, n, d, 2, 30, &mut Rng::new(5));
+            let k8 = kmeans(&data, n, d, 8, 30, &mut Rng::new(5));
+            if k8.inertia <= k2.inertia * 1.05 {
+                Ok(())
+            } else {
+                Err(format!("k=8 inertia {} > k=2 {}", k8.inertia, k2.inertia))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_assignments_are_nearest() {
+        for_all("assignment optimality", |rng, _| {
+            let n = 30 + rng.below(40);
+            let d = 3;
+            let data = rand_matrix(rng, n, d, 1.0);
+            let km = kmeans(&data, n, d, 4, 20, &mut Rng::new(11));
+            for i in 0..n {
+                let row = &data[i * d..(i + 1) * d];
+                let assigned = dist2(row, &km.centroids[km.assign[i] as usize * d..(km.assign[i] as usize + 1) * d]);
+                for c in 0..km.k {
+                    let dd = dist2(row, &km.centroids[c * d..(c + 1) * d]);
+                    if dd < assigned - 1e-4 {
+                        return Err(format!("row {i} not assigned to nearest ({dd} < {assigned})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,173 @@
+//! Product quantization (Jégou et al. 2010) with B=2 codebooks — the
+//! structure underneath the standard inverted multi-index and MIDX-pq.
+
+use super::kmeans::kmeans;
+use super::Quantizer;
+use crate::util::math::dot;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ProductQuantizer {
+    pub k: usize,
+    pub d: usize,
+    /// first-half dimension (d/2, remainder goes to the second half)
+    pub d1: usize,
+    /// [k, d1] codebook over the first subspace
+    pub c1: Vec<f32>,
+    /// [k, d2] codebook over the second subspace
+    pub c2: Vec<f32>,
+    pub assign1: Vec<u32>,
+    pub assign2: Vec<u32>,
+    pub distortion: f64,
+}
+
+impl ProductQuantizer {
+    /// Learn codebooks from the class-embedding table [n, d].
+    pub fn build(table: &[f32], n: usize, d: usize, k: usize, iters: usize, rng: &mut Rng) -> Self {
+        assert!(d >= 2, "PQ needs d >= 2 to split");
+        let d1 = d / 2;
+        let d2 = d - d1;
+
+        // Split into the two subspaces.
+        let mut sub1 = Vec::with_capacity(n * d1);
+        let mut sub2 = Vec::with_capacity(n * d2);
+        for i in 0..n {
+            sub1.extend_from_slice(&table[i * d..i * d + d1]);
+            sub2.extend_from_slice(&table[i * d + d1..(i + 1) * d]);
+        }
+
+        let km1 = kmeans(&sub1, n, d1, k, iters, rng);
+        let km2 = kmeans(&sub2, n, d2, k, iters, rng);
+        let distortion = km1.inertia + km2.inertia;
+
+        ProductQuantizer {
+            k: km1.k.max(km2.k),
+            d,
+            d1,
+            c1: km1.centroids,
+            c2: km2.centroids,
+            assign1: km1.assign,
+            assign2: km2.assign,
+            distortion,
+        }
+    }
+}
+
+impl Quantizer for ProductQuantizer {
+    fn k(&self) -> usize {
+        self.k
+    }
+    fn d(&self) -> usize {
+        self.d
+    }
+    fn codes(&self) -> (&[u32], &[u32]) {
+        (&self.assign1, &self.assign2)
+    }
+    fn stage1_scores(&self, z: &[f32], out: &mut [f32]) {
+        let z1 = &z[..self.d1];
+        for c in 0..self.c1.len() / self.d1 {
+            out[c] = dot(z1, &self.c1[c * self.d1..(c + 1) * self.d1]);
+        }
+    }
+    fn stage2_scores(&self, z: &[f32], out: &mut [f32]) {
+        let d2 = self.d - self.d1;
+        let z2 = &z[self.d1..];
+        for c in 0..self.c2.len() / d2 {
+            out[c] = dot(z2, &self.c2[c * d2..(c + 1) * d2]);
+        }
+    }
+    fn reconstruct(&self, i: usize, out: &mut [f32]) {
+        let d2 = self.d - self.d1;
+        let a1 = self.assign1[i] as usize;
+        let a2 = self.assign2[i] as usize;
+        out[..self.d1].copy_from_slice(&self.c1[a1 * self.d1..(a1 + 1) * self.d1]);
+        out[self.d1..].copy_from_slice(&self.c2[a2 * d2..(a2 + 1) * d2]);
+    }
+    fn distortion(&self) -> f64 {
+        self.distortion
+    }
+    fn codebook1(&self) -> &[f32] {
+        &self.c1
+    }
+    fn codebook2(&self) -> &[f32] {
+        &self.c2
+    }
+    fn family(&self) -> &'static str {
+        "pq"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{for_all, rand_matrix};
+    use crate::util::math::dist2;
+
+    #[test]
+    fn reconstruction_decomposes_score() {
+        // z·reconstruct(i) must equal z1·c1[a1] + z2·c2[a2] — the identity
+        // behind Theorem 1's decomposition.
+        let mut rng = Rng::new(3);
+        let (n, d, k) = (60, 8, 4);
+        let table = rand_matrix(&mut rng, n, d, 1.0);
+        let pq = ProductQuantizer::build(&table, n, d, k, 20, &mut rng);
+        let z = rand_matrix(&mut rng, 1, d, 1.0);
+        let mut s1 = vec![0.0; k];
+        let mut s2 = vec![0.0; k];
+        pq.stage1_scores(&z, &mut s1);
+        pq.stage2_scores(&z, &mut s2);
+        let mut rec = vec![0.0; d];
+        for i in 0..n {
+            pq.reconstruct(i, &mut rec);
+            let direct = dot(&z, &rec);
+            let decomposed = s1[pq.assign1[i] as usize] + s2[pq.assign2[i] as usize];
+            assert!((direct - decomposed).abs() < 1e-4, "{direct} vs {decomposed}");
+        }
+    }
+
+    #[test]
+    fn odd_dimension_split() {
+        let mut rng = Rng::new(4);
+        let (n, d, k) = (30, 7, 3);
+        let table = rand_matrix(&mut rng, n, d, 1.0);
+        let pq = ProductQuantizer::build(&table, n, d, k, 10, &mut rng);
+        assert_eq!(pq.d1, 3);
+        let mut rec = vec![0.0; d];
+        pq.reconstruct(0, &mut rec); // must not panic
+    }
+
+    #[test]
+    fn prop_distortion_matches_residuals() {
+        for_all("pq distortion = sum residual^2", |rng, _| {
+            let n = 20 + rng.below(40);
+            let d = 4 + 2 * rng.below(4);
+            let k = 2 + rng.below(6);
+            let table = rand_matrix(rng, n, d, 1.0);
+            let pq = ProductQuantizer::build(&table, n, d, k, 15, &mut Rng::new(1));
+            let mut total = 0.0f64;
+            let mut rec = vec![0.0; d];
+            for i in 0..n {
+                pq.reconstruct(i, &mut rec);
+                total += dist2(&table[i * d..(i + 1) * d], &rec) as f64;
+            }
+            crate::util::check::close(total, pq.distortion(), 1e-3, "distortion")
+        });
+    }
+
+    #[test]
+    fn prop_more_codewords_less_distortion() {
+        // Paper §5.1.3: distortion upper bound shrinks as K grows.
+        for_all("pq distortion decreases in K", |rng, _| {
+            let n = 64;
+            let d = 8;
+            let table = rand_matrix(rng, n, d, 1.0);
+            let lo = ProductQuantizer::build(&table, n, d, 2, 20, &mut Rng::new(2));
+            let hi = ProductQuantizer::build(&table, n, d, 16, 20, &mut Rng::new(2));
+            if hi.distortion() <= lo.distortion() * 1.02 {
+                Ok(())
+            } else {
+                Err(format!("{} > {}", hi.distortion(), lo.distortion()))
+            }
+        });
+    }
+}

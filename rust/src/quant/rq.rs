@@ -1,0 +1,162 @@
+//! Residual quantization with two levels — the structure behind MIDX-rq.
+//!
+//! Stage 1 clusters the raw class embeddings; stage 2 clusters the residuals
+//! `q_i - c¹_{a1(i)}`. Reconstruction is additive, so the second stage can
+//! correct first-stage error anywhere in the space — empirically (and in the
+//! paper's Tables 4/7/9) this yields lower distortion than PQ at equal K,
+//! and by Theorem 5 a proportionally tighter KL bound.
+
+use super::kmeans::kmeans;
+use super::Quantizer;
+use crate::util::math::dot;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ResidualQuantizer {
+    pub k: usize,
+    pub d: usize,
+    /// [k, d] level-1 codebook
+    pub c1: Vec<f32>,
+    /// [k, d] level-2 codebook (over residuals)
+    pub c2: Vec<f32>,
+    pub assign1: Vec<u32>,
+    pub assign2: Vec<u32>,
+    pub distortion: f64,
+}
+
+impl ResidualQuantizer {
+    pub fn build(table: &[f32], n: usize, d: usize, k: usize, iters: usize, rng: &mut Rng) -> Self {
+        let km1 = kmeans(table, n, d, k, iters, rng);
+
+        // level-2 input: residuals after level-1
+        let mut resid = vec![0.0f32; n * d];
+        for i in 0..n {
+            let a = km1.assign[i] as usize;
+            for j in 0..d {
+                resid[i * d + j] = table[i * d + j] - km1.centroids[a * d + j];
+            }
+        }
+        let km2 = kmeans(&resid, n, d, k, iters, rng);
+
+        ResidualQuantizer {
+            k: km1.k.max(km2.k),
+            d,
+            c1: km1.centroids,
+            c2: km2.centroids,
+            assign1: km1.assign,
+            assign2: km2.assign,
+            distortion: km2.inertia, // residual after BOTH levels
+        }
+    }
+}
+
+impl Quantizer for ResidualQuantizer {
+    fn k(&self) -> usize {
+        self.k
+    }
+    fn d(&self) -> usize {
+        self.d
+    }
+    fn codes(&self) -> (&[u32], &[u32]) {
+        (&self.assign1, &self.assign2)
+    }
+    fn stage1_scores(&self, z: &[f32], out: &mut [f32]) {
+        for c in 0..self.c1.len() / self.d {
+            out[c] = dot(z, &self.c1[c * self.d..(c + 1) * self.d]);
+        }
+    }
+    fn stage2_scores(&self, z: &[f32], out: &mut [f32]) {
+        for c in 0..self.c2.len() / self.d {
+            out[c] = dot(z, &self.c2[c * self.d..(c + 1) * self.d]);
+        }
+    }
+    fn reconstruct(&self, i: usize, out: &mut [f32]) {
+        let a1 = self.assign1[i] as usize;
+        let a2 = self.assign2[i] as usize;
+        for j in 0..self.d {
+            out[j] = self.c1[a1 * self.d + j] + self.c2[a2 * self.d + j];
+        }
+    }
+    fn distortion(&self) -> f64 {
+        self.distortion
+    }
+    fn codebook1(&self) -> &[f32] {
+        &self.c1
+    }
+    fn codebook2(&self) -> &[f32] {
+        &self.c2
+    }
+    fn family(&self) -> &'static str {
+        "rq"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::ProductQuantizer;
+    use crate::util::check::{close, for_all, rand_matrix};
+    use crate::util::math::dist2;
+
+    #[test]
+    fn additive_reconstruction_decomposes_score() {
+        let mut rng = Rng::new(5);
+        let (n, d, k) = (50, 6, 4);
+        let table = rand_matrix(&mut rng, n, d, 1.0);
+        let rq = ResidualQuantizer::build(&table, n, d, k, 20, &mut rng);
+        let z = rand_matrix(&mut rng, 1, d, 1.0);
+        let mut s1 = vec![0.0; k];
+        let mut s2 = vec![0.0; k];
+        rq.stage1_scores(&z, &mut s1);
+        rq.stage2_scores(&z, &mut s2);
+        let mut rec = vec![0.0; d];
+        for i in 0..n {
+            rq.reconstruct(i, &mut rec);
+            let direct = dot(&z, &rec);
+            let decomposed = s1[rq.assign1[i] as usize] + s2[rq.assign2[i] as usize];
+            assert!((direct - decomposed).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn prop_distortion_matches_residuals() {
+        for_all("rq distortion = sum residual^2", |rng, _| {
+            let n = 20 + rng.below(40);
+            let d = 3 + rng.below(6);
+            let k = 2 + rng.below(6);
+            let table = rand_matrix(rng, n, d, 1.0);
+            let rq = ResidualQuantizer::build(&table, n, d, k, 15, &mut Rng::new(3));
+            let mut total = 0.0f64;
+            let mut rec = vec![0.0; d];
+            for i in 0..n {
+                rq.reconstruct(i, &mut rec);
+                total += dist2(&table[i * d..(i + 1) * d], &rec) as f64;
+            }
+            close(total, rq.distortion(), 1e-3, "distortion")
+        });
+    }
+
+    #[test]
+    fn rq_beats_pq_on_correlated_data() {
+        // When the two halves of the embedding are correlated, PQ cannot
+        // exploit cross-subspace structure but RQ can — the paper's stated
+        // reason MIDX-rq outperforms MIDX-pq.
+        let mut rng = Rng::new(8);
+        let (n, d, k) = (256, 8, 8);
+        let mut table = vec![0.0f32; n * d];
+        for i in 0..n {
+            let base = rng.normal_f32(1.0);
+            for j in 0..d {
+                table[i * d + j] = base + rng.normal_f32(0.2);
+            }
+        }
+        let pq = ProductQuantizer::build(&table, n, d, k, 25, &mut Rng::new(9));
+        let rq = ResidualQuantizer::build(&table, n, d, k, 25, &mut Rng::new(9));
+        assert!(
+            rq.distortion() < pq.distortion(),
+            "rq {} !< pq {}",
+            rq.distortion(),
+            pq.distortion()
+        );
+    }
+}

@@ -1,0 +1,105 @@
+//! PJRT engine: compile HLO text once, execute many times.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! (text, NOT serialized proto — jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects) → `XlaComputation::from_proto` → compile →
+//! `execute`. All artifacts are lowered with return_tuple=True, so outputs
+//! decompose with `to_tuple()`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+pub struct Engine {
+    client: PjRtClient,
+}
+
+impl Engine {
+    /// CPU PJRT client (the only backend in this environment).
+    pub fn cpu() -> Result<Engine> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Execute with positional literal arguments; returns the decomposed
+    /// output tuple.
+    pub fn run(&self, args: &[Literal]) -> Result<Vec<Literal>> {
+        let bufs = self
+            .exe
+            .execute::<Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        lit.to_tuple().with_context(|| format!("decomposing result of {}", self.name))
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Flatten a literal into Vec<f32>.
+pub fn to_f32(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a scalar f32 output.
+pub fn to_scalar_f32(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need real artifacts live in rust/tests/ (integration)
+    // so `cargo test --lib` stays artifact-free. Here: literal helpers only.
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(to_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let shape = l.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let l = lit_i32(&[7, 8, 9], &[3]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7, 8, 9]);
+    }
+}

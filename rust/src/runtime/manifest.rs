@@ -1,0 +1,235 @@
+//! Manifest loader: the rust↔python ABI for every artifact directory.
+//!
+//! `python/compile/aot.py` writes one `manifest.json` per model config; the
+//! shapes and the parameter ORDER in it are the single source of truth for
+//! how the rust side must call each executable.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "normal:<std>" | "zeros" | "ones"
+    pub init: String,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String, // "f32" | "i32"
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Dims {
+    pub n_classes: usize,
+    pub d: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub m_neg: usize,
+    pub bq: usize,
+    pub bag_nnz: usize,
+    pub bag_features: usize,
+    pub k_codewords: usize,
+}
+
+/// Artifact filenames present in a model directory.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactSet {
+    pub files: BTreeMap<String, String>,
+}
+
+impl ArtifactSet {
+    pub fn has(&self, tag: &str) -> bool {
+        self.files.contains_key(tag)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub arch: String,
+    pub dims: Dims,
+    pub params: Vec<ParamSpec>,
+    pub inputs: Vec<IoSpec>,
+    pub artifacts: ArtifactSet,
+    /// directory the manifest was loaded from
+    pub dir: PathBuf,
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    Ok(j.as_arr()
+        .ok_or_else(|| anyhow!("shape not an array"))?
+        .iter()
+        .map(|x| x.as_usize().unwrap_or(0))
+        .collect())
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+
+        let dims_j = j.req("dims").map_err(|e| anyhow!(e))?;
+        let du = |k: &str| dims_j.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+        let dims = Dims {
+            n_classes: du("n_classes"),
+            d: du("d"),
+            hidden: du("hidden"),
+            layers: du("layers"),
+            seq_len: du("seq_len"),
+            batch: du("batch"),
+            m_neg: du("m_neg"),
+            bq: du("bq"),
+            bag_nnz: du("bag_nnz"),
+            bag_features: du("bag_features"),
+            k_codewords: du("k_codewords"),
+        };
+
+        let params = j
+            .req("params")
+            .map_err(|e| anyhow!(e))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("params not an array"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.req("name").map_err(|e| anyhow!(e))?.as_str().unwrap().to_string(),
+                    shape: shape_of(p.req("shape").map_err(|e| anyhow!(e))?)?,
+                    init: p.req("init").map_err(|e| anyhow!(e))?.as_str().unwrap().to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let inputs = j
+            .req("inputs")
+            .map_err(|e| anyhow!(e))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("inputs not an array"))?
+            .iter()
+            .map(|p| {
+                Ok(IoSpec {
+                    name: p.req("name").map_err(|e| anyhow!(e))?.as_str().unwrap().to_string(),
+                    dtype: p.req("dtype").map_err(|e| anyhow!(e))?.as_str().unwrap().to_string(),
+                    shape: shape_of(p.req("shape").map_err(|e| anyhow!(e))?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut files = BTreeMap::new();
+        if let Some(obj) = j.req("artifacts").map_err(|e| anyhow!(e))?.as_obj() {
+            for (k, v) in obj {
+                files.insert(k.clone(), v.as_str().unwrap_or("").to_string());
+            }
+        }
+
+        Ok(Manifest {
+            name: j.req("name").map_err(|e| anyhow!(e))?.as_str().unwrap().to_string(),
+            arch: j.req("arch").map_err(|e| anyhow!(e))?.as_str().unwrap().to_string(),
+            dims,
+            params,
+            inputs,
+            artifacts: ArtifactSet { files },
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn artifact_path(&self, tag: &str) -> Result<PathBuf> {
+        let f = self
+            .artifacts
+            .files
+            .get(tag)
+            .ok_or_else(|| anyhow!("model '{}' has no '{tag}' artifact", self.name))?;
+        Ok(self.dir.join(f))
+    }
+
+    /// Total parameter count (for logging).
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+}
+
+/// Root helper: artifacts/<name> manifests.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("MIDX_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+pub fn load_model(name: &str) -> Result<Manifest> {
+    Manifest::load(&artifacts_root().join(name))
+}
+
+/// All model names listed in artifacts/index.json.
+pub fn list_models() -> Result<Vec<String>> {
+    let path = artifacts_root().join("index.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {} — run `make artifacts`", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+    Ok(j.as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|x| x.as_str().map(String::from))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp_manifest() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("midx_manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+ "name": "tiny", "arch": "lstm",
+ "dims": {"n_classes": 10, "d": 4, "hidden": 4, "layers": 1, "seq_len": 3,
+          "batch": 2, "m_neg": 2, "bq": 6, "bag_nnz": 0, "bag_features": 0,
+          "k_codewords": 2},
+ "params": [
+   {"name": "tok_emb", "shape": [10, 4], "init": "normal:0.5"},
+   {"name": "q_table", "shape": [10, 4], "init": "normal:0.5"}
+ ],
+ "inputs": [{"name": "tokens", "dtype": "i32", "shape": [2, 3]}],
+ "sampling_inputs": [],
+ "artifacts": {"encode": "encode.hlo.txt"}
+}"#,
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn loads_manifest() {
+        let dir = write_tmp_manifest();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.dims.n_classes, 10);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[1].name, "q_table");
+        assert_eq!(m.params[0].numel(), 40);
+        assert_eq!(m.total_params(), 80);
+        assert!(m.artifacts.has("encode"));
+        assert!(!m.artifacts.has("full_step"));
+        assert!(m.artifact_path("encode").unwrap().ends_with("encode.hlo.txt"));
+        assert!(m.artifact_path("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

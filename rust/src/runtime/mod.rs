@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from rust.
+//!
+//! This is the only place the `xla` crate is touched. Python never runs at
+//! request/training time: `make artifacts` lowered every model once, and the
+//! manifest tells us the exact positional ABI of each executable.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{lit_f32, lit_i32, to_f32, to_scalar_f32, Engine, Executable};
+pub use manifest::{ArtifactSet, Dims, IoSpec, Manifest, ParamSpec};
+pub use manifest::{artifacts_root, list_models, load_model};

@@ -1,0 +1,182 @@
+//! Vose's alias method (Walker 1977; Vose 1991): O(n) build, O(1) draws
+//! from a fixed discrete distribution — the paper's cited technique for the
+//! constant-time sampling steps (Algorithm 1, "Vose-Alias method").
+
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    /// acceptance probability per slot
+    prob: Vec<f32>,
+    /// alternative outcome per slot
+    alias: Vec<u32>,
+    /// normalized probability of each outcome (kept for log_q lookups)
+    p: Vec<f32>,
+}
+
+impl AliasTable {
+    /// Build from non-negative weights (need not be normalized).
+    /// Panics if all weights are zero or any weight is negative/NaN.
+    pub fn new(weights: &[f32]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "empty weight vector");
+        let total: f64 = weights
+            .iter()
+            .map(|&w| {
+                assert!(w >= 0.0 && w.is_finite(), "bad weight {w}");
+                w as f64
+            })
+            .sum();
+        assert!(total > 0.0, "all weights zero");
+
+        let p: Vec<f32> = weights.iter().map(|&w| (w as f64 / total) as f32).collect();
+        let mut scaled: Vec<f64> = weights.iter().map(|&w| w as f64 * n as f64 / total).collect();
+
+        let mut small: Vec<u32> = Vec::with_capacity(n);
+        let mut large: Vec<u32> = Vec::with_capacity(n);
+        for (i, &s) in scaled.iter().enumerate() {
+            if s < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+
+        let mut prob = vec![1.0f32; n];
+        let mut alias: Vec<u32> = (0..n as u32).collect();
+
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s as usize] = scaled[s as usize] as f32;
+            alias[s as usize] = l;
+            scaled[l as usize] = scaled[l as usize] + scaled[s as usize] - 1.0;
+            if scaled[l as usize] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // leftovers (numerical slack) keep prob = 1
+        AliasTable { prob, alias, p }
+    }
+
+    /// Draw one outcome in O(1).
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        let n = self.prob.len();
+        let slot = rng.below(n);
+        if rng.next_f32() < self.prob[slot] {
+            slot as u32
+        } else {
+            self.alias[slot]
+        }
+    }
+
+    /// Normalized probability of outcome `i`.
+    #[inline]
+    pub fn prob_of(&self, i: usize) -> f32 {
+        self.p[i]
+    }
+
+    /// ln probability of outcome `i` (−inf for zero-weight outcomes).
+    #[inline]
+    pub fn log_prob_of(&self, i: usize) -> f32 {
+        let p = self.p[i];
+        if p > 0.0 {
+            p.ln()
+        } else {
+            f32::NEG_INFINITY
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{for_all, rand_weights};
+
+    fn empirical(table: &AliasTable, draws: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut counts = vec![0usize; table.len()];
+        for _ in 0..draws {
+            counts[table.sample(&mut rng) as usize] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / draws as f64).collect()
+    }
+
+    #[test]
+    fn matches_simple_distribution() {
+        let t = AliasTable::new(&[1.0, 2.0, 3.0, 4.0]);
+        let emp = empirical(&t, 200_000, 1);
+        for (i, want) in [0.1, 0.2, 0.3, 0.4].iter().enumerate() {
+            assert!((emp[i] - want).abs() < 0.01, "p[{i}]={} want {want}", emp[i]);
+        }
+    }
+
+    #[test]
+    fn zero_weight_never_sampled() {
+        let t = AliasTable::new(&[0.0, 1.0, 0.0, 1.0]);
+        let emp = empirical(&t, 50_000, 2);
+        assert_eq!(emp[0], 0.0);
+        assert_eq!(emp[2], 0.0);
+        assert_eq!(t.prob_of(0), 0.0);
+        assert_eq!(t.log_prob_of(0), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn singleton() {
+        let t = AliasTable::new(&[5.0]);
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            assert_eq!(t.sample(&mut rng), 0);
+        }
+        assert_eq!(t.prob_of(0), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "all weights zero")]
+    fn rejects_all_zero() {
+        AliasTable::new(&[0.0, 0.0]);
+    }
+
+    #[test]
+    fn prop_empirical_matches_weights() {
+        // The paper-level invariant: alias sampling reproduces the target
+        // distribution for ARBITRARY positive weights.
+        for_all("alias empirical ≈ weights", |rng, case| {
+            let n = 2 + rng.below(50);
+            let w = rand_weights(rng, n);
+            let t = AliasTable::new(&w);
+            let total: f64 = w.iter().map(|&x| x as f64).sum();
+            let emp = empirical(&t, 60_000, 1000 + case);
+            for i in 0..n {
+                let want = w[i] as f64 / total;
+                let got = emp[i];
+                // 6-sigma binomial tolerance
+                let sigma = (want * (1.0 - want) / 60_000.0).sqrt();
+                if (got - want).abs() > 6.0 * sigma + 1e-4 {
+                    return Err(format!("i={i} got {got} want {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_probs_sum_to_one() {
+        for_all("alias prob_of sums to 1", |rng, _| {
+            let n = 1 + rng.below(100);
+            let w = rand_weights(rng, n);
+            let t = AliasTable::new(&w);
+            let s: f64 = (0..n).map(|i| t.prob_of(i) as f64).sum();
+            crate::util::check::close(s, 1.0, 1e-5, "sum")
+        });
+    }
+}

@@ -1,0 +1,200 @@
+//! LSH sampler (Spring & Shrivastava 2017; Vijayanarasimhan et al. 2014).
+//!
+//! SimHash (signed random projections): T tables × b bits. At rebuild every
+//! class is hashed into one bucket per table. A draw picks a random table,
+//! hashes the query, and samples uniformly from the colliding bucket
+//! (falling back to a uniform class when the bucket is empty).
+//!
+//! Proposal probability (needed for the IS correction):
+//!   Q(i|z) = (1/T) Σ_t [ i ∈ bucket_t(z) ] / |bucket_t(z)|
+//!          + (fallback mass when bucket_t(z) = ∅) / N
+//! computable in O(T) per sampled class by comparing stored hash codes.
+
+use super::{draw_excluding, Sampler};
+use crate::util::Rng;
+
+pub struct LshSampler {
+    n: usize,
+    tables: usize,
+    bits: usize,
+    d: usize,
+    /// [tables * bits, d] hyperplane normals (drawn once per dimensionality)
+    planes: Vec<f32>,
+    /// per table: CSR over 2^bits buckets
+    offsets: Vec<Vec<u32>>,
+    members: Vec<Vec<u32>>,
+    /// [n, tables] stored hash code of each class
+    codes: Vec<u16>,
+    /// scratch: query hash per table
+    zcodes: Vec<u16>,
+}
+
+impl LshSampler {
+    pub fn new(n: usize, tables: usize, bits: usize) -> Self {
+        assert!(bits <= 16, "bits > 16 unsupported");
+        LshSampler {
+            n,
+            tables,
+            bits,
+            d: 0,
+            planes: Vec::new(),
+            offsets: Vec::new(),
+            members: Vec::new(),
+            codes: Vec::new(),
+            zcodes: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn hash(&self, t: usize, x: &[f32]) -> u16 {
+        let mut code = 0u16;
+        for b in 0..self.bits {
+            let row = &self.planes[(t * self.bits + b) * self.d..(t * self.bits + b + 1) * self.d];
+            let s = crate::util::math::dot(row, x);
+            if s >= 0.0 {
+                code |= 1 << b;
+            }
+        }
+        code
+    }
+
+    fn bucket(&self, t: usize, code: u16) -> &[u32] {
+        let off = &self.offsets[t];
+        &self.members[t][off[code as usize] as usize..off[code as usize + 1] as usize]
+    }
+
+    fn hash_query(&mut self, z: &[f32]) {
+        self.zcodes.resize(self.tables, 0);
+        for t in 0..self.tables {
+            self.zcodes[t] = self.hash(t, z);
+        }
+    }
+
+    /// Q(i|z) given the query's hash codes are already in `zcodes`.
+    fn prob_of(&self, i: usize) -> f32 {
+        let mut p = 0.0f64;
+        let per_table = 1.0 / self.tables as f64;
+        for t in 0..self.tables {
+            let zc = self.zcodes[t];
+            let bucket = self.bucket(t, zc);
+            if bucket.is_empty() {
+                // empty bucket ⇒ that table falls back to uniform
+                p += per_table / self.n as f64;
+            } else if self.codes[i * self.tables + t] == zc {
+                p += per_table / bucket.len() as f64;
+            }
+        }
+        p as f32
+    }
+}
+
+impl Sampler for LshSampler {
+    fn name(&self) -> &str {
+        "lsh"
+    }
+
+    fn rebuild(&mut self, table: &[f32], n: usize, d: usize, rng: &mut Rng) {
+        self.n = n;
+        if self.d != d || self.planes.is_empty() {
+            self.d = d;
+            self.planes = (0..self.tables * self.bits * d)
+                .map(|_| rng.normal_f32(1.0))
+                .collect();
+        }
+        let nb = 1usize << self.bits;
+        self.codes = vec![0; n * self.tables];
+        self.offsets = Vec::with_capacity(self.tables);
+        self.members = Vec::with_capacity(self.tables);
+        for t in 0..self.tables {
+            let mut counts = vec![0u32; nb];
+            for i in 0..n {
+                let c = self.hash(t, &table[i * d..(i + 1) * d]);
+                self.codes[i * self.tables + t] = c;
+                counts[c as usize] += 1;
+            }
+            let mut off = vec![0u32; nb + 1];
+            for b in 0..nb {
+                off[b + 1] = off[b] + counts[b];
+            }
+            let mut mem = vec![0u32; n];
+            let mut cursor = off[..nb].to_vec();
+            for i in 0..n {
+                let c = self.codes[i * self.tables + t] as usize;
+                mem[cursor[c] as usize] = i as u32;
+                cursor[c] += 1;
+            }
+            self.offsets.push(off);
+            self.members.push(mem);
+        }
+    }
+
+    fn sample_into(&mut self, z: &[f32], pos: u32, rng: &mut Rng, ids: &mut [u32], log_q: &mut [f32]) {
+        assert!(!self.codes.is_empty(), "rebuild() before sampling");
+        self.hash_query(z);
+        let n = self.n;
+        for j in 0..ids.len() {
+            let c = draw_excluding(pos, rng, |r| {
+                let t = r.below(self.tables);
+                let bucket = self.bucket(t, self.zcodes[t]);
+                if bucket.is_empty() {
+                    r.below(n) as u32
+                } else {
+                    bucket[r.below(bucket.len())]
+                }
+            });
+            ids[j] = c;
+            log_q[j] = self.prob_of(c as usize).max(f32::MIN_POSITIVE).ln();
+        }
+    }
+
+    fn proposal_dist(&mut self, z: &[f32], out: &mut [f32]) {
+        self.hash_query(z);
+        for i in 0..self.n {
+            out[i] = self.prob_of(i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::testing::conformance;
+    use crate::util::check::rand_matrix;
+
+    #[test]
+    fn conforms() {
+        conformance(Box::new(LshSampler::new(50, 8, 3)), 50, 8, 49);
+    }
+
+    #[test]
+    fn similar_vectors_collide_more() {
+        let mut rng = Rng::new(2);
+        let d = 16;
+        let n = 2;
+        let mut table = vec![0.0f32; n * d];
+        for j in 0..d {
+            table[j] = 1.0; // class 0: all-ones
+            table[d + j] = -1.0; // class 1: anti-aligned
+        }
+        let mut s = LshSampler::new(n, 32, 4);
+        s.rebuild(&table, n, d, &mut rng);
+        let z = vec![1.0f32; d]; // identical to class 0
+        let mut q = vec![0.0f32; n];
+        s.proposal_dist(&z, &mut q);
+        assert!(q[0] > q[1] * 5.0, "collision probs {q:?}");
+    }
+
+    #[test]
+    fn proposal_sums_to_one() {
+        let mut rng = Rng::new(3);
+        let (n, d) = (60, 8);
+        let table = rand_matrix(&mut rng, n, d, 1.0);
+        let mut s = LshSampler::new(n, 16, 4);
+        s.rebuild(&table, n, d, &mut rng);
+        let z = rand_matrix(&mut rng, 1, d, 1.0);
+        let mut q = vec![0.0f32; n];
+        s.proposal_dist(&z, &mut q);
+        let sum: f64 = q.iter().map(|&x| x as f64).sum();
+        assert!((sum - 1.0).abs() < 1e-3, "sum {sum}");
+    }
+}

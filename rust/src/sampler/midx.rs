@@ -1,0 +1,495 @@
+//! MIDX samplers — the paper's contribution.
+//!
+//! * [`MidxSampler`] — the fast variant (Theorem 2): the query-specific
+//!   residual stage is replaced by a uniform draw within the bucket, so a
+//!   query costs O(K·D + K²) for stage scores + joint table, then O(1) per
+//!   draw. Proposal: Q(i|z) ∝ exp(z·(q_i − q̃_i)).
+//! * [`ExactMidxSampler`] — the exact decomposition (Theorem 1): the last
+//!   stage keeps the residual softmax, so the composite proposal equals the
+//!   TRUE softmax distribution — at O(N·D) per query, which is why the
+//!   paper uses it only as an analysis device (its Table 1 row).
+//!
+//! Both rebuild their quantizer + inverted multi-index from the live class
+//! embeddings once per epoch.
+
+use super::{Sampler, MAX_REJECT};
+use crate::index::InvertedMultiIndex;
+use crate::quant::{self, QuantKind, Quantizer};
+use crate::util::math::{log_sum_exp, softmax_inplace};
+use crate::util::Rng;
+
+/// Fast MIDX (Theorem 2).
+pub struct MidxSampler {
+    n: usize,
+    kind: QuantKind,
+    pub k: usize,
+    kmeans_iters: usize,
+    name: &'static str,
+    quant: Option<Box<dyn Quantizer + Send + Sync>>,
+    index: Option<InvertedMultiIndex>,
+    // per-query scratch (reused across calls)
+    s1: Vec<f32>,
+    s2: Vec<f32>,
+    joint: Vec<f32>,
+    cdf: Vec<f32>,
+}
+
+impl MidxSampler {
+    pub fn new(n: usize, kind: QuantKind, k: usize, kmeans_iters: usize) -> Self {
+        let name = match kind {
+            QuantKind::Product => "midx-pq",
+            QuantKind::Residual => "midx-rq",
+        };
+        MidxSampler {
+            n,
+            kind,
+            k,
+            kmeans_iters,
+            name,
+            quant: None,
+            index: None,
+            s1: Vec::new(),
+            s2: Vec::new(),
+            joint: Vec::new(),
+            cdf: Vec::new(),
+        }
+    }
+
+    /// Compute the normalized joint proposal over the K² buckets for `z`.
+    /// Leaves probabilities in `self.joint` and the running CDF in
+    /// `self.cdf`. Returns the number of buckets (K²).
+    fn compute_joint(&mut self, z: &[f32]) -> usize {
+        let quant = self.quant.as_ref().expect("rebuild() before sampling");
+        let index = self.index.as_ref().unwrap();
+        let k = quant.k();
+        self.s1.resize(k, 0.0);
+        self.s2.resize(k, 0.0);
+        quant.stage1_scores(z, &mut self.s1);
+        quant.stage2_scores(z, &mut self.s2);
+
+        let nb = k * k;
+        self.joint.resize(nb, 0.0);
+        for k1 in 0..k {
+            let base = self.s1[k1];
+            for k2 in 0..k {
+                self.joint[k1 * k + k2] = base + self.s2[k2] + index.log_sizes[k1 * k + k2];
+            }
+        }
+        softmax_inplace(&mut self.joint);
+
+        self.cdf.resize(nb, 0.0);
+        let mut acc = 0.0f64;
+        for b in 0..nb {
+            acc += self.joint[b] as f64;
+            self.cdf[b] = acc as f32;
+        }
+        // guard against fp undershoot at the tail
+        if let Some(last) = self.cdf.last_mut() {
+            *last = 1.0;
+        }
+        nb
+    }
+
+    #[inline]
+    fn draw_bucket(&self, rng: &mut Rng) -> usize {
+        let u = rng.next_f32();
+        // first index with cdf[i] > u
+        self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1)
+    }
+
+    /// Native computation of the joint proposal table (parity-checked
+    /// against the AOT Pallas kernel in integration tests).
+    pub fn joint_probs(&mut self, z: &[f32]) -> Vec<f32> {
+        self.compute_joint(z);
+        self.joint.clone()
+    }
+
+    pub fn index(&self) -> Option<&InvertedMultiIndex> {
+        self.index.as_ref()
+    }
+
+    pub fn quantizer(&self) -> Option<&(dyn Quantizer + Send + Sync)> {
+        self.quant.as_deref()
+    }
+}
+
+impl Sampler for MidxSampler {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn rebuild(&mut self, table: &[f32], n: usize, d: usize, rng: &mut Rng) {
+        self.n = n;
+        let q = quant::build(self.kind, table, n, d, self.k, self.kmeans_iters, rng);
+        self.index = Some(InvertedMultiIndex::build(q.as_ref(), n));
+        self.quant = Some(q);
+    }
+
+    fn sample_into(&mut self, z: &[f32], pos: u32, rng: &mut Rng, ids: &mut [u32], log_q: &mut [f32]) {
+        self.compute_joint(z);
+        let index = self.index.as_ref().unwrap();
+        let k = index.k;
+        for j in 0..ids.len() {
+            let mut chosen = u32::MAX;
+            let mut bucket_idx = 0usize;
+            for _ in 0..MAX_REJECT {
+                let b = self.draw_bucket(rng);
+                let members = &index.members
+                    [index.offsets[b] as usize..index.offsets[b + 1] as usize];
+                debug_assert!(!members.is_empty(), "sampled empty bucket");
+                let c = members[rng.below(members.len())];
+                bucket_idx = b;
+                chosen = c;
+                if c != pos {
+                    break;
+                }
+            }
+            let _ = k;
+            ids[j] = chosen;
+            // Q(i|z) = P(bucket) * 1/|bucket|
+            log_q[j] = self.joint[bucket_idx].max(f32::MIN_POSITIVE).ln()
+                - index.log_sizes[bucket_idx];
+        }
+    }
+
+    fn set_codebooks(
+        &mut self,
+        c1: &[f32],
+        c2: &[f32],
+        table: &[f32],
+        n: usize,
+        d: usize,
+    ) -> bool {
+        let q = crate::quant::FixedQuantizer::from_codebooks(
+            self.kind,
+            c1.to_vec(),
+            c2.to_vec(),
+            table,
+            n,
+            d,
+        );
+        self.n = n;
+        self.index = Some(InvertedMultiIndex::build(&q, n));
+        self.quant = Some(Box::new(q));
+        true
+    }
+
+    fn proposal_dist(&mut self, z: &[f32], out: &mut [f32]) {
+        self.compute_joint(z);
+        let index = self.index.as_ref().unwrap();
+        out[..self.n].fill(0.0);
+        let nb = index.k * index.k;
+        for b in 0..nb {
+            let p = self.joint[b];
+            if p <= 0.0 {
+                continue;
+            }
+            let members =
+                &index.members[index.offsets[b] as usize..index.offsets[b + 1] as usize];
+            let per = p / members.len() as f32;
+            for &c in members {
+                out[c as usize] = per;
+            }
+        }
+    }
+}
+
+/// Exact MIDX (Theorem 1): proposal == true softmax.
+pub struct ExactMidxSampler {
+    n: usize,
+    kind: QuantKind,
+    k: usize,
+    kmeans_iters: usize,
+    quant: Option<Box<dyn Quantizer + Send + Sync>>,
+    index: Option<InvertedMultiIndex>,
+    /// copy of the live class table (needed for residual scores)
+    table: Vec<f32>,
+    d: usize,
+    // scratch
+    s1: Vec<f32>,
+    s2: Vec<f32>,
+    resid: Vec<f32>,
+    joint: Vec<f32>,
+    cdf: Vec<f32>,
+    log_z: f32,
+}
+
+impl ExactMidxSampler {
+    pub fn new(n: usize, kind: QuantKind, k: usize, kmeans_iters: usize) -> Self {
+        ExactMidxSampler {
+            n,
+            kind,
+            k,
+            kmeans_iters,
+            quant: None,
+            index: None,
+            table: Vec::new(),
+            d: 0,
+            s1: Vec::new(),
+            s2: Vec::new(),
+            resid: Vec::new(),
+            joint: Vec::new(),
+            cdf: Vec::new(),
+            log_z: 0.0,
+        }
+    }
+
+    /// O(N·D) per query: residual scores õ_i for every class, per-bucket
+    /// log ω (log-sum-exp of residual scores), joint bucket distribution.
+    fn compute(&mut self, z: &[f32]) {
+        let quant = self.quant.as_ref().expect("rebuild() before sampling");
+        let index = self.index.as_ref().unwrap();
+        let k = quant.k();
+        let d = self.d;
+        self.s1.resize(k, 0.0);
+        self.s2.resize(k, 0.0);
+        quant.stage1_scores(z, &mut self.s1);
+        quant.stage2_scores(z, &mut self.s2);
+
+        // residual score õ_i = z·q_i − (s1[a1(i)] + s2[a2(i)])
+        let (a1, a2) = quant.codes();
+        self.resid.resize(self.n, 0.0);
+        for i in 0..self.n {
+            let full = crate::util::math::dot(z, &self.table[i * d..(i + 1) * d]);
+            self.resid[i] = full - self.s1[a1[i] as usize] - self.s2[a2[i] as usize];
+        }
+
+        // per-bucket log ω = lse of residual scores; joint = s1+s2+logω
+        let nb = k * k;
+        self.joint.resize(nb, 0.0);
+        for k1 in 0..k {
+            for k2 in 0..k {
+                let b = k1 * k + k2;
+                let members =
+                    &index.members[index.offsets[b] as usize..index.offsets[b + 1] as usize];
+                if members.is_empty() {
+                    self.joint[b] = f32::NEG_INFINITY;
+                    continue;
+                }
+                let m = members
+                    .iter()
+                    .map(|&c| self.resid[c as usize])
+                    .fold(f32::NEG_INFINITY, f32::max);
+                let s: f64 = members
+                    .iter()
+                    .map(|&c| ((self.resid[c as usize] - m) as f64).exp())
+                    .sum();
+                let log_omega = m + s.ln() as f32;
+                self.joint[b] = self.s1[k1] + self.s2[k2] + log_omega;
+            }
+        }
+        self.log_z = log_sum_exp(&self.joint);
+        softmax_inplace(&mut self.joint);
+
+        self.cdf.resize(nb, 0.0);
+        let mut acc = 0.0f64;
+        for b in 0..nb {
+            acc += self.joint[b] as f64;
+            self.cdf[b] = acc as f32;
+        }
+        if let Some(last) = self.cdf.last_mut() {
+            *last = 1.0;
+        }
+    }
+}
+
+impl Sampler for ExactMidxSampler {
+    fn name(&self) -> &str {
+        "exact-midx"
+    }
+
+    fn rebuild(&mut self, table: &[f32], n: usize, d: usize, rng: &mut Rng) {
+        self.n = n;
+        self.d = d;
+        self.table = table.to_vec();
+        let q = quant::build(self.kind, table, n, d, self.k, self.kmeans_iters, rng);
+        self.index = Some(InvertedMultiIndex::build(q.as_ref(), n));
+        self.quant = Some(q);
+    }
+
+    fn sample_into(&mut self, z: &[f32], pos: u32, rng: &mut Rng, ids: &mut [u32], log_q: &mut [f32]) {
+        self.compute(z);
+        let index = self.index.as_ref().unwrap();
+        let quant = self.quant.as_ref().unwrap();
+        let (a1, a2) = quant.codes();
+        let k = index.k;
+        for j in 0..ids.len() {
+            let mut chosen = u32::MAX;
+            for _ in 0..MAX_REJECT {
+                // stage 1+2: joint bucket (equivalent to sequential P¹, P²)
+                let u = rng.next_f32();
+                let b = self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1);
+                let members =
+                    &index.members[index.offsets[b] as usize..index.offsets[b + 1] as usize];
+                // stage 3: residual softmax within the bucket
+                let mx = members
+                    .iter()
+                    .map(|&c| self.resid[c as usize])
+                    .fold(f32::NEG_INFINITY, f32::max);
+                let total: f64 = members
+                    .iter()
+                    .map(|&c| ((self.resid[c as usize] - mx) as f64).exp())
+                    .sum();
+                let mut t = rng.next_f64() * total;
+                let mut pick = members[members.len() - 1];
+                for &c in members {
+                    t -= ((self.resid[c as usize] - mx) as f64).exp();
+                    if t <= 0.0 {
+                        pick = c;
+                        break;
+                    }
+                }
+                chosen = pick;
+                if chosen != pos {
+                    break;
+                }
+            }
+            ids[j] = chosen;
+            // exact log softmax: s1 + s2 + õ − log Z
+            let i = chosen as usize;
+            log_q[j] = self.s1[a1[i] as usize] + self.s2[a2[i] as usize] + self.resid[i]
+                - self.log_z;
+            let _ = k;
+        }
+    }
+
+    fn proposal_dist(&mut self, z: &[f32], out: &mut [f32]) {
+        self.compute(z);
+        let quant = self.quant.as_ref().unwrap();
+        let (a1, a2) = quant.codes();
+        for i in 0..self.n {
+            out[i] = (self.s1[a1[i] as usize] + self.s2[a2[i] as usize] + self.resid[i]
+                - self.log_z)
+                .exp();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::testing::conformance;
+    use crate::util::check::{for_all, rand_matrix};
+    use crate::util::math::softmax_inplace as softmax;
+
+    #[test]
+    fn midx_pq_conforms() {
+        conformance(Box::new(MidxSampler::new(60, QuantKind::Product, 4, 10)), 60, 8, 44);
+    }
+
+    #[test]
+    fn midx_rq_conforms() {
+        conformance(Box::new(MidxSampler::new(60, QuantKind::Residual, 4, 10)), 60, 8, 45);
+    }
+
+    #[test]
+    fn exact_midx_conforms() {
+        conformance(Box::new(ExactMidxSampler::new(50, QuantKind::Product, 4, 10)), 50, 8, 46);
+    }
+
+    #[test]
+    fn prop_exact_midx_equals_softmax() {
+        // Theorem 1: the exact decomposition IS the softmax distribution.
+        for_all("exact MIDX == softmax", |rng, _| {
+            let n = 20 + rng.below(60);
+            let d = 4 + rng.below(8);
+            let table = rand_matrix(rng, n, d, 0.8);
+            let z = rand_matrix(rng, 1, d, 0.8);
+            let mut s = ExactMidxSampler::new(n, QuantKind::Product, 3, 8);
+            let mut r2 = Rng::new(17);
+            s.rebuild(&table, n, d, &mut r2);
+            let mut q = vec![0.0f32; n];
+            s.proposal_dist(&z, &mut q);
+            // direct softmax over z·Q^T
+            let mut scores: Vec<f32> = (0..n)
+                .map(|i| crate::util::math::dot(&z, &table[i * d..(i + 1) * d]))
+                .collect();
+            softmax(&mut scores);
+            for i in 0..n {
+                if (q[i] - scores[i]).abs() > 1e-3 * (1.0 + scores[i]) {
+                    return Err(format!("class {i}: {} vs {}", q[i], scores[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_fast_midx_matches_theorem2_closed_form() {
+        // Theorem 2: Q(i|z) = exp(z·(q_i − q̃_i)) / Σ_j exp(z·(q_j − q̃_j)).
+        for_all("fast MIDX == Thm 2 closed form", |rng, case| {
+            let n = 20 + rng.below(60);
+            let d = 4 + 2 * rng.below(4);
+            let kind = if case % 2 == 0 { QuantKind::Product } else { QuantKind::Residual };
+            let table = rand_matrix(rng, n, d, 0.8);
+            let z = rand_matrix(rng, 1, d, 0.8);
+            let mut s = MidxSampler::new(n, kind, 4, 8);
+            let mut r2 = Rng::new(23);
+            s.rebuild(&table, n, d, &mut r2);
+            let mut q = vec![0.0f32; n];
+            s.proposal_dist(&z, &mut q);
+
+            // closed form via reconstructed embeddings
+            let quant = s.quantizer().unwrap();
+            let mut rec = vec![0.0f32; d];
+            let mut scores = vec![0.0f32; n];
+            for i in 0..n {
+                quant.reconstruct(i, &mut rec);
+                scores[i] = crate::util::math::dot(&z, &rec);
+            }
+            softmax(&mut scores);
+            for i in 0..n {
+                if (q[i] - scores[i]).abs() > 1e-3 * (1.0 + scores[i]) {
+                    return Err(format!("class {i}: {} vs {}", q[i], scores[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn joint_probs_sum_to_one_and_respect_empty_buckets() {
+        let mut rng = Rng::new(5);
+        let (n, d) = (80, 8);
+        let table = rand_matrix(&mut rng, n, d, 1.0);
+        let mut s = MidxSampler::new(n, QuantKind::Product, 8, 10);
+        s.rebuild(&table, n, d, &mut rng);
+        let z = rand_matrix(&mut rng, 1, d, 1.0);
+        let joint = s.joint_probs(&z);
+        let sum: f64 = joint.iter().map(|&x| x as f64).sum();
+        assert!((sum - 1.0).abs() < 1e-4);
+        let index = s.index().unwrap();
+        for b in 0..index.k * index.k {
+            if index.sizes[b] == 0.0 {
+                assert_eq!(joint[b], 0.0, "empty bucket got probability");
+            }
+        }
+    }
+
+    #[test]
+    fn higher_score_classes_sampled_more() {
+        // The qualitative property motivating the whole design: classes whose
+        // embeddings align with the query must be drawn more often.
+        let mut rng = Rng::new(6);
+        let (n, d) = (100, 8);
+        let mut table = rand_matrix(&mut rng, n, d, 0.3);
+        let z: Vec<f32> = (0..d).map(|j| if j == 0 { 2.0 } else { 0.0 }).collect();
+        // plant 10 classes aligned with z
+        for i in 0..10 {
+            table[i * d] = 3.0;
+        }
+        let mut s = MidxSampler::new(n, QuantKind::Residual, 8, 15);
+        s.rebuild(&table, n, d, &mut rng);
+        let mut ids = vec![0u32; 64];
+        let mut lq = vec![0.0f32; 64];
+        let mut aligned = 0usize;
+        let mut total = 0usize;
+        for _ in 0..50 {
+            s.sample_into(&z, u32::MAX, &mut rng, &mut ids, &mut lq);
+            aligned += ids.iter().filter(|&&c| c < 10).count();
+            total += ids.len();
+        }
+        let frac = aligned as f64 / total as f64;
+        assert!(frac > 0.5, "aligned fraction {frac} (uniform would be 0.1)");
+    }
+}

@@ -1,0 +1,294 @@
+//! The sampler suite: every proposal distribution the paper evaluates.
+//!
+//! | paper name | module      | adaptivity | per-query cost        |
+//! |------------|-------------|------------|-----------------------|
+//! | Uniform    | `uniform`   | static     | O(M)                  |
+//! | Unigram    | `unigram`   | static     | O(M) (alias)          |
+//! | LSH        | `lsh`       | adaptive   | O(T·bits·D + M)       |
+//! | Sphere     | `sphere`    | adaptive   | O(N·D) (paper's GPU impl) |
+//! | RFF        | `rff`       | adaptive   | O(N·R)                |
+//! | Exact MIDX | `midx`      | adaptive   | O(N·D + M) (Thm 1)    |
+//! | MIDX-pq/rq | `midx`      | adaptive   | O(K·D + K² + M) (Thm 2) |
+//!
+//! Contract: `sample_into` fills `m` class ids plus the **log proposal
+//! probability** Q(i|z) of each draw, normalized over all N classes — this
+//! is what the sampled-softmax logit correction (L1 kernel) consumes.
+//! Positives are excluded by bounded rejection; after `MAX_REJECT` tries a
+//! colliding sample is kept (its corrected logit then just duplicates the
+//! positive, which is the paper's Eq. 1 `y_s = 1` case).
+
+pub mod alias;
+pub mod lsh;
+pub mod midx;
+pub mod rff;
+pub mod sphere;
+pub mod uniform;
+pub mod unigram;
+
+pub use alias::AliasTable;
+pub use lsh::LshSampler;
+pub use midx::{ExactMidxSampler, MidxSampler};
+pub use rff::RffSampler;
+pub use sphere::SphereSampler;
+pub use uniform::UniformSampler;
+pub use unigram::UnigramSampler;
+
+use crate::quant::QuantKind;
+use crate::util::Rng;
+
+pub const MAX_REJECT: usize = 8;
+
+/// A proposal distribution over classes, conditioned (or not) on a query.
+pub trait Sampler: Send {
+    /// Short identifier used in reports ("midx-rq", "uniform", ...).
+    fn name(&self) -> &str;
+
+    /// Refresh internal state from the live class-embedding table [n, d].
+    /// Called once before each epoch (paper §4.4: "the initialization is
+    /// only updated before each epoch"). Static samplers ignore it.
+    fn rebuild(&mut self, table: &[f32], n: usize, d: usize, rng: &mut Rng);
+
+    /// Draw `ids.len()` negatives for query `z`, excluding `pos` (bounded
+    /// rejection), writing log proposal probabilities alongside.
+    fn sample_into(&mut self, z: &[f32], pos: u32, rng: &mut Rng, ids: &mut [u32], log_q: &mut [f32]);
+
+    /// Full normalized proposal distribution Q(·|z) over all N classes.
+    /// O(N) — used by the stats/analysis benches only, never in training.
+    fn proposal_dist(&mut self, z: &[f32], out: &mut [f32]);
+
+    /// True if the proposal depends on the query (adaptive samplers).
+    fn is_adaptive(&self) -> bool {
+        true
+    }
+
+    /// Install externally-learned codebooks (paper §6.2.3 MIDX-Learn):
+    /// classes are re-assigned to their nearest codewords and the inverted
+    /// multi-index is rebuilt around the given codebooks instead of k-means
+    /// output. Returns false for samplers without codebooks.
+    fn set_codebooks(
+        &mut self,
+        _c1: &[f32],
+        _c2: &[f32],
+        _table: &[f32],
+        _n: usize,
+        _d: usize,
+    ) -> bool {
+        false
+    }
+}
+
+/// Sampler selector used across configs / CLI / benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplerKind {
+    Uniform,
+    Unigram,
+    Lsh,
+    Sphere,
+    Rff,
+    MidxPq,
+    MidxRq,
+    ExactMidx,
+}
+
+impl SamplerKind {
+    pub fn parse(s: &str) -> Option<SamplerKind> {
+        Some(match s {
+            "uniform" => SamplerKind::Uniform,
+            "unigram" => SamplerKind::Unigram,
+            "lsh" => SamplerKind::Lsh,
+            "sphere" => SamplerKind::Sphere,
+            "rff" => SamplerKind::Rff,
+            "midx-pq" | "midx_pq" => SamplerKind::MidxPq,
+            "midx-rq" | "midx_rq" => SamplerKind::MidxRq,
+            "exact-midx" | "exact_midx" => SamplerKind::ExactMidx,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerKind::Uniform => "uniform",
+            SamplerKind::Unigram => "unigram",
+            SamplerKind::Lsh => "lsh",
+            SamplerKind::Sphere => "sphere",
+            SamplerKind::Rff => "rff",
+            SamplerKind::MidxPq => "midx-pq",
+            SamplerKind::MidxRq => "midx-rq",
+            SamplerKind::ExactMidx => "exact-midx",
+        }
+    }
+
+    /// All samplers compared in the paper's tables (excluding Full, which is
+    /// not a sampler but the O(N) loss).
+    pub fn all() -> &'static [SamplerKind] {
+        &[
+            SamplerKind::Uniform,
+            SamplerKind::Unigram,
+            SamplerKind::Lsh,
+            SamplerKind::Sphere,
+            SamplerKind::Rff,
+            SamplerKind::MidxPq,
+            SamplerKind::MidxRq,
+        ]
+    }
+}
+
+/// Tuning knobs shared by the factory.
+#[derive(Clone, Debug)]
+pub struct SamplerParams {
+    /// K — codewords per codebook (MIDX)
+    pub k_codewords: usize,
+    /// k-means iterations at rebuild (MIDX)
+    pub kmeans_iters: usize,
+    /// LSH: number of hash tables
+    pub lsh_tables: usize,
+    /// LSH: hash bits per table
+    pub lsh_bits: usize,
+    /// Sphere: α in α·s² + 1
+    pub sphere_alpha: f32,
+    /// RFF: feature map dimension R
+    pub rff_dim: usize,
+    /// RFF: temperature τ
+    pub rff_tau: f32,
+    /// class frequencies for the unigram proposal (from the dataset)
+    pub frequencies: Vec<f32>,
+}
+
+impl Default for SamplerParams {
+    fn default() -> Self {
+        SamplerParams {
+            k_codewords: 32,
+            kmeans_iters: 10,
+            lsh_tables: 16,
+            lsh_bits: 4,
+            sphere_alpha: 100.0,
+            rff_dim: 32,
+            rff_tau: 4.0,
+            frequencies: Vec::new(),
+        }
+    }
+}
+
+/// Construct a sampler for `n` classes.
+pub fn build(kind: SamplerKind, n: usize, params: &SamplerParams) -> Box<dyn Sampler> {
+    match kind {
+        SamplerKind::Uniform => Box::new(UniformSampler::new(n)),
+        SamplerKind::Unigram => {
+            let freq = if params.frequencies.len() == n {
+                params.frequencies.clone()
+            } else {
+                vec![1.0; n] // degenerate to uniform when no counts known
+            };
+            Box::new(UnigramSampler::new(&freq))
+        }
+        SamplerKind::Lsh => Box::new(LshSampler::new(n, params.lsh_tables, params.lsh_bits)),
+        SamplerKind::Sphere => Box::new(SphereSampler::new(n, params.sphere_alpha)),
+        SamplerKind::Rff => Box::new(RffSampler::new(n, params.rff_dim, params.rff_tau)),
+        SamplerKind::MidxPq => Box::new(MidxSampler::new(
+            n,
+            QuantKind::Product,
+            params.k_codewords,
+            params.kmeans_iters,
+        )),
+        SamplerKind::MidxRq => Box::new(MidxSampler::new(
+            n,
+            QuantKind::Residual,
+            params.k_codewords,
+            params.kmeans_iters,
+        )),
+        SamplerKind::ExactMidx => Box::new(ExactMidxSampler::new(
+            n,
+            QuantKind::Product,
+            params.k_codewords,
+            params.kmeans_iters,
+        )),
+    }
+}
+
+/// Shared rejection helper: draw via `draw()`, retry while hitting `pos`.
+#[inline]
+pub(crate) fn draw_excluding<F: FnMut(&mut Rng) -> u32>(
+    pos: u32,
+    rng: &mut Rng,
+    mut draw: F,
+) -> u32 {
+    for _ in 0..MAX_REJECT {
+        let c = draw(rng);
+        if c != pos {
+            return c;
+        }
+    }
+    draw(rng)
+}
+
+#[cfg(test)]
+pub(crate) mod testing {
+    //! Shared conformance checks every sampler must pass.
+    use super::*;
+    use crate::util::check::rand_matrix;
+    use crate::util::math;
+
+    /// Empirical sampling frequency must match exp(log_q) (self-consistency)
+    /// and `proposal_dist` must agree with per-draw log_q.
+    pub fn conformance(mut s: Box<dyn Sampler>, n: usize, d: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let table = rand_matrix(&mut rng, n, d, 0.5);
+        s.rebuild(&table, n, d, &mut rng);
+        let z = rand_matrix(&mut rng, 1, d, 0.5);
+
+        // (1) proposal_dist is a distribution
+        let mut q = vec![0.0f32; n];
+        s.proposal_dist(&z, &mut q);
+        let sum: f64 = q.iter().map(|&x| x as f64).sum();
+        assert!((sum - 1.0).abs() < 1e-3, "{}: proposal sums to {sum}", s.name());
+        assert!(q.iter().all(|&x| (0.0..=1.0 + 1e-6).contains(&x)));
+
+        // (2) per-draw log_q agrees with proposal_dist
+        let m = 32;
+        let mut ids = vec![0u32; m];
+        let mut log_q = vec![0.0f32; m];
+        let pos = 0u32;
+        for _ in 0..20 {
+            s.sample_into(&z, pos, &mut rng, &mut ids, &mut log_q);
+            for j in 0..m {
+                let want = q[ids[j] as usize].max(1e-30).ln();
+                assert!(
+                    (log_q[j] - want).abs() < 1e-2 * (1.0 + want.abs()),
+                    "{}: log_q {} vs dist {} for class {}",
+                    s.name(),
+                    log_q[j],
+                    want,
+                    ids[j]
+                );
+            }
+        }
+
+        // (3) empirical frequencies track the declared distribution
+        let draws = 40_000;
+        let mut counts = vec![0f64; n];
+        let mut ids1 = [0u32; 1];
+        let mut lq1 = [0.0f32; 1];
+        for _ in 0..draws {
+            s.sample_into(&z, u32::MAX, &mut rng, &mut ids1, &mut lq1);
+            counts[ids1[0] as usize] += 1.0;
+        }
+        let mut tv = 0.0; // total-variation distance
+        for i in 0..n {
+            tv += (counts[i] / draws as f64 - q[i] as f64).abs();
+        }
+        tv *= 0.5;
+        assert!(tv < 0.06, "{}: TV distance {tv}", s.name());
+
+        // (4) positives excluded (given enough alternatives)
+        let mut ids2 = vec![0u32; 16];
+        let mut lq2 = vec![0.0f32; 16];
+        let dominated_pos = math::argmax(&q) as u32;
+        let mut hits = 0;
+        for _ in 0..50 {
+            s.sample_into(&z, dominated_pos, &mut rng, &mut ids2, &mut lq2);
+            hits += ids2.iter().filter(|&&i| i == dominated_pos).count();
+        }
+        // bounded rejection: collisions possible but must be rare
+        assert!(hits < 50, "{}: positive sampled {hits} times", s.name());
+    }
+}

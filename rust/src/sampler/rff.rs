@@ -1,0 +1,184 @@
+//! Random-Fourier-feature sampler (Rawat et al. 2019).
+//!
+//! Approximates the Gaussian-kernel softmax over ℓ2-NORMALIZED embeddings:
+//! exp(τ·ẑ·q̂) = e^τ · exp(−τ‖ẑ−q̂‖²/2), whose shift-invariant part is
+//! estimated with an R-dimensional RFF map
+//!   φ(x) = √(2/R) · [cos(w_r·x + b_r)]_r ,  w_r ~ N(0, τ·I), b_r ~ U[0,2π).
+//! Proposal Q(i|z) ∝ max(φ(ẑ)·Φ_i, ε) with Φ precomputed per class at
+//! rebuild (O(N·R) per query — the paper's GPU implementation, no trees).
+
+use super::{draw_excluding, Sampler};
+use crate::util::math::{dot, norm2};
+use crate::util::Rng;
+
+pub struct RffSampler {
+    n: usize,
+    r: usize,
+    tau: f32,
+    d: usize,
+    /// [r, d] projection matrix (drawn once, scaled by sqrt(tau))
+    w: Vec<f32>,
+    /// [r] phase offsets
+    b: Vec<f32>,
+    /// [n, r] class feature matrix (rebuilt per epoch)
+    phi: Vec<f32>,
+    // scratch
+    zfeat: Vec<f32>,
+    weights: Vec<f32>,
+    cdf: Vec<f32>,
+    total: f64,
+}
+
+const EPS: f32 = 1e-6;
+
+impl RffSampler {
+    pub fn new(n: usize, r: usize, tau: f32) -> Self {
+        RffSampler {
+            n,
+            r,
+            tau,
+            d: 0,
+            w: Vec::new(),
+            b: Vec::new(),
+            phi: Vec::new(),
+            zfeat: Vec::new(),
+            weights: Vec::new(),
+            cdf: Vec::new(),
+            total: 0.0,
+        }
+    }
+
+    /// φ(x̂) for an ℓ2-normalized input; writes `r` features.
+    fn features(&self, x: &[f32], out: &mut [f32]) {
+        let scale = (2.0 / self.r as f32).sqrt();
+        let nrm = norm2(x).max(1e-12);
+        for j in 0..self.r {
+            let mut acc = 0.0f32;
+            let row = &self.w[j * self.d..(j + 1) * self.d];
+            for t in 0..self.d {
+                acc += row[t] * (x[t] / nrm);
+            }
+            out[j] = scale * (acc + self.b[j]).cos();
+        }
+    }
+
+    fn compute(&mut self, z: &[f32]) {
+        assert!(!self.phi.is_empty(), "rebuild() before sampling");
+        let (n, r) = (self.n, self.r);
+        let mut zf = std::mem::take(&mut self.zfeat);
+        zf.resize(r, 0.0);
+        self.features(z, &mut zf);
+        self.weights.resize(n, 0.0);
+        self.cdf.resize(n, 0.0);
+        let mut acc = 0.0f64;
+        for i in 0..n {
+            let k = dot(&zf, &self.phi[i * r..(i + 1) * r]);
+            let wgt = k.max(EPS); // kernel estimate can dip negative
+            self.weights[i] = wgt;
+            acc += wgt as f64;
+            self.cdf[i] = acc as f32;
+        }
+        self.total = acc;
+        self.zfeat = zf;
+    }
+
+    #[inline]
+    fn draw(&self, rng: &mut Rng) -> u32 {
+        let u = (rng.next_f64() * self.total) as f32;
+        self.cdf.partition_point(|&c| c <= u).min(self.n - 1) as u32
+    }
+}
+
+impl Sampler for RffSampler {
+    fn name(&self) -> &str {
+        "rff"
+    }
+
+    fn rebuild(&mut self, table: &[f32], n: usize, d: usize, rng: &mut Rng) {
+        self.n = n;
+        if self.d != d || self.w.is_empty() {
+            // draw the projection once per dimensionality
+            self.d = d;
+            let std = self.tau.sqrt();
+            self.w = (0..self.r * d).map(|_| rng.normal_f32(std)).collect();
+            self.b = (0..self.r)
+                .map(|_| (rng.next_f64() * 2.0 * std::f64::consts::PI) as f32)
+                .collect();
+        }
+        self.phi = vec![0.0; n * self.r];
+        let mut row = vec![0.0f32; self.r];
+        for i in 0..n {
+            self.features(&table[i * d..(i + 1) * d], &mut row);
+            self.phi[i * self.r..(i + 1) * self.r].copy_from_slice(&row);
+        }
+    }
+
+    fn sample_into(&mut self, z: &[f32], pos: u32, rng: &mut Rng, ids: &mut [u32], log_q: &mut [f32]) {
+        self.compute(z);
+        let log_total = (self.total as f32).ln();
+        for j in 0..ids.len() {
+            let c = draw_excluding(pos, rng, |r| self.draw(r));
+            ids[j] = c;
+            log_q[j] = self.weights[c as usize].ln() - log_total;
+        }
+    }
+
+    fn proposal_dist(&mut self, z: &[f32], out: &mut [f32]) {
+        self.compute(z);
+        let inv = (1.0 / self.total) as f32;
+        for i in 0..self.n {
+            out[i] = self.weights[i] * inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::testing::conformance;
+    use crate::util::check::rand_matrix;
+
+    #[test]
+    fn conforms() {
+        conformance(Box::new(RffSampler::new(40, 64, 2.0)), 40, 8, 48);
+    }
+
+    #[test]
+    fn kernel_estimate_tracks_cosine_similarity() {
+        // Classes aligned with z must receive higher proposal mass than
+        // anti-aligned ones (on normalized embeddings).
+        let mut rng = Rng::new(3);
+        let d = 16;
+        let n = 4;
+        let mut table = vec![0.0f32; n * d];
+        table[0] = 1.0; // class 0 == e0  (aligned)
+        table[d] = -1.0; // class 1 == −e0 (anti-aligned)
+        table[2 * d + 1] = 1.0; // class 2 == e1  (orthogonal)
+        table[3 * d + 2] = 1.0; // class 3 == e2  (orthogonal)
+        let mut s = RffSampler::new(n, 256, 4.0);
+        s.rebuild(&table, n, d, &mut rng);
+        let z = {
+            let mut v = vec![0.0f32; d];
+            v[0] = 1.0;
+            v
+        };
+        let mut q = vec![0.0f32; n];
+        s.proposal_dist(&z, &mut q);
+        assert!(q[0] > q[2] && q[0] > q[3], "aligned not preferred: {q:?}");
+        assert!(q[0] > q[1] * 3.0, "anti-aligned not suppressed: {q:?}");
+    }
+
+    #[test]
+    fn projection_stable_across_rebuilds() {
+        // w is drawn once; rebuilding with new embeddings must not change it
+        // (otherwise log_q would be inconsistent across an epoch boundary).
+        let mut rng = Rng::new(4);
+        let table = rand_matrix(&mut rng, 10, 6, 1.0);
+        let mut s = RffSampler::new(10, 16, 2.0);
+        s.rebuild(&table, 10, 6, &mut rng);
+        let w0 = s.w.clone();
+        let table2 = rand_matrix(&mut rng, 10, 6, 1.0);
+        s.rebuild(&table2, 10, 6, &mut rng);
+        assert_eq!(w0, s.w);
+    }
+}

@@ -1,0 +1,70 @@
+//! Uniform proposal: Q(i|z) = 1/N. The simplest static baseline
+//! (paper §6.1); KL bound 2‖o‖∞ (Theorem 3).
+
+use super::{draw_excluding, Sampler};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct UniformSampler {
+    n: usize,
+    log_q: f32,
+}
+
+impl UniformSampler {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        UniformSampler { n, log_q: -(n as f32).ln() }
+    }
+}
+
+impl Sampler for UniformSampler {
+    fn name(&self) -> &str {
+        "uniform"
+    }
+
+    fn rebuild(&mut self, _table: &[f32], n: usize, _d: usize, _rng: &mut Rng) {
+        self.n = n;
+        self.log_q = -(n as f32).ln();
+    }
+
+    fn sample_into(&mut self, _z: &[f32], pos: u32, rng: &mut Rng, ids: &mut [u32], log_q: &mut [f32]) {
+        let n = self.n;
+        for j in 0..ids.len() {
+            ids[j] = draw_excluding(pos, rng, |r| r.below(n) as u32);
+            log_q[j] = self.log_q;
+        }
+    }
+
+    fn proposal_dist(&mut self, _z: &[f32], out: &mut [f32]) {
+        let p = 1.0 / self.n as f32;
+        out[..self.n].fill(p);
+    }
+
+    fn is_adaptive(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::testing::conformance;
+
+    #[test]
+    fn conforms() {
+        conformance(Box::new(UniformSampler::new(64)), 64, 8, 42);
+    }
+
+    #[test]
+    fn log_q_is_log_n() {
+        let mut s = UniformSampler::new(100);
+        let mut rng = Rng::new(1);
+        let mut ids = [0u32; 4];
+        let mut lq = [0.0f32; 4];
+        s.sample_into(&[0.0; 8], 5, &mut rng, &mut ids, &mut lq);
+        for &l in &lq {
+            assert!((l + (100f32).ln()).abs() < 1e-6);
+        }
+        assert!(ids.iter().all(|&i| i < 100));
+    }
+}

@@ -1,0 +1,96 @@
+//! Unigram proposal: Q(i) ∝ class frequency in the training data
+//! (paper §6.1, Mikolov et al. 2013). Static — an alias table built once.
+//! KL bound 2‖o‖∞ + ln(N·q_max) (Theorem 4).
+
+use super::{draw_excluding, AliasTable, Sampler};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct UnigramSampler {
+    table: AliasTable,
+    /// cached log-probabilities (avoids ln() per draw)
+    log_p: Vec<f32>,
+}
+
+impl UnigramSampler {
+    /// `freq[i]` = raw count (or any non-negative weight) of class i.
+    /// Zero-frequency classes get a small floor so every class remains
+    /// reachable (required for an unbiased self-normalized estimator).
+    pub fn new(freq: &[f32]) -> Self {
+        let total: f64 = freq.iter().map(|&f| f as f64).sum();
+        let floor = (total.max(1.0) * 1e-6 / freq.len() as f64) as f32;
+        let weights: Vec<f32> = freq.iter().map(|&f| f.max(floor)).collect();
+        let table = AliasTable::new(&weights);
+        let log_p = (0..weights.len()).map(|i| table.log_prob_of(i)).collect();
+        UnigramSampler { table, log_p }
+    }
+}
+
+impl Sampler for UnigramSampler {
+    fn name(&self) -> &str {
+        "unigram"
+    }
+
+    fn rebuild(&mut self, _table: &[f32], _n: usize, _d: usize, _rng: &mut Rng) {
+        // static proposal: frequencies do not change during training
+    }
+
+    fn sample_into(&mut self, _z: &[f32], pos: u32, rng: &mut Rng, ids: &mut [u32], log_q: &mut [f32]) {
+        for j in 0..ids.len() {
+            let c = draw_excluding(pos, rng, |r| self.table.sample(r));
+            ids[j] = c;
+            log_q[j] = self.log_p[c as usize];
+        }
+    }
+
+    fn proposal_dist(&mut self, _z: &[f32], out: &mut [f32]) {
+        for i in 0..self.table.len() {
+            out[i] = self.table.prob_of(i);
+        }
+    }
+
+    fn is_adaptive(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::testing::conformance;
+
+    #[test]
+    fn conforms() {
+        let mut rng = Rng::new(7);
+        let freq: Vec<f32> = (0..48).map(|_| rng.next_f32() * 10.0 + 0.1).collect();
+        conformance(Box::new(UnigramSampler::new(&freq)), 48, 8, 43);
+    }
+
+    #[test]
+    fn skewed_frequencies_respected() {
+        let mut freq = vec![1.0f32; 10];
+        freq[0] = 1000.0;
+        let mut s = UnigramSampler::new(&freq);
+        let mut rng = Rng::new(2);
+        let mut ids = [0u32; 1];
+        let mut lq = [0.0f32; 1];
+        let mut hits = 0;
+        for _ in 0..2000 {
+            s.sample_into(&[], u32::MAX, &mut rng, &mut ids, &mut lq);
+            if ids[0] == 0 {
+                hits += 1;
+            }
+        }
+        // class 0 has ~99% of the mass
+        assert!(hits > 1900, "hits {hits}");
+    }
+
+    #[test]
+    fn zero_freq_gets_floor() {
+        let s = UnigramSampler::new(&[0.0, 10.0]);
+        let mut dist = vec![0.0; 2];
+        let mut s2 = s.clone();
+        s2.proposal_dist(&[], &mut dist);
+        assert!(dist[0] > 0.0, "zero-frequency class unreachable");
+    }
+}

@@ -1,0 +1,123 @@
+//! Sampling-distribution analysis (paper Figures 4–5): cumulative
+//! probability curves over classes ordered by descending softmax mass.
+
+use crate::sampler::Sampler;
+use crate::stats::divergence::softmax_dist;
+use crate::util::Rng;
+
+/// Cumulative distribution of `dist`, with classes ordered by DESCENDING
+/// `order_by`. Returns the cumulative values at `points` fractional ranks
+/// (e.g. [0.01, 0.05, 0.1, ...]).
+pub fn cumulative_curve(dist: &[f32], order_by: &[f32], points: &[f64]) -> Vec<f64> {
+    let n = dist.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| order_by[b].partial_cmp(&order_by[a]).unwrap());
+    let mut cum = Vec::with_capacity(n);
+    let mut acc = 0.0f64;
+    for &i in &idx {
+        acc += dist[i] as f64;
+        cum.push(acc);
+    }
+    points
+        .iter()
+        .map(|&p| {
+            let pos = ((p * n as f64) as usize).min(n - 1);
+            cum[pos]
+        })
+        .collect()
+}
+
+/// Empirical sampling frequency of a sampler over many draws for one query.
+pub fn empirical_frequency(
+    sampler: &mut dyn Sampler,
+    z: &[f32],
+    n: usize,
+    draws: usize,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let mut counts = vec![0.0f32; n];
+    let mut ids = [0u32; 1];
+    let mut lq = [0.0f32; 1];
+    for _ in 0..draws {
+        sampler.sample_into(z, u32::MAX, rng, &mut ids, &mut lq);
+        counts[ids[0] as usize] += 1.0;
+    }
+    let inv = 1.0 / draws as f32;
+    for c in counts.iter_mut() {
+        *c *= inv;
+    }
+    counts
+}
+
+/// Figure 4/5 row: cumulative curves of softmax + each sampler's proposal,
+/// classes ordered by softmax probability.
+pub fn distribution_curves(
+    samplers: &mut [(String, Box<dyn Sampler>)],
+    z: &[f32],
+    table: &[f32],
+    n: usize,
+    d: usize,
+    points: &[f64],
+) -> Vec<(String, Vec<f64>)> {
+    let p = softmax_dist(z, table, n, d);
+    let mut out = vec![("softmax".to_string(), cumulative_curve(&p, &p, points))];
+    let mut q = vec![0.0f32; n];
+    for (name, s) in samplers.iter_mut() {
+        s.proposal_dist(z, &mut q);
+        out.push((name.clone(), cumulative_curve(&q, &p, points)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::{Sampler, UniformSampler};
+    use crate::util::check::rand_matrix;
+
+    #[test]
+    fn cumulative_of_uniform_is_linear() {
+        let dist = vec![0.25f32; 4];
+        let order = vec![4.0f32, 3.0, 2.0, 1.0];
+        let c = cumulative_curve(&dist, &order, &[0.0, 0.5, 0.99]);
+        assert!((c[0] - 0.25).abs() < 1e-6); // first class
+        assert!((c[1] - 0.75).abs() < 1e-6); // 3 of 4
+        assert!((c[2] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn peaked_distribution_concentrates_early() {
+        let dist = vec![0.9f32, 0.05, 0.03, 0.02];
+        let order = dist.clone();
+        let c = cumulative_curve(&dist, &order, &[0.0]);
+        assert!(c[0] > 0.89);
+    }
+
+    #[test]
+    fn empirical_frequency_sums_to_one() {
+        let mut rng = Rng::new(1);
+        let table = rand_matrix(&mut rng, 20, 4, 1.0);
+        let mut s = UniformSampler::new(20);
+        s.rebuild(&table, 20, 4, &mut rng);
+        let f = empirical_frequency(&mut s, &table[0..4], 20, 5000, &mut rng);
+        let sum: f32 = f.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn curves_include_softmax_reference() {
+        let mut rng = Rng::new(2);
+        let (n, d) = (30, 4);
+        let table = rand_matrix(&mut rng, n, d, 1.0);
+        let z = rand_matrix(&mut rng, 1, d, 1.0);
+        let mut uni = UniformSampler::new(n);
+        uni.rebuild(&table, n, d, &mut rng);
+        let mut samplers: Vec<(String, Box<dyn Sampler>)> =
+            vec![("uniform".to_string(), Box::new(uni))];
+        let curves = distribution_curves(&mut samplers, &z, &table, n, d, &[0.1, 0.5]);
+        assert_eq!(curves.len(), 2);
+        assert_eq!(curves[0].0, "softmax");
+        // softmax curve dominates the uniform curve at the head
+        assert!(curves[0].1[0] >= curves[1].1[0] - 1e-6);
+    }
+}

@@ -1,0 +1,197 @@
+//! Divergence measurements: empirical KL(Q‖P) and Rényi d₂(P‖Q) between a
+//! sampler's proposal and the true softmax — plus the paper's closed-form
+//! upper bounds (Theorems 3–5), so Table 2 can print measured-vs-bound.
+
+use crate::sampler::Sampler;
+use crate::util::math::{dot, norm_inf, softmax_inplace};
+
+/// Softmax distribution P(·|z) over class table rows.
+pub fn softmax_dist(z: &[f32], table: &[f32], n: usize, d: usize) -> Vec<f32> {
+    let mut scores: Vec<f32> = (0..n).map(|i| dot(z, &table[i * d..(i + 1) * d])).collect();
+    softmax_inplace(&mut scores);
+    scores
+}
+
+/// KL(Q‖P) = Σ q ln(q/p) — the direction the paper's Theorems 3–5 bound.
+pub fn empirical_kl(q: &[f32], p: &[f32]) -> f64 {
+    let mut kl = 0.0f64;
+    for i in 0..q.len() {
+        let qi = q[i] as f64;
+        if qi > 0.0 {
+            let pi = (p[i] as f64).max(1e-30);
+            kl += qi * (qi / pi).ln();
+        }
+    }
+    kl.max(0.0)
+}
+
+/// Exponential second-order Rényi divergence d₂(P‖Q) = E_{i~P}[p_i/q_i]
+/// (Theorem 6's gradient-bias driver).
+pub fn renyi_d2(p: &[f32], q: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    for i in 0..p.len() {
+        let pi = p[i] as f64;
+        if pi > 0.0 {
+            s += pi * pi / (q[i] as f64).max(1e-30);
+        }
+    }
+    s
+}
+
+/// Closed-form KL upper bounds of Table 2.
+pub struct KlBounds {
+    /// 2‖o‖∞ (uniform, Thm 3)
+    pub uniform: f64,
+    /// 2‖o‖∞ + ln(N·q_max) (unigram, Thm 4)
+    pub unigram: f64,
+    /// 2‖õ‖∞ (MIDX, Thm 5)
+    pub midx: f64,
+}
+
+/// Compute the bounds for one query. `resid_scores` are õ_i = z·q̃_i
+/// (pass an empty slice to skip the MIDX bound).
+pub fn kl_bound(
+    z: &[f32],
+    table: &[f32],
+    n: usize,
+    d: usize,
+    unigram_q: &[f32],
+    resid_scores: &[f32],
+) -> KlBounds {
+    let scores: Vec<f32> = (0..n).map(|i| dot(z, &table[i * d..(i + 1) * d])).collect();
+    let o_inf = norm_inf(&scores) as f64;
+    let q_max = unigram_q.iter().cloned().fold(0.0f32, f32::max) as f64;
+    KlBounds {
+        uniform: 2.0 * o_inf,
+        unigram: 2.0 * o_inf + (n as f64 * q_max).ln(),
+        midx: 2.0 * norm_inf(resid_scores) as f64,
+    }
+}
+
+/// Measure KL(Q‖P) for a sampler averaged over a set of queries.
+pub fn sampler_kl(
+    sampler: &mut dyn Sampler,
+    queries: &[f32],
+    table: &[f32],
+    n: usize,
+    d: usize,
+) -> f64 {
+    let nq = queries.len() / d;
+    let mut q = vec![0.0f32; n];
+    let mut total = 0.0;
+    for r in 0..nq {
+        let z = &queries[r * d..(r + 1) * d];
+        sampler.proposal_dist(z, &mut q);
+        let p = softmax_dist(z, table, n, d);
+        total += empirical_kl(&q, &p);
+    }
+    total / nq.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantKind;
+    use crate::sampler::{MidxSampler, UniformSampler, Sampler};
+    use crate::util::check::{for_all, rand_matrix};
+    use crate::util::Rng;
+
+    #[test]
+    fn kl_zero_iff_equal() {
+        let p = vec![0.25f32; 4];
+        assert!(empirical_kl(&p, &p).abs() < 1e-12);
+        let q = vec![0.7f32, 0.1, 0.1, 0.1];
+        assert!(empirical_kl(&q, &p) > 0.1);
+    }
+
+    #[test]
+    fn renyi_d2_at_least_one() {
+        // d₂(P‖Q) ≥ 1 with equality iff P == Q (Jensen).
+        let p = vec![0.5f32, 0.3, 0.2];
+        assert!((renyi_d2(&p, &p) - 1.0).abs() < 1e-6);
+        let q = vec![1.0f32 / 3.0; 3];
+        assert!(renyi_d2(&p, &q) > 1.0);
+    }
+
+    #[test]
+    fn prop_uniform_kl_within_theorem3_bound() {
+        for_all("Thm 3: KL(U‖P) ≤ 2‖o‖∞", |rng, _| {
+            let n = 10 + rng.below(60);
+            let d = 4 + rng.below(8);
+            let table = rand_matrix(rng, n, d, 1.0);
+            let z = rand_matrix(rng, 1, d, 1.0);
+            let mut s = UniformSampler::new(n);
+            let mut r2 = Rng::new(1);
+            s.rebuild(&table, n, d, &mut r2);
+            let mut q = vec![0.0f32; n];
+            s.proposal_dist(&z, &mut q);
+            let p = softmax_dist(&z, &table, n, d);
+            let kl = empirical_kl(&q, &p);
+            let b = kl_bound(&z, &table, n, d, &q, &[]);
+            if kl <= b.uniform + 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("KL {kl} > bound {}", b.uniform))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_midx_kl_within_theorem5_bound() {
+        for_all("Thm 5: KL(midx‖P) ≤ 2‖õ‖∞", |rng, _| {
+            let n = 20 + rng.below(60);
+            let d = 4 + 2 * rng.below(4);
+            let table = rand_matrix(rng, n, d, 0.8);
+            let z = rand_matrix(rng, 1, d, 0.8);
+            let mut s = MidxSampler::new(n, QuantKind::Residual, 4, 10);
+            let mut r2 = Rng::new(2);
+            s.rebuild(&table, n, d, &mut r2);
+            let mut q = vec![0.0f32; n];
+            s.proposal_dist(&z, &mut q);
+            let p = softmax_dist(&z, &table, n, d);
+            let kl = empirical_kl(&q, &p);
+            // residual scores via the quantizer
+            let quant = s.quantizer().unwrap();
+            let mut rec = vec![0.0f32; d];
+            let resid: Vec<f32> = (0..n)
+                .map(|i| {
+                    quant.reconstruct(i, &mut rec);
+                    dot(&z, &table[i * d..(i + 1) * d]) - dot(&z, &rec)
+                })
+                .collect();
+            let bound = 2.0 * norm_inf(&resid) as f64;
+            if kl <= bound + 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("KL {kl} > bound {bound}"))
+            }
+        });
+    }
+
+    #[test]
+    fn midx_kl_below_uniform_kl_on_clustered_embeddings() {
+        // The paper's core quantitative claim (Table 2): MIDX's divergence
+        // from softmax is smaller than the static proposals'.
+        let mut rng = Rng::new(5);
+        let (n, d) = (120, 8);
+        // clustered table → quantization captures most of the score signal
+        let mut table = vec![0.0f32; n * d];
+        for i in 0..n {
+            let c = i % 6;
+            for j in 0..d {
+                table[i * d + j] = (c as f32 - 2.5) * 0.8 + rng.normal_f32(0.15);
+            }
+        }
+        let queries = rand_matrix(&mut rng, 8, d, 0.5);
+
+        let mut uni = UniformSampler::new(n);
+        uni.rebuild(&table, n, d, &mut rng);
+        let kl_uni = sampler_kl(&mut uni, &queries, &table, n, d);
+
+        let mut midx = MidxSampler::new(n, QuantKind::Residual, 8, 15);
+        midx.rebuild(&table, n, d, &mut rng);
+        let kl_midx = sampler_kl(&mut midx, &queries, &table, n, d);
+
+        assert!(kl_midx < kl_uni, "midx {kl_midx} !< uniform {kl_uni}");
+    }
+}

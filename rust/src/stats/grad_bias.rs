@@ -1,0 +1,170 @@
+//! Empirical gradient bias (paper §5.2 / Table 3).
+//!
+//! For the gradient w.r.t. the query embedding z, ∇o_j = q_j, so the full
+//! softmax's expectation term is g* = Σ_j p_j q_j and the sampled softmax's
+//! self-normalized estimate is ĝ = Σ_k p'_k q_{s_k} (over the positive plus
+//! M draws). We estimate ‖E[ĝ] − g*‖ by averaging ĝ over R repetitions —
+//! exactly the quantity Theorems 7–9 bound by U·√((d₂−1)/(M+1)).
+
+use crate::sampler::Sampler;
+use crate::stats::divergence::{renyi_d2, softmax_dist};
+use crate::util::math::{dot, norm2, norm_inf};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct GradBias {
+    /// ‖E[ĝ] − g*‖₂ (measured)
+    pub measured: f64,
+    /// U·√((d₂(P‖Q) − 1)/(M+1)) with U = max_j ‖q_j‖₂ (Theorem 6 bound,
+    /// clamped at 2U like the theorem's min{2,·})
+    pub bound: f64,
+    /// d₂(P‖Q) itself
+    pub d2: f64,
+}
+
+/// Estimate the gradient bias of `sampler` on query `z` with M draws,
+/// averaging over `reps` independent sample sets.
+pub fn grad_bias_estimate(
+    sampler: &mut dyn Sampler,
+    z: &[f32],
+    table: &[f32],
+    n: usize,
+    d: usize,
+    m: usize,
+    reps: usize,
+    pos: u32,
+    rng: &mut Rng,
+) -> GradBias {
+    let p = softmax_dist(z, table, n, d);
+
+    // g* = Σ_j p_j q_j
+    let mut g_star = vec![0.0f64; d];
+    for j in 0..n {
+        let pj = p[j] as f64;
+        for t in 0..d {
+            g_star[t] += pj * table[j * d + t] as f64;
+        }
+    }
+
+    // E[ĝ] over reps
+    let mut g_hat = vec![0.0f64; d];
+    let mut ids = vec![0u32; m];
+    let mut log_q = vec![0.0f32; m];
+    for _ in 0..reps {
+        sampler.sample_into(z, pos, rng, &mut ids, &mut log_q);
+        // corrected logits: o'_0 = o_pos; o'_k = o_k − ln(M q_k)
+        let o_pos = dot(z, &table[pos as usize * d..(pos as usize + 1) * d]);
+        let mut logits = Vec::with_capacity(m + 1);
+        logits.push(o_pos);
+        for k in 0..m {
+            let i = ids[k] as usize;
+            let o = dot(z, &table[i * d..(i + 1) * d]);
+            logits.push(o - (log_q[k] + (m as f32).ln()));
+        }
+        let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f64> = logits.iter().map(|&l| ((l - mx) as f64).exp()).collect();
+        let zsum: f64 = exps.iter().sum();
+        // ĝ = Σ_k p'_k q_{s_k}
+        let wpos = exps[0] / zsum;
+        for t in 0..d {
+            g_hat[t] += wpos * table[pos as usize * d + t] as f64 / reps as f64;
+        }
+        for k in 0..m {
+            let w = exps[k + 1] / zsum;
+            let i = ids[k] as usize;
+            for t in 0..d {
+                g_hat[t] += w * table[i * d + t] as f64 / reps as f64;
+            }
+        }
+    }
+
+    let diff: Vec<f32> = (0..d).map(|t| (g_hat[t] - g_star[t]) as f32).collect();
+    let measured = norm2(&diff) as f64;
+
+    // Theorem 6 bound
+    let mut q_dist = vec![0.0f32; n];
+    sampler.proposal_dist(z, &mut q_dist);
+    let d2 = renyi_d2(&p, &q_dist);
+    let u = (0..n)
+        .map(|j| norm2(&table[j * d..(j + 1) * d]))
+        .fold(0.0f32, f32::max) as f64;
+    let bound = (u * ((d2 - 1.0).max(0.0) / (m as f64 + 1.0)).sqrt()).min(2.0 * u);
+
+    let _ = norm_inf(&[]); // (keep import used in all cfg combos)
+    GradBias { measured, bound, d2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantKind;
+    use crate::sampler::{ExactMidxSampler, MidxSampler, Sampler, UniformSampler};
+    use crate::util::check::rand_matrix;
+
+    fn setup(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Rng) {
+        let mut rng = Rng::new(seed);
+        let table = rand_matrix(&mut rng, n, d, 0.6);
+        let z = rand_matrix(&mut rng, 1, d, 0.6);
+        (table, z, rng)
+    }
+
+    #[test]
+    fn exact_sampler_has_near_zero_bias() {
+        // With Q == P (exact MIDX), the self-normalized estimator is
+        // unbiased up to Monte-Carlo noise.
+        let (table, z, mut rng) = setup(40, 6, 1);
+        let mut s = ExactMidxSampler::new(40, QuantKind::Product, 4, 10);
+        s.rebuild(&table, 40, 6, &mut rng);
+        let gb = grad_bias_estimate(&mut s, &z, &table, 40, 6, 16, 400, 0, &mut rng);
+        assert!((gb.d2 - 1.0).abs() < 1e-2, "d2 {}", gb.d2);
+        assert!(gb.measured < 0.08, "bias {}", gb.measured);
+    }
+
+    #[test]
+    fn midx_bias_below_uniform_on_clustered_data() {
+        // Table 3's ordering: tighter proposal ⇒ smaller gradient bias.
+        let mut rng = Rng::new(3);
+        let (n, d) = (80, 8);
+        let mut table = vec![0.0f32; n * d];
+        for i in 0..n {
+            let c = (i % 5) as f32;
+            for j in 0..d {
+                table[i * d + j] = (c - 2.0) * 0.7 + rng.normal_f32(0.1);
+            }
+        }
+        let z = rand_matrix(&mut rng, 1, d, 0.7);
+
+        let mut uni = UniformSampler::new(n);
+        uni.rebuild(&table, n, d, &mut rng);
+        let b_uni = grad_bias_estimate(&mut uni, &z, &table, n, d, 8, 300, 0, &mut rng);
+
+        let mut midx = MidxSampler::new(n, QuantKind::Residual, 8, 15);
+        midx.rebuild(&table, n, d, &mut rng);
+        let b_midx = grad_bias_estimate(&mut midx, &z, &table, n, d, 8, 300, 0, &mut rng);
+
+        assert!(b_midx.d2 < b_uni.d2, "d2: midx {} !< uniform {}", b_midx.d2, b_uni.d2);
+        assert!(
+            b_midx.measured < b_uni.measured * 1.5,
+            "bias: midx {} vs uniform {}",
+            b_midx.measured,
+            b_uni.measured
+        );
+    }
+
+    #[test]
+    fn more_samples_reduce_bias() {
+        // Theorem 6: bias shrinks as M grows (Fig 7's premise).
+        let (table, z, mut rng) = setup(60, 6, 5);
+        let mut s = UniformSampler::new(60);
+        s.rebuild(&table, 60, 6, &mut rng);
+        let small = grad_bias_estimate(&mut s, &z, &table, 60, 6, 2, 600, 0, &mut rng);
+        let large = grad_bias_estimate(&mut s, &z, &table, 60, 6, 48, 600, 0, &mut rng);
+        assert!(
+            large.measured < small.measured,
+            "M=48 bias {} !< M=2 bias {}",
+            large.measured,
+            small.measured
+        );
+        assert!(large.bound < small.bound);
+    }
+}

@@ -1,0 +1,10 @@
+//! Theory-validation statistics: KL divergence, gradient bias, sampling
+//! distribution analysis (paper §5 / Tables 2–3 / Figures 4–5).
+
+pub mod distribution;
+pub mod divergence;
+pub mod grad_bias;
+
+pub use distribution::cumulative_curve;
+pub use divergence::{empirical_kl, kl_bound, renyi_d2, softmax_dist};
+pub use grad_bias::{grad_bias_estimate, GradBias};

@@ -1,0 +1,212 @@
+//! Evaluation metrics: perplexity (LM), NDCG@k / Recall@k (recsys),
+//! Precision@k (extreme classification) — the exact metrics of the paper's
+//! Tables 4, 7 and 9. All metrics here are single-relevant-item variants
+//! (one ground-truth next token / next item / label per query).
+
+use crate::util::math::{log_sum_exp, top_k};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvalKind {
+    /// exp(mean cross-entropy) over all positions
+    Perplexity,
+    /// NDCG@{10,20,50} + Recall@{10,20,50} at the last sequence position
+    RankingTopK,
+    /// P@{1,3,5}
+    PrecisionK,
+}
+
+/// One evaluation pass, aggregated.
+#[derive(Clone, Debug, Default)]
+pub struct EvalResult {
+    pub kind_name: String,
+    /// metric name -> value ("ppl", "ndcg@10", "recall@50", "p@1", ...)
+    pub values: Vec<(String, f64)>,
+}
+
+impl EvalResult {
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.values.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    /// The scalar used for early stopping: lower-is-better for ppl,
+    /// higher-is-better otherwise → return a value where LOWER IS BETTER.
+    pub fn objective(&self) -> f64 {
+        if let Some(p) = self.get("ppl") {
+            p
+        } else if let Some(n) = self.get("ndcg@10") {
+            -n
+        } else if let Some(p) = self.get("p@1") {
+            -p
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Streaming accumulator fed one scored query row at a time.
+pub struct MetricAcc {
+    kind: EvalKind,
+    // perplexity
+    ce_sum: f64,
+    ce_count: usize,
+    // ranking / precision
+    ks: Vec<usize>,
+    ndcg: Vec<f64>,
+    hit: Vec<f64>,
+    n_queries: usize,
+}
+
+impl MetricAcc {
+    pub fn new(kind: EvalKind) -> Self {
+        let ks = match kind {
+            EvalKind::RankingTopK => vec![10, 20, 50],
+            EvalKind::PrecisionK => vec![1, 3, 5],
+            EvalKind::Perplexity => vec![],
+        };
+        MetricAcc {
+            kind,
+            ce_sum: 0.0,
+            ce_count: 0,
+            ndcg: vec![0.0; ks.len()],
+            hit: vec![0.0; ks.len()],
+            ks,
+            n_queries: 0,
+        }
+    }
+
+    /// Add one query: `scores` over all N classes, `target` the relevant id.
+    pub fn add(&mut self, scores: &[f32], target: usize) {
+        match self.kind {
+            EvalKind::Perplexity => {
+                let lse = log_sum_exp(scores) as f64;
+                self.ce_sum += lse - scores[target] as f64;
+                self.ce_count += 1;
+            }
+            EvalKind::RankingTopK | EvalKind::PrecisionK => {
+                let kmax = *self.ks.last().unwrap();
+                let ranked = top_k(scores, kmax);
+                let rank = ranked.iter().position(|&i| i as usize == target);
+                for (j, &k) in self.ks.iter().enumerate() {
+                    if let Some(r) = rank {
+                        if r < k {
+                            self.hit[j] += 1.0;
+                            self.ndcg[j] += 1.0 / ((r as f64 + 2.0).log2());
+                        }
+                    }
+                }
+                self.n_queries += 1;
+            }
+        }
+    }
+
+    pub fn finish(&self) -> EvalResult {
+        match self.kind {
+            EvalKind::Perplexity => {
+                let ce = self.ce_sum / self.ce_count.max(1) as f64;
+                EvalResult {
+                    kind_name: "perplexity".into(),
+                    values: vec![("ppl".into(), ce.exp()), ("ce".into(), ce)],
+                }
+            }
+            EvalKind::RankingTopK => {
+                let n = self.n_queries.max(1) as f64;
+                let mut values = Vec::new();
+                for (j, &k) in self.ks.iter().enumerate() {
+                    // single relevant item ⇒ IDCG = 1, Recall@k = HitRate@k
+                    values.push((format!("ndcg@{k}"), self.ndcg[j] / n));
+                    values.push((format!("recall@{k}"), self.hit[j] / n));
+                }
+                EvalResult { kind_name: "ranking".into(), values }
+            }
+            EvalKind::PrecisionK => {
+                let n = self.n_queries.max(1) as f64;
+                let values = self
+                    .ks
+                    .iter()
+                    .enumerate()
+                    // single label ⇒ P@k = hits / (n·k)
+                    .map(|(j, &k)| (format!("p@{k}"), self.hit[j] / (n * k as f64)))
+                    .collect();
+                EvalResult { kind_name: "precision".into(), values }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perplexity_of_uniform_scores_is_n() {
+        let mut acc = MetricAcc::new(EvalKind::Perplexity);
+        let scores = vec![0.0f32; 100];
+        for t in 0..10 {
+            acc.add(&scores, t);
+        }
+        let r = acc.finish();
+        assert!((r.get("ppl").unwrap() - 100.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn perplexity_perfect_prediction_is_one() {
+        let mut acc = MetricAcc::new(EvalKind::Perplexity);
+        let mut scores = vec![-100.0f32; 50];
+        scores[7] = 100.0;
+        acc.add(&scores, 7);
+        assert!((acc.finish().get("ppl").unwrap() - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn ndcg_and_recall_rank_positions() {
+        let mut acc = MetricAcc::new(EvalKind::RankingTopK);
+        // target ranked first
+        let mut s = vec![0.0f32; 100];
+        s[3] = 10.0;
+        acc.add(&s, 3);
+        let r = acc.finish();
+        assert!((r.get("ndcg@10").unwrap() - 1.0).abs() < 1e-9);
+        assert!((r.get("recall@10").unwrap() - 1.0).abs() < 1e-9);
+
+        // target ranked 15th: inside @20/@50 but not @10
+        let mut acc = MetricAcc::new(EvalKind::RankingTopK);
+        let mut s = vec![0.0f32; 100];
+        for i in 0..14 {
+            s[i] = (100 - i) as f32;
+        }
+        s[99] = 50.0; // rank 14 (0-based)
+        acc.add(&s, 99);
+        let r = acc.finish();
+        assert_eq!(r.get("recall@10").unwrap(), 0.0);
+        assert_eq!(r.get("recall@20").unwrap(), 1.0);
+        let want = 1.0 / (16.0f64).log2();
+        assert!((r.get("ndcg@20").unwrap() - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn precision_at_k_single_label() {
+        let mut acc = MetricAcc::new(EvalKind::PrecisionK);
+        // 2 queries: one hit at rank 0, one miss entirely
+        let mut s = vec![0.0f32; 20];
+        s[5] = 5.0;
+        acc.add(&s, 5);
+        let mut s2 = vec![0.0f32; 20];
+        s2[0] = 9.0;
+        s2[1] = 8.0;
+        s2[2] = 7.0;
+        s2[3] = 6.0;
+        s2[4] = 5.5;
+        acc.add(&s2, 19);
+        let r = acc.finish();
+        assert!((r.get("p@1").unwrap() - 0.5).abs() < 1e-9); // 1 of 2
+        assert!((r.get("p@3").unwrap() - 1.0 / 6.0).abs() < 1e-9); // 1 hit / (2*3)
+    }
+
+    #[test]
+    fn objective_direction() {
+        let ppl = EvalResult { kind_name: "p".into(), values: vec![("ppl".into(), 50.0)] };
+        let nd = EvalResult { kind_name: "r".into(), values: vec![("ndcg@10".into(), 0.3)] };
+        assert!(ppl.objective() > 0.0);
+        assert!(nd.objective() < 0.0); // higher ndcg → lower objective
+    }
+}

@@ -1,0 +1,13 @@
+//! Training stack: parameter store, optimizer, metrics, trainer loop.
+
+pub mod adam;
+pub mod metrics;
+pub mod params;
+pub mod task;
+pub mod trainer;
+
+pub use adam::Adam;
+pub use metrics::{EvalKind, EvalResult, MetricAcc};
+pub use params::ParamStore;
+pub use task::{Batch, TaskData};
+pub use trainer::{RunResult, TrainConfig, Trainer};

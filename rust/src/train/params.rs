@@ -1,0 +1,132 @@
+//! Parameter store: rust-side owner of every model tensor.
+//!
+//! Initialized from the manifest's param specs (same init schemes the
+//! python tests use), fed positionally to every executable, updated by the
+//! optimizer from the gradients the train_step artifact returns. The class
+//! embedding table (`q_table`, always last) doubles as the sampler's index
+//! source, so samplers always quantize LIVE embeddings.
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::runtime::{lit_f32, ParamSpec};
+use crate::util::Rng;
+
+pub struct ParamStore {
+    pub specs: Vec<ParamSpec>,
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl ParamStore {
+    pub fn init(specs: &[ParamSpec], seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let tensors = specs
+            .iter()
+            .map(|s| {
+                let n = s.numel();
+                if s.init == "zeros" {
+                    vec![0.0; n]
+                } else if s.init == "ones" {
+                    vec![1.0; n]
+                } else if let Some(std) = s.init.strip_prefix("normal:") {
+                    let std: f32 = std.parse().unwrap_or(0.02);
+                    (0..n).map(|_| rng.normal_f32(std)).collect()
+                } else {
+                    panic!("unknown init scheme '{}'", s.init)
+                }
+            })
+            .collect();
+        ParamStore { specs: specs.to_vec(), tensors }
+    }
+
+    /// Positional literals for an executable call.
+    pub fn literals(&self) -> Result<Vec<Literal>> {
+        self.specs
+            .iter()
+            .zip(&self.tensors)
+            .map(|(s, t)| lit_f32(t, &s.shape))
+            .collect()
+    }
+
+    /// The class-embedding table [n_classes, d] — always the last param.
+    pub fn q_table(&self) -> &[f32] {
+        self.tensors.last().expect("empty param store")
+    }
+
+    pub fn q_table_mut(&mut self) -> &mut Vec<f32> {
+        self.tensors.last_mut().expect("empty param store")
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Global gradient norm (diagnostics).
+    pub fn grad_norm(grads: &[Vec<f32>]) -> f32 {
+        let s: f64 = grads
+            .iter()
+            .flat_map(|g| g.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum();
+        s.sqrt() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "w".into(), shape: vec![4, 3], init: "normal:0.500000".into() },
+            ParamSpec { name: "b".into(), shape: vec![3], init: "zeros".into() },
+            ParamSpec { name: "g".into(), shape: vec![3], init: "ones".into() },
+            ParamSpec { name: "q_table".into(), shape: vec![10, 3], init: "normal:0.1".into() },
+        ]
+    }
+
+    #[test]
+    fn init_schemes() {
+        let p = ParamStore::init(&specs(), 1);
+        assert_eq!(p.len(), 4);
+        assert_eq!(p.tensors[0].len(), 12);
+        assert!(p.tensors[1].iter().all(|&x| x == 0.0));
+        assert!(p.tensors[2].iter().all(|&x| x == 1.0));
+        // normal:0.5 should produce spread values
+        let spread = p.tensors[0].iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        assert!(spread > 0.1);
+        assert_eq!(p.q_table().len(), 30);
+        assert_eq!(p.total_params(), 12 + 3 + 3 + 30);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = ParamStore::init(&specs(), 7);
+        let b = ParamStore::init(&specs(), 7);
+        assert_eq!(a.tensors, b.tensors);
+        let c = ParamStore::init(&specs(), 8);
+        assert_ne!(a.tensors[0], c.tensors[0]);
+    }
+
+    #[test]
+    fn literals_shape() {
+        let p = ParamStore::init(&specs(), 1);
+        let lits = p.literals().unwrap();
+        assert_eq!(lits.len(), 4);
+        assert_eq!(lits[0].array_shape().unwrap().dims(), &[4, 3]);
+    }
+
+    #[test]
+    fn grad_norm_basic() {
+        let g = vec![vec![3.0f32], vec![4.0f32]];
+        assert!((ParamStore::grad_norm(&g) - 5.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,188 @@
+//! Task abstraction: binds a synthetic dataset to the fixed artifact shapes
+//! and produces positional input literals for the executables.
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::data::{BagBatch, LmCorpus, RecDataset, SeqBatch, XmcDataset};
+use crate::data::lm::Split;
+use crate::runtime::Dims;
+use crate::train::metrics::EvalKind;
+use crate::util::Rng;
+
+/// A materialized batch, arch-dependent.
+#[derive(Clone, Debug)]
+pub enum Batch {
+    Seq(SeqBatch),
+    Bag(BagBatch),
+}
+
+impl Batch {
+    /// Per-query positive class ids (flattened Bq rows).
+    pub fn targets(&self) -> &[i32] {
+        match self {
+            Batch::Seq(b) => &b.targets,
+            Batch::Bag(b) => &b.targets,
+        }
+    }
+
+    /// Encoder input literals, in manifest input order.
+    pub fn input_literals(&self) -> Result<Vec<Literal>> {
+        use crate::runtime::{lit_f32, lit_i32};
+        match self {
+            Batch::Seq(b) => Ok(vec![lit_i32(&b.tokens, &[b.b, b.t])?]),
+            Batch::Bag(b) => Ok(vec![
+                lit_i32(&b.feat_ids, &[b.b, b.s])?,
+                lit_f32(&b.feat_vals, &[b.b, b.s])?,
+            ]),
+        }
+    }
+
+    pub fn bq(&self) -> usize {
+        match self {
+            Batch::Seq(b) => b.b * b.t,
+            Batch::Bag(b) => b.b,
+        }
+    }
+}
+
+/// Dataset + shapes, shared (read-only) between trainer and prefetcher.
+pub enum TaskData {
+    Lm { corpus: LmCorpus, dims: Dims },
+    Rec { data: RecDataset, dims: Dims },
+    Xmc { data: XmcDataset, dims: Dims },
+}
+
+impl TaskData {
+    pub fn dims(&self) -> &Dims {
+        match self {
+            TaskData::Lm { dims, .. } | TaskData::Rec { dims, .. } | TaskData::Xmc { dims, .. } => {
+                dims
+            }
+        }
+    }
+
+    pub fn eval_kind(&self) -> EvalKind {
+        match self {
+            TaskData::Lm { .. } => EvalKind::Perplexity,
+            TaskData::Rec { .. } => EvalKind::RankingTopK,
+            TaskData::Xmc { .. } => EvalKind::PrecisionK,
+        }
+    }
+
+    /// Class frequencies in the training split (for the Unigram sampler).
+    pub fn frequencies(&self) -> Vec<f32> {
+        match self {
+            TaskData::Lm { corpus, .. } => corpus.frequencies.clone(),
+            TaskData::Rec { data, .. } => data.frequencies.clone(),
+            TaskData::Xmc { data, .. } => data.frequencies.clone(),
+        }
+    }
+
+    /// One random training batch matching the artifact shapes.
+    pub fn train_batch(&self, rng: &mut Rng) -> Batch {
+        match self {
+            TaskData::Lm { corpus, dims } => {
+                Batch::Seq(corpus.batch(Split::Train, dims.batch, dims.seq_len, rng))
+            }
+            TaskData::Rec { data, dims } => Batch::Seq(data.batch(dims.batch, dims.seq_len, rng)),
+            TaskData::Xmc { data, dims } => {
+                let idx: Vec<usize> =
+                    (0..dims.batch).map(|_| rng.below(data.train.len())).collect();
+                Batch::Bag(data.batch_from(&data.train, &idx))
+            }
+        }
+    }
+
+    /// Deterministic evaluation batches (validation or test).
+    pub fn eval_batches(&self, test: bool) -> Vec<Batch> {
+        match self {
+            TaskData::Lm { corpus, dims } => {
+                let split = if test { Split::Test } else { Split::Valid };
+                corpus
+                    .eval_batches(split, dims.batch, dims.seq_len)
+                    .into_iter()
+                    .map(Batch::Seq)
+                    .collect()
+            }
+            TaskData::Rec { data, dims } => {
+                let users = if test { data.test_users.clone() } else { data.valid_users.clone() };
+                data.eval_batches(users, dims.batch, dims.seq_len)
+                    .into_iter()
+                    .map(Batch::Seq)
+                    .collect()
+            }
+            TaskData::Xmc { data, dims } => {
+                // carve validation off the head of the test set
+                let pool = &data.test;
+                let half = pool.len() / 2;
+                let slice: Vec<usize> =
+                    if test { (half..pool.len()).collect() } else { (0..half).collect() };
+                slice
+                    .chunks(dims.batch)
+                    .filter(|c| c.len() == dims.batch)
+                    .map(|c| Batch::Bag(data.batch_from(pool, c)))
+                    .collect()
+            }
+        }
+    }
+
+    /// For ranking eval only the LAST position of each sequence row counts
+    /// (leave-one-out protocol). Returns the flat query-row indices to score.
+    pub fn eval_query_rows(&self, batch: &Batch) -> Vec<usize> {
+        match (self, batch) {
+            (TaskData::Rec { dims, .. }, Batch::Seq(_)) => {
+                (0..dims.batch).map(|r| r * dims.seq_len + dims.seq_len - 1).collect()
+            }
+            _ => (0..batch.bq()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::lm::LmConfig;
+    use crate::data::recsys::RecConfig;
+
+    fn dims_seq() -> Dims {
+        Dims { n_classes: 100, d: 8, batch: 4, seq_len: 6, m_neg: 3, bq: 24, ..Default::default() }
+    }
+
+    #[test]
+    fn lm_task_shapes() {
+        let corpus = LmCorpus::generate(LmConfig {
+            vocab: 100,
+            train_tokens: 3000,
+            valid_tokens: 600,
+            test_tokens: 600,
+            ..Default::default()
+        });
+        let task = TaskData::Lm { corpus, dims: dims_seq() };
+        let mut rng = Rng::new(1);
+        let b = task.train_batch(&mut rng);
+        assert_eq!(b.bq(), 24);
+        assert_eq!(b.targets().len(), 24);
+        assert_eq!(task.eval_kind(), EvalKind::Perplexity);
+        assert!(!task.eval_batches(false).is_empty());
+        assert_eq!(task.eval_query_rows(&b).len(), 24);
+        assert_eq!(task.frequencies().len(), 100);
+    }
+
+    #[test]
+    fn rec_task_last_position_rows() {
+        let data = RecDataset::generate(RecConfig {
+            n_items: 100,
+            n_users: 60,
+            seq_len: 7,
+            pool: 32,
+            ..Default::default()
+        });
+        let task = TaskData::Rec { data, dims: dims_seq() };
+        let mut rng = Rng::new(2);
+        let b = task.train_batch(&mut rng);
+        let rows = task.eval_query_rows(&b);
+        assert_eq!(rows, vec![5, 11, 17, 23]);
+        assert_eq!(task.eval_kind(), EvalKind::RankingTopK);
+    }
+}

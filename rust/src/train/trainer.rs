@@ -1,0 +1,360 @@
+//! The training loop: the system's hot path.
+//!
+//! Per step (adaptive sampler):
+//!   1. `encode`   artifact: batch → query embeddings z [Bq, D]
+//!   2. rust sampler: M negatives + log proposal probs per query
+//!   3. `train_step` artifact: loss + gradients (through the L1 kernel)
+//!   4. rust Adam: parameter update
+//! The sampler's index is rebuilt from the live class embeddings once per
+//! epoch (paper §4.4). The `Full` baseline skips 1–2 and runs the O(N)
+//! `full_step` artifact instead.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+
+use crate::coordinator::pipeline::Prefetcher;
+use crate::runtime::{lit_f32, lit_i32, to_f32, to_scalar_f32, Engine, Executable, Manifest};
+use crate::sampler::Sampler;
+use crate::train::metrics::{EvalResult, MetricAcc};
+use crate::train::task::{Batch, TaskData};
+use crate::train::{Adam, ParamStore};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub steps_per_epoch: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// cap on eval batches per pass (0 = all)
+    pub eval_cap: usize,
+    /// early-stopping patience in epochs (0 = off)
+    pub patience: usize,
+    /// prefetch depth for the batch pipeline
+    pub prefetch: usize,
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 6,
+            steps_per_epoch: 120,
+            lr: 2e-3,
+            seed: 2024,
+            eval_cap: 24,
+            patience: 0,
+            prefetch: 2,
+            verbose: false,
+        }
+    }
+}
+
+/// Wall-clock breakdown of one run (for §Perf and the Table 1 comparison).
+#[derive(Clone, Debug, Default)]
+pub struct Timing {
+    pub encode_s: f64,
+    pub sample_s: f64,
+    pub step_s: f64,
+    pub update_s: f64,
+    pub rebuild_s: f64,
+    pub eval_s: f64,
+    pub steps: usize,
+}
+
+impl Timing {
+    pub fn per_step_ms(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        (self.encode_s + self.sample_s + self.step_s + self.update_s) * 1000.0
+            / self.steps as f64
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub sampler_name: String,
+    pub model: String,
+    /// mean train loss per epoch
+    pub train_loss: Vec<f64>,
+    /// validation metrics per epoch
+    pub valid: Vec<EvalResult>,
+    /// final test metrics (best-epoch parameters are NOT restored; the run
+    /// reports the final-epoch model, matching the paper's protocol of
+    /// early stopping on validation)
+    pub test: EvalResult,
+    pub timing: Timing,
+}
+
+pub struct Trainer {
+    pub manifest: Manifest,
+    engine: Engine,
+    encode: Executable,
+    train_step: Executable,
+    eval_scores: Executable,
+    full_step: Option<Executable>,
+    pub params: ParamStore,
+    adam: Adam,
+    /// None ⇒ Full-softmax baseline
+    sampler: Option<Box<dyn Sampler>>,
+    cfg: TrainConfig,
+    rng: Rng,
+    timing: Timing,
+}
+
+impl Trainer {
+    pub fn new(
+        manifest: Manifest,
+        sampler: Option<Box<dyn Sampler>>,
+        cfg: TrainConfig,
+    ) -> Result<Self> {
+        let engine = Engine::cpu()?;
+        let encode = engine.load_hlo(&manifest.artifact_path("encode")?)?;
+        let train_step = engine.load_hlo(&manifest.artifact_path("train_step")?)?;
+        let eval_scores = engine.load_hlo(&manifest.artifact_path("eval_scores")?)?;
+        let full_step = if sampler.is_none() {
+            Some(engine.load_hlo(&manifest.artifact_path("full_step").map_err(|_| {
+                anyhow!(
+                    "model '{}' has no full_step artifact — Full baseline unavailable",
+                    manifest.name
+                )
+            })?)?)
+        } else {
+            None
+        };
+        let params = ParamStore::init(&manifest.params, cfg.seed);
+        let shapes: Vec<usize> = params.tensors.iter().map(|t| t.len()).collect();
+        let adam = Adam::new(cfg.lr, &shapes);
+        let rng = Rng::new(cfg.seed ^ 0xABCD);
+        Ok(Trainer {
+            manifest,
+            engine,
+            encode,
+            train_step,
+            eval_scores,
+            full_step,
+            params,
+            adam,
+            sampler,
+            cfg,
+            rng,
+            timing: Timing::default(),
+        })
+    }
+
+    pub fn sampler_name(&self) -> String {
+        self.sampler.as_ref().map(|s| s.name().to_string()).unwrap_or_else(|| "full".into())
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Query embeddings for a batch (runs the encode artifact).
+    pub fn encode_batch(&mut self, batch: &Batch) -> Result<Vec<f32>> {
+        let mut args = self.params.literals()?;
+        args.extend(batch.input_literals()?);
+        let out = self.encode.run(&args)?;
+        to_f32(&out[0])
+    }
+
+    /// One optimizer step on `batch`; returns the loss.
+    pub fn train_on(&mut self, batch: &Batch) -> Result<f32> {
+        let dims = self.manifest.dims.clone();
+        let bq = dims.bq;
+        let m = dims.m_neg;
+        let d = dims.d;
+        debug_assert_eq!(batch.bq(), bq);
+
+        let loss;
+        let grads: Vec<Vec<f32>>;
+        if let Some(full) = &self.full_step {
+            let t0 = Instant::now();
+            let mut args = self.params.literals()?;
+            args.extend(batch.input_literals()?);
+            args.push(lit_i32(batch.targets(), &[bq])?);
+            let out = full.run(&args)?;
+            loss = to_scalar_f32(&out[0])?;
+            grads = out[1..].iter().map(to_f32).collect::<Result<_>>()?;
+            self.timing.step_s += t0.elapsed().as_secs_f64();
+        } else {
+            // 1. encode
+            let t0 = Instant::now();
+            let z = self.encode_batch(batch)?;
+            self.timing.encode_s += t0.elapsed().as_secs_f64();
+
+            // 2. sample
+            let t1 = Instant::now();
+            let sampler = self.sampler.as_mut().unwrap();
+            let targets = batch.targets();
+            let mut neg_ids = vec![0i32; bq * m];
+            let mut log_q = vec![0.0f32; bq * m];
+            let mut ids = vec![0u32; m];
+            let mut lq = vec![0.0f32; m];
+            for r in 0..bq {
+                sampler.sample_into(
+                    &z[r * d..(r + 1) * d],
+                    targets[r] as u32,
+                    &mut self.rng,
+                    &mut ids,
+                    &mut lq,
+                );
+                for j in 0..m {
+                    neg_ids[r * m + j] = ids[j] as i32;
+                }
+                log_q[r * m..(r + 1) * m].copy_from_slice(&lq);
+            }
+            self.timing.sample_s += t1.elapsed().as_secs_f64();
+
+            // 3. loss + grads through the L1 kernel
+            let t2 = Instant::now();
+            let mut args = self.params.literals()?;
+            args.extend(batch.input_literals()?);
+            args.push(lit_i32(targets, &[bq])?);
+            args.push(lit_i32(&neg_ids, &[bq, m])?);
+            args.push(lit_f32(&log_q, &[bq, m])?);
+            let out = self.train_step.run(&args)?;
+            loss = to_scalar_f32(&out[0])?;
+            grads = out[1..].iter().map(to_f32).collect::<Result<_>>()?;
+            self.timing.step_s += t2.elapsed().as_secs_f64();
+        }
+
+        // 4. update
+        let t3 = Instant::now();
+        self.adam.step(&mut self.params.tensors, &grads);
+        self.timing.update_s += t3.elapsed().as_secs_f64();
+        self.timing.steps += 1;
+        Ok(loss)
+    }
+
+    /// Rebuild the sampler index from the live class embeddings.
+    pub fn rebuild_sampler(&mut self) {
+        if let Some(s) = self.sampler.as_mut() {
+            let t0 = Instant::now();
+            let dims = &self.manifest.dims;
+            s.rebuild(self.params.q_table(), dims.n_classes, dims.d, &mut self.rng);
+            self.timing.rebuild_s += t0.elapsed().as_secs_f64();
+        }
+    }
+
+    /// Full evaluation pass. `test=false` → validation split.
+    pub fn evaluate(&mut self, task: &TaskData, test: bool) -> Result<EvalResult> {
+        let t0 = Instant::now();
+        let mut acc = MetricAcc::new(task.eval_kind());
+        let n = self.manifest.dims.n_classes;
+        let mut batches = task.eval_batches(test);
+        if self.cfg.eval_cap > 0 && batches.len() > self.cfg.eval_cap {
+            batches.truncate(self.cfg.eval_cap);
+        }
+        for batch in &batches {
+            let mut args = self.params.literals()?;
+            args.extend(batch.input_literals()?);
+            let out = self.eval_scores.run(&args)?;
+            let scores = to_f32(&out[0])?; // [bq, n]
+            let targets = batch.targets();
+            for r in task.eval_query_rows(batch) {
+                acc.add(&scores[r * n..(r + 1) * n], targets[r] as usize);
+            }
+        }
+        self.timing.eval_s += t0.elapsed().as_secs_f64();
+        Ok(acc.finish())
+    }
+
+    /// Run the full experiment loop.
+    pub fn run(mut self, task: Arc<TaskData>) -> Result<RunResult> {
+        let mut train_loss = Vec::new();
+        let mut valid = Vec::new();
+        let mut best = f64::INFINITY;
+        let mut bad_epochs = 0usize;
+
+        for epoch in 0..self.cfg.epochs {
+            self.rebuild_sampler();
+
+            // prefetch pipeline: batch generation overlaps the XLA calls
+            let task_c = Arc::clone(&task);
+            let seed = self.cfg.seed ^ (epoch as u64) << 16;
+            let steps = self.cfg.steps_per_epoch;
+            let prefetcher = Prefetcher::spawn(self.cfg.prefetch, steps, move |i| {
+                let mut rng = Rng::new(seed.wrapping_add(i as u64 * 7919));
+                task_c.train_batch(&mut rng)
+            });
+
+            let mut loss_sum = 0.0f64;
+            let mut count = 0usize;
+            for batch in prefetcher {
+                loss_sum += self.train_on(&batch)? as f64;
+                count += 1;
+            }
+            let mean_loss = loss_sum / count.max(1) as f64;
+            train_loss.push(mean_loss);
+
+            let ev = self.evaluate(&task, false)?;
+            if self.cfg.verbose {
+                let metrics: Vec<String> =
+                    ev.values.iter().map(|(k, v)| format!("{k}={v:.4}")).collect();
+                println!(
+                    "[{} | {}] epoch {epoch}: loss={mean_loss:.4} {}",
+                    self.manifest.name,
+                    self.sampler_name(),
+                    metrics.join(" ")
+                );
+            }
+            let obj = ev.objective();
+            valid.push(ev);
+
+            if obj < best - 1e-6 {
+                best = obj;
+                bad_epochs = 0;
+            } else {
+                bad_epochs += 1;
+                if self.cfg.patience > 0 && bad_epochs >= self.cfg.patience {
+                    if self.cfg.verbose {
+                        println!("early stop at epoch {epoch}");
+                    }
+                    break;
+                }
+            }
+        }
+
+        let test = self.evaluate(&task, true)?;
+        Ok(RunResult {
+            sampler_name: self.sampler_name(),
+            model: self.manifest.name.clone(),
+            train_loss,
+            valid,
+            test,
+            timing: self.timing,
+        })
+    }
+
+    pub fn timing(&self) -> &Timing {
+        &self.timing
+    }
+
+    /// Mutable sampler access (used by the MIDX-Learn harness to install
+    /// gradient-learned codebooks between epochs).
+    pub fn sampler_mut(&mut self) -> Option<&mut (dyn Sampler + '_)> {
+        self.sampler.as_deref_mut().map(|s| s as &mut (dyn Sampler + '_))
+    }
+
+    /// Manual-epoch API used by harnesses that interleave extra work
+    /// (e.g. codebook learning) between epochs. Skips `rebuild_sampler` —
+    /// callers control index refresh themselves.
+    pub fn run_steps(&mut self, task: &TaskData, steps: usize, epoch_tag: u64) -> Result<f64> {
+        let mut loss_sum = 0.0f64;
+        let mut rng = Rng::new(self.cfg.seed ^ epoch_tag.wrapping_mul(0x9E37));
+        for _ in 0..steps {
+            let batch = task.train_batch(&mut rng);
+            loss_sum += self.train_on(&batch)? as f64;
+        }
+        Ok(loss_sum / steps.max(1) as f64)
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+}

@@ -1,0 +1,114 @@
+//! In-tree micro-benchmark harness (offline environment — no criterion).
+//!
+//! `cargo bench` runs each `benches/*.rs` as a plain binary (harness = false
+//! in Cargo.toml); those binaries use this module for warmup, repetition and
+//! robust statistics, printing one line per case in a stable, grep-able
+//! format:
+//!
+//! ```text
+//! bench <group>/<name>  median=…  mean=…  p10=…  p90=…  iters=…
+//! ```
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub iters: usize,
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+impl BenchStats {
+    pub fn print(&self) {
+        println!(
+            "bench {:<44} median={:<10} mean={:<10} p10={:<10} p90={:<10} iters={}",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p10_ns),
+            fmt_ns(self.p90_ns),
+            self.iters
+        );
+    }
+}
+
+/// Benchmark a closure: auto-calibrated iteration count targeting
+/// ~`budget_ms` of total measurement time, after warmup.
+pub fn bench_ms<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> BenchStats {
+    // Warmup + calibration: find per-iter cost.
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed().as_nanos().max(1) as f64;
+    let budget_ns = (budget_ms as f64) * 1e6;
+    // target ≥ 10 samples, each sample possibly batching multiple iters
+    let samples = 15usize;
+    let per_sample_ns = budget_ns / samples as f64;
+    let batch = ((per_sample_ns / first).floor() as usize).clamp(1, 1_000_000);
+
+    let mut times: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        times.push(t.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let stats = BenchStats {
+        name: name.to_string(),
+        median_ns: times[times.len() / 2],
+        mean_ns: times.iter().sum::<f64>() / times.len() as f64,
+        p10_ns: times[times.len() / 10],
+        p90_ns: times[times.len() * 9 / 10],
+        iters: batch * samples,
+    };
+    stats.print();
+    stats
+}
+
+/// Time a single execution (for expensive end-to-end cases).
+pub fn time_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    let ns = t.elapsed().as_nanos() as f64;
+    println!("bench {:<44} once={}", name, fmt_ns(ns));
+    (out, ns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders() {
+        let s = bench_ms("test/noop", 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.iters > 0);
+        assert!(s.p10_ns <= s.median_ns + 1.0);
+        assert!(s.median_ns <= s.p90_ns + 1.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200s");
+    }
+}

@@ -1,0 +1,81 @@
+//! Lightweight property-testing harness (offline environment — no proptest).
+//!
+//! `for_all` runs a property over many seeded random cases and reports the
+//! first failing seed, so failures are reproducible (`CASES` env var scales
+//! the sweep). No shrinking — generators are kept small instead.
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with env `MIDX_PROP_CASES`).
+pub fn num_cases() -> u64 {
+    std::env::var("MIDX_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop(rng, case_index)` for `num_cases()` seeded cases; panic with the
+/// failing seed on the first error.
+pub fn for_all<F: FnMut(&mut Rng, u64) -> Result<(), String>>(name: &str, mut prop: F) {
+    for case in 0..num_cases() {
+        let seed = 0x5EED_0000 + case;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Assert two floats are close; returns Err for use inside properties.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Random embedding matrix [n, d] with entries ~ N(0, std).
+pub fn rand_matrix(rng: &mut Rng, n: usize, d: usize, std: f32) -> Vec<f32> {
+    (0..n * d).map(|_| rng.normal_f32(std)).collect()
+}
+
+/// Random strictly-positive weight vector.
+pub fn rand_weights(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_f32() * 0.99 + 0.01).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_all_passes() {
+        for_all("trivial", |rng, _| {
+            let x = rng.next_f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn for_all_reports_failure() {
+        for_all("fails", |rng, _| {
+            if rng.next_f64() < 2.0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn close_tolerance() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, "x").is_ok());
+        assert!(close(1.0, 2.0, 1e-6, "x").is_err());
+    }
+}

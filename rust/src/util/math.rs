@@ -1,0 +1,189 @@
+//! Small numeric helpers shared across samplers, metrics and stats.
+
+/// Dot product of two equal-length slices.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: measurably faster than a naive fold on
+    // the scalar CPU backend and keeps error growth modest.
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// Squared euclidean distance.
+#[inline]
+pub fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Numerically stable log-sum-exp.
+pub fn log_sum_exp(xs: &[f32]) -> f32 {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return m;
+    }
+    let s: f64 = xs.iter().map(|&x| ((x - m) as f64).exp()).sum();
+    m + (s.ln() as f32)
+}
+
+/// In-place softmax; returns the log partition function.
+pub fn softmax_inplace(xs: &mut [f32]) -> f32 {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut s = 0.0f64;
+    for x in xs.iter_mut() {
+        let e = ((*x - m) as f64).exp();
+        *x = e as f32;
+        s += e;
+    }
+    let inv = (1.0 / s) as f32;
+    for x in xs.iter_mut() {
+        *x *= inv;
+    }
+    m + (s.ln() as f32)
+}
+
+/// Indices of the k largest values (descending). O(n log k).
+pub fn top_k(xs: &[f32], k: usize) -> Vec<u32> {
+    use std::cmp::Ordering;
+    use std::collections::BinaryHeap;
+
+    #[derive(PartialEq)]
+    struct Rev(f32, u32);
+    impl Eq for Rev {}
+    impl PartialOrd for Rev {
+        fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for Rev {
+        fn cmp(&self, o: &Self) -> Ordering {
+            // min-heap on value; on ties evict the larger index so the
+            // lowest indices win deterministically
+            o.0.partial_cmp(&self.0)
+                .unwrap_or(Ordering::Equal)
+                .then(self.1.cmp(&o.1))
+        }
+    }
+
+    let k = k.min(xs.len());
+    let mut heap: BinaryHeap<Rev> = BinaryHeap::with_capacity(k + 1);
+    for (i, &x) in xs.iter().enumerate() {
+        heap.push(Rev(x, i as u32));
+        if heap.len() > k {
+            heap.pop();
+        }
+    }
+    let mut out: Vec<(f32, u32)> = heap.into_iter().map(|r| (r.0, r.1)).collect();
+    out.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    out.into_iter().map(|(_, i)| i).collect()
+}
+
+/// argmax with deterministic tie-break (lowest index).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for i in 1..xs.len() {
+        if xs[i] > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64) as f32
+}
+
+/// l2 norm.
+pub fn norm2(xs: &[f32]) -> f32 {
+    dot(xs, xs).sqrt()
+}
+
+/// max |x_i| — the infinity norm that appears in the paper's bounds.
+pub fn norm_inf(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+        // length > 4 exercises the unrolled path + remainder
+        let a: Vec<f32> = (0..11).map(|i| i as f32).collect();
+        let b = vec![2.0f32; 11];
+        assert_eq!(dot(&a, &b), 110.0);
+    }
+
+    #[test]
+    fn lse_stable() {
+        let x = [1000.0f32, 1000.0];
+        let l = log_sum_exp(&x);
+        assert!((l - (1000.0 + 2f32.ln())).abs() < 1e-3);
+        assert!(log_sum_exp(&[f32::NEG_INFINITY, 0.0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut x = vec![0.5f32, -1.0, 3.0, 2.0];
+        let logz = softmax_inplace(&mut x);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(logz.is_finite());
+        assert!(x[2] > x[3] && x[3] > x[0] && x[0] > x[1]);
+    }
+
+    #[test]
+    fn top_k_orders() {
+        let xs = [0.1f32, 5.0, 3.0, 4.0, -1.0];
+        assert_eq!(top_k(&xs, 3), vec![1, 3, 2]);
+        assert_eq!(top_k(&xs, 10).len(), 5);
+        assert_eq!(top_k(&xs, 0), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn top_k_ties_deterministic() {
+        let xs = [1.0f32; 6];
+        assert_eq!(top_k(&xs, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn norms() {
+        assert_eq!(norm_inf(&[-3.0, 2.0]), 3.0);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+    }
+}

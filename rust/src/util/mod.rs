@@ -1,0 +1,10 @@
+//! Shared infrastructure: RNG, numerics, JSON, bench + property harnesses.
+
+pub mod bench;
+pub mod check;
+pub mod json;
+pub mod math;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

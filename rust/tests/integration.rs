@@ -1,0 +1,321 @@
+//! Integration tests over the real AOT artifacts (`make artifacts` first).
+//!
+//! These exercise the full rust↔PJRT↔HLO ABI: manifest layout, executable
+//! signatures, kernel-vs-native parity, and a short end-to-end training run
+//! that must reduce the loss.
+
+use std::sync::Arc;
+
+use midx::coordinator::{build_sampler, build_task, ExperimentSpec};
+use midx::quant::QuantKind;
+use midx::runtime::{lit_f32, lit_i32, load_model, to_f32, to_scalar_f32, Engine};
+use midx::sampler::{MidxSampler, Sampler, SamplerKind};
+use midx::train::{Batch, TaskData, TrainConfig, Trainer};
+use midx::util::math::dot;
+use midx::util::Rng;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/index.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+fn seq_batch(task: &TaskData, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    task.train_batch(&mut rng)
+}
+
+#[test]
+fn encode_artifact_runs_and_is_finite() {
+    require_artifacts!();
+    let manifest = load_model("lm_ptb_lstm").unwrap();
+    let task = build_task(&manifest, 1).unwrap();
+    let spec = ExperimentSpec::new("lm_ptb_lstm", Some(SamplerKind::Uniform));
+    let sampler = build_sampler(&spec, &manifest, &task);
+    let mut trainer = Trainer::new(manifest, sampler, TrainConfig::default()).unwrap();
+    let batch = seq_batch(&task, 2);
+    let z = trainer.encode_batch(&batch).unwrap();
+    assert_eq!(z.len(), trainer.manifest.dims.bq * trainer.manifest.dims.d);
+    assert!(z.iter().all(|x| x.is_finite()));
+    // different batches produce different embeddings
+    let z2 = trainer.encode_batch(&seq_batch(&task, 3)).unwrap();
+    assert_ne!(z, z2);
+}
+
+#[test]
+fn eval_scores_matches_manual_dot_product() {
+    require_artifacts!();
+    let manifest = load_model("lm_ptb_lstm").unwrap();
+    let (n, d, bq) = (manifest.dims.n_classes, manifest.dims.d, manifest.dims.bq);
+    let task = build_task(&manifest, 1).unwrap();
+    let spec = ExperimentSpec::new("lm_ptb_lstm", Some(SamplerKind::Uniform));
+    let sampler = build_sampler(&spec, &manifest, &task);
+    let eval_path = manifest.artifact_path("eval_scores").unwrap();
+    let mut trainer = Trainer::new(manifest, sampler, TrainConfig::default()).unwrap();
+    let batch = seq_batch(&task, 5);
+    let z = trainer.encode_batch(&batch).unwrap();
+
+    let engine = trainer.engine();
+    let exe = engine.load_hlo(&eval_path).unwrap();
+    let mut args = trainer.params.literals().unwrap();
+    args.extend(batch.input_literals().unwrap());
+    let out = exe.run(&args).unwrap();
+    let scores = to_f32(&out[0]).unwrap();
+    assert_eq!(scores.len(), bq * n);
+
+    // spot-check a few entries against z·q
+    let q = trainer.params.q_table();
+    for &(r, c) in &[(0usize, 0usize), (3, 17), (bq - 1, n - 1)] {
+        let want = dot(&z[r * d..(r + 1) * d], &q[c * d..(c + 1) * d]);
+        let got = scores[r * n + c];
+        assert!(
+            (want - got).abs() < 1e-3 * (1.0 + want.abs()),
+            "score[{r},{c}] {got} vs manual {want}"
+        );
+    }
+}
+
+#[test]
+fn training_reduces_loss_all_samplers() {
+    require_artifacts!();
+    for kind in [None, Some(SamplerKind::Uniform), Some(SamplerKind::MidxRq)] {
+        let manifest = load_model("lm_ptb_lstm").unwrap();
+        let task = build_task(&manifest, 1).unwrap();
+        let spec = ExperimentSpec::new("lm_ptb_lstm", kind);
+        let sampler = build_sampler(&spec, &manifest, &task);
+        let cfg = TrainConfig {
+            epochs: 2,
+            steps_per_epoch: 15,
+            eval_cap: 2,
+            ..TrainConfig::default()
+        };
+        let label = spec.sampler_label();
+        let trainer = Trainer::new(manifest, sampler, cfg).unwrap();
+        let res = trainer.run(Arc::new(task)).unwrap();
+        assert!(
+            res.train_loss[1] < res.train_loss[0],
+            "{label}: loss did not decrease: {:?}",
+            res.train_loss
+        );
+        let ppl = res.test.get("ppl").unwrap();
+        assert!(ppl.is_finite() && ppl > 1.0, "{label}: bad ppl {ppl}");
+    }
+}
+
+#[test]
+fn midx_probs_artifact_matches_native_sampler() {
+    require_artifacts!();
+    // The Pallas joint-proposal kernel and the native rust implementation
+    // must agree on the full [K,K] table for PQ quantization.
+    let manifest = load_model("lm_ptb_lstm").unwrap();
+    let (n, d, bq, k) =
+        (manifest.dims.n_classes, manifest.dims.d, manifest.dims.bq, manifest.dims.k_codewords);
+    let mut rng = Rng::new(9);
+    let table: Vec<f32> = (0..n * d).map(|_| rng.normal_f32(0.2)).collect();
+    let mut sampler = MidxSampler::new(n, QuantKind::Product, k, 10);
+    sampler.rebuild(&table, n, d, &mut rng);
+
+    let quant = sampler.quantizer().unwrap();
+    let c1 = quant.codebook1().to_vec();
+    let c2 = quant.codebook2().to_vec();
+    let log_w = sampler.index().unwrap().log_sizes.clone();
+    // kernel expects finite log weights; replace -inf with very negative
+    let log_w: Vec<f32> =
+        log_w.iter().map(|&x| if x.is_finite() { x } else { -1e9 }).collect();
+
+    let zs: Vec<f32> = (0..bq * d).map(|_| rng.normal_f32(0.3)).collect();
+
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load_hlo(&manifest.artifact_path("midx_probs").unwrap()).unwrap();
+    let args = vec![
+        lit_f32(&zs, &[bq, d]).unwrap(),
+        lit_f32(&c1, &[k, d / 2]).unwrap(),
+        lit_f32(&c2, &[k, d / 2]).unwrap(),
+        lit_f32(&log_w, &[k, k]).unwrap(),
+    ];
+    let out = exe.run(&args).unwrap();
+    let kernel_probs = to_f32(&out[0]).unwrap(); // [bq, k, k]
+
+    for r in [0usize, 7, bq - 1] {
+        let native = sampler.joint_probs(&zs[r * d..(r + 1) * d]);
+        let slice = &kernel_probs[r * k * k..(r + 1) * k * k];
+        for b in 0..k * k {
+            assert!(
+                (native[b] - slice[b]).abs() < 1e-4,
+                "row {r} bucket {b}: native {} vs kernel {}",
+                native[b],
+                slice[b]
+            );
+        }
+    }
+}
+
+#[test]
+fn full_step_loss_matches_eval_scores_cross_entropy() {
+    require_artifacts!();
+    // full_step's loss must equal mean(lse(scores) − score[target]) computed
+    // from the eval_scores artifact — two independent paths, one number.
+    let manifest = load_model("lm_ptb_lstm").unwrap();
+    let (n, bq) = (manifest.dims.n_classes, manifest.dims.bq);
+    let task = build_task(&manifest, 1).unwrap();
+    let spec = ExperimentSpec::new("lm_ptb_lstm", None);
+    let sampler = build_sampler(&spec, &manifest, &task);
+    let full_path = manifest.artifact_path("full_step").unwrap();
+    let eval_path = manifest.artifact_path("eval_scores").unwrap();
+    let trainer = Trainer::new(manifest, sampler, TrainConfig::default()).unwrap();
+    let batch = seq_batch(&task, 11);
+
+    let engine = trainer.engine();
+    let full = engine.load_hlo(&full_path).unwrap();
+    let eval = engine.load_hlo(&eval_path).unwrap();
+
+    let mut args = trainer.params.literals().unwrap();
+    args.extend(batch.input_literals().unwrap());
+    let scores = to_f32(&eval.run(&args).unwrap()[0]).unwrap();
+
+    let mut args = trainer.params.literals().unwrap();
+    args.extend(batch.input_literals().unwrap());
+    args.push(lit_i32(batch.targets(), &[bq]).unwrap());
+    let loss = to_scalar_f32(&full.run(&args).unwrap()[0]).unwrap();
+
+    let mut want = 0.0f64;
+    for r in 0..bq {
+        let row = &scores[r * n..(r + 1) * n];
+        let lse = midx::util::math::log_sum_exp(row);
+        want += (lse - row[batch.targets()[r] as usize]) as f64;
+    }
+    want /= bq as f64;
+    assert!(
+        (loss as f64 - want).abs() < 1e-3 * (1.0 + want.abs()),
+        "full_step {loss} vs manual {want}"
+    );
+}
+
+#[test]
+fn codebook_artifact_gradient_descends() {
+    require_artifacts!();
+    let manifest = load_model("lm_ptb_lstm").unwrap();
+    let (n, d, bq, k) =
+        (manifest.dims.n_classes, manifest.dims.d, manifest.dims.bq, manifest.dims.k_codewords);
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load_hlo(&manifest.artifact_path("codebook_rq").unwrap()).unwrap();
+    let mut rng = Rng::new(3);
+    let q: Vec<f32> = (0..n * d).map(|_| rng.normal_f32(0.2)).collect();
+    let z: Vec<f32> = (0..bq * d).map(|_| rng.normal_f32(0.3)).collect();
+    let mut c1: Vec<f32> = (0..k * d).map(|_| rng.normal_f32(0.2)).collect();
+    let mut c2: Vec<f32> = (0..k * d).map(|_| rng.normal_f32(0.2)).collect();
+
+    let mut first = None;
+    let mut last = 0.0f32;
+    for _ in 0..12 {
+        let args = vec![
+            lit_f32(&c1, &[k, d]).unwrap(),
+            lit_f32(&c2, &[k, d]).unwrap(),
+            lit_f32(&q, &[n, d]).unwrap(),
+            lit_f32(&z, &[bq, d]).unwrap(),
+        ];
+        let out = exe.run(&args).unwrap();
+        last = to_scalar_f32(&out[0]).unwrap();
+        if first.is_none() {
+            first = Some(last);
+        }
+        let g1 = to_f32(&out[3]).unwrap();
+        let g2 = to_f32(&out[4]).unwrap();
+        for (c, g) in c1.iter_mut().zip(&g1) {
+            *c -= 0.05 * g;
+        }
+        for (c, g) in c2.iter_mut().zip(&g2) {
+            *c -= 0.05 * g;
+        }
+    }
+    assert!(last < first.unwrap(), "codebook loss {first:?} -> {last}");
+}
+
+#[test]
+fn xmc_task_end_to_end() {
+    require_artifacts!();
+    let manifest = load_model("xmc_amazoncat").unwrap();
+    let task = build_task(&manifest, 1).unwrap();
+    let spec = ExperimentSpec::new("xmc_amazoncat", Some(SamplerKind::MidxRq));
+    let sampler = build_sampler(&spec, &manifest, &task);
+    let cfg = TrainConfig { epochs: 1, steps_per_epoch: 8, eval_cap: 2, ..Default::default() };
+    let trainer = Trainer::new(manifest, sampler, cfg).unwrap();
+    let res = trainer.run(Arc::new(task)).unwrap();
+    let p1 = res.test.get("p@1").unwrap();
+    assert!((0.0..=1.0).contains(&p1));
+}
+
+#[test]
+fn training_is_deterministic_given_seed() {
+    require_artifacts!();
+    let run = || {
+        let manifest = load_model("lm_ptb_lstm").unwrap();
+        let task = build_task(&manifest, 1).unwrap();
+        let spec = ExperimentSpec::new("lm_ptb_lstm", Some(SamplerKind::MidxPq));
+        let sampler = build_sampler(&spec, &manifest, &task);
+        let cfg = TrainConfig {
+            epochs: 1,
+            steps_per_epoch: 6,
+            eval_cap: 1,
+            seed: 777,
+            ..TrainConfig::default()
+        };
+        let trainer = Trainer::new(manifest, sampler, cfg).unwrap();
+        trainer.run(Arc::new(task)).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.train_loss, b.train_loss, "training not reproducible");
+    assert_eq!(
+        a.test.get("ppl").unwrap().to_bits(),
+        b.test.get("ppl").unwrap().to_bits()
+    );
+}
+
+#[test]
+fn manifest_index_lists_all_and_loads() {
+    require_artifacts!();
+    let names = midx::runtime::list_models().unwrap();
+    assert!(names.len() >= 16, "expected >= 16 configs, got {}", names.len());
+    for n in &names {
+        let m = load_model(n).unwrap();
+        assert!(m.total_params() > 0);
+        assert_eq!(m.params.last().unwrap().name, "q_table");
+        assert!(m.artifacts.has("encode") && m.artifacts.has("train_step"));
+    }
+}
+
+#[test]
+fn m_sweep_variants_have_expected_shapes() {
+    require_artifacts!();
+    for (name, m_neg) in [
+        ("lm_ptb_lstm_m5", 5usize),
+        ("lm_ptb_lstm_m10", 10),
+        ("lm_ptb_lstm_m50", 50),
+        ("lm_ptb_lstm_m100", 100),
+    ] {
+        let m = load_model(name).unwrap();
+        assert_eq!(m.dims.m_neg, m_neg, "{name}");
+    }
+}
+
+#[test]
+fn rec_task_end_to_end() {
+    require_artifacts!();
+    let manifest = load_model("rec_ml_gru").unwrap();
+    let task = build_task(&manifest, 1).unwrap();
+    let spec = ExperimentSpec::new("rec_ml_gru", Some(SamplerKind::MidxPq));
+    let sampler = build_sampler(&spec, &manifest, &task);
+    let cfg = TrainConfig { epochs: 1, steps_per_epoch: 8, eval_cap: 2, ..Default::default() };
+    let trainer = Trainer::new(manifest, sampler, cfg).unwrap();
+    let res = trainer.run(Arc::new(task)).unwrap();
+    assert!(res.test.get("ndcg@10").is_some());
+    assert!(res.test.get("recall@50").is_some());
+}
