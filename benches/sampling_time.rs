@@ -1,8 +1,13 @@
 //! `cargo bench --bench sampling_time` — per-sampler draw latency across N
-//! (the micro-benchmark behind Figure 6 / Table 1). In-tree harness; prints
-//! `bench <name> median=… mean=…` lines.
+//! (the micro-benchmark behind Figure 6 / Table 1), now with the batched
+//! engine side-by-side. In-tree harness; prints `bench <name> median=…`
+//! lines plus one `speedup` summary line per sampler/N comparing batched
+//! (all hardware threads) against the sequential per-query path at B=256.
+//! Before timing, batched draws are asserted bit-identical across thread
+//! counts — the engine's reproducibility contract, checked on the bench
+//! workload itself.
 
-use midx::sampler::{self, SamplerKind, SamplerParams};
+use midx::sampler::{self, sample_batch, SamplerKind, SamplerParams, Scratch};
 use midx::util::bench::bench_ms;
 use midx::util::check::rand_matrix;
 use midx::util::Rng;
@@ -10,11 +15,16 @@ use midx::util::Rng;
 fn main() {
     let d = 64;
     let m = 100;
+    let batch = 256usize;
+    let threads = midx::sampler::batch::auto_threads();
     let mut rng = Rng::new(1);
+    println!("batched engine: B={batch}, T={threads} (available parallelism)");
 
     for &n in &[1_000usize, 10_000, 100_000] {
         let table = rand_matrix(&mut rng, n, d, 0.3);
         let z = rand_matrix(&mut rng, 1, d, 0.3);
+        let zs = rand_matrix(&mut rng, batch, d, 0.3);
+        let positives: Vec<u32> = vec![u32::MAX; batch];
         let freqs: Vec<f32> = (0..n).map(|i| 1.0 / (i + 1) as f32).collect();
         for kind in [
             SamplerKind::Uniform,
@@ -32,12 +42,61 @@ fn main() {
             };
             let mut s = sampler::build(kind, n, &params);
             s.rebuild(&table, n, d, &mut rng);
+
+            // single-query latency (the legacy per-query adapter path)
             let mut ids = vec![0u32; m];
             let mut lq = vec![0.0f32; m];
             let mut local_rng = Rng::new(7);
             bench_ms(&format!("sample/{}/n{}", kind.name(), n), 120, || {
                 s.sample_into(&z, u32::MAX, &mut local_rng, &mut ids, &mut lq);
             });
+
+            // reproducibility gate: T threads == 1 thread, bit for bit
+            let core = s.core();
+            let mut bids = vec![0u32; batch * m];
+            let mut blq = vec![0.0f32; batch * m];
+            let mut bids1 = vec![0u32; batch * m];
+            let mut blq1 = vec![0.0f32; batch * m];
+            sample_batch(core, &zs, d, &positives, m, 42, threads, &mut bids, &mut blq);
+            sample_batch(core, &zs, d, &positives, m, 42, 1, &mut bids1, &mut blq1);
+            assert_eq!(bids, bids1, "{}: ids differ across thread counts", kind.name());
+            assert!(
+                blq.iter().zip(&blq1).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{}: log_q differ across thread counts",
+                kind.name()
+            );
+
+            // sequential per-query baseline over the SAME batch workload
+            let seq = bench_ms(&format!("batch_seq/{}/n{}", kind.name(), n), 240, || {
+                let mut scratch = Scratch::new();
+                for i in 0..batch {
+                    let mut qrng = Rng::stream(42, i as u64);
+                    core.sample_into(
+                        &zs[i * d..(i + 1) * d],
+                        u32::MAX,
+                        &mut qrng,
+                        &mut scratch,
+                        &mut bids[i * m..(i + 1) * m],
+                        &mut blq[i * m..(i + 1) * m],
+                    );
+                }
+            });
+
+            // batched engine, all hardware threads
+            let par = bench_ms(&format!("batch_t{}/{}/n{}", threads, kind.name(), n), 240, || {
+                sample_batch(core, &zs, d, &positives, m, 42, threads, &mut bids, &mut blq);
+            });
+
+            println!(
+                "speedup {:<28} batched(T={}) vs per-query: {:.2}x",
+                format!("{}/n{}", kind.name(), n),
+                threads,
+                seq.median_ns / par.median_ns
+            );
         }
     }
+    println!(
+        "expectation: midx-pq/midx-rq ≥ 2x at B=256 on a multi-core host \
+         (near-linear in cores; per-query cost is core-independent)."
+    );
 }

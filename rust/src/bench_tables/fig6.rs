@@ -1,5 +1,7 @@
 //! Figure 6 — sampling time vs number of classes: 100 samples for a batch
 //! of 256 queries, N swept to 100k (paper §6.2.6; K = 64 as in the paper).
+//! Timed through the batched engine at full hardware parallelism — the
+//! production sample-phase configuration.
 
 use std::time::Instant;
 
@@ -7,7 +9,7 @@ use anyhow::Result;
 
 use super::Budget;
 use crate::coordinator::{fmt, Table};
-use crate::sampler::{self, SamplerKind, SamplerParams};
+use crate::sampler::{self, sample_batch, SamplerKind, SamplerParams};
 use crate::util::check::rand_matrix;
 use crate::util::Rng;
 
@@ -21,8 +23,11 @@ pub fn run(budget: &Budget) -> Result<()> {
     let m = 100;
     let batch = if budget.quick { 64 } else { 256 };
 
+    let threads = crate::sampler::batch::auto_threads();
     let mut t = Table::new(
-        &format!("Figure 6 — sampling time for {batch} queries × {m} draws (ms, excl. init)"),
+        &format!(
+            "Figure 6 — sampling time for {batch} queries × {m} draws (ms, excl. init, batched T={threads})"
+        ),
         &["sampler", "N=1k", "N=5k", "N=10k", "N=50k", "N=100k"],
     );
 
@@ -52,12 +57,11 @@ pub fn run(budget: &Budget) -> Result<()> {
             };
             let mut s = sampler::build(kind, n, &params);
             s.rebuild(&table, n, d, &mut rng);
-            let mut ids = vec![0u32; m];
-            let mut lq = vec![0.0f32; m];
+            let positives = vec![u32::MAX; batch];
+            let mut ids = vec![0u32; batch * m];
+            let mut lq = vec![0.0f32; batch * m];
             let t0 = Instant::now();
-            for q in 0..batch {
-                s.sample_into(&zs[q * d..(q + 1) * d], u32::MAX, &mut rng, &mut ids, &mut lq);
-            }
+            sample_batch(s.core(), &zs, d, &positives, m, 13, threads, &mut ids, &mut lq);
             let ms = t0.elapsed().as_secs_f64() * 1e3;
             rows[ki].push(fmt(ms));
         }

@@ -1,14 +1,15 @@
 //! Table 1 — time & space complexity of sampling M classes per proposal.
 //!
 //! The paper states asymptotics; we print them next to MEASURED init time,
-//! per-query sampling time and index memory on a fixed workload, so the
-//! asymptotic claims are auditable on this testbed.
+//! per-query sampling time and batched-engine throughput on a fixed
+//! workload, so both the asymptotic claims and the batching win are
+//! auditable on this testbed.
 
 use anyhow::Result;
 
 use super::Budget;
 use crate::coordinator::{fmt, Table};
-use crate::sampler::{self, SamplerKind, SamplerParams};
+use crate::sampler::{self, sample_batch, SamplerKind, SamplerParams};
 use crate::util::check::rand_matrix;
 use crate::util::Rng;
 use std::time::Instant;
@@ -36,6 +37,7 @@ pub fn run(budget: &Budget) -> Result<()> {
     let d = 64;
     let m = 100;
     let queries = if budget.quick { 32 } else { 128 };
+    let threads = crate::sampler::batch::auto_threads();
 
     let mut rng = Rng::new(42);
     let table = rand_matrix(&mut rng, n, d, 0.3);
@@ -43,8 +45,19 @@ pub fn run(budget: &Budget) -> Result<()> {
     let freqs: Vec<f32> = (0..n).map(|i| 1.0 / (i + 1) as f32).collect();
 
     let mut t = Table::new(
-        &format!("Table 1 — sampling complexity (measured @ N={n}, D={d}, M={m}, K=64)"),
-        &["sampler", "init(paper)", "sample(paper)", "space(paper)", "init ms", "µs/query", "ns/draw"],
+        &format!(
+            "Table 1 — sampling complexity (measured @ N={n}, D={d}, M={m}, K=64, T={threads})"
+        ),
+        &[
+            "sampler",
+            "init(paper)",
+            "sample(paper)",
+            "space(paper)",
+            "init ms",
+            "µs/query",
+            "µs/query batched",
+            "ns/draw",
+        ],
     );
 
     for row in ROWS {
@@ -69,6 +82,14 @@ pub fn run(budget: &Budget) -> Result<()> {
         let per_query_us = total * 1e6 / queries as f64;
         let per_draw_ns = total * 1e9 / (queries * m) as f64;
 
+        // same workload through the batched engine, all hardware threads
+        let positives = vec![u32::MAX; queries];
+        let mut bids = vec![0u32; queries * m];
+        let mut blq = vec![0.0f32; queries * m];
+        let t2 = Instant::now();
+        sample_batch(s.core(), &zs, d, &positives, m, 42, threads, &mut bids, &mut blq);
+        let batched_us = t2.elapsed().as_secs_f64() * 1e6 / queries as f64;
+
         t.row(vec![
             row.kind.name().into(),
             row.init_formula.into(),
@@ -76,6 +97,7 @@ pub fn run(budget: &Budget) -> Result<()> {
             row.space_formula.into(),
             fmt(init_ms),
             fmt(per_query_us),
+            fmt(batched_us),
             fmt(per_draw_ns),
         ]);
     }

@@ -1,6 +1,10 @@
 //! Batch-prefetch pipeline: a worker thread generates upcoming batches
 //! while the main thread drives the XLA executables (offline environment —
 //! std::thread + bounded channel instead of tokio; same dataflow).
+//!
+//! Also hosts [`overlap`], the two-lane scoped join the trainer uses to run
+//! the (now `&self`, thread-safe) sample phase for step i concurrently with
+//! the encode artifact call for step i+1.
 
 use std::sync::mpsc;
 use std::thread;
@@ -47,6 +51,29 @@ impl<T> Drop for Prefetcher<T> {
     }
 }
 
+/// Run `bg` on a scoped worker thread while `fg` runs on the calling
+/// thread; returns both results once both finish. Scoped, so the closures
+/// may borrow from the caller (e.g. `bg` borrowing a sampler core while
+/// `fg` borrows the trainer's parameters for the next encode call).
+///
+/// Propagates a `bg` panic to the caller after `fg` completes.
+pub fn overlap<A, B, FA, FB>(bg: FA, fg: FB) -> (A, B)
+where
+    A: Send,
+    FA: FnOnce() -> A + Send,
+    FB: FnOnce() -> B,
+{
+    thread::scope(|s| {
+        let h = s.spawn(bg);
+        let b = fg();
+        let a = match h.join() {
+            Ok(a) => a,
+            Err(p) => std::panic::resume_unwind(p),
+        };
+        (a, b)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -69,5 +96,33 @@ mod tests {
     fn zero_total() {
         let p = Prefetcher::spawn(2, 0, |i| i);
         assert_eq!(p.count(), 0);
+    }
+
+    #[test]
+    fn overlap_returns_both_lanes() {
+        let data = vec![1u32, 2, 3];
+        let (a, b) = overlap(|| data.iter().sum::<u32>(), || data.len());
+        assert_eq!(a, 6);
+        assert_eq!(b, 3);
+    }
+
+    #[test]
+    fn overlap_lanes_run_concurrently() {
+        // bg blocks until fg signals: only true overlap can finish.
+        let (tx, rx) = mpsc::channel();
+        let ((), ()) = overlap(
+            move || {
+                rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+            },
+            move || {
+                tx.send(()).unwrap();
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "bg lane")]
+    fn overlap_propagates_bg_panic() {
+        let _ = overlap(|| panic!("bg lane"), || 1);
     }
 }

@@ -59,7 +59,13 @@ impl InvertedMultiIndex {
 
     #[inline]
     pub fn bucket(&self, k1: usize, k2: usize) -> &[u32] {
-        let b = k1 * self.k + k2;
+        self.bucket_flat(k1 * self.k + k2)
+    }
+
+    /// Bucket members by flattened index b = k1·K + k2 — the layout the
+    /// samplers' CDF draws produce directly.
+    #[inline]
+    pub fn bucket_flat(&self, b: usize) -> &[u32] {
         &self.members[self.offsets[b] as usize..self.offsets[b + 1] as usize]
     }
 

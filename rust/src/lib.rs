@@ -15,6 +15,45 @@
 //!
 //! Python never runs on the training path: the `runtime` module loads the
 //! HLO artifacts through PJRT and the rust loop drives everything.
+//!
+//! ## The batched sampling engine
+//!
+//! Sampling — the paper's O(K·D + K²) per-query advantage — is served by a
+//! shared-core/per-thread-scratch architecture (DESIGN.md §batched
+//! sampling):
+//!
+//! * every sampler splits into an immutable [`sampler::SamplerCore`]
+//!   (codebooks, inverted multi-index, alias tables, projections — `Sync`,
+//!   rebuilt once per epoch) and a cheap per-thread [`sampler::Scratch`];
+//! * [`sampler::sample_batch`] fans a [B, D] query block across a scoped
+//!   thread pool; query `i` draws from the deterministic stream
+//!   `Rng::stream(seed, i)`, so results are **bit-identical for every
+//!   thread count** (and identical to the sequential path);
+//! * the trainer software-pipelines each step: workers draw step i's
+//!   negatives against the frozen core while the main thread runs step
+//!   i+1's encode artifact call (`coordinator::pipeline::overlap`);
+//! * the per-query [`sampler::Sampler`] adapter survives for the
+//!   stats/analysis paths (`proposal_dist`, divergence/bias estimators).
+//!
+//! ## Module map
+//!
+//! | module        | role |
+//! |---------------|------|
+//! | `sampler`     | proposal distributions; shared cores, batched engine |
+//! | `quant`       | PQ/RQ codebook learning (`&self` score paths) |
+//! | `index`       | inverted multi-index (CSR over K² buckets) |
+//! | `train`       | trainer (pipelined hot loop), Adam, params, metrics |
+//! | `coordinator` | experiment driver, prefetch + overlap pipeline, reports |
+//! | `stats`       | KL/Rényi divergence, gradient bias vs paper bounds |
+//! | `data`        | synthetic LM / recsys / XMC substrates |
+//! | `bench_tables`| regenerate every paper table/figure |
+//! | `runtime`     | PJRT loader for the AOT HLO artifacts |
+//! | `util`        | RNG (per-query streams), math, JSON, bench harness |
+
+// Index-heavy numeric kernels deliberately use explicit range loops (they
+// mirror the paper's formulas); hot-path signatures mirror the [B,D]/[B,M]
+// artifact ABI rather than bundling structs.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 pub mod bench_tables;
 pub mod coordinator;

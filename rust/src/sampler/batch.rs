@@ -1,0 +1,313 @@
+//! The batched, multi-threaded sampling engine — the training hot path.
+//!
+//! [`sample_batch`] draws `m` negatives (plus log proposal probabilities)
+//! for each of B queries against one immutable [`SamplerCore`], fanning the
+//! batch across a scoped thread pool. Design invariants:
+//!
+//! * **Shared core, per-thread scratch.** The core is `Sync` and sampled
+//!   through `&self`; each worker owns one [`Scratch`], so there is zero
+//!   synchronization inside the loop — threads only ever write disjoint
+//!   output rows.
+//! * **Deterministic RNG streams.** Query `i` always draws from
+//!   `Rng::stream(seed, i)` (seed ⊕ index, splitmix-expanded), so output is
+//!   bit-identical for every thread count — T=8 reproduces T=1 reproduces
+//!   the sequential per-query path. Reproducibility is a property of the
+//!   (seed, batch), never of the schedule.
+//! * **Static partition.** B rows split into ⌈B/T⌉-sized contiguous chunks.
+//!   Per-query cost is near-uniform within one core, so work stealing would
+//!   buy nothing and cost determinism-audit simplicity.
+//!
+//! Degenerate inputs are first-class: B = 0 or m = 0 return immediately;
+//! m > N−1 falls back on bounded rejection (duplicates and positive
+//! collisions allowed, as in the paper's Eq. 1 `y_s = 1` case); empty index
+//! buckets are unreachable by construction (see [`super::cdf`]).
+
+use super::{SamplerCore, Scratch};
+use crate::util::Rng;
+
+/// Number of worker threads to use when the caller passes `threads = 0`:
+/// the machine's available parallelism.
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Below this many queries a batch runs inline: per-call thread spawn
+/// (no persistent pool yet — see ROADMAP) would rival the sampling work.
+const MIN_PAR_QUERIES: usize = 16;
+
+/// Draw `m` negatives per query for a [B, D] query block.
+///
+/// * `queries` — row-major [B, D] with B = `positives.len()`
+/// * `positives` — the positive class per query, excluded by bounded
+///   rejection (pass `u32::MAX` rows for unconditioned draws)
+/// * `ids`, `log_q` — row-major [B, M] outputs
+/// * `seed` — RNG stream base; query `i` uses `Rng::stream(seed, i)`
+/// * `threads` — worker count (0 = available parallelism; capped at B)
+pub fn sample_batch(
+    core: &dyn SamplerCore,
+    queries: &[f32],
+    d: usize,
+    positives: &[u32],
+    m: usize,
+    seed: u64,
+    threads: usize,
+    ids: &mut [u32],
+    log_q: &mut [f32],
+) {
+    let b = positives.len();
+    assert_eq!(queries.len(), b * d, "queries must be [B={b}, D={d}]");
+    assert_eq!(ids.len(), b * m, "ids must be [B={b}, M={m}]");
+    assert_eq!(log_q.len(), b * m, "log_q must be [B={b}, M={m}]");
+    if b == 0 || m == 0 {
+        return;
+    }
+
+    let mut threads = if threads == 0 { auto_threads() } else { threads }.clamp(1, b);
+    // Workers are spawned per call (scoped threads, no persistent pool), so
+    // for small batches the ~tens-of-µs spawn cost can rival the sampling
+    // work itself. Run tiny batches inline — results are bit-identical
+    // either way (per-query RNG streams), only the schedule changes.
+    if b < MIN_PAR_QUERIES {
+        threads = 1;
+    }
+    if threads == 1 {
+        let mut scratch = Scratch::new();
+        run_rows(core, queries, d, positives, m, seed, 0, &mut scratch, ids, log_q);
+        return;
+    }
+
+    let rows = (b + threads - 1) / threads;
+    std::thread::scope(|s| {
+        let mut ids_rest = &mut ids[..];
+        let mut lq_rest = &mut log_q[..];
+        for t in 0..threads {
+            let start = t * rows;
+            let end = ((t + 1) * rows).min(b);
+            if start >= end {
+                break;
+            }
+            let count = end - start;
+            let (my_ids, r) = ids_rest.split_at_mut(count * m);
+            ids_rest = r;
+            let (my_lq, r) = lq_rest.split_at_mut(count * m);
+            lq_rest = r;
+            let my_q = &queries[start * d..end * d];
+            let my_pos = &positives[start..end];
+            s.spawn(move || {
+                let mut scratch = Scratch::new();
+                run_rows(core, my_q, d, my_pos, m, seed, start, &mut scratch, my_ids, my_lq);
+            });
+        }
+    });
+}
+
+/// Sequential kernel shared by the inline path and each worker: rows
+/// `[0, positives.len())` of this slice are global rows `base + i`.
+#[allow(clippy::too_many_arguments)]
+fn run_rows(
+    core: &dyn SamplerCore,
+    queries: &[f32],
+    d: usize,
+    positives: &[u32],
+    m: usize,
+    seed: u64,
+    base: usize,
+    scratch: &mut Scratch,
+    ids: &mut [u32],
+    log_q: &mut [f32],
+) {
+    for (i, &pos) in positives.iter().enumerate() {
+        let mut rng = Rng::stream(seed, (base + i) as u64);
+        core.sample_into(
+            &queries[i * d..(i + 1) * d],
+            pos,
+            &mut rng,
+            scratch,
+            &mut ids[i * m..(i + 1) * m],
+            &mut log_q[i * m..(i + 1) * m],
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantKind;
+    use crate::sampler::{self, MidxSampler, Sampler, SamplerKind, SamplerParams};
+    use crate::util::check::rand_matrix;
+
+    fn built_sampler(kind: SamplerKind, n: usize, d: usize, seed: u64) -> Box<dyn Sampler> {
+        let mut rng = Rng::new(seed);
+        let table = rand_matrix(&mut rng, n, d, 0.5);
+        let freqs: Vec<f32> = (0..n).map(|i| 1.0 / (i + 1) as f32).collect();
+        let params = SamplerParams {
+            k_codewords: 4,
+            frequencies: freqs,
+            rff_dim: 16,
+            ..Default::default()
+        };
+        let mut s = sampler::build(kind, n, &params);
+        s.rebuild(&table, n, d, &mut rng);
+        s
+    }
+
+    const ALL_KINDS: &[SamplerKind] = &[
+        SamplerKind::Uniform,
+        SamplerKind::Unigram,
+        SamplerKind::Lsh,
+        SamplerKind::Sphere,
+        SamplerKind::Rff,
+        SamplerKind::MidxPq,
+        SamplerKind::MidxRq,
+        SamplerKind::ExactMidx,
+    ];
+
+    #[test]
+    fn prop_batched_equals_sequential_for_every_sampler_and_thread_count() {
+        // The engine's core contract: sample_batch(T) is bit-identical to
+        // the per-query path driven with the same RNG streams, for every
+        // sampler and for T ∈ {1, 2, 8}.
+        let (n, d, b, m, seed) = (60usize, 8usize, 23usize, 7usize, 0xBA7C4u64);
+        for &kind in ALL_KINDS {
+            let s = built_sampler(kind, n, d, 100 + kind as u64);
+            let core = s.core();
+            let mut rng = Rng::new(9);
+            let queries = rand_matrix(&mut rng, b, d, 0.5);
+            let positives: Vec<u32> = (0..b).map(|i| (i % n) as u32).collect();
+
+            // reference: the sequential per-query path, same streams
+            let mut want_ids = vec![0u32; b * m];
+            let mut want_lq = vec![0.0f32; b * m];
+            let mut scratch = Scratch::new();
+            for i in 0..b {
+                let mut qrng = Rng::stream(seed, i as u64);
+                core.sample_into(
+                    &queries[i * d..(i + 1) * d],
+                    positives[i],
+                    &mut qrng,
+                    &mut scratch,
+                    &mut want_ids[i * m..(i + 1) * m],
+                    &mut want_lq[i * m..(i + 1) * m],
+                );
+            }
+
+            for threads in [1usize, 2, 8] {
+                let mut got_ids = vec![0u32; b * m];
+                let mut got_lq = vec![0.0f32; b * m];
+                sample_batch(
+                    core, &queries, d, &positives, m, seed, threads, &mut got_ids, &mut got_lq,
+                );
+                assert_eq!(got_ids, want_ids, "{} T={threads}: ids diverge", core.name());
+                let got_bits: Vec<u32> = got_lq.iter().map(|x| x.to_bits()).collect();
+                let want_bits: Vec<u32> = want_lq.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got_bits, want_bits, "{} T={threads}: log_q diverge", core.name());
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        for &kind in ALL_KINDS {
+            let s = built_sampler(kind, 30, 8, 7);
+            let mut ids: Vec<u32> = vec![];
+            let mut lq: Vec<f32> = vec![];
+            s.sample_batch(&[], 8, &[], 5, 1, 4, &mut ids, &mut lq);
+            s.sample_batch(&[], 8, &[], 0, 1, 0, &mut ids, &mut lq);
+        }
+    }
+
+    #[test]
+    fn zero_draws_is_a_noop() {
+        let s = built_sampler(SamplerKind::MidxRq, 30, 8, 8);
+        let mut rng = Rng::new(2);
+        let queries = rand_matrix(&mut rng, 4, 8, 0.5);
+        let positives = [0u32, 1, 2, 3];
+        let mut ids: Vec<u32> = vec![];
+        let mut lq: Vec<f32> = vec![];
+        s.sample_batch(&queries, 8, &positives, 0, 1, 2, &mut ids, &mut lq);
+    }
+
+    #[test]
+    fn more_negatives_than_classes_stays_valid() {
+        // m > N−1 cannot exclude the positive everywhere: bounded rejection
+        // keeps collisions/duplicates, but every id stays in range and every
+        // log_q stays finite for positive-support proposals.
+        let (n, d, m) = (4usize, 8usize, 12usize);
+        for &kind in ALL_KINDS {
+            let s = built_sampler(kind, n, d, 9);
+            let mut rng = Rng::new(3);
+            let b = 5usize;
+            let queries = rand_matrix(&mut rng, b, d, 0.5);
+            let positives: Vec<u32> = (0..b).map(|i| (i % n) as u32).collect();
+            let mut ids = vec![u32::MAX; b * m];
+            let mut lq = vec![f32::NAN; b * m];
+            s.sample_batch(&queries, d, &positives, m, 5, 3, &mut ids, &mut lq);
+            assert!(
+                ids.iter().all(|&i| (i as usize) < n),
+                "{}: id out of range",
+                s.name()
+            );
+            assert!(
+                lq.iter().all(|l| l.is_finite() && *l <= 1e-6),
+                "{}: bad log_q",
+                s.name()
+            );
+        }
+    }
+
+    #[test]
+    fn single_occupied_bucket_index_never_draws_empty_buckets() {
+        // Degenerate index: every class quantizes to the same codeword pair,
+        // so K²−1 buckets are empty (log_sizes = −inf) and ALL trailing
+        // buckets after the occupied one have zero probability. Every draw
+        // must still return a valid class — this exercises the saturated-CDF
+        // guard in sampler::cdf.
+        let (n, d, k) = (24usize, 8usize, 4usize);
+        // identical rows ⇒ one bucket holds all classes
+        let row: Vec<f32> = (0..d).map(|j| 0.3 * (j as f32 + 1.0)).collect();
+        let mut table = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            table.extend_from_slice(&row);
+        }
+        for kind in [QuantKind::Product, QuantKind::Residual] {
+            let mut s = MidxSampler::new(n, kind, k, 5);
+            let mut rng = Rng::new(11);
+            crate::sampler::Sampler::rebuild(&mut s, &table, n, d, &mut rng);
+            let index = s.index().unwrap();
+            assert_eq!(index.occupied_buckets(), 1, "setup: want exactly one bucket");
+
+            let b = 16usize;
+            let m = 10usize;
+            let queries = rand_matrix(&mut rng, b, d, 1.0);
+            let positives: Vec<u32> = (0..b).map(|i| (i % n) as u32).collect();
+            let mut ids = vec![u32::MAX; b * m];
+            let mut lq = vec![f32::NAN; b * m];
+            for threads in [1usize, 4] {
+                s.sample_batch(&queries, d, &positives, m, 77, threads, &mut ids, &mut lq);
+                assert!(ids.iter().all(|&i| (i as usize) < n));
+                // uniform within the single bucket: log q = −ln N exactly
+                for &l in &lq {
+                    assert!(
+                        (l + (n as f32).ln()).abs() < 1e-5,
+                        "log_q {l} != -ln({n})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn thread_cap_exceeding_batch_is_fine() {
+        let s = built_sampler(SamplerKind::Sphere, 20, 8, 12);
+        let mut rng = Rng::new(4);
+        let queries = rand_matrix(&mut rng, 3, 8, 0.5);
+        let positives = [0u32, 1, 2];
+        let (m, seed) = (4usize, 21u64);
+        let mut a = (vec![0u32; 12], vec![0.0f32; 12]);
+        let mut b = (vec![0u32; 12], vec![0.0f32; 12]);
+        s.sample_batch(&queries, 8, &positives, m, seed, 64, &mut a.0, &mut a.1);
+        s.sample_batch(&queries, 8, &positives, m, seed, 1, &mut b.0, &mut b.1);
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+    }
+}

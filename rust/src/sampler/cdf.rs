@@ -1,0 +1,137 @@
+//! Shared inverse-CDF sampling: build a cumulative table once per query,
+//! then draw in O(log n) with `partition_point` binary search. Used by the
+//! MIDX bucket draw, the sphere/RFF categorical draws, and the batched
+//! engine — one implementation, one set of edge-case guarantees.
+//!
+//! Guarantee: **zero-probability outcomes are never drawn.** The search
+//! returns the first index whose cumulative value strictly exceeds `u`;
+//! a zero-weight outcome shares its cumulative value with its predecessor,
+//! so the search always lands on the first outcome of each plateau — which
+//! is the one that actually contributed mass. The tail is saturated to +∞
+//! *from the last positive-weight outcome onward*, so floating-point
+//! rounding cannot leak `u` past the support (the seed implementation
+//! force-set only the final entry, which could route tail mass into a
+//! trailing empty MIDX bucket — e.g. an index with every class in one
+//! bucket — and panic on an empty-member draw).
+
+use crate::util::Rng;
+
+/// Build an inclusive-prefix CDF over (unnormalized, non-negative) weights
+/// into `cdf`, accumulating in f64. Returns the weight total. Entries from
+/// the last positive weight onward are saturated to +∞, so the strict
+/// `partition_point` search in [`index_of`] can never select past the
+/// support, for ANY `u` — in particular when floating-point rounding puts
+/// `u` at or above the accumulated total. All residual tail mass lands on
+/// the last positive-weight outcome, where it belongs. (With all-zero
+/// weights the cdf stays all-zero; callers guarantee positive support.)
+pub fn build_cdf_into(weights: &[f32], cdf: &mut Vec<f32>) -> f64 {
+    cdf.clear();
+    cdf.reserve(weights.len());
+    let mut acc = 0.0f64;
+    let mut last_pos = None;
+    for (i, &w) in weights.iter().enumerate() {
+        debug_assert!(w >= 0.0, "negative weight {w} at {i}");
+        if w > 0.0 {
+            last_pos = Some(i);
+        }
+        acc += w as f64;
+        cdf.push(acc as f32);
+    }
+    if let Some(lp) = last_pos {
+        for c in cdf[lp..].iter_mut() {
+            *c = f32::INFINITY;
+        }
+    }
+    acc
+}
+
+/// First index whose cumulative value strictly exceeds `u` (clamped to the
+/// last index as a belt-and-suspenders guard; with a saturated tail and
+/// `u < total` the clamp never engages on an empty outcome).
+#[inline]
+pub fn index_of(cdf: &[f32], u: f32) -> usize {
+    debug_assert!(!cdf.is_empty());
+    cdf.partition_point(|&c| c <= u).min(cdf.len() - 1)
+}
+
+/// Draw an index from a **normalized** CDF (total == 1.0) in O(log n).
+#[inline]
+pub fn draw(cdf: &[f32], rng: &mut Rng) -> usize {
+    index_of(cdf, rng.next_f32())
+}
+
+/// Draw an index from an **unnormalized** CDF with known `total`.
+#[inline]
+pub fn draw_scaled(cdf: &[f32], total: f64, rng: &mut Rng) -> usize {
+    index_of(cdf, (rng.next_f64() * total) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_weight_outcomes_never_drawn() {
+        let mut cdf = Vec::new();
+        let total = build_cdf_into(&[0.0, 2.0, 0.0, 0.0, 3.0, 0.0], &mut cdf);
+        assert_eq!(total, 5.0);
+        let mut rng = Rng::new(1);
+        for _ in 0..20_000 {
+            let i = draw_scaled(&cdf, total, &mut rng);
+            assert!(i == 1 || i == 4, "drew zero-weight outcome {i}");
+        }
+    }
+
+    #[test]
+    fn trailing_empty_tail_is_saturated() {
+        // The regression the seed had: with an empty tail, fp undershoot in
+        // the running sum could leave cdf[last_pos] < u for u ≈ 1, routing
+        // the draw into an empty outcome. Saturation closes that hole for
+        // EVERY u, including u at or above the accumulated total.
+        let mut cdf = Vec::new();
+        build_cdf_into(&[0.25, 0.75, 0.0, 0.0], &mut cdf);
+        assert_eq!(cdf[1], f32::INFINITY);
+        assert_eq!(cdf[3], f32::INFINITY);
+        assert_eq!(index_of(&cdf, 0.999_999_94), 1); // largest f32 < 1.0
+        assert_eq!(index_of(&cdf, 1.0), 1); // even past the total
+        assert_eq!(index_of(&cdf, 2.0), 1);
+    }
+
+    #[test]
+    fn leading_and_single_outcome() {
+        let mut cdf = Vec::new();
+        build_cdf_into(&[0.0, 0.0, 1.0], &mut cdf);
+        assert_eq!(index_of(&cdf, 0.0), 2);
+        assert_eq!(index_of(&cdf, 0.99), 2);
+        build_cdf_into(&[5.0], &mut cdf);
+        assert_eq!(index_of(&cdf, 0.7), 0);
+    }
+
+    #[test]
+    fn matches_weights_empirically() {
+        let w = [1.0f32, 2.0, 3.0, 4.0];
+        let mut cdf = Vec::new();
+        let total = build_cdf_into(&w, &mut cdf);
+        let mut rng = Rng::new(3);
+        let draws = 100_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..draws {
+            counts[draw_scaled(&cdf, total, &mut rng)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let want = w[i] as f64 / 10.0;
+            let got = c as f64 / draws as f64;
+            assert!((got - want).abs() < 0.01, "outcome {i}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn normalized_draw_in_range() {
+        let mut cdf = Vec::new();
+        build_cdf_into(&[0.25, 0.25, 0.25, 0.25], &mut cdf);
+        let mut rng = Rng::new(4);
+        for _ in 0..1000 {
+            assert!(draw(&cdf, &mut rng) < 4);
+        }
+    }
+}

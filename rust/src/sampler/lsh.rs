@@ -9,42 +9,34 @@
 //!   Q(i|z) = (1/T) Σ_t [ i ∈ bucket_t(z) ] / |bucket_t(z)|
 //!          + (fallback mass when bucket_t(z) = ∅) / N
 //! computable in O(T) per sampled class by comparing stored hash codes.
+//!
+//! Split: the hyperplanes + per-table CSR buckets + stored class codes form
+//! the shared [`LshCore`]; the query's T hash codes live in the scratch.
+//! The hyperplanes are drawn once per dimensionality and survive rebuilds
+//! (held by the adapter behind an `Arc`, shared into each epoch's core).
 
-use super::{draw_excluding, Sampler};
+use std::sync::Arc;
+
+use super::{draw_excluding, Sampler, SamplerCore, Scratch};
 use crate::util::Rng;
 
-pub struct LshSampler {
+/// Immutable epoch state: hyperplanes, bucket CSR per table, class codes.
+pub struct LshCore {
     n: usize,
     tables: usize,
     bits: usize,
     d: usize,
-    /// [tables * bits, d] hyperplane normals (drawn once per dimensionality)
-    planes: Vec<f32>,
+    /// [tables * bits, d] hyperplane normals (shared with the adapter)
+    planes: Arc<Vec<f32>>,
     /// per table: CSR over 2^bits buckets
     offsets: Vec<Vec<u32>>,
     members: Vec<Vec<u32>>,
     /// [n, tables] stored hash code of each class
     codes: Vec<u16>,
-    /// scratch: query hash per table
-    zcodes: Vec<u16>,
 }
 
-impl LshSampler {
-    pub fn new(n: usize, tables: usize, bits: usize) -> Self {
-        assert!(bits <= 16, "bits > 16 unsupported");
-        LshSampler {
-            n,
-            tables,
-            bits,
-            d: 0,
-            planes: Vec::new(),
-            offsets: Vec::new(),
-            members: Vec::new(),
-            codes: Vec::new(),
-            zcodes: Vec::new(),
-        }
-    }
-
+impl LshCore {
+    /// Hash `x` with table `t`'s hyperplanes.
     #[inline]
     fn hash(&self, t: usize, x: &[f32]) -> u16 {
         let mut code = 0u16;
@@ -63,19 +55,20 @@ impl LshSampler {
         &self.members[t][off[code as usize] as usize..off[code as usize + 1] as usize]
     }
 
-    fn hash_query(&mut self, z: &[f32]) {
-        self.zcodes.resize(self.tables, 0);
+    /// Hash the query into `scratch.codes` (one code per table).
+    fn hash_query(&self, z: &[f32], scratch: &mut Scratch) {
+        scratch.codes.resize(self.tables, 0);
         for t in 0..self.tables {
-            self.zcodes[t] = self.hash(t, z);
+            scratch.codes[t] = self.hash(t, z);
         }
     }
 
-    /// Q(i|z) given the query's hash codes are already in `zcodes`.
-    fn prob_of(&self, i: usize) -> f32 {
+    /// Q(i|z) given the query's hash codes `zcodes`.
+    fn prob_of(&self, zcodes: &[u16], i: usize) -> f32 {
         let mut p = 0.0f64;
         let per_table = 1.0 / self.tables as f64;
         for t in 0..self.tables {
-            let zc = self.zcodes[t];
+            let zc = zcodes[t];
             let bucket = self.bucket(t, zc);
             if bucket.is_empty() {
                 // empty bucket ⇒ that table falls back to uniform
@@ -86,30 +79,32 @@ impl LshSampler {
         }
         p as f32
     }
-}
 
-impl Sampler for LshSampler {
-    fn name(&self) -> &str {
-        "lsh"
-    }
-
-    fn rebuild(&mut self, table: &[f32], n: usize, d: usize, rng: &mut Rng) {
-        self.n = n;
-        if self.d != d || self.planes.is_empty() {
-            self.d = d;
-            self.planes = (0..self.tables * self.bits * d)
-                .map(|_| rng.normal_f32(1.0))
-                .collect();
-        }
-        let nb = 1usize << self.bits;
-        self.codes = vec![0; n * self.tables];
-        self.offsets = Vec::with_capacity(self.tables);
-        self.members = Vec::with_capacity(self.tables);
-        for t in 0..self.tables {
+    /// Index every class row of `table` into all hash tables.
+    pub fn build(
+        planes: Arc<Vec<f32>>,
+        tables: usize,
+        bits: usize,
+        table: &[f32],
+        n: usize,
+        d: usize,
+    ) -> Self {
+        let nb = 1usize << bits;
+        let mut core = LshCore {
+            n,
+            tables,
+            bits,
+            d,
+            planes,
+            offsets: Vec::with_capacity(tables),
+            members: Vec::with_capacity(tables),
+            codes: vec![0; n * tables],
+        };
+        for t in 0..tables {
             let mut counts = vec![0u32; nb];
             for i in 0..n {
-                let c = self.hash(t, &table[i * d..(i + 1) * d]);
-                self.codes[i * self.tables + t] = c;
+                let c = core.hash(t, &table[i * d..(i + 1) * d]);
+                core.codes[i * tables + t] = c;
                 counts[c as usize] += 1;
             }
             let mut off = vec![0u32; nb + 1];
@@ -119,23 +114,41 @@ impl Sampler for LshSampler {
             let mut mem = vec![0u32; n];
             let mut cursor = off[..nb].to_vec();
             for i in 0..n {
-                let c = self.codes[i * self.tables + t] as usize;
+                let c = core.codes[i * tables + t] as usize;
                 mem[cursor[c] as usize] = i as u32;
                 cursor[c] += 1;
             }
-            self.offsets.push(off);
-            self.members.push(mem);
+            core.offsets.push(off);
+            core.members.push(mem);
         }
+        core
+    }
+}
+
+impl SamplerCore for LshCore {
+    fn name(&self) -> &str {
+        "lsh"
     }
 
-    fn sample_into(&mut self, z: &[f32], pos: u32, rng: &mut Rng, ids: &mut [u32], log_q: &mut [f32]) {
-        assert!(!self.codes.is_empty(), "rebuild() before sampling");
-        self.hash_query(z);
+    fn n_classes(&self) -> usize {
+        self.n
+    }
+
+    fn sample_into(
+        &self,
+        z: &[f32],
+        pos: u32,
+        rng: &mut Rng,
+        scratch: &mut Scratch,
+        ids: &mut [u32],
+        log_q: &mut [f32],
+    ) {
+        self.hash_query(z, scratch);
         let n = self.n;
         for j in 0..ids.len() {
             let c = draw_excluding(pos, rng, |r| {
                 let t = r.below(self.tables);
-                let bucket = self.bucket(t, self.zcodes[t]);
+                let bucket = self.bucket(t, scratch.codes[t]);
                 if bucket.is_empty() {
                     r.below(n) as u32
                 } else {
@@ -143,15 +156,77 @@ impl Sampler for LshSampler {
                 }
             });
             ids[j] = c;
-            log_q[j] = self.prob_of(c as usize).max(f32::MIN_POSITIVE).ln();
+            log_q[j] = self.prob_of(&scratch.codes, c as usize).max(f32::MIN_POSITIVE).ln();
         }
     }
 
-    fn proposal_dist(&mut self, z: &[f32], out: &mut [f32]) {
-        self.hash_query(z);
+    fn proposal_dist(&self, z: &[f32], scratch: &mut Scratch, out: &mut [f32]) {
+        self.hash_query(z, scratch);
         for i in 0..self.n {
-            out[i] = self.prob_of(i);
+            out[i] = self.prob_of(&scratch.codes, i);
         }
+    }
+}
+
+/// Per-query adapter; owns the persistent hyperplanes across rebuilds.
+pub struct LshSampler {
+    tables: usize,
+    bits: usize,
+    d: usize,
+    planes: Arc<Vec<f32>>,
+    core: Option<LshCore>,
+    scratch: Scratch,
+}
+
+impl LshSampler {
+    pub fn new(_n: usize, tables: usize, bits: usize) -> Self {
+        assert!(bits <= 16, "bits > 16 unsupported");
+        LshSampler {
+            tables,
+            bits,
+            d: 0,
+            planes: Arc::new(Vec::new()),
+            core: None,
+            scratch: Scratch::new(),
+        }
+    }
+}
+
+impl Sampler for LshSampler {
+    fn name(&self) -> &str {
+        "lsh"
+    }
+
+    fn rebuild(&mut self, table: &[f32], n: usize, d: usize, rng: &mut Rng) {
+        if self.d != d || self.planes.is_empty() {
+            // draw the hyperplanes once per dimensionality
+            self.d = d;
+            self.planes = Arc::new(
+                (0..self.tables * self.bits * d).map(|_| rng.normal_f32(1.0)).collect(),
+            );
+        }
+        self.core = Some(LshCore::build(
+            Arc::clone(&self.planes),
+            self.tables,
+            self.bits,
+            table,
+            n,
+            d,
+        ));
+    }
+
+    fn core(&self) -> &dyn SamplerCore {
+        self.core.as_ref().expect("rebuild() before sampling")
+    }
+
+    fn sample_into(&mut self, z: &[f32], pos: u32, rng: &mut Rng, ids: &mut [u32], log_q: &mut [f32]) {
+        let core = self.core.as_ref().expect("rebuild() before sampling");
+        core.sample_into(z, pos, rng, &mut self.scratch, ids, log_q);
+    }
+
+    fn proposal_dist(&mut self, z: &[f32], out: &mut [f32]) {
+        let core = self.core.as_ref().expect("rebuild() before sampling");
+        core.proposal_dist(z, &mut self.scratch, out);
     }
 }
 
@@ -196,5 +271,19 @@ mod tests {
         s.proposal_dist(&z, &mut q);
         let sum: f64 = q.iter().map(|&x| x as f64).sum();
         assert!((sum - 1.0).abs() < 1e-3, "sum {sum}");
+    }
+
+    #[test]
+    fn planes_stable_across_rebuilds() {
+        // hyperplanes are drawn once; rebuilding with new embeddings must
+        // not change them (log_q consistency across the epoch boundary).
+        let mut rng = Rng::new(5);
+        let table = rand_matrix(&mut rng, 10, 6, 1.0);
+        let mut s = LshSampler::new(10, 4, 3);
+        s.rebuild(&table, 10, 6, &mut rng);
+        let p0 = Arc::clone(&s.planes);
+        let table2 = rand_matrix(&mut rng, 10, 6, 1.0);
+        s.rebuild(&table2, 10, 6, &mut rng);
+        assert_eq!(*p0, *s.planes);
     }
 }

@@ -9,107 +9,160 @@
 //!   TRUE softmax distribution — at O(N·D) per query, which is why the
 //!   paper uses it only as an analysis device (its Table 1 row).
 //!
-//! Both rebuild their quantizer + inverted multi-index from the live class
-//! embeddings once per epoch.
+//! Split: quantizer + inverted multi-index form the shared core (immutable
+//! for an epoch, `Sync` — the batched engine draws from one core on every
+//! thread); the per-query stage scores / joint table / CDF live in the
+//! [`Scratch`]. Bucket draws go through [`super::cdf`]'s binary search with
+//! the saturated-tail guarantee, so −inf `log_sizes` buckets (empty) are
+//! never drawn — even in degenerate indexes with one occupied bucket.
 
-use super::{Sampler, MAX_REJECT};
+use super::{cdf, Sampler, SamplerCore, Scratch, MAX_REJECT};
 use crate::index::InvertedMultiIndex;
 use crate::quant::{self, QuantKind, Quantizer};
 use crate::util::math::{log_sum_exp, softmax_inplace};
 use crate::util::Rng;
 
-/// Fast MIDX (Theorem 2).
-pub struct MidxSampler {
+/// Immutable epoch state of the fast sampler (Theorem 2).
+pub struct MidxCore {
     n: usize,
+    name: &'static str,
+    quant: Box<dyn Quantizer + Send + Sync>,
+    index: InvertedMultiIndex,
+}
+
+impl MidxCore {
+    pub fn new(name: &'static str, quant: Box<dyn Quantizer + Send + Sync>, n: usize) -> Self {
+        let index = InvertedMultiIndex::build(quant.as_ref(), n);
+        MidxCore { n, name, quant, index }
+    }
+
+    pub fn index(&self) -> &InvertedMultiIndex {
+        &self.index
+    }
+
+    pub fn quantizer(&self) -> &(dyn Quantizer + Send + Sync) {
+        self.quant.as_ref()
+    }
+
+    /// Compute the normalized joint proposal over the K² buckets for `z`
+    /// into `scratch.joint`, with the running CDF in `scratch.cdf`.
+    /// Returns the number of buckets (K²).
+    fn compute_joint(&self, z: &[f32], scratch: &mut Scratch) -> usize {
+        let k = self.quant.k();
+        scratch.s1.resize(k, 0.0);
+        scratch.s2.resize(k, 0.0);
+        self.quant.stage1_scores(z, &mut scratch.s1);
+        self.quant.stage2_scores(z, &mut scratch.s2);
+
+        let nb = k * k;
+        scratch.joint.resize(nb, 0.0);
+        for k1 in 0..k {
+            let base = scratch.s1[k1];
+            for k2 in 0..k {
+                scratch.joint[k1 * k + k2] =
+                    base + scratch.s2[k2] + self.index.log_sizes[k1 * k + k2];
+            }
+        }
+        softmax_inplace(&mut scratch.joint);
+        cdf::build_cdf_into(&scratch.joint, &mut scratch.cdf);
+        nb
+    }
+}
+
+impl SamplerCore for MidxCore {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n
+    }
+
+    fn sample_into(
+        &self,
+        z: &[f32],
+        pos: u32,
+        rng: &mut Rng,
+        scratch: &mut Scratch,
+        ids: &mut [u32],
+        log_q: &mut [f32],
+    ) {
+        self.compute_joint(z, scratch);
+        let index = &self.index;
+        for j in 0..ids.len() {
+            let mut chosen = u32::MAX;
+            let mut bucket_idx = 0usize;
+            for _ in 0..MAX_REJECT {
+                // O(log K²) bucket draw, then O(1) uniform member draw
+                let b = cdf::draw(&scratch.cdf, rng);
+                let members = index.bucket_flat(b);
+                debug_assert!(!members.is_empty(), "sampled empty bucket");
+                let c = members[rng.below(members.len())];
+                bucket_idx = b;
+                chosen = c;
+                if c != pos {
+                    break;
+                }
+            }
+            ids[j] = chosen;
+            // Q(i|z) = P(bucket) * 1/|bucket|
+            log_q[j] = scratch.joint[bucket_idx].max(f32::MIN_POSITIVE).ln()
+                - index.log_sizes[bucket_idx];
+        }
+    }
+
+    fn proposal_dist(&self, z: &[f32], scratch: &mut Scratch, out: &mut [f32]) {
+        self.compute_joint(z, scratch);
+        let index = &self.index;
+        out[..self.n].fill(0.0);
+        let nb = index.k * index.k;
+        for b in 0..nb {
+            let p = scratch.joint[b];
+            if p <= 0.0 {
+                continue;
+            }
+            let members = index.bucket_flat(b);
+            let per = p / members.len() as f32;
+            for &c in members {
+                out[c as usize] = per;
+            }
+        }
+    }
+}
+
+/// Fast MIDX (Theorem 2) — per-query adapter around [`MidxCore`].
+pub struct MidxSampler {
     kind: QuantKind,
     pub k: usize,
     kmeans_iters: usize,
     name: &'static str,
-    quant: Option<Box<dyn Quantizer + Send + Sync>>,
-    index: Option<InvertedMultiIndex>,
-    // per-query scratch (reused across calls)
-    s1: Vec<f32>,
-    s2: Vec<f32>,
-    joint: Vec<f32>,
-    cdf: Vec<f32>,
+    core: Option<MidxCore>,
+    scratch: Scratch,
 }
 
 impl MidxSampler {
-    pub fn new(n: usize, kind: QuantKind, k: usize, kmeans_iters: usize) -> Self {
+    pub fn new(_n: usize, kind: QuantKind, k: usize, kmeans_iters: usize) -> Self {
         let name = match kind {
             QuantKind::Product => "midx-pq",
             QuantKind::Residual => "midx-rq",
         };
-        MidxSampler {
-            n,
-            kind,
-            k,
-            kmeans_iters,
-            name,
-            quant: None,
-            index: None,
-            s1: Vec::new(),
-            s2: Vec::new(),
-            joint: Vec::new(),
-            cdf: Vec::new(),
-        }
-    }
-
-    /// Compute the normalized joint proposal over the K² buckets for `z`.
-    /// Leaves probabilities in `self.joint` and the running CDF in
-    /// `self.cdf`. Returns the number of buckets (K²).
-    fn compute_joint(&mut self, z: &[f32]) -> usize {
-        let quant = self.quant.as_ref().expect("rebuild() before sampling");
-        let index = self.index.as_ref().unwrap();
-        let k = quant.k();
-        self.s1.resize(k, 0.0);
-        self.s2.resize(k, 0.0);
-        quant.stage1_scores(z, &mut self.s1);
-        quant.stage2_scores(z, &mut self.s2);
-
-        let nb = k * k;
-        self.joint.resize(nb, 0.0);
-        for k1 in 0..k {
-            let base = self.s1[k1];
-            for k2 in 0..k {
-                self.joint[k1 * k + k2] = base + self.s2[k2] + index.log_sizes[k1 * k + k2];
-            }
-        }
-        softmax_inplace(&mut self.joint);
-
-        self.cdf.resize(nb, 0.0);
-        let mut acc = 0.0f64;
-        for b in 0..nb {
-            acc += self.joint[b] as f64;
-            self.cdf[b] = acc as f32;
-        }
-        // guard against fp undershoot at the tail
-        if let Some(last) = self.cdf.last_mut() {
-            *last = 1.0;
-        }
-        nb
-    }
-
-    #[inline]
-    fn draw_bucket(&self, rng: &mut Rng) -> usize {
-        let u = rng.next_f32();
-        // first index with cdf[i] > u
-        self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1)
+        MidxSampler { kind, k, kmeans_iters, name, core: None, scratch: Scratch::new() }
     }
 
     /// Native computation of the joint proposal table (parity-checked
     /// against the AOT Pallas kernel in integration tests).
     pub fn joint_probs(&mut self, z: &[f32]) -> Vec<f32> {
-        self.compute_joint(z);
-        self.joint.clone()
+        let core = self.core.as_ref().expect("rebuild() before sampling");
+        core.compute_joint(z, &mut self.scratch);
+        self.scratch.joint.clone()
     }
 
     pub fn index(&self) -> Option<&InvertedMultiIndex> {
-        self.index.as_ref()
+        self.core.as_ref().map(|c| c.index())
     }
 
     pub fn quantizer(&self) -> Option<&(dyn Quantizer + Send + Sync)> {
-        self.quant.as_deref()
+        self.core.as_ref().map(|c| c.quantizer())
     }
 }
 
@@ -119,37 +172,22 @@ impl Sampler for MidxSampler {
     }
 
     fn rebuild(&mut self, table: &[f32], n: usize, d: usize, rng: &mut Rng) {
-        self.n = n;
         let q = quant::build(self.kind, table, n, d, self.k, self.kmeans_iters, rng);
-        self.index = Some(InvertedMultiIndex::build(q.as_ref(), n));
-        self.quant = Some(q);
+        self.core = Some(MidxCore::new(self.name, q, n));
+    }
+
+    fn core(&self) -> &dyn SamplerCore {
+        self.core.as_ref().expect("rebuild() before sampling")
     }
 
     fn sample_into(&mut self, z: &[f32], pos: u32, rng: &mut Rng, ids: &mut [u32], log_q: &mut [f32]) {
-        self.compute_joint(z);
-        let index = self.index.as_ref().unwrap();
-        let k = index.k;
-        for j in 0..ids.len() {
-            let mut chosen = u32::MAX;
-            let mut bucket_idx = 0usize;
-            for _ in 0..MAX_REJECT {
-                let b = self.draw_bucket(rng);
-                let members = &index.members
-                    [index.offsets[b] as usize..index.offsets[b + 1] as usize];
-                debug_assert!(!members.is_empty(), "sampled empty bucket");
-                let c = members[rng.below(members.len())];
-                bucket_idx = b;
-                chosen = c;
-                if c != pos {
-                    break;
-                }
-            }
-            let _ = k;
-            ids[j] = chosen;
-            // Q(i|z) = P(bucket) * 1/|bucket|
-            log_q[j] = self.joint[bucket_idx].max(f32::MIN_POSITIVE).ln()
-                - index.log_sizes[bucket_idx];
-        }
+        let core = self.core.as_ref().expect("rebuild() before sampling");
+        core.sample_into(z, pos, rng, &mut self.scratch, ids, log_q);
+    }
+
+    fn proposal_dist(&mut self, z: &[f32], out: &mut [f32]) {
+        let core = self.core.as_ref().expect("rebuild() before sampling");
+        core.proposal_dist(z, &mut self.scratch, out);
     }
 
     fn set_codebooks(
@@ -168,172 +206,116 @@ impl Sampler for MidxSampler {
             n,
             d,
         );
-        self.n = n;
-        self.index = Some(InvertedMultiIndex::build(&q, n));
-        self.quant = Some(Box::new(q));
+        self.core = Some(MidxCore::new(self.name, Box::new(q), n));
         true
     }
-
-    fn proposal_dist(&mut self, z: &[f32], out: &mut [f32]) {
-        self.compute_joint(z);
-        let index = self.index.as_ref().unwrap();
-        out[..self.n].fill(0.0);
-        let nb = index.k * index.k;
-        for b in 0..nb {
-            let p = self.joint[b];
-            if p <= 0.0 {
-                continue;
-            }
-            let members =
-                &index.members[index.offsets[b] as usize..index.offsets[b + 1] as usize];
-            let per = p / members.len() as f32;
-            for &c in members {
-                out[c as usize] = per;
-            }
-        }
-    }
 }
 
-/// Exact MIDX (Theorem 1): proposal == true softmax.
-pub struct ExactMidxSampler {
+/// Immutable epoch state of the exact sampler (Theorem 1): additionally
+/// snapshots the live class table (needed for residual scores).
+pub struct ExactMidxCore {
     n: usize,
-    kind: QuantKind,
-    k: usize,
-    kmeans_iters: usize,
-    quant: Option<Box<dyn Quantizer + Send + Sync>>,
-    index: Option<InvertedMultiIndex>,
-    /// copy of the live class table (needed for residual scores)
-    table: Vec<f32>,
     d: usize,
-    // scratch
-    s1: Vec<f32>,
-    s2: Vec<f32>,
-    resid: Vec<f32>,
-    joint: Vec<f32>,
-    cdf: Vec<f32>,
-    log_z: f32,
+    quant: Box<dyn Quantizer + Send + Sync>,
+    index: InvertedMultiIndex,
+    table: Vec<f32>,
 }
 
-impl ExactMidxSampler {
-    pub fn new(n: usize, kind: QuantKind, k: usize, kmeans_iters: usize) -> Self {
-        ExactMidxSampler {
-            n,
-            kind,
-            k,
-            kmeans_iters,
-            quant: None,
-            index: None,
-            table: Vec::new(),
-            d: 0,
-            s1: Vec::new(),
-            s2: Vec::new(),
-            resid: Vec::new(),
-            joint: Vec::new(),
-            cdf: Vec::new(),
-            log_z: 0.0,
-        }
+impl ExactMidxCore {
+    pub fn new(quant: Box<dyn Quantizer + Send + Sync>, table: &[f32], n: usize, d: usize) -> Self {
+        let index = InvertedMultiIndex::build(quant.as_ref(), n);
+        ExactMidxCore { n, d, quant, index, table: table.to_vec() }
     }
 
     /// O(N·D) per query: residual scores õ_i for every class, per-bucket
     /// log ω (log-sum-exp of residual scores), joint bucket distribution.
-    fn compute(&mut self, z: &[f32]) {
-        let quant = self.quant.as_ref().expect("rebuild() before sampling");
-        let index = self.index.as_ref().unwrap();
-        let k = quant.k();
+    /// Fills scratch.{s1,s2,resid,joint,cdf,log_z}.
+    fn compute(&self, z: &[f32], scratch: &mut Scratch) {
+        let k = self.quant.k();
         let d = self.d;
-        self.s1.resize(k, 0.0);
-        self.s2.resize(k, 0.0);
-        quant.stage1_scores(z, &mut self.s1);
-        quant.stage2_scores(z, &mut self.s2);
+        scratch.s1.resize(k, 0.0);
+        scratch.s2.resize(k, 0.0);
+        self.quant.stage1_scores(z, &mut scratch.s1);
+        self.quant.stage2_scores(z, &mut scratch.s2);
 
         // residual score õ_i = z·q_i − (s1[a1(i)] + s2[a2(i)])
-        let (a1, a2) = quant.codes();
-        self.resid.resize(self.n, 0.0);
+        let (a1, a2) = self.quant.codes();
+        scratch.resid.resize(self.n, 0.0);
         for i in 0..self.n {
             let full = crate::util::math::dot(z, &self.table[i * d..(i + 1) * d]);
-            self.resid[i] = full - self.s1[a1[i] as usize] - self.s2[a2[i] as usize];
+            scratch.resid[i] =
+                full - scratch.s1[a1[i] as usize] - scratch.s2[a2[i] as usize];
         }
 
         // per-bucket log ω = lse of residual scores; joint = s1+s2+logω
         let nb = k * k;
-        self.joint.resize(nb, 0.0);
+        scratch.joint.resize(nb, 0.0);
         for k1 in 0..k {
             for k2 in 0..k {
                 let b = k1 * k + k2;
-                let members =
-                    &index.members[index.offsets[b] as usize..index.offsets[b + 1] as usize];
+                let members = self.index.bucket_flat(b);
                 if members.is_empty() {
-                    self.joint[b] = f32::NEG_INFINITY;
+                    scratch.joint[b] = f32::NEG_INFINITY;
                     continue;
                 }
                 let m = members
                     .iter()
-                    .map(|&c| self.resid[c as usize])
+                    .map(|&c| scratch.resid[c as usize])
                     .fold(f32::NEG_INFINITY, f32::max);
                 let s: f64 = members
                     .iter()
-                    .map(|&c| ((self.resid[c as usize] - m) as f64).exp())
+                    .map(|&c| ((scratch.resid[c as usize] - m) as f64).exp())
                     .sum();
                 let log_omega = m + s.ln() as f32;
-                self.joint[b] = self.s1[k1] + self.s2[k2] + log_omega;
+                scratch.joint[b] = scratch.s1[k1] + scratch.s2[k2] + log_omega;
             }
         }
-        self.log_z = log_sum_exp(&self.joint);
-        softmax_inplace(&mut self.joint);
-
-        self.cdf.resize(nb, 0.0);
-        let mut acc = 0.0f64;
-        for b in 0..nb {
-            acc += self.joint[b] as f64;
-            self.cdf[b] = acc as f32;
-        }
-        if let Some(last) = self.cdf.last_mut() {
-            *last = 1.0;
-        }
+        scratch.log_z = log_sum_exp(&scratch.joint);
+        softmax_inplace(&mut scratch.joint);
+        cdf::build_cdf_into(&scratch.joint, &mut scratch.cdf);
     }
 }
 
-impl Sampler for ExactMidxSampler {
+impl SamplerCore for ExactMidxCore {
     fn name(&self) -> &str {
         "exact-midx"
     }
 
-    fn rebuild(&mut self, table: &[f32], n: usize, d: usize, rng: &mut Rng) {
-        self.n = n;
-        self.d = d;
-        self.table = table.to_vec();
-        let q = quant::build(self.kind, table, n, d, self.k, self.kmeans_iters, rng);
-        self.index = Some(InvertedMultiIndex::build(q.as_ref(), n));
-        self.quant = Some(q);
+    fn n_classes(&self) -> usize {
+        self.n
     }
 
-    fn sample_into(&mut self, z: &[f32], pos: u32, rng: &mut Rng, ids: &mut [u32], log_q: &mut [f32]) {
-        self.compute(z);
-        let index = self.index.as_ref().unwrap();
-        let quant = self.quant.as_ref().unwrap();
-        let (a1, a2) = quant.codes();
-        let k = index.k;
+    fn sample_into(
+        &self,
+        z: &[f32],
+        pos: u32,
+        rng: &mut Rng,
+        scratch: &mut Scratch,
+        ids: &mut [u32],
+        log_q: &mut [f32],
+    ) {
+        self.compute(z, scratch);
+        let index = &self.index;
+        let (a1, a2) = self.quant.codes();
         for j in 0..ids.len() {
             let mut chosen = u32::MAX;
             for _ in 0..MAX_REJECT {
                 // stage 1+2: joint bucket (equivalent to sequential P¹, P²)
-                let u = rng.next_f32();
-                let b = self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1);
-                let members =
-                    &index.members[index.offsets[b] as usize..index.offsets[b + 1] as usize];
+                let b = cdf::draw(&scratch.cdf, rng);
+                let members = index.bucket_flat(b);
                 // stage 3: residual softmax within the bucket
                 let mx = members
                     .iter()
-                    .map(|&c| self.resid[c as usize])
+                    .map(|&c| scratch.resid[c as usize])
                     .fold(f32::NEG_INFINITY, f32::max);
                 let total: f64 = members
                     .iter()
-                    .map(|&c| ((self.resid[c as usize] - mx) as f64).exp())
+                    .map(|&c| ((scratch.resid[c as usize] - mx) as f64).exp())
                     .sum();
                 let mut t = rng.next_f64() * total;
                 let mut pick = members[members.len() - 1];
                 for &c in members {
-                    t -= ((self.resid[c as usize] - mx) as f64).exp();
+                    t -= ((scratch.resid[c as usize] - mx) as f64).exp();
                     if t <= 0.0 {
                         pick = c;
                         break;
@@ -347,21 +329,61 @@ impl Sampler for ExactMidxSampler {
             ids[j] = chosen;
             // exact log softmax: s1 + s2 + õ − log Z
             let i = chosen as usize;
-            log_q[j] = self.s1[a1[i] as usize] + self.s2[a2[i] as usize] + self.resid[i]
-                - self.log_z;
-            let _ = k;
+            log_q[j] = scratch.s1[a1[i] as usize] + scratch.s2[a2[i] as usize]
+                + scratch.resid[i]
+                - scratch.log_z;
         }
     }
 
-    fn proposal_dist(&mut self, z: &[f32], out: &mut [f32]) {
-        self.compute(z);
-        let quant = self.quant.as_ref().unwrap();
-        let (a1, a2) = quant.codes();
+    fn proposal_dist(&self, z: &[f32], scratch: &mut Scratch, out: &mut [f32]) {
+        self.compute(z, scratch);
+        let (a1, a2) = self.quant.codes();
         for i in 0..self.n {
-            out[i] = (self.s1[a1[i] as usize] + self.s2[a2[i] as usize] + self.resid[i]
-                - self.log_z)
+            out[i] = (scratch.s1[a1[i] as usize] + scratch.s2[a2[i] as usize]
+                + scratch.resid[i]
+                - scratch.log_z)
                 .exp();
         }
+    }
+}
+
+/// Exact MIDX (Theorem 1): proposal == true softmax. Per-query adapter.
+pub struct ExactMidxSampler {
+    kind: QuantKind,
+    k: usize,
+    kmeans_iters: usize,
+    core: Option<ExactMidxCore>,
+    scratch: Scratch,
+}
+
+impl ExactMidxSampler {
+    pub fn new(_n: usize, kind: QuantKind, k: usize, kmeans_iters: usize) -> Self {
+        ExactMidxSampler { kind, k, kmeans_iters, core: None, scratch: Scratch::new() }
+    }
+}
+
+impl Sampler for ExactMidxSampler {
+    fn name(&self) -> &str {
+        "exact-midx"
+    }
+
+    fn rebuild(&mut self, table: &[f32], n: usize, d: usize, rng: &mut Rng) {
+        let q = quant::build(self.kind, table, n, d, self.k, self.kmeans_iters, rng);
+        self.core = Some(ExactMidxCore::new(q, table, n, d));
+    }
+
+    fn core(&self) -> &dyn SamplerCore {
+        self.core.as_ref().expect("rebuild() before sampling")
+    }
+
+    fn sample_into(&mut self, z: &[f32], pos: u32, rng: &mut Rng, ids: &mut [u32], log_q: &mut [f32]) {
+        let core = self.core.as_ref().expect("rebuild() before sampling");
+        core.sample_into(z, pos, rng, &mut self.scratch, ids, log_q);
+    }
+
+    fn proposal_dist(&mut self, z: &[f32], out: &mut [f32]) {
+        let core = self.core.as_ref().expect("rebuild() before sampling");
+        core.proposal_dist(z, &mut self.scratch, out);
     }
 }
 

@@ -10,7 +10,26 @@
 //! | Exact MIDX | `midx`      | adaptive   | O(N·D + M) (Thm 1)    |
 //! | MIDX-pq/rq | `midx`      | adaptive   | O(K·D + K² + M) (Thm 2) |
 //!
-//! Contract: `sample_into` fills `m` class ids plus the **log proposal
+//! ## Architecture: shared core + per-thread scratch
+//!
+//! Every sampler is split in two (see DESIGN.md §batched-sampling):
+//!
+//! * a **[`SamplerCore`]** — the immutable shared state (codebooks, the
+//!   inverted multi-index, alias tables, RFF projections, LSH buckets).
+//!   Rebuilt once per epoch, `Sync`, and sampled from through `&self`, so
+//!   any number of threads can draw from one core concurrently.
+//! * a **[`Scratch`]** — the cheap per-query working buffers (stage scores,
+//!   joint table, CDF, …). One per thread; allocation amortizes across a
+//!   batch.
+//!
+//! The batched entry point is [`batch::sample_batch`] (also available as
+//! [`Sampler::sample_batch`]): it fans a [B, D] query block across a scoped
+//! thread pool with one deterministic RNG stream per query
+//! (`Rng::stream(seed, query_index)`), so results are bit-identical for any
+//! thread count. The original per-query [`Sampler`] trait survives as a thin
+//! adapter (core + owned scratch) for the stats/analysis paths.
+//!
+//! Contract: sampling fills `m` class ids plus the **log proposal
 //! probability** Q(i|z) of each draw, normalized over all N classes — this
 //! is what the sampled-softmax logit correction (L1 kernel) consumes.
 //! Positives are excluded by bounded rejection; after `MAX_REJECT` tries a
@@ -18,6 +37,8 @@
 //! positive, which is the paper's Eq. 1 `y_s = 1` case).
 
 pub mod alias;
+pub mod batch;
+pub mod cdf;
 pub mod lsh;
 pub mod midx;
 pub mod rff;
@@ -26,6 +47,7 @@ pub mod uniform;
 pub mod unigram;
 
 pub use alias::AliasTable;
+pub use batch::sample_batch;
 pub use lsh::LshSampler;
 pub use midx::{ExactMidxSampler, MidxSampler};
 pub use rff::RffSampler;
@@ -38,15 +60,91 @@ use crate::util::Rng;
 
 pub const MAX_REJECT: usize = 8;
 
+/// Per-thread working memory for sampling. One concrete struct shared by all
+/// cores (object safety: `SamplerCore` stays dyn-compatible); each sampler
+/// uses the subset of fields it needs and fully overwrites them per query,
+/// so a scratch can hop between cores and queries freely.
+#[derive(Clone, Debug, Default)]
+pub struct Scratch {
+    /// stage-1 codeword scores (MIDX) — [K]
+    pub s1: Vec<f32>,
+    /// stage-2 codeword scores (MIDX) — [K]
+    pub s2: Vec<f32>,
+    /// joint bucket probabilities (MIDX) — [K²]
+    pub joint: Vec<f32>,
+    /// cumulative distribution for O(log) draws — [K²] or [N]
+    pub cdf: Vec<f32>,
+    /// per-class proposal weights (sphere/RFF) — [N]
+    pub weights: Vec<f32>,
+    /// query feature map (RFF) — [R]
+    pub feat: Vec<f32>,
+    /// query hash codes per table (LSH) — [T]
+    pub codes: Vec<u16>,
+    /// residual scores õ_i (exact MIDX) — [N]
+    pub resid: Vec<f32>,
+    /// unnormalized weight total (sphere/RFF)
+    pub total: f64,
+    /// log partition function (exact MIDX)
+    pub log_z: f32,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+}
+
+/// The immutable, shareable half of a sampler: everything `rebuild` derives
+/// from the class-embedding table, frozen for an epoch. `&self` sampling +
+/// `Sync` is what lets [`batch::sample_batch`] fan one core across threads.
+pub trait SamplerCore: Send + Sync {
+    /// Short identifier used in reports ("midx-rq", "uniform", ...).
+    fn name(&self) -> &str;
+
+    /// Number of classes N the core indexes.
+    fn n_classes(&self) -> usize;
+
+    /// True if the proposal depends on the query (adaptive samplers).
+    fn is_adaptive(&self) -> bool {
+        true
+    }
+
+    /// Draw `ids.len()` negatives for query `z`, excluding `pos` (bounded
+    /// rejection), writing log proposal probabilities alongside. Uses
+    /// `scratch` for all mutable working state.
+    fn sample_into(
+        &self,
+        z: &[f32],
+        pos: u32,
+        rng: &mut Rng,
+        scratch: &mut Scratch,
+        ids: &mut [u32],
+        log_q: &mut [f32],
+    );
+
+    /// Full normalized proposal distribution Q(·|z) over all N classes.
+    /// O(N) — used by the stats/analysis benches only, never in training.
+    fn proposal_dist(&self, z: &[f32], scratch: &mut Scratch, out: &mut [f32]);
+}
+
 /// A proposal distribution over classes, conditioned (or not) on a query.
+///
+/// This is the stateful per-query adapter around a [`SamplerCore`]: it owns
+/// the core (swapped at `rebuild`) plus one [`Scratch`], preserving the
+/// original `&mut self` call shape for the stats/analysis paths. Training
+/// and benches should prefer [`Sampler::sample_batch`].
 pub trait Sampler: Send {
     /// Short identifier used in reports ("midx-rq", "uniform", ...).
     fn name(&self) -> &str;
 
-    /// Refresh internal state from the live class-embedding table [n, d].
+    /// Refresh the shared core from the live class-embedding table [n, d].
     /// Called once before each epoch (paper §4.4: "the initialization is
     /// only updated before each epoch"). Static samplers ignore it.
     fn rebuild(&mut self, table: &[f32], n: usize, d: usize, rng: &mut Rng);
+
+    /// The current shared core. Panics for adaptive samplers before the
+    /// first `rebuild` (same contract the per-query path always had).
+    fn core(&self) -> &dyn SamplerCore;
 
     /// Draw `ids.len()` negatives for query `z`, excluding `pos` (bounded
     /// rejection), writing log proposal probabilities alongside.
@@ -59,6 +157,25 @@ pub trait Sampler: Send {
     /// True if the proposal depends on the query (adaptive samplers).
     fn is_adaptive(&self) -> bool {
         true
+    }
+
+    /// Batched sampling: draw `m` negatives for each of the B queries in
+    /// `queries` ([B, D] row-major, B = `positives.len()`), fanning the
+    /// batch across `threads` scoped workers. `ids`/`log_q` are [B, M]
+    /// row-major. Query `i` uses `Rng::stream(seed, i)`, so output is
+    /// bit-identical for every thread count. See [`batch::sample_batch`].
+    fn sample_batch(
+        &self,
+        queries: &[f32],
+        d: usize,
+        positives: &[u32],
+        m: usize,
+        seed: u64,
+        threads: usize,
+        ids: &mut [u32],
+        log_q: &mut [f32],
+    ) {
+        batch::sample_batch(self.core(), queries, d, positives, m, seed, threads, ids, log_q);
     }
 
     /// Install externally-learned codebooks (paper §6.2.3 MIDX-Learn):
@@ -290,5 +407,24 @@ pub(crate) mod testing {
         }
         // bounded rejection: collisions possible but must be rare
         assert!(hits < 50, "{}: positive sampled {hits} times", s.name());
+
+        // (5) the shared core agrees with the adapter and is query-pure:
+        // a fresh scratch + the same RNG stream reproduce identical draws.
+        let core = s.core();
+        assert_eq!(core.n_classes(), n);
+        assert_eq!(core.is_adaptive(), s.is_adaptive());
+        let mut a = (vec![0u32; m], vec![0.0f32; m]);
+        let mut b = (vec![0u32; m], vec![0.0f32; m]);
+        let mut scratch = Scratch::new();
+        core.sample_into(&z, pos, &mut Rng::stream(seed, 1), &mut scratch, &mut a.0, &mut a.1);
+        // reuse the (now dirty) scratch: results must not change
+        core.sample_into(&z, pos, &mut Rng::stream(seed, 1), &mut scratch, &mut b.0, &mut b.1);
+        assert_eq!(a.0, b.0, "{}: core draws depend on scratch history", s.name());
+        assert_eq!(
+            a.1.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.1.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "{}: core log_q depends on scratch history",
+            s.name()
+        );
     }
 }

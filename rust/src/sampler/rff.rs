@@ -6,48 +6,34 @@
 //!   φ(x) = √(2/R) · [cos(w_r·x + b_r)]_r ,  w_r ~ N(0, τ·I), b_r ~ U[0,2π).
 //! Proposal Q(i|z) ∝ max(φ(ẑ)·Φ_i, ε) with Φ precomputed per class at
 //! rebuild (O(N·R) per query — the paper's GPU implementation, no trees).
+//!
+//! Split: projection (w, b) + class feature matrix Φ form the shared
+//! [`RffCore`]; the query feature map and weights/CDF live in the scratch.
+//! (w, b) are drawn once per dimensionality and survive rebuilds (held by
+//! the adapter behind `Arc`s, shared into each epoch's core).
 
-use super::{draw_excluding, Sampler};
+use std::sync::Arc;
+
+use super::{cdf, draw_excluding, Sampler, SamplerCore, Scratch};
 use crate::util::math::{dot, norm2};
 use crate::util::Rng;
 
-pub struct RffSampler {
-    n: usize,
-    r: usize,
-    tau: f32,
-    d: usize,
-    /// [r, d] projection matrix (drawn once, scaled by sqrt(tau))
-    w: Vec<f32>,
-    /// [r] phase offsets
-    b: Vec<f32>,
-    /// [n, r] class feature matrix (rebuilt per epoch)
-    phi: Vec<f32>,
-    // scratch
-    zfeat: Vec<f32>,
-    weights: Vec<f32>,
-    cdf: Vec<f32>,
-    total: f64,
-}
-
 const EPS: f32 = 1e-6;
 
-impl RffSampler {
-    pub fn new(n: usize, r: usize, tau: f32) -> Self {
-        RffSampler {
-            n,
-            r,
-            tau,
-            d: 0,
-            w: Vec::new(),
-            b: Vec::new(),
-            phi: Vec::new(),
-            zfeat: Vec::new(),
-            weights: Vec::new(),
-            cdf: Vec::new(),
-            total: 0.0,
-        }
-    }
+/// Immutable epoch state: the projection and the per-class feature matrix.
+pub struct RffCore {
+    n: usize,
+    r: usize,
+    d: usize,
+    /// [r, d] projection matrix (scaled by sqrt(tau))
+    w: Arc<Vec<f32>>,
+    /// [r] phase offsets
+    b: Arc<Vec<f32>>,
+    /// [n, r] class feature matrix (rebuilt per epoch)
+    phi: Vec<f32>,
+}
 
+impl RffCore {
     /// φ(x̂) for an ℓ2-normalized input; writes `r` features.
     fn features(&self, x: &[f32], out: &mut [f32]) {
         let scale = (2.0 / self.r as f32).sqrt();
@@ -62,30 +48,91 @@ impl RffSampler {
         }
     }
 
-    fn compute(&mut self, z: &[f32]) {
-        assert!(!self.phi.is_empty(), "rebuild() before sampling");
-        let (n, r) = (self.n, self.r);
-        let mut zf = std::mem::take(&mut self.zfeat);
-        zf.resize(r, 0.0);
-        self.features(z, &mut zf);
-        self.weights.resize(n, 0.0);
-        self.cdf.resize(n, 0.0);
-        let mut acc = 0.0f64;
+    /// Featurize every class row of `table`.
+    pub fn build(w: Arc<Vec<f32>>, b: Arc<Vec<f32>>, r: usize, table: &[f32], n: usize, d: usize) -> Self {
+        let mut core = RffCore { n, r, d, w, b, phi: vec![0.0; n * r] };
+        let mut row = vec![0.0f32; r];
         for i in 0..n {
-            let k = dot(&zf, &self.phi[i * r..(i + 1) * r]);
-            let wgt = k.max(EPS); // kernel estimate can dip negative
-            self.weights[i] = wgt;
-            acc += wgt as f64;
-            self.cdf[i] = acc as f32;
+            core.features(&table[i * d..(i + 1) * d], &mut row);
+            core.phi[i * r..(i + 1) * r].copy_from_slice(&row);
         }
-        self.total = acc;
-        self.zfeat = zf;
+        core
     }
 
-    #[inline]
-    fn draw(&self, rng: &mut Rng) -> u32 {
-        let u = (rng.next_f64() * self.total) as f32;
-        self.cdf.partition_point(|&c| c <= u).min(self.n - 1) as u32
+    /// Fill scratch.feat / scratch.weights / scratch.cdf / scratch.total.
+    fn compute(&self, z: &[f32], scratch: &mut Scratch) {
+        let (n, r) = (self.n, self.r);
+        scratch.feat.resize(r, 0.0);
+        self.features(z, &mut scratch.feat);
+        scratch.weights.resize(n, 0.0);
+        for i in 0..n {
+            let k = dot(&scratch.feat, &self.phi[i * r..(i + 1) * r]);
+            scratch.weights[i] = k.max(EPS); // kernel estimate can dip negative
+        }
+        scratch.total = cdf::build_cdf_into(&scratch.weights, &mut scratch.cdf);
+    }
+}
+
+impl SamplerCore for RffCore {
+    fn name(&self) -> &str {
+        "rff"
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n
+    }
+
+    fn sample_into(
+        &self,
+        z: &[f32],
+        pos: u32,
+        rng: &mut Rng,
+        scratch: &mut Scratch,
+        ids: &mut [u32],
+        log_q: &mut [f32],
+    ) {
+        self.compute(z, scratch);
+        let log_total = (scratch.total as f32).ln();
+        for j in 0..ids.len() {
+            let c = draw_excluding(pos, rng, |r| {
+                cdf::draw_scaled(&scratch.cdf, scratch.total, r) as u32
+            });
+            ids[j] = c;
+            log_q[j] = scratch.weights[c as usize].ln() - log_total;
+        }
+    }
+
+    fn proposal_dist(&self, z: &[f32], scratch: &mut Scratch, out: &mut [f32]) {
+        self.compute(z, scratch);
+        let inv = (1.0 / scratch.total) as f32;
+        for i in 0..self.n {
+            out[i] = scratch.weights[i] * inv;
+        }
+    }
+}
+
+/// Per-query adapter; owns the persistent projection across rebuilds.
+pub struct RffSampler {
+    r: usize,
+    tau: f32,
+    d: usize,
+    w: Arc<Vec<f32>>,
+    b: Arc<Vec<f32>>,
+    core: Option<RffCore>,
+    scratch: Scratch,
+}
+
+impl RffSampler {
+    pub fn new(_n: usize, r: usize, tau: f32) -> Self {
+        RffSampler {
+            r,
+            tau,
+            d: 0,
+            w: Arc::new(Vec::new()),
+            b: Arc::new(Vec::new()),
+            core: None,
+            scratch: Scratch::new(),
+        }
     }
 }
 
@@ -95,40 +142,39 @@ impl Sampler for RffSampler {
     }
 
     fn rebuild(&mut self, table: &[f32], n: usize, d: usize, rng: &mut Rng) {
-        self.n = n;
         if self.d != d || self.w.is_empty() {
             // draw the projection once per dimensionality
             self.d = d;
             let std = self.tau.sqrt();
-            self.w = (0..self.r * d).map(|_| rng.normal_f32(std)).collect();
-            self.b = (0..self.r)
-                .map(|_| (rng.next_f64() * 2.0 * std::f64::consts::PI) as f32)
-                .collect();
+            self.w = Arc::new((0..self.r * d).map(|_| rng.normal_f32(std)).collect());
+            self.b = Arc::new(
+                (0..self.r)
+                    .map(|_| (rng.next_f64() * 2.0 * std::f64::consts::PI) as f32)
+                    .collect(),
+            );
         }
-        self.phi = vec![0.0; n * self.r];
-        let mut row = vec![0.0f32; self.r];
-        for i in 0..n {
-            self.features(&table[i * d..(i + 1) * d], &mut row);
-            self.phi[i * self.r..(i + 1) * self.r].copy_from_slice(&row);
-        }
+        self.core = Some(RffCore::build(
+            Arc::clone(&self.w),
+            Arc::clone(&self.b),
+            self.r,
+            table,
+            n,
+            d,
+        ));
+    }
+
+    fn core(&self) -> &dyn SamplerCore {
+        self.core.as_ref().expect("rebuild() before sampling")
     }
 
     fn sample_into(&mut self, z: &[f32], pos: u32, rng: &mut Rng, ids: &mut [u32], log_q: &mut [f32]) {
-        self.compute(z);
-        let log_total = (self.total as f32).ln();
-        for j in 0..ids.len() {
-            let c = draw_excluding(pos, rng, |r| self.draw(r));
-            ids[j] = c;
-            log_q[j] = self.weights[c as usize].ln() - log_total;
-        }
+        let core = self.core.as_ref().expect("rebuild() before sampling");
+        core.sample_into(z, pos, rng, &mut self.scratch, ids, log_q);
     }
 
     fn proposal_dist(&mut self, z: &[f32], out: &mut [f32]) {
-        self.compute(z);
-        let inv = (1.0 / self.total) as f32;
-        for i in 0..self.n {
-            out[i] = self.weights[i] * inv;
-        }
+        let core = self.core.as_ref().expect("rebuild() before sampling");
+        core.proposal_dist(z, &mut self.scratch, out);
     }
 }
 
@@ -176,9 +222,9 @@ mod tests {
         let table = rand_matrix(&mut rng, 10, 6, 1.0);
         let mut s = RffSampler::new(10, 16, 2.0);
         s.rebuild(&table, 10, 6, &mut rng);
-        let w0 = s.w.clone();
+        let w0 = Arc::clone(&s.w);
         let table2 = rand_matrix(&mut rng, 10, 6, 1.0);
         s.rebuild(&table2, 10, 6, &mut rng);
-        assert_eq!(w0, s.w);
+        assert_eq!(*w0, *s.w);
     }
 }

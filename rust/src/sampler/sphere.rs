@@ -6,47 +6,88 @@
 //! the weights directly over all classes per query (O(N·D)) and draw from
 //! the resulting categorical via an O(log N) CDF search. This matches the
 //! comparison actually run in the paper's experiments.
+//!
+//! Split: the embedding snapshot is the shared [`SphereCore`]; per-query
+//! weights/CDF live in the scratch.
 
-use super::{draw_excluding, Sampler};
+use super::{cdf, draw_excluding, Sampler, SamplerCore, Scratch};
 use crate::util::math::dot;
 use crate::util::Rng;
 
-pub struct SphereSampler {
+/// Immutable epoch state: α + a snapshot of the class embeddings.
+#[derive(Clone, Debug)]
+pub struct SphereCore {
     n: usize,
+    d: usize,
     alpha: f32,
     table: Vec<f32>,
-    d: usize,
-    // per-query scratch
-    weights: Vec<f32>,
-    cdf: Vec<f32>,
-    total: f64,
+}
+
+impl SphereCore {
+    pub fn new(alpha: f32, table: &[f32], n: usize, d: usize) -> Self {
+        SphereCore { n, d, alpha, table: table.to_vec() }
+    }
+
+    /// Fill scratch.weights / scratch.cdf / scratch.total for `z`.
+    fn compute(&self, z: &[f32], scratch: &mut Scratch) {
+        let (n, d) = (self.n, self.d);
+        scratch.weights.resize(n, 0.0);
+        for i in 0..n {
+            let s = dot(z, &self.table[i * d..(i + 1) * d]);
+            scratch.weights[i] = self.alpha * s * s + 1.0;
+        }
+        scratch.total = cdf::build_cdf_into(&scratch.weights, &mut scratch.cdf);
+    }
+}
+
+impl SamplerCore for SphereCore {
+    fn name(&self) -> &str {
+        "sphere"
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n
+    }
+
+    fn sample_into(
+        &self,
+        z: &[f32],
+        pos: u32,
+        rng: &mut Rng,
+        scratch: &mut Scratch,
+        ids: &mut [u32],
+        log_q: &mut [f32],
+    ) {
+        self.compute(z, scratch);
+        let log_total = (scratch.total as f32).ln();
+        for j in 0..ids.len() {
+            let c = draw_excluding(pos, rng, |r| {
+                cdf::draw_scaled(&scratch.cdf, scratch.total, r) as u32
+            });
+            ids[j] = c;
+            log_q[j] = scratch.weights[c as usize].ln() - log_total;
+        }
+    }
+
+    fn proposal_dist(&self, z: &[f32], scratch: &mut Scratch, out: &mut [f32]) {
+        self.compute(z, scratch);
+        let inv = (1.0 / scratch.total) as f32;
+        for i in 0..self.n {
+            out[i] = scratch.weights[i] * inv;
+        }
+    }
+}
+
+/// Per-query adapter (core + scratch).
+pub struct SphereSampler {
+    alpha: f32,
+    core: Option<SphereCore>,
+    scratch: Scratch,
 }
 
 impl SphereSampler {
-    pub fn new(n: usize, alpha: f32) -> Self {
-        SphereSampler { n, alpha, table: Vec::new(), d: 0, weights: Vec::new(), cdf: Vec::new(), total: 0.0 }
-    }
-
-    fn compute(&mut self, z: &[f32]) {
-        let (n, d) = (self.n, self.d);
-        assert!(!self.table.is_empty(), "rebuild() before sampling");
-        self.weights.resize(n, 0.0);
-        self.cdf.resize(n, 0.0);
-        let mut acc = 0.0f64;
-        for i in 0..n {
-            let s = dot(z, &self.table[i * d..(i + 1) * d]);
-            let w = self.alpha * s * s + 1.0;
-            self.weights[i] = w;
-            acc += w as f64;
-            self.cdf[i] = acc as f32;
-        }
-        self.total = acc;
-    }
-
-    #[inline]
-    fn draw(&self, rng: &mut Rng) -> u32 {
-        let u = (rng.next_f64() * self.total) as f32;
-        self.cdf.partition_point(|&c| c <= u).min(self.n - 1) as u32
+    pub fn new(_n: usize, alpha: f32) -> Self {
+        SphereSampler { alpha, core: None, scratch: Scratch::new() }
     }
 }
 
@@ -56,27 +97,21 @@ impl Sampler for SphereSampler {
     }
 
     fn rebuild(&mut self, table: &[f32], n: usize, d: usize, _rng: &mut Rng) {
-        self.n = n;
-        self.d = d;
-        self.table = table.to_vec();
+        self.core = Some(SphereCore::new(self.alpha, table, n, d));
+    }
+
+    fn core(&self) -> &dyn SamplerCore {
+        self.core.as_ref().expect("rebuild() before sampling")
     }
 
     fn sample_into(&mut self, z: &[f32], pos: u32, rng: &mut Rng, ids: &mut [u32], log_q: &mut [f32]) {
-        self.compute(z);
-        let log_total = (self.total as f32).ln();
-        for j in 0..ids.len() {
-            let c = draw_excluding(pos, rng, |r| self.draw(r));
-            ids[j] = c;
-            log_q[j] = self.weights[c as usize].ln() - log_total;
-        }
+        let core = self.core.as_ref().expect("rebuild() before sampling");
+        core.sample_into(z, pos, rng, &mut self.scratch, ids, log_q);
     }
 
     fn proposal_dist(&mut self, z: &[f32], out: &mut [f32]) {
-        self.compute(z);
-        let inv = (1.0 / self.total) as f32;
-        for i in 0..self.n {
-            out[i] = self.weights[i] * inv;
-        }
+        let core = self.core.as_ref().expect("rebuild() before sampling");
+        core.proposal_dist(z, &mut self.scratch, out);
     }
 }
 

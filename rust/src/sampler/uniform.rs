@@ -1,19 +1,68 @@
 //! Uniform proposal: Q(i|z) = 1/N. The simplest static baseline
 //! (paper §6.1); KL bound 2‖o‖∞ (Theorem 3).
 
-use super::{draw_excluding, Sampler};
+use super::{draw_excluding, Sampler, SamplerCore, Scratch};
 use crate::util::Rng;
 
+/// Shared core: just N (stateless per query, nothing to rebuild).
 #[derive(Clone, Debug)]
-pub struct UniformSampler {
+pub struct UniformCore {
     n: usize,
     log_q: f32,
 }
 
-impl UniformSampler {
+impl UniformCore {
     pub fn new(n: usize) -> Self {
         assert!(n > 0);
-        UniformSampler { n, log_q: -(n as f32).ln() }
+        UniformCore { n, log_q: -(n as f32).ln() }
+    }
+}
+
+impl SamplerCore for UniformCore {
+    fn name(&self) -> &str {
+        "uniform"
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n
+    }
+
+    fn is_adaptive(&self) -> bool {
+        false
+    }
+
+    fn sample_into(
+        &self,
+        _z: &[f32],
+        pos: u32,
+        rng: &mut Rng,
+        _scratch: &mut Scratch,
+        ids: &mut [u32],
+        log_q: &mut [f32],
+    ) {
+        let n = self.n;
+        for j in 0..ids.len() {
+            ids[j] = draw_excluding(pos, rng, |r| r.below(n) as u32);
+            log_q[j] = self.log_q;
+        }
+    }
+
+    fn proposal_dist(&self, _z: &[f32], _scratch: &mut Scratch, out: &mut [f32]) {
+        let p = 1.0 / self.n as f32;
+        out[..self.n].fill(p);
+    }
+}
+
+/// Per-query adapter (core + scratch).
+#[derive(Clone, Debug)]
+pub struct UniformSampler {
+    core: UniformCore,
+    scratch: Scratch,
+}
+
+impl UniformSampler {
+    pub fn new(n: usize) -> Self {
+        UniformSampler { core: UniformCore::new(n), scratch: Scratch::new() }
     }
 }
 
@@ -23,21 +72,19 @@ impl Sampler for UniformSampler {
     }
 
     fn rebuild(&mut self, _table: &[f32], n: usize, _d: usize, _rng: &mut Rng) {
-        self.n = n;
-        self.log_q = -(n as f32).ln();
+        self.core = UniformCore::new(n);
     }
 
-    fn sample_into(&mut self, _z: &[f32], pos: u32, rng: &mut Rng, ids: &mut [u32], log_q: &mut [f32]) {
-        let n = self.n;
-        for j in 0..ids.len() {
-            ids[j] = draw_excluding(pos, rng, |r| r.below(n) as u32);
-            log_q[j] = self.log_q;
-        }
+    fn core(&self) -> &dyn SamplerCore {
+        &self.core
     }
 
-    fn proposal_dist(&mut self, _z: &[f32], out: &mut [f32]) {
-        let p = 1.0 / self.n as f32;
-        out[..self.n].fill(p);
+    fn sample_into(&mut self, z: &[f32], pos: u32, rng: &mut Rng, ids: &mut [u32], log_q: &mut [f32]) {
+        self.core.sample_into(z, pos, rng, &mut self.scratch, ids, log_q);
+    }
+
+    fn proposal_dist(&mut self, z: &[f32], out: &mut [f32]) {
+        self.core.proposal_dist(z, &mut self.scratch, out);
     }
 
     fn is_adaptive(&self) -> bool {

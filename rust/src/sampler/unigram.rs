@@ -2,17 +2,20 @@
 //! (paper §6.1, Mikolov et al. 2013). Static — an alias table built once.
 //! KL bound 2‖o‖∞ + ln(N·q_max) (Theorem 4).
 
-use super::{draw_excluding, AliasTable, Sampler};
+use super::{draw_excluding, AliasTable, Sampler, SamplerCore, Scratch};
 use crate::util::Rng;
 
+/// Shared core: the alias table + cached log probabilities. Built once from
+/// the dataset frequencies; `rebuild` is a no-op (frequencies do not change
+/// during training), so every epoch shares the same core.
 #[derive(Clone, Debug)]
-pub struct UnigramSampler {
+pub struct UnigramCore {
     table: AliasTable,
     /// cached log-probabilities (avoids ln() per draw)
     log_p: Vec<f32>,
 }
 
-impl UnigramSampler {
+impl UnigramCore {
     /// `freq[i]` = raw count (or any non-negative weight) of class i.
     /// Zero-frequency classes get a small floor so every class remains
     /// reachable (required for an unbiased self-normalized estimator).
@@ -22,7 +25,56 @@ impl UnigramSampler {
         let weights: Vec<f32> = freq.iter().map(|&f| f.max(floor)).collect();
         let table = AliasTable::new(&weights);
         let log_p = (0..weights.len()).map(|i| table.log_prob_of(i)).collect();
-        UnigramSampler { table, log_p }
+        UnigramCore { table, log_p }
+    }
+}
+
+impl SamplerCore for UnigramCore {
+    fn name(&self) -> &str {
+        "unigram"
+    }
+
+    fn n_classes(&self) -> usize {
+        self.table.len()
+    }
+
+    fn is_adaptive(&self) -> bool {
+        false
+    }
+
+    fn sample_into(
+        &self,
+        _z: &[f32],
+        pos: u32,
+        rng: &mut Rng,
+        _scratch: &mut Scratch,
+        ids: &mut [u32],
+        log_q: &mut [f32],
+    ) {
+        for j in 0..ids.len() {
+            let c = draw_excluding(pos, rng, |r| self.table.sample(r));
+            ids[j] = c;
+            log_q[j] = self.log_p[c as usize];
+        }
+    }
+
+    fn proposal_dist(&self, _z: &[f32], _scratch: &mut Scratch, out: &mut [f32]) {
+        for i in 0..self.table.len() {
+            out[i] = self.table.prob_of(i);
+        }
+    }
+}
+
+/// Per-query adapter (core + scratch).
+#[derive(Clone, Debug)]
+pub struct UnigramSampler {
+    core: UnigramCore,
+    scratch: Scratch,
+}
+
+impl UnigramSampler {
+    pub fn new(freq: &[f32]) -> Self {
+        UnigramSampler { core: UnigramCore::new(freq), scratch: Scratch::new() }
     }
 }
 
@@ -35,18 +87,16 @@ impl Sampler for UnigramSampler {
         // static proposal: frequencies do not change during training
     }
 
-    fn sample_into(&mut self, _z: &[f32], pos: u32, rng: &mut Rng, ids: &mut [u32], log_q: &mut [f32]) {
-        for j in 0..ids.len() {
-            let c = draw_excluding(pos, rng, |r| self.table.sample(r));
-            ids[j] = c;
-            log_q[j] = self.log_p[c as usize];
-        }
+    fn core(&self) -> &dyn SamplerCore {
+        &self.core
     }
 
-    fn proposal_dist(&mut self, _z: &[f32], out: &mut [f32]) {
-        for i in 0..self.table.len() {
-            out[i] = self.table.prob_of(i);
-        }
+    fn sample_into(&mut self, z: &[f32], pos: u32, rng: &mut Rng, ids: &mut [u32], log_q: &mut [f32]) {
+        self.core.sample_into(z, pos, rng, &mut self.scratch, ids, log_q);
+    }
+
+    fn proposal_dist(&mut self, z: &[f32], out: &mut [f32]) {
+        self.core.proposal_dist(z, &mut self.scratch, out);
     }
 
     fn is_adaptive(&self) -> bool {

@@ -2,22 +2,28 @@
 //!
 //! Per step (adaptive sampler):
 //!   1. `encode`   artifact: batch → query embeddings z [Bq, D]
-//!   2. rust sampler: M negatives + log proposal probs per query
+//!   2. rust sampler: M negatives + log proposal probs per query — batched
+//!      across the whole [Bq, D] block by the multi-threaded sampling
+//!      engine (`sampler::sample_batch`), with per-query RNG streams so
+//!      results are reproducible for any thread count
 //!   3. `train_step` artifact: loss + gradients (through the L1 kernel)
 //!   4. rust Adam: parameter update
-//! The sampler's index is rebuilt from the live class embeddings once per
-//! epoch (paper §4.4). The `Full` baseline skips 1–2 and runs the O(N)
-//! `full_step` artifact instead.
+//!
+//! `run()` additionally software-pipelines the epoch: because sampling is
+//! `&self` against an immutable core, step i's sample phase runs on worker
+//! threads while the main thread issues the encode artifact call for step
+//! i+1 (`pipeline::overlap`). The sampler's index is rebuilt from the live
+//! class embeddings once per epoch (paper §4.4). The `Full` baseline skips
+//! 1–2 and runs the O(N) `full_step` artifact instead.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-
-use crate::coordinator::pipeline::Prefetcher;
+use crate::coordinator::pipeline::{overlap, Prefetcher};
 use crate::runtime::{lit_f32, lit_i32, to_f32, to_scalar_f32, Engine, Executable, Manifest};
-use crate::sampler::Sampler;
+use crate::sampler::{batch::auto_threads, sample_batch, Sampler};
 use crate::train::metrics::{EvalResult, MetricAcc};
 use crate::train::task::{Batch, TaskData};
 use crate::train::{Adam, ParamStore};
@@ -35,6 +41,8 @@ pub struct TrainConfig {
     pub patience: usize,
     /// prefetch depth for the batch pipeline
     pub prefetch: usize,
+    /// sampling worker threads (0 = available parallelism)
+    pub threads: usize,
     pub verbose: bool,
 }
 
@@ -48,12 +56,15 @@ impl Default for TrainConfig {
             eval_cap: 24,
             patience: 0,
             prefetch: 2,
+            threads: 0,
             verbose: false,
         }
     }
 }
 
 /// Wall-clock breakdown of one run (for §Perf and the Table 1 comparison).
+/// `sample_s` and `encode_s` are per-lane times; in the pipelined `run()`
+/// loop they overlap in wall clock, so their sum can exceed elapsed time.
 #[derive(Clone, Debug, Default)]
 pub struct Timing {
     pub encode_s: f64,
@@ -102,6 +113,8 @@ pub struct Trainer {
     /// None ⇒ Full-softmax baseline
     sampler: Option<Box<dyn Sampler>>,
     cfg: TrainConfig,
+    /// resolved sampling thread count (cfg.threads, 0 → hardware)
+    threads: usize,
     rng: Rng,
     timing: Timing,
 }
@@ -130,6 +143,7 @@ impl Trainer {
         let shapes: Vec<usize> = params.tensors.iter().map(|t| t.len()).collect();
         let adam = Adam::new(cfg.lr, &shapes);
         let rng = Rng::new(cfg.seed ^ 0xABCD);
+        let threads = if cfg.threads == 0 { auto_threads() } else { cfg.threads };
         Ok(Trainer {
             manifest,
             engine,
@@ -141,6 +155,7 @@ impl Trainer {
             adam,
             sampler,
             cfg,
+            threads,
             rng,
             timing: Timing::default(),
         })
@@ -154,81 +169,107 @@ impl Trainer {
         &self.engine
     }
 
-    /// Query embeddings for a batch (runs the encode artifact).
-    pub fn encode_batch(&mut self, batch: &Batch) -> Result<Vec<f32>> {
+    /// Resolved sampling worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Query embeddings for a batch (runs the encode artifact). `&self`:
+    /// safe to call while the sample phase runs on worker threads.
+    pub fn encode_batch(&self, batch: &Batch) -> Result<Vec<f32>> {
         let mut args = self.params.literals()?;
         args.extend(batch.input_literals()?);
         let out = self.encode.run(&args)?;
         to_f32(&out[0])
     }
 
-    /// One optimizer step on `batch`; returns the loss.
-    pub fn train_on(&mut self, batch: &Batch) -> Result<f32> {
+    /// Shared prep for a sample phase: the per-step stream base (drawn on
+    /// the main thread, in step order, so runs stay reproducible while
+    /// draws stay schedule-independent), u32 positives, and zeroed [B, M]
+    /// id / log q buffers. Single source of truth for the seed scheme and
+    /// the positive-encoding convention, used by both the sequential and
+    /// the pipelined path.
+    fn prepare_sample(&mut self, targets: &[i32]) -> (u64, Vec<u32>, Vec<u32>, Vec<f32>) {
+        let m = self.manifest.dims.m_neg;
+        let b = targets.len();
+        let seed = self.rng.next_u64();
+        let positives: Vec<u32> = targets.iter().map(|&t| t as u32).collect();
+        (seed, positives, vec![0u32; b * m], vec![0.0f32; b * m])
+    }
+
+    /// Batched sample phase for an encoded batch: M negatives + log q per
+    /// query, drawn by the multi-threaded engine. Returns ([Bq, M] ids as
+    /// i32 for the artifact ABI, [Bq, M] log q).
+    fn sample_negatives(&mut self, z: &[f32], targets: &[i32]) -> (Vec<i32>, Vec<f32>) {
+        let (m, d) = (self.manifest.dims.m_neg, self.manifest.dims.d);
+        let (seed, positives, mut ids, mut log_q) = self.prepare_sample(targets);
+        let t1 = Instant::now();
+        let sampler = self.sampler.as_ref().expect("sample_negatives without sampler");
+        sampler.sample_batch(z, d, &positives, m, seed, self.threads, &mut ids, &mut log_q);
+        self.timing.sample_s += t1.elapsed().as_secs_f64();
+        (to_neg_ids(&ids), log_q)
+    }
+
+    /// Steps 3–4 for the sampled path: train_step artifact + Adam update.
+    fn apply_sampled_step(
+        &mut self,
+        batch: &Batch,
+        neg_ids: &[i32],
+        log_q: &[f32],
+    ) -> Result<f32> {
         let dims = self.manifest.dims.clone();
-        let bq = dims.bq;
-        let m = dims.m_neg;
-        let d = dims.d;
-        debug_assert_eq!(batch.bq(), bq);
+        let (bq, m) = (dims.bq, dims.m_neg);
+        let t2 = Instant::now();
+        let mut args = self.params.literals()?;
+        args.extend(batch.input_literals()?);
+        args.push(lit_i32(batch.targets(), &[bq])?);
+        args.push(lit_i32(neg_ids, &[bq, m])?);
+        args.push(lit_f32(log_q, &[bq, m])?);
+        let out = self.train_step.run(&args)?;
+        let loss = to_scalar_f32(&out[0])?;
+        let grads: Vec<Vec<f32>> = out[1..].iter().map(to_f32).collect::<Result<_>>()?;
+        self.timing.step_s += t2.elapsed().as_secs_f64();
 
-        let loss;
-        let grads: Vec<Vec<f32>>;
-        if let Some(full) = &self.full_step {
-            let t0 = Instant::now();
-            let mut args = self.params.literals()?;
-            args.extend(batch.input_literals()?);
-            args.push(lit_i32(batch.targets(), &[bq])?);
-            let out = full.run(&args)?;
-            loss = to_scalar_f32(&out[0])?;
-            grads = out[1..].iter().map(to_f32).collect::<Result<_>>()?;
-            self.timing.step_s += t0.elapsed().as_secs_f64();
-        } else {
-            // 1. encode
-            let t0 = Instant::now();
-            let z = self.encode_batch(batch)?;
-            self.timing.encode_s += t0.elapsed().as_secs_f64();
-
-            // 2. sample
-            let t1 = Instant::now();
-            let sampler = self.sampler.as_mut().unwrap();
-            let targets = batch.targets();
-            let mut neg_ids = vec![0i32; bq * m];
-            let mut log_q = vec![0.0f32; bq * m];
-            let mut ids = vec![0u32; m];
-            let mut lq = vec![0.0f32; m];
-            for r in 0..bq {
-                sampler.sample_into(
-                    &z[r * d..(r + 1) * d],
-                    targets[r] as u32,
-                    &mut self.rng,
-                    &mut ids,
-                    &mut lq,
-                );
-                for j in 0..m {
-                    neg_ids[r * m + j] = ids[j] as i32;
-                }
-                log_q[r * m..(r + 1) * m].copy_from_slice(&lq);
-            }
-            self.timing.sample_s += t1.elapsed().as_secs_f64();
-
-            // 3. loss + grads through the L1 kernel
-            let t2 = Instant::now();
-            let mut args = self.params.literals()?;
-            args.extend(batch.input_literals()?);
-            args.push(lit_i32(targets, &[bq])?);
-            args.push(lit_i32(&neg_ids, &[bq, m])?);
-            args.push(lit_f32(&log_q, &[bq, m])?);
-            let out = self.train_step.run(&args)?;
-            loss = to_scalar_f32(&out[0])?;
-            grads = out[1..].iter().map(to_f32).collect::<Result<_>>()?;
-            self.timing.step_s += t2.elapsed().as_secs_f64();
-        }
-
-        // 4. update
         let t3 = Instant::now();
         self.adam.step(&mut self.params.tensors, &grads);
         self.timing.update_s += t3.elapsed().as_secs_f64();
         self.timing.steps += 1;
         Ok(loss)
+    }
+
+    /// One optimizer step on `batch`; returns the loss. Sequential
+    /// (non-pipelined) path, used by `run_steps` and the Full baseline.
+    pub fn train_on(&mut self, batch: &Batch) -> Result<f32> {
+        debug_assert_eq!(batch.bq(), self.manifest.dims.bq);
+
+        if let Some(full) = &self.full_step {
+            let bq = self.manifest.dims.bq;
+            let t0 = Instant::now();
+            let mut args = self.params.literals()?;
+            args.extend(batch.input_literals()?);
+            args.push(lit_i32(batch.targets(), &[bq])?);
+            let out = full.run(&args)?;
+            let loss = to_scalar_f32(&out[0])?;
+            let grads: Vec<Vec<f32>> = out[1..].iter().map(to_f32).collect::<Result<_>>()?;
+            self.timing.step_s += t0.elapsed().as_secs_f64();
+
+            let t3 = Instant::now();
+            self.adam.step(&mut self.params.tensors, &grads);
+            self.timing.update_s += t3.elapsed().as_secs_f64();
+            self.timing.steps += 1;
+            return Ok(loss);
+        }
+
+        // 1. encode
+        let t0 = Instant::now();
+        let z = self.encode_batch(batch)?;
+        self.timing.encode_s += t0.elapsed().as_secs_f64();
+
+        // 2. sample (batched engine)
+        let (neg_ids, log_q) = self.sample_negatives(&z, batch.targets());
+
+        // 3–4. loss + grads + update
+        self.apply_sampled_step(batch, &neg_ids, &log_q)
     }
 
     /// Rebuild the sampler index from the live class embeddings.
@@ -264,6 +305,94 @@ impl Trainer {
         Ok(acc.finish())
     }
 
+    /// One pipelined epoch of the sampled path: while worker threads draw
+    /// step i's negatives against the immutable sampler core, the main
+    /// thread runs step i+1's encode artifact call.
+    ///
+    /// Pipelining semantics: the encode for step i+1 runs BEFORE step i's
+    /// Adam update, so step i+1's proposal sees query embeddings that are
+    /// one optimizer step stale (the sequential `train_on`/`run_steps`
+    /// path encodes after the update, so the two paths draw different
+    /// negatives for the same seed). This is sound for the same reason the
+    /// paper's once-per-epoch index rebuild is (§4.4): the proposal may lag
+    /// the parameters arbitrarily as long as each draw's `log_q` matches
+    /// the distribution actually sampled — which it does, both being
+    /// computed from the same z against the same core. The `train_step`
+    /// artifact re-encodes internally from CURRENT parameters, so loss and
+    /// gradients are never stale.
+    fn run_sampled_epoch(&mut self, prefetcher: Prefetcher<Batch>) -> Result<(f64, usize)> {
+        let dims = self.manifest.dims.clone();
+        let (m, d) = (dims.m_neg, dims.d);
+        let mut prefetcher = prefetcher;
+
+        let mut cur = prefetcher.next();
+        let mut z_cur = match &cur {
+            Some(b) => {
+                let t0 = Instant::now();
+                let z = self.encode_batch(b)?;
+                self.timing.encode_s += t0.elapsed().as_secs_f64();
+                Some(z)
+            }
+            None => None,
+        };
+
+        let mut loss_sum = 0.0f64;
+        let mut count = 0usize;
+        loop {
+            let batch = match cur.take() {
+                Some(b) => b,
+                None => break,
+            };
+            let z = z_cur.take().expect("encode pipelined with batch");
+            let next = prefetcher.next();
+
+            let (seed, positives, mut neg_u32, mut log_q) = self.prepare_sample(batch.targets());
+            // leave one core to the concurrent encode lane when it runs
+            let threads = if next.is_some() {
+                self.threads.saturating_sub(1).max(1)
+            } else {
+                self.threads
+            };
+            // the worker lane borrows the Sync core, not the &mut-style
+            // adapter — that is exactly what the shared-core split buys us
+            let core = self.sampler.as_deref().expect("sampled epoch without sampler").core();
+
+            // lane A (workers): sample step i | lane B (main): encode step i+1
+            let (sample_elapsed, encoded_next) = overlap(
+                || {
+                    let t = Instant::now();
+                    sample_batch(
+                        core, &z, d, &positives, m, seed, threads, &mut neg_u32, &mut log_q,
+                    );
+                    t.elapsed().as_secs_f64()
+                },
+                || {
+                    next.as_ref().map(|nb| {
+                        let t = Instant::now();
+                        let r = self.encode_batch(nb);
+                        (r, t.elapsed().as_secs_f64())
+                    })
+                },
+            );
+            self.timing.sample_s += sample_elapsed;
+            let z_next = match encoded_next {
+                Some((r, enc_elapsed)) => {
+                    self.timing.encode_s += enc_elapsed;
+                    Some(r?)
+                }
+                None => None,
+            };
+
+            let neg_ids = to_neg_ids(&neg_u32);
+            loss_sum += self.apply_sampled_step(&batch, &neg_ids, &log_q)? as f64;
+            count += 1;
+
+            cur = next;
+            z_cur = z_next;
+        }
+        Ok((loss_sum, count))
+    }
+
     /// Run the full experiment loop.
     pub fn run(mut self, task: Arc<TaskData>) -> Result<RunResult> {
         let mut train_loss = Vec::new();
@@ -283,12 +412,17 @@ impl Trainer {
                 task_c.train_batch(&mut rng)
             });
 
-            let mut loss_sum = 0.0f64;
-            let mut count = 0usize;
-            for batch in prefetcher {
-                loss_sum += self.train_on(&batch)? as f64;
-                count += 1;
-            }
+            let (loss_sum, count) = if self.sampler.is_some() {
+                self.run_sampled_epoch(prefetcher)?
+            } else {
+                let mut loss_sum = 0.0f64;
+                let mut count = 0usize;
+                for batch in prefetcher {
+                    loss_sum += self.train_on(&batch)? as f64;
+                    count += 1;
+                }
+                (loss_sum, count)
+            };
             let mean_loss = loss_sum / count.max(1) as f64;
             train_loss.push(mean_loss);
 
@@ -357,4 +491,9 @@ impl Trainer {
     pub fn config(&self) -> &TrainConfig {
         &self.cfg
     }
+}
+
+/// u32 draw ids → the i32 the artifact ABI expects.
+fn to_neg_ids(ids: &[u32]) -> Vec<i32> {
+    ids.iter().map(|&x| x as i32).collect()
 }

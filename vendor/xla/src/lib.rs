@@ -1,0 +1,232 @@
+//! Offline stub of the `xla` (xla-rs) API surface midx touches.
+//!
+//! The container this repo builds in has no PJRT / libxla, so the runtime
+//! half is a stub with the same signatures: [`Literal`] is a fully
+//! functional host-side tensor container (the literal helpers and their
+//! tests work), while [`PjRtClient::cpu`] returns an error — every consumer
+//! (trainer, integration tests) already gates on artifact availability and
+//! degrades gracefully. Swapping the real crate back in is a one-line
+//! change in the workspace `Cargo.toml`; no midx source changes needed.
+
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: PJRT execution is unavailable in this offline build \
+             (vendor/xla is a stub; link the real xla-rs crate to run artifacts)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy + fmt::Debug {
+    fn wrap(data: Vec<Self>) -> Elements;
+    fn unwrap(e: &Elements) -> Option<&[Self]>;
+}
+
+#[derive(Debug, Clone)]
+pub enum Elements {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Elements {
+    fn len(&self) -> usize {
+        match self {
+            Elements::F32(v) => v.len(),
+            Elements::I32(v) => v.len(),
+        }
+    }
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Elements {
+        Elements::F32(data)
+    }
+    fn unwrap(e: &Elements) -> Option<&[f32]> {
+        match e {
+            Elements::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Elements {
+        Elements::I32(data)
+    }
+    fn unwrap(e: &Elements) -> Option<&[i32]> {
+        match e {
+            Elements::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Host-side tensor value: typed flat buffer + dims, or a tuple of values.
+#[derive(Debug, Clone)]
+pub enum Literal {
+    Array { data: Elements, dims: Vec<i64> },
+    Tuple(Vec<Literal>),
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> Vec<i64> {
+        self.dims.clone()
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a flat slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let n = data.len() as i64;
+        Literal::Array { data: T::wrap(data.to_vec()), dims: vec![n] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match self {
+            Literal::Array { data, .. } => {
+                let numel: i64 = dims.iter().product();
+                if numel as usize != data.len() {
+                    return Err(Error::new(format!(
+                        "reshape: {} elements into shape {dims:?}",
+                        data.len()
+                    )));
+                }
+                Ok(Literal::Array { data: data.clone(), dims: dims.to_vec() })
+            }
+            Literal::Tuple(_) => Err(Error::new("reshape on tuple literal")),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { data, .. } => T::unwrap(data)
+                .map(|s| s.to_vec())
+                .ok_or_else(|| Error::new("to_vec: element type mismatch")),
+            Literal::Tuple(_) => Err(Error::new("to_vec on tuple literal")),
+        }
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        let v = self.to_vec::<T>()?;
+        v.first().copied().ok_or_else(|| Error::new("get_first_element: empty literal"))
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(xs) => Ok(xs),
+            lit @ Literal::Array { .. } => Ok(vec![lit]),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::Array { dims, .. } => Ok(ArrayShape { dims: dims.clone() }),
+            Literal::Tuple(_) => Err(Error::new("array_shape on tuple literal")),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: parsing requires the real crate).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable(&format!("parsing HLO text {path}")))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("compile"))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("execute"))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let t = Literal::Tuple(vec![Literal::vec1(&[1i32]), Literal::vec1(&[2.0f32])]);
+        let xs = t.to_tuple().unwrap();
+        assert_eq!(xs.len(), 2);
+        // non-tuple decomposes to a singleton (mirrors single-output modules)
+        assert_eq!(Literal::vec1(&[1.0f32]).to_tuple().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn runtime_is_gated() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
