@@ -1,13 +1,17 @@
 //! `cargo bench --bench sampling_time` — per-sampler draw latency across N
-//! (the micro-benchmark behind Figure 6 / Table 1), now with the batched
-//! engine side-by-side. In-tree harness; prints `bench <name> median=…`
-//! lines plus one `speedup` summary line per sampler/N comparing batched
-//! (all hardware threads) against the sequential per-query path at B=256.
+//! (the micro-benchmark behind Figure 6 / Table 1), with the batched
+//! engine side-by-side in both flavors: scoped-thread (spawn per call) and
+//! the persistent worker pool (steady-state: warm parked workers, reused
+//! scratches). In-tree harness; prints `bench <name> median=…` lines plus
+//! one `speedup` summary line per sampler/N comparing each parallel path
+//! against the sequential per-query baseline at B=256, and a small-batch
+//! section (B ≤ 64) showing the pool no longer pays per-call spawn cost.
 //! Before timing, batched draws are asserted bit-identical across thread
-//! counts — the engine's reproducibility contract, checked on the bench
-//! workload itself.
+//! counts and across all three paths — the engine's reproducibility
+//! contract, checked on the bench workload itself.
 
-use midx::sampler::{self, sample_batch, SamplerKind, SamplerParams, Scratch};
+use midx::coordinator::WorkerPool;
+use midx::sampler::{self, sample_batch, sample_batch_pooled, SamplerKind, SamplerParams, Scratch};
 use midx::util::bench::bench_ms;
 use midx::util::check::rand_matrix;
 use midx::util::Rng;
@@ -18,7 +22,15 @@ fn main() {
     let batch = 256usize;
     let threads = midx::sampler::batch::auto_threads();
     let mut rng = Rng::new(1);
-    println!("batched engine: B={batch}, T={threads} (available parallelism)");
+    // the persistent pool is constructed ONCE for the whole bench — the
+    // per-row batched timings below measure steady-state dispatch, never
+    // pool construction or thread spawn
+    let pool = WorkerPool::new(threads);
+    println!(
+        "batched engine: B={batch}, T={threads} (available parallelism), \
+         pool dispatch overhead ≈ {} ns",
+        pool.dispatch_overhead_ns()
+    );
 
     for &n in &[1_000usize, 10_000, 100_000] {
         let table = rand_matrix(&mut rng, n, d, 0.3);
@@ -51,7 +63,7 @@ fn main() {
                 s.sample_into(&z, u32::MAX, &mut local_rng, &mut ids, &mut lq);
             });
 
-            // reproducibility gate: T threads == 1 thread, bit for bit
+            // reproducibility gate: scoped T == scoped 1 == pooled, bit for bit
             let core = s.core();
             let mut bids = vec![0u32; batch * m];
             let mut blq = vec![0.0f32; batch * m];
@@ -63,6 +75,13 @@ fn main() {
             assert!(
                 blq.iter().zip(&blq1).all(|(a, b)| a.to_bits() == b.to_bits()),
                 "{}: log_q differ across thread counts",
+                kind.name()
+            );
+            sample_batch_pooled(&pool, core, &zs, d, &positives, m, 42, 0, &mut bids1, &mut blq1);
+            assert_eq!(bids, bids1, "{}: pooled ids differ from scoped", kind.name());
+            assert!(
+                blq.iter().zip(&blq1).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{}: pooled log_q differ from scoped",
                 kind.name()
             );
 
@@ -82,21 +101,60 @@ fn main() {
                 }
             });
 
-            // batched engine, all hardware threads
+            // scoped threads: spawn cost paid on every call
             let par = bench_ms(&format!("batch_t{}/{}/n{}", threads, kind.name(), n), 240, || {
                 sample_batch(core, &zs, d, &positives, m, 42, threads, &mut bids, &mut blq);
             });
 
+            // persistent pool: steady-state dispatch onto warm workers
+            let pooled =
+                bench_ms(&format!("batch_pool_t{}/{}/n{}", threads, kind.name(), n), 240, || {
+                    sample_batch_pooled(
+                        &pool, core, &zs, d, &positives, m, 42, 0, &mut bids, &mut blq,
+                    );
+                });
+
             println!(
-                "speedup {:<28} batched(T={}) vs per-query: {:.2}x",
+                "speedup {:<28} scoped(T={}) {:.2}x  pool(T={}) {:.2}x vs per-query",
                 format!("{}/n{}", kind.name(), n),
                 threads,
-                seq.median_ns / par.median_ns
+                seq.median_ns / par.median_ns,
+                threads,
+                seq.median_ns / pooled.median_ns
             );
         }
     }
+
+    // small-batch steady state: with per-call spawn retired, batched rows
+    // at B ≤ 64 must not regress versus the inline path
+    println!("\nsmall-batch crossover (midx-rq, N=10k): pool dispatch vs inline");
+    let n = 10_000usize;
+    let table = rand_matrix(&mut rng, n, d, 0.3);
+    let freqs: Vec<f32> = (0..n).map(|i| 1.0 / (i + 1) as f32).collect();
+    let params =
+        SamplerParams { k_codewords: 64, frequencies: freqs, ..Default::default() };
+    let mut s = sampler::build(SamplerKind::MidxRq, n, &params);
+    s.rebuild(&table, n, d, &mut rng);
+    let core = s.core();
+    for &b in &[16usize, 64] {
+        let zs = rand_matrix(&mut rng, b, d, 0.3);
+        let positives = vec![u32::MAX; b];
+        let mut ids = vec![0u32; b * m];
+        let mut lq = vec![0.0f32; b * m];
+        let inline = bench_ms(&format!("small_inline/b{b}"), 400, || {
+            sample_batch(core, &zs, d, &positives, m, 42, 1, &mut ids, &mut lq);
+        });
+        let pooled = bench_ms(&format!("small_pool/b{b}"), 400, || {
+            sample_batch_pooled(&pool, core, &zs, d, &positives, m, 42, 0, &mut ids, &mut lq);
+        });
+        println!(
+            "small-batch B={b:<3} inline/pool = {:.2}x (>1 means the pool wins even here)",
+            inline.median_ns / pooled.median_ns
+        );
+    }
     println!(
-        "expectation: midx-pq/midx-rq ≥ 2x at B=256 on a multi-core host \
-         (near-linear in cores; per-query cost is core-independent)."
+        "\nexpectation: midx-pq/midx-rq ≥ 2x at B=256 on a multi-core host \
+         (near-linear in cores; per-query cost is core-independent); pool ≥ scoped \
+         everywhere, and small-batch pool rows stay within ~1x of inline."
     );
 }

@@ -1,9 +1,12 @@
-//! Coordination layer: experiment driver, batch pipeline, reporting.
+//! Coordination layer: experiment driver, batch pipeline, worker pool,
+//! reporting.
 
 pub mod experiment;
 pub mod pipeline;
+pub mod pool;
 pub mod report;
 
 pub use experiment::{build_sampler, build_task, run_experiment, ExperimentSpec};
 pub use pipeline::Prefetcher;
+pub use pool::WorkerPool;
 pub use report::{fmt, Table};

@@ -1,0 +1,366 @@
+//! Persistent sampling worker pool — the steady-state runtime behind
+//! [`crate::sampler::sample_batch_pooled`].
+//!
+//! PR 1's batched engine spawned scoped threads on every `sample_batch`
+//! call, so small per-step batches paid tens of microseconds of spawn cost
+//! on a hot path that runs thousands of times per epoch. This module
+//! replaces that with T long-lived workers parked on a condition variable:
+//!
+//! * **Job hand-off.** A submitter publishes one epoch-tagged `Job`
+//!   descriptor under the shared mutex, bumps the epoch counter, and wakes
+//!   every worker. Each worker runs each epoch exactly once (it remembers
+//!   the last epoch it executed), decrements the in-flight counter, and the
+//!   last one signals the submitter's condvar. [`WorkerPool::run`] blocks
+//!   until all workers have checked in, which is also what makes the
+//!   lifetime erasure sound: the job closure and everything it borrows
+//!   outlive the dispatch by construction.
+//! * **Per-worker scratch reuse.** Every worker owns one
+//!   [`Scratch`] for its whole life, so per-query buffer allocation
+//!   amortizes across *steps*, not just within one batch. Draws stay
+//!   bit-identical anyway — every sampler fully overwrites the scratch
+//!   fields it reads (property-tested in `sampler::testing::conformance`),
+//!   and each query's RNG stream depends only on `(seed, query index)`.
+//! * **Lane throttling.** `run(lanes, ..)` may use fewer lanes than the
+//!   pool has workers; workers with `id >= lanes` skip the job but still
+//!   check in. The trainer uses this to leave one core to the concurrent
+//!   encode lane while pipelining (`pipeline::overlap`).
+//! * **Panic containment.** A panicking job is caught in the worker
+//!   (`catch_unwind`), the payload is parked in the shared state, and the
+//!   worker *survives*; `run` re-raises the first payload on the submitter
+//!   thread once the batch has drained. Neither condvar can hang on a
+//!   worker panic, and the pool stays usable afterwards.
+//!
+//! The pool measures its own dispatch overhead at construction (median of
+//! a few no-op round trips); `sampler::batch` compares that against a
+//! per-query cost estimate to decide when a batch is too small to be worth
+//! waking the workers (the measured crossover that retired the old
+//! `MIN_PAR_QUERIES` constant).
+//!
+//! `run` must not be called from inside a job (the pool is a single-level
+//! fork-join, not a task graph); submitters on different threads are
+//! serialized by an internal lock.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::sampler::Scratch;
+
+/// One dispatched batch: a type-erased pointer to the submitter's closure
+/// plus the lane count. Copied out of the shared state by every worker.
+#[derive(Clone, Copy)]
+struct Job {
+    /// borrowed closure, lifetime-erased (valid until `run` returns)
+    data: *const (),
+    /// monomorphized shim that calls `data` as the original closure type
+    call: unsafe fn(*const (), usize, &mut Scratch),
+    /// workers with `id < lanes` execute; the rest just check in
+    lanes: usize,
+}
+
+// SAFETY: `data` points at a closure proven `Sync` by `WorkerPool::run`'s
+// bounds, and `run` blocks until every worker has finished with it, so the
+// pointee is live and shareable for exactly as long as workers can see it.
+unsafe impl Send for Job {}
+
+struct State {
+    /// bumped once per dispatched job; workers run each epoch exactly once
+    epoch: u64,
+    job: Option<Job>,
+    /// workers that have not yet checked in for the current epoch
+    remaining: usize,
+    /// panic payloads caught in workers during the current epoch
+    panics: Vec<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// workers park here waiting for a new epoch (or shutdown)
+    work_cv: Condvar,
+    /// the submitter parks here waiting for `remaining == 0`
+    done_cv: Condvar,
+}
+
+/// Ignore mutex poisoning: worker panics are caught before the lock is
+/// taken, and the submitter re-raises them deliberately, so a poisoned
+/// guard never protects broken invariants here.
+fn lock(m: &Mutex<State>) -> MutexGuard<'_, State> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A fixed-size pool of long-lived sampling workers. Construct once (the
+/// trainer owns one for the whole run), dispatch many times.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+    /// measured median round-trip of a no-op dispatch, in nanoseconds
+    overhead_ns: u64,
+    /// serializes submitters: one job in flight at a time
+    submit: Mutex<()>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` workers (0 = available parallelism) and measure the
+    /// pool's dispatch overhead on a few no-op jobs.
+    pub fn new(threads: usize) -> WorkerPool {
+        let workers = if threads == 0 {
+            crate::sampler::batch::auto_threads()
+        } else {
+            threads
+        }
+        .max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                panics: Vec::new(),
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|id| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("midx-sample-{id}"))
+                    .spawn(move || worker_loop(&sh, id))
+                    .expect("spawn sampling worker")
+            })
+            .collect();
+        let mut pool = WorkerPool {
+            shared,
+            handles,
+            workers,
+            overhead_ns: 0,
+            submit: Mutex::new(()),
+        };
+        pool.overhead_ns = pool.measure_overhead();
+        pool
+    }
+
+    /// Number of worker threads (fixed for the pool's lifetime).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Median no-op dispatch round-trip measured at construction, in ns.
+    /// This is the pool-path term of the inline-vs-parallel crossover.
+    pub fn dispatch_overhead_ns(&self) -> u64 {
+        self.overhead_ns
+    }
+
+    /// Run `f(worker_id, &mut scratch)` on workers `0..lanes` (0 = all),
+    /// blocking until every worker has checked in. Re-raises the first
+    /// worker panic on this thread after the batch drains.
+    pub fn run<F>(&self, lanes: usize, f: F)
+    where
+        F: Fn(usize, &mut Scratch) + Sync,
+    {
+        unsafe fn shim<F: Fn(usize, &mut Scratch) + Sync>(
+            data: *const (),
+            worker_id: usize,
+            scratch: &mut Scratch,
+        ) {
+            (*(data as *const F))(worker_id, scratch)
+        }
+        let lanes = if lanes == 0 { self.workers } else { lanes.min(self.workers) };
+        let job = Job { data: &f as *const F as *const (), call: shim::<F>, lanes };
+
+        let submit = self.submit.lock().unwrap_or_else(|e| e.into_inner());
+        {
+            let mut st = lock(&self.shared.state);
+            st.job = Some(job);
+            st.epoch = st.epoch.wrapping_add(1);
+            st.remaining = self.workers;
+            self.shared.work_cv.notify_all();
+        }
+        let panics = {
+            let mut st = lock(&self.shared.state);
+            while st.remaining != 0 {
+                st = self
+                    .shared
+                    .done_cv
+                    .wait(st)
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+            st.job = None;
+            std::mem::take(&mut st.panics)
+        };
+        drop(submit);
+        if let Some(p) = panics.into_iter().next() {
+            std::panic::resume_unwind(p);
+        }
+    }
+
+    fn measure_overhead(&self) -> u64 {
+        let mut samples = [0u64; 9];
+        for s in samples.iter_mut() {
+            let t = Instant::now();
+            self.run(self.workers, |_, _| {});
+            *s = t.elapsed().as_nanos() as u64;
+        }
+        samples.sort_unstable();
+        samples[samples.len() / 2].max(1)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.shared.state);
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, worker_id: usize) {
+    let mut scratch = Scratch::new();
+    let mut seen_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = lock(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen_epoch {
+                    seen_epoch = st.epoch;
+                    let j = st.job;
+                    break j.expect("job published with epoch bump");
+                }
+                st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let panic = if worker_id < job.lanes {
+            // SAFETY: the submitter blocks in `run` until this worker checks
+            // in below, so `job.data` is live for the whole call.
+            catch_unwind(AssertUnwindSafe(|| unsafe {
+                (job.call)(job.data, worker_id, &mut scratch)
+            }))
+            .err()
+        } else {
+            None
+        };
+        let mut st = lock(&shared.state);
+        if let Some(p) = panic {
+            st.panics.push(p);
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex as StdMutex;
+
+    #[test]
+    fn drop_while_idle_joins_cleanly() {
+        // must return (the test harness would time out on a hung join)
+        let pool = WorkerPool::new(4);
+        drop(pool);
+        // and a pool that never ran a user job beyond calibration
+        let _ = WorkerPool::new(1);
+    }
+
+    #[test]
+    fn runs_every_lane_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits = AtomicUsize::new(0);
+        pool.run(0, |_, _| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn partial_lanes_leave_extra_workers_idle() {
+        let pool = WorkerPool::new(4);
+        let seen = StdMutex::new(Vec::new());
+        pool.run(2, |id, _| {
+            seen.lock().unwrap().push(id);
+        });
+        let mut ids = seen.into_inner().unwrap();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn workers_persist_across_batches_without_respawn() {
+        // the pool's whole point: ≥3 consecutive batches reuse the same OS
+        // threads (stable ThreadIds), never respawning between steps
+        let pool = WorkerPool::new(4);
+        let mut per_batch: Vec<HashSet<std::thread::ThreadId>> = Vec::new();
+        for _ in 0..3 {
+            let seen = StdMutex::new(HashSet::new());
+            pool.run(0, |_, _| {
+                seen.lock().unwrap().insert(std::thread::current().id());
+            });
+            per_batch.push(seen.into_inner().unwrap());
+        }
+        assert_eq!(per_batch[0].len(), 4, "4 distinct workers");
+        assert_eq!(per_batch[0], per_batch[1], "thread ids changed between batches");
+        assert_eq!(per_batch[1], per_batch[2], "thread ids changed between batches");
+    }
+
+    #[test]
+    fn panic_in_one_worker_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(3);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(0, |id, _| {
+                if id == 1 {
+                    panic!("worker bang");
+                }
+            });
+        }));
+        assert!(r.is_err(), "worker panic must reach the submitter");
+        // the condvar protocol survived: the pool still runs full batches
+        let hits = AtomicUsize::new(0);
+        pool.run(0, |_, _| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn scratch_is_reused_across_jobs() {
+        // worker 0's scratch keeps its capacity between jobs: grow a buffer
+        // in job 1, observe the same allocation in job 2
+        let pool = WorkerPool::new(1);
+        pool.run(1, |_, scratch| {
+            scratch.cdf.resize(4096, 0.0);
+        });
+        let cap = AtomicUsize::new(0);
+        pool.run(1, |_, scratch| {
+            cap.store(scratch.cdf.capacity(), Ordering::SeqCst);
+        });
+        assert!(cap.load(Ordering::SeqCst) >= 4096, "scratch not persistent");
+    }
+
+    #[test]
+    fn overhead_is_measured() {
+        let pool = WorkerPool::new(2);
+        assert!(pool.dispatch_overhead_ns() >= 1);
+        assert_eq!(pool.workers(), 2);
+    }
+
+    #[test]
+    fn zero_threads_resolves_to_available_parallelism() {
+        let pool = WorkerPool::new(0);
+        assert!(pool.workers() >= 1);
+    }
+}

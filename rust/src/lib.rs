@@ -25,13 +25,17 @@
 //! * every sampler splits into an immutable [`sampler::SamplerCore`]
 //!   (codebooks, inverted multi-index, alias tables, projections — `Sync`,
 //!   rebuilt once per epoch) and a cheap per-thread [`sampler::Scratch`];
-//! * [`sampler::sample_batch`] fans a [B, D] query block across a scoped
-//!   thread pool; query `i` draws from the deterministic stream
-//!   `Rng::stream(seed, i)`, so results are **bit-identical for every
-//!   thread count** (and identical to the sequential path);
-//! * the trainer software-pipelines each step: workers draw step i's
-//!   negatives against the frozen core while the main thread runs step
-//!   i+1's encode artifact call (`coordinator::pipeline::overlap`);
+//! * [`sampler::sample_batch_pooled`] fans a [B, D] query block across a
+//!   **persistent worker pool** ([`coordinator::WorkerPool`]: long-lived
+//!   workers parked on a condvar, per-worker scratch reuse across steps);
+//!   query `i` draws from the deterministic stream `Rng::stream(seed, i)`,
+//!   so results are **bit-identical for every thread count and every
+//!   execution path** (pool, scoped-thread fallback, sequential);
+//! * the trainer owns one pool per run and software-pipelines each step:
+//!   pool workers draw step i's negatives against the frozen core while
+//!   the main thread runs step i+1's encode artifact call
+//!   (`coordinator::pipeline::overlap`); a measured crossover runs
+//!   too-small batches inline;
 //! * the per-query [`sampler::Sampler`] adapter survives for the
 //!   stats/analysis paths (`proposal_dist`, divergence/bias estimators).
 //!

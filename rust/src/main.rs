@@ -71,7 +71,8 @@ const USAGE: &str = "usage:
   midx info  --model NAME
   midx train --model NAME [--sampler full|uniform|unigram|lsh|sphere|rff|midx-pq|midx-rq|exact-midx]
              [--epochs N] [--steps N] [--lr F] [--seed N] [--k N] [--eval-cap N] [--patience N]
-             [--threads N]   (sampling workers; 0 = available parallelism, the default)
+             [--threads N]   (persistent sampling worker pool size, fixed for the whole
+                              run; 0 = available parallelism, the default)
   midx bench table1|table2|table3|table4|table5|table7|table9|fig2|fig3|fig45|fig6|fig7|all [--quick]
              [--epochs N] [--steps N] [--eval-cap N]";
 
@@ -133,7 +134,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         eval_cap: args.usize_or("eval-cap", 20),
         patience: args.usize_or("patience", 0),
         prefetch: 2,
-        threads: args.usize_or("threads", 0), // 0 = available parallelism
+        // pool-lifetime worker count (0 = available parallelism): the
+        // trainer spawns its worker pool once and reuses it every step
+        threads: args.usize_or("threads", 0),
         verbose: true,
     };
     let res = run_experiment(&spec)?;

@@ -2,7 +2,7 @@
 //!
 //! [`sample_batch`] draws `m` negatives (plus log proposal probabilities)
 //! for each of B queries against one immutable [`SamplerCore`], fanning the
-//! batch across a scoped thread pool. Design invariants:
+//! batch across worker threads. Design invariants:
 //!
 //! * **Shared core, per-thread scratch.** The core is `Sync` and sampled
 //!   through `&self`; each worker owns one [`Scratch`], so there is zero
@@ -10,19 +10,42 @@
 //!   output rows.
 //! * **Deterministic RNG streams.** Query `i` always draws from
 //!   `Rng::stream(seed, i)` (seed ⊕ index, splitmix-expanded), so output is
-//!   bit-identical for every thread count — T=8 reproduces T=1 reproduces
-//!   the sequential per-query path. Reproducibility is a property of the
+//!   bit-identical for every thread count *and every execution path* —
+//!   persistent pool, scoped threads, and the sequential per-query loop all
+//!   reproduce each other. Reproducibility is a property of the
 //!   (seed, batch), never of the schedule.
 //! * **Static partition.** B rows split into ⌈B/T⌉-sized contiguous chunks.
 //!   Per-query cost is near-uniform within one core, so work stealing would
 //!   buy nothing and cost determinism-audit simplicity.
+//!
+//! Three entry points share one kernel (`run_rows`):
+//!
+//! * [`sample_batch_pooled`] — dispatch onto a persistent
+//!   [`WorkerPool`] (the steady-state training path: warm workers, reused
+//!   scratches, no spawn cost);
+//! * [`sample_batch`] — the scoped-thread fallback for callers without a
+//!   pool (one-shot analysis paths); explicit thread counts are honored,
+//!   auto mode (`threads == 0`) applies the crossover below;
+//! * [`sample_batch_with`] — dispatcher: takes `Option<&WorkerPool>` and a
+//!   **measured crossover** decides per call whether the batch is big
+//!   enough to be worth waking workers at all. The crossover compares a
+//!   process-wide EWMA of per-query sampling cost (dispatch overhead
+//!   subtracted before recording, so parallel runs cannot inflate it)
+//!   against the measured dispatch cost of the chosen backend (pool wake
+//!   vs per-thread spawn, the latter scaled by lane count); it replaces
+//!   the retired fixed `MIN_PAR_QUERIES` threshold.
 //!
 //! Degenerate inputs are first-class: B = 0 or m = 0 return immediately;
 //! m > N−1 falls back on bounded rejection (duplicates and positive
 //! collisions allowed, as in the paper's Eq. 1 `y_s = 1` case); empty index
 //! buckets are unreachable by construction (see [`super::cdf`]).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Once;
+use std::time::Instant;
+
 use super::{SamplerCore, Scratch};
+use crate::coordinator::pool::WorkerPool;
 use crate::util::Rng;
 
 /// Number of worker threads to use when the caller passes `threads = 0`:
@@ -31,9 +54,84 @@ pub fn auto_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-/// Below this many queries a batch runs inline: per-call thread spawn
-/// (no persistent pool yet — see ROADMAP) would rival the sampling work.
-const MIN_PAR_QUERIES: usize = 16;
+/// Process-wide EWMA of per-query sequential sampling cost in ns (0 = no
+/// measurement yet). Feeds the inline-vs-parallel crossover; results are
+/// bit-identical either way, so a stale estimate only costs time.
+///
+/// Known limitation: the estimate is shared across all cores and problem
+/// sizes, so processes that interleave cheap and expensive samplers (the
+/// bench tables, sampler_analysis) can mis-schedule shortly after
+/// switching kinds until the EWMA re-converges. The trainer — the path
+/// that matters — runs one sampler per process. A per-core estimate is a
+/// ROADMAP item.
+static PER_QUERY_NS: AtomicU64 = AtomicU64::new(0);
+
+/// Record one batch's cost. `lanes` scales wall time back to an estimate of
+/// sequential per-query cost when the batch ran in parallel; callers
+/// subtract their measured dispatch overhead from `total_ns` first so the
+/// estimate tracks sampling work, not dispatch (otherwise a parallel run
+/// would inflate the estimate and bias the crossover toward itself).
+fn note_per_query_ns(total_ns: u64, b: usize, lanes: usize) {
+    if b == 0 {
+        return;
+    }
+    let per = (total_ns.saturating_mul(lanes.max(1) as u64) / b as u64).max(1);
+    let old = PER_QUERY_NS.load(Ordering::Relaxed);
+    let new = if old == 0 {
+        per
+    } else {
+        // EWMA with alpha = 1/4
+        (old - old / 4).saturating_add(per / 4).max(1)
+    };
+    PER_QUERY_NS.store(new, Ordering::Relaxed);
+}
+
+pub(crate) fn per_query_estimate_ns() -> u64 {
+    PER_QUERY_NS.load(Ordering::Relaxed)
+}
+
+static SPAWN_NS: AtomicU64 = AtomicU64::new(0);
+static SPAWN_ONCE: Once = Once::new();
+
+/// Measured (once, lazily) cost of spawn-joining a single scoped thread —
+/// the per-thread dispatch-overhead term of the crossover for the
+/// pool-less fallback. Spawn cost grows with the number of threads, so
+/// callers multiply by the lane count at decision time.
+fn scoped_spawn_overhead_ns() -> u64 {
+    SPAWN_ONCE.call_once(|| {
+        const REPS: u64 = 4;
+        const THREADS: u64 = 2;
+        let t = Instant::now();
+        for _ in 0..REPS {
+            std::thread::scope(|s| {
+                for _ in 0..THREADS {
+                    s.spawn(|| {});
+                }
+            });
+        }
+        SPAWN_NS.store(
+            (t.elapsed().as_nanos() as u64 / (REPS * THREADS)).max(1),
+            Ordering::Relaxed,
+        );
+    });
+    SPAWN_NS.load(Ordering::Relaxed)
+}
+
+/// The measured crossover (replaces the retired `MIN_PAR_QUERIES` spawn
+/// workaround): parallelize when the work the extra lanes would absorb
+/// comfortably exceeds the measured dispatch overhead. Before the first
+/// measurement, require enough rows to keep every lane busy.
+pub(crate) fn worth_parallelizing(b: usize, lanes: usize, est_ns: u64, overhead_ns: u64) -> bool {
+    if b < 2 || lanes < 2 {
+        return false;
+    }
+    if est_ns == 0 {
+        return b >= 4 * lanes;
+    }
+    let total = (b as u64).saturating_mul(est_ns);
+    let absorbed = total - total / lanes as u64;
+    absorbed > overhead_ns.saturating_mul(2)
+}
 
 /// Draw `m` negatives per query for a [B, D] query block.
 ///
@@ -42,7 +140,9 @@ const MIN_PAR_QUERIES: usize = 16;
 ///   rejection (pass `u32::MAX` rows for unconditioned draws)
 /// * `ids`, `log_q` — row-major [B, M] outputs
 /// * `seed` — RNG stream base; query `i` uses `Rng::stream(seed, i)`
-/// * `threads` — worker count (0 = available parallelism; capped at B)
+/// * `threads` — worker count, honored as given when nonzero (capped at
+///   B); 0 = available parallelism, throttled by the measured crossover
+///   (tiny batches run inline)
 pub fn sample_batch(
     core: &dyn SamplerCore,
     queries: &[f32],
@@ -62,43 +162,155 @@ pub fn sample_batch(
         return;
     }
 
-    let mut threads = if threads == 0 { auto_threads() } else { threads }.clamp(1, b);
-    // Workers are spawned per call (scoped threads, no persistent pool), so
-    // for small batches the ~tens-of-µs spawn cost can rival the sampling
-    // work itself. Run tiny batches inline — results are bit-identical
-    // either way (per-query RNG streams), only the schedule changes.
-    if b < MIN_PAR_QUERIES {
-        threads = 1;
-    }
+    // An explicit nonzero `threads` is honored as given (capped at B) —
+    // determinism tests and benches rely on driving the scoped path at a
+    // chosen width. `threads == 0` (auto) applies the measured crossover:
+    // spawning costs tens of microseconds and scales with the thread
+    // count, so tiny batches run inline. Results are bit-identical either
+    // way (per-query RNG streams), only the schedule changes.
+    let threads = if threads == 0 {
+        let t = auto_threads().clamp(1, b);
+        let overhead = scoped_spawn_overhead_ns().saturating_mul(t as u64);
+        if worth_parallelizing(b, t, per_query_estimate_ns(), overhead) {
+            t
+        } else {
+            1
+        }
+    } else {
+        threads.clamp(1, b)
+    };
+    let t0 = Instant::now();
     if threads == 1 {
         let mut scratch = Scratch::new();
         run_rows(core, queries, d, positives, m, seed, 0, &mut scratch, ids, log_q);
+    } else {
+        let rows = (b + threads - 1) / threads;
+        std::thread::scope(|s| {
+            let mut ids_rest = &mut ids[..];
+            let mut lq_rest = &mut log_q[..];
+            for t in 0..threads {
+                let start = t * rows;
+                let end = ((t + 1) * rows).min(b);
+                if start >= end {
+                    break;
+                }
+                let count = end - start;
+                let (my_ids, r) = ids_rest.split_at_mut(count * m);
+                ids_rest = r;
+                let (my_lq, r) = lq_rest.split_at_mut(count * m);
+                lq_rest = r;
+                let my_q = &queries[start * d..end * d];
+                let my_pos = &positives[start..end];
+                s.spawn(move || {
+                    let mut scratch = Scratch::new();
+                    run_rows(core, my_q, d, my_pos, m, seed, start, &mut scratch, my_ids, my_lq);
+                });
+            }
+        });
+    }
+    let spent = t0.elapsed().as_nanos() as u64;
+    let dispatch = scoped_spawn_overhead_ns().saturating_mul(threads.saturating_sub(1) as u64);
+    note_per_query_ns(spent.saturating_sub(dispatch), b, threads);
+}
+
+/// Pointer bundle handing the [B, M] output buffers to pool workers, which
+/// slice out disjoint row windows (see `sample_batch_pooled`).
+struct OutPtrs {
+    ids: *mut u32,
+    lq: *mut f32,
+}
+
+// SAFETY: workers only ever touch disjoint `[start*m, end*m)` windows of
+// the two buffers (static contiguous partition by worker id), and the
+// buffers outlive the dispatch (`WorkerPool::run` blocks until done).
+unsafe impl Sync for OutPtrs {}
+
+/// Draw `m` negatives per query through a persistent [`WorkerPool`] — the
+/// steady-state training path: warm parked workers, per-worker scratch
+/// reuse across steps, no thread spawn.
+///
+/// `lanes` caps the workers used (0 = all of them; always ≤ B). Output is
+/// bit-identical to [`sample_batch`] at every thread count and to the
+/// sequential per-query path: the partition only changes the schedule,
+/// never a query's RNG stream.
+pub fn sample_batch_pooled(
+    pool: &WorkerPool,
+    core: &dyn SamplerCore,
+    queries: &[f32],
+    d: usize,
+    positives: &[u32],
+    m: usize,
+    seed: u64,
+    lanes: usize,
+    ids: &mut [u32],
+    log_q: &mut [f32],
+) {
+    let b = positives.len();
+    assert_eq!(queries.len(), b * d, "queries must be [B={b}, D={d}]");
+    assert_eq!(ids.len(), b * m, "ids must be [B={b}, M={m}]");
+    assert_eq!(log_q.len(), b * m, "log_q must be [B={b}, M={m}]");
+    if b == 0 || m == 0 {
         return;
     }
-
-    let rows = (b + threads - 1) / threads;
-    std::thread::scope(|s| {
-        let mut ids_rest = &mut ids[..];
-        let mut lq_rest = &mut log_q[..];
-        for t in 0..threads {
-            let start = t * rows;
-            let end = ((t + 1) * rows).min(b);
-            if start >= end {
-                break;
-            }
-            let count = end - start;
-            let (my_ids, r) = ids_rest.split_at_mut(count * m);
-            ids_rest = r;
-            let (my_lq, r) = lq_rest.split_at_mut(count * m);
-            lq_rest = r;
-            let my_q = &queries[start * d..end * d];
-            let my_pos = &positives[start..end];
-            s.spawn(move || {
-                let mut scratch = Scratch::new();
-                run_rows(core, my_q, d, my_pos, m, seed, start, &mut scratch, my_ids, my_lq);
-            });
+    let lanes = if lanes == 0 { pool.workers() } else { lanes.min(pool.workers()) }.clamp(1, b);
+    let rows = (b + lanes - 1) / lanes;
+    let out = OutPtrs { ids: ids.as_mut_ptr(), lq: log_q.as_mut_ptr() };
+    let t0 = Instant::now();
+    pool.run(lanes, |t, scratch| {
+        let start = t * rows;
+        let end = ((t + 1) * rows).min(b);
+        if start >= end {
+            return;
         }
+        let count = end - start;
+        // SAFETY: `[start, end)` windows are disjoint across workers and the
+        // buffers are live until `pool.run` returns (it blocks).
+        let (my_ids, my_lq) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(out.ids.add(start * m), count * m),
+                std::slice::from_raw_parts_mut(out.lq.add(start * m), count * m),
+            )
+        };
+        let my_q = &queries[start * d..end * d];
+        let my_pos = &positives[start..end];
+        run_rows(core, my_q, d, my_pos, m, seed, start, scratch, my_ids, my_lq);
     });
+    let spent = t0.elapsed().as_nanos() as u64;
+    note_per_query_ns(spent.saturating_sub(pool.dispatch_overhead_ns()), b, lanes);
+}
+
+/// Dispatcher for callers that may or may not hold a pool: with a pool, a
+/// measured crossover (per-query cost EWMA vs the pool's calibrated wake
+/// cost) picks between waking the workers and running inline; without one,
+/// falls back to [`sample_batch`]'s scoped-thread path. `threads` caps the
+/// lanes used for this call (0 = all pool workers) — the worker count
+/// itself is fixed at pool construction.
+pub fn sample_batch_with(
+    pool: Option<&WorkerPool>,
+    core: &dyn SamplerCore,
+    queries: &[f32],
+    d: usize,
+    positives: &[u32],
+    m: usize,
+    seed: u64,
+    threads: usize,
+    ids: &mut [u32],
+    log_q: &mut [f32],
+) {
+    match pool {
+        Some(pool) => {
+            let b = positives.len();
+            let lanes = if threads == 0 { pool.workers() } else { threads.min(pool.workers()) }
+                .clamp(1, b.max(1));
+            if worth_parallelizing(b, lanes, per_query_estimate_ns(), pool.dispatch_overhead_ns())
+            {
+                sample_batch_pooled(pool, core, queries, d, positives, m, seed, lanes, ids, log_q);
+            } else {
+                sample_batch(core, queries, d, positives, m, seed, 1, ids, log_q);
+            }
+        }
+        None => sample_batch(core, queries, d, positives, m, seed, threads, ids, log_q),
+    }
 }
 
 /// Sequential kernel shared by the inline path and each worker: rows
@@ -133,34 +345,9 @@ fn run_rows(
 mod tests {
     use super::*;
     use crate::quant::QuantKind;
-    use crate::sampler::{self, MidxSampler, Sampler, SamplerKind, SamplerParams};
+    use crate::sampler::fixtures::{built_sampler, ALL_KINDS};
+    use crate::sampler::{MidxSampler, Sampler, SamplerKind};
     use crate::util::check::rand_matrix;
-
-    fn built_sampler(kind: SamplerKind, n: usize, d: usize, seed: u64) -> Box<dyn Sampler> {
-        let mut rng = Rng::new(seed);
-        let table = rand_matrix(&mut rng, n, d, 0.5);
-        let freqs: Vec<f32> = (0..n).map(|i| 1.0 / (i + 1) as f32).collect();
-        let params = SamplerParams {
-            k_codewords: 4,
-            frequencies: freqs,
-            rff_dim: 16,
-            ..Default::default()
-        };
-        let mut s = sampler::build(kind, n, &params);
-        s.rebuild(&table, n, d, &mut rng);
-        s
-    }
-
-    const ALL_KINDS: &[SamplerKind] = &[
-        SamplerKind::Uniform,
-        SamplerKind::Unigram,
-        SamplerKind::Lsh,
-        SamplerKind::Sphere,
-        SamplerKind::Rff,
-        SamplerKind::MidxPq,
-        SamplerKind::MidxRq,
-        SamplerKind::ExactMidx,
-    ];
 
     #[test]
     fn prop_batched_equals_sequential_for_every_sampler_and_thread_count() {
@@ -292,6 +479,60 @@ mod tests {
                         "log_q {l} != -ln({n})"
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn crossover_prefers_inline_for_tiny_batches() {
+        // degenerate shapes never parallelize
+        assert!(!worth_parallelizing(1, 8, 1_000, 10));
+        assert!(!worth_parallelizing(64, 1, 1_000, 10));
+        // bootstrap (no measurement yet): need enough rows per lane
+        assert!(worth_parallelizing(64, 8, 0, 10));
+        assert!(!worth_parallelizing(8, 8, 0, 10));
+        // measured: a big batch of real work dwarfs the dispatch cost
+        assert!(worth_parallelizing(256, 8, 2_000, 50_000));
+        // measured: a tiny batch loses to the dispatch cost
+        assert!(!worth_parallelizing(4, 8, 2_000, 50_000));
+    }
+
+    #[test]
+    fn pooled_path_matches_scoped_and_sequential_for_every_sampler() {
+        use crate::coordinator::pool::WorkerPool;
+        let (n, d, b, m, seed) = (40usize, 8usize, 19usize, 5usize, 0xB001u64);
+        let pools: Vec<WorkerPool> = [1usize, 3].iter().map(|&t| WorkerPool::new(t)).collect();
+        for &kind in ALL_KINDS {
+            let s = built_sampler(kind, n, d, 300 + kind as u64);
+            let core = s.core();
+            let mut rng = Rng::new(17);
+            let queries = rand_matrix(&mut rng, b, d, 0.5);
+            let positives: Vec<u32> = (0..b).map(|i| (i % n) as u32).collect();
+
+            let mut want_ids = vec![0u32; b * m];
+            let mut want_lq = vec![0.0f32; b * m];
+            sample_batch(core, &queries, d, &positives, m, seed, 1, &mut want_ids, &mut want_lq);
+
+            for pool in &pools {
+                let mut got_ids = vec![0u32; b * m];
+                let mut got_lq = vec![0.0f32; b * m];
+                sample_batch_pooled(
+                    pool, core, &queries, d, &positives, m, seed, 0, &mut got_ids, &mut got_lq,
+                );
+                assert_eq!(got_ids, want_ids, "{} pool: ids diverge", core.name());
+                let got_bits: Vec<u32> = got_lq.iter().map(|x| x.to_bits()).collect();
+                let want_bits: Vec<u32> = want_lq.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got_bits, want_bits, "{} pool: log_q diverge", core.name());
+
+                // the dispatcher must agree with itself regardless of which
+                // branch the crossover picks
+                let mut via_ids = vec![0u32; b * m];
+                let mut via_lq = vec![0.0f32; b * m];
+                sample_batch_with(
+                    Some(pool), core, &queries, d, &positives, m, seed, 0, &mut via_ids,
+                    &mut via_lq,
+                );
+                assert_eq!(via_ids, want_ids, "{} dispatcher: ids diverge", core.name());
             }
         }
     }

@@ -22,12 +22,15 @@
 //!   joint table, CDF, …). One per thread; allocation amortizes across a
 //!   batch.
 //!
-//! The batched entry point is [`batch::sample_batch`] (also available as
-//! [`Sampler::sample_batch`]): it fans a [B, D] query block across a scoped
-//! thread pool with one deterministic RNG stream per query
+//! The batched entry points fan a [B, D] query block across worker threads
+//! with one deterministic RNG stream per query
 //! (`Rng::stream(seed, query_index)`), so results are bit-identical for any
-//! thread count. The original per-query [`Sampler`] trait survives as a thin
-//! adapter (core + owned scratch) for the stats/analysis paths.
+//! thread count and any execution path: [`batch::sample_batch_pooled`]
+//! dispatches onto a persistent [`crate::coordinator::WorkerPool`] (the
+//! steady-state training path), [`batch::sample_batch`] is the scoped-thread
+//! fallback, and [`batch::sample_batch_with`] picks between them via a
+//! measured crossover. The original per-query [`Sampler`] trait survives as
+//! a thin adapter (core + owned scratch) for the stats/analysis paths.
 //!
 //! Contract: sampling fills `m` class ids plus the **log proposal
 //! probability** Q(i|z) of each draw, normalized over all N classes — this
@@ -47,7 +50,7 @@ pub mod uniform;
 pub mod unigram;
 
 pub use alias::AliasTable;
-pub use batch::sample_batch;
+pub use batch::{sample_batch, sample_batch_pooled, sample_batch_with};
 pub use lsh::LshSampler;
 pub use midx::{ExactMidxSampler, MidxSampler};
 pub use rff::RffSampler;
@@ -319,6 +322,51 @@ pub fn build(kind: SamplerKind, n: usize, params: &SamplerParams) -> Box<dyn Sam
             params.k_codewords,
             params.kmeans_iters,
         )),
+    }
+}
+
+/// Shared fixtures for the unit, integration (golden-draw, goodness-of-fit)
+/// and bench suites — one source of truth for "every sampler kind" and the
+/// small-problem scaffolding, so adding a ninth sampler cannot silently
+/// exempt it from any of those suites.
+#[doc(hidden)]
+pub mod fixtures {
+    use super::{build, Sampler, SamplerKind, SamplerParams};
+    use crate::util::check::rand_matrix;
+    use crate::util::Rng;
+
+    /// Every sampler kind, including `ExactMidx` (which
+    /// [`SamplerKind::all`] deliberately excludes from the paper tables).
+    pub const ALL_KINDS: &[SamplerKind] = &[
+        SamplerKind::Uniform,
+        SamplerKind::Unigram,
+        SamplerKind::Lsh,
+        SamplerKind::Sphere,
+        SamplerKind::Rff,
+        SamplerKind::MidxPq,
+        SamplerKind::MidxRq,
+        SamplerKind::ExactMidx,
+    ];
+
+    /// Small-problem tuning (K=4 codewords, R=16 RFF features, harmonic
+    /// unigram frequencies) shared by the test suites.
+    pub fn small_params(n: usize) -> SamplerParams {
+        SamplerParams {
+            k_codewords: 4,
+            rff_dim: 16,
+            frequencies: (0..n).map(|i| 1.0 / (i + 1) as f32).collect(),
+            ..Default::default()
+        }
+    }
+
+    /// Build a sampler and rebuild it on a random [n, d] table derived
+    /// deterministically from `seed`.
+    pub fn built_sampler(kind: SamplerKind, n: usize, d: usize, seed: u64) -> Box<dyn Sampler> {
+        let mut rng = Rng::new(seed);
+        let table = rand_matrix(&mut rng, n, d, 0.5);
+        let mut s = build(kind, n, &small_params(n));
+        s.rebuild(&table, n, d, &mut rng);
+        s
     }
 }
 

@@ -68,6 +68,68 @@ pub fn kl_bound(
     }
 }
 
+/// Pearson χ² goodness-of-fit statistic of observed draw `counts` against
+/// expected probabilities `probs` for `draws` total draws. Bins with fewer
+/// than 5 expected draws are merged into one pooled bin (the standard
+/// validity rule for the χ² approximation) — unless pooling would leave
+/// fewer than two bins, in which case every positive-probability bin
+/// stands alone so df ≥ 1 whenever a comparison is possible at all.
+/// Returns `(statistic, df)`; the statistic is `+inf` if any draw landed
+/// where `probs` says mass is exactly zero (an outright contract
+/// violation, not a fluctuation).
+pub fn chi_square_gof(counts: &[u64], probs: &[f32], draws: u64) -> (f64, usize) {
+    assert_eq!(counts.len(), probs.len());
+    let total = draws as f64;
+    let accumulate = |merge_small: bool| -> Option<(f64, usize)> {
+        let mut stat = 0.0f64;
+        let mut bins = 0usize;
+        let (mut pool_obs, mut pool_exp) = (0.0f64, 0.0f64);
+        for i in 0..counts.len() {
+            let exp = probs[i] as f64 * total;
+            let obs = counts[i] as f64;
+            if exp <= 0.0 {
+                if obs > 0.0 {
+                    return Some((f64::INFINITY, bins.max(1)));
+                }
+                continue;
+            }
+            if merge_small && exp < 5.0 {
+                pool_obs += obs;
+                pool_exp += exp;
+            } else {
+                let dlt = obs - exp;
+                stat += dlt * dlt / exp;
+                bins += 1;
+            }
+        }
+        if pool_exp > 0.0 {
+            let dlt = pool_obs - pool_exp;
+            stat += dlt * dlt / pool_exp;
+            bins += 1;
+        }
+        if bins < 2 {
+            None // pooling collapsed the test; caller retries unmerged
+        } else {
+            Some((stat, bins - 1))
+        }
+    };
+    accumulate(true)
+        .or_else(|| accumulate(false))
+        .unwrap_or((0.0, 0)) // < 2 positive-probability bins: nothing to test
+}
+
+/// Upper critical value of the χ²(df) distribution at normal quantile `z`
+/// (e.g. z = 3.09 ⇒ α ≈ 1e-3), via the Wilson–Hilferty cube approximation:
+/// χ² ≈ df·(1 − 2/(9·df) + z·√(2/(9·df)))³.
+pub fn chi_square_critical(df: usize, z: f64) -> f64 {
+    if df == 0 {
+        return 0.0;
+    }
+    let k = df as f64;
+    let t = 1.0 - 2.0 / (9.0 * k) + z * (2.0 / (9.0 * k)).sqrt();
+    k * t * t * t
+}
+
 /// Measure KL(Q‖P) for a sampler averaged over a set of queries.
 pub fn sampler_kl(
     sampler: &mut dyn Sampler,
@@ -111,6 +173,47 @@ mod tests {
         assert!((renyi_d2(&p, &p) - 1.0).abs() < 1e-6);
         let q = vec![1.0f32 / 3.0; 3];
         assert!(renyi_d2(&p, &q) > 1.0);
+    }
+
+    #[test]
+    fn chi_square_critical_matches_tables() {
+        // χ²(10) 95th percentile = 18.307; Wilson–Hilferty is good to ~1%
+        let c = chi_square_critical(10, 1.6449);
+        assert!((c - 18.307).abs() < 0.4, "got {c}");
+        // χ²(1) 99th percentile = 6.635
+        let c1 = chi_square_critical(1, 2.3263);
+        assert!((c1 - 6.635).abs() < 0.7, "got {c1}");
+        assert_eq!(chi_square_critical(0, 3.0), 0.0);
+    }
+
+    #[test]
+    fn chi_square_gof_zero_for_exact_fit_and_inf_for_impossible_draws() {
+        let probs = vec![0.25f32; 4];
+        let (stat, df) = chi_square_gof(&[250, 250, 250, 250], &probs, 1000);
+        assert!(stat.abs() < 1e-9);
+        assert_eq!(df, 3);
+        // mass where probability is exactly zero → infinite statistic
+        let probs0 = vec![0.5f32, 0.5, 0.0];
+        let (stat0, _) = chi_square_gof(&[400, 500, 100], &probs0, 1000);
+        assert!(stat0.is_infinite());
+        // low-expectation bins merge: df shrinks but stat stays finite
+        let probs_t = vec![0.499f32, 0.499, 0.001, 0.001];
+        let (stat_t, df_t) = chi_square_gof(&[500, 496, 2, 2], &probs_t, 1000);
+        assert!(stat_t.is_finite());
+        assert_eq!(df_t, 2, "two big bins + one pooled bin - 1");
+    }
+
+    #[test]
+    fn chi_square_gof_survives_thinly_spread_expectations() {
+        // every expected count < 5: pooling everything would leave df = 0
+        // and a guaranteed-failing gate, so the helper falls back to
+        // unmerged bins and keeps the test applicable
+        let n = 50usize;
+        let probs = vec![1.0f32 / n as f32; n];
+        let counts = vec![1u64; n]; // perfect fit at draws = n
+        let (stat, df) = chi_square_gof(&counts, &probs, n as u64);
+        assert_eq!(df, n - 1);
+        assert!(stat.abs() < 1e-9, "perfect fit must score ~0, got {stat}");
     }
 
     #[test]

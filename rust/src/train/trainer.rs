@@ -4,17 +4,20 @@
 //!   1. `encode`   artifact: batch → query embeddings z [Bq, D]
 //!   2. rust sampler: M negatives + log proposal probs per query — batched
 //!      across the whole [Bq, D] block by the multi-threaded sampling
-//!      engine (`sampler::sample_batch`), with per-query RNG streams so
-//!      results are reproducible for any thread count
+//!      engine (`sampler::sample_batch_with` on the trainer's persistent
+//!      pool), with per-query RNG streams so results are reproducible for
+//!      any thread count
 //!   3. `train_step` artifact: loss + gradients (through the L1 kernel)
 //!   4. rust Adam: parameter update
 //!
 //! `run()` additionally software-pipelines the epoch: because sampling is
-//! `&self` against an immutable core, step i's sample phase runs on worker
-//! threads while the main thread issues the encode artifact call for step
-//! i+1 (`pipeline::overlap`). The sampler's index is rebuilt from the live
-//! class embeddings once per epoch (paper §4.4). The `Full` baseline skips
-//! 1–2 and runs the O(N) `full_step` artifact instead.
+//! `&self` against an immutable core, step i's sample phase runs on the
+//! trainer's persistent worker pool (`coordinator::pool::WorkerPool`, one
+//! per run — workers stay parked between steps) while the main thread
+//! issues the encode artifact call for step i+1 (`pipeline::overlap`). The
+//! sampler's index is rebuilt from the live class embeddings once per epoch
+//! (paper §4.4). The `Full` baseline skips 1–2 and runs the O(N)
+//! `full_step` artifact instead.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -22,8 +25,9 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::pipeline::{overlap, Prefetcher};
+use crate::coordinator::pool::WorkerPool;
 use crate::runtime::{lit_f32, lit_i32, to_f32, to_scalar_f32, Engine, Executable, Manifest};
-use crate::sampler::{batch::auto_threads, sample_batch, Sampler};
+use crate::sampler::{batch::auto_threads, sample_batch_with, Sampler};
 use crate::train::metrics::{EvalResult, MetricAcc};
 use crate::train::task::{Batch, TaskData};
 use crate::train::{Adam, ParamStore};
@@ -115,6 +119,10 @@ pub struct Trainer {
     cfg: TrainConfig,
     /// resolved sampling thread count (cfg.threads, 0 → hardware)
     threads: usize,
+    /// persistent sampling worker pool, one per run (None for the Full
+    /// baseline, which never samples): workers stay parked between steps,
+    /// so per-step batches pay a condvar wake, not a thread spawn
+    pool: Option<WorkerPool>,
     rng: Rng,
     timing: Timing,
 }
@@ -144,6 +152,12 @@ impl Trainer {
         let adam = Adam::new(cfg.lr, &shapes);
         let rng = Rng::new(cfg.seed ^ 0xABCD);
         let threads = if cfg.threads == 0 { auto_threads() } else { cfg.threads };
+        // the pool lives as long as the trainer: --threads picks the worker
+        // count once here, not per sample_batch call. T = 1 (and the Full
+        // baseline) never dispatches, so spawn no workers at all —
+        // sample_batch_with runs inline when handed None.
+        let pool =
+            if sampler.is_some() && threads > 1 { Some(WorkerPool::new(threads)) } else { None };
         Ok(Trainer {
             manifest,
             engine,
@@ -156,6 +170,7 @@ impl Trainer {
             sampler,
             cfg,
             threads,
+            pool,
             rng,
             timing: Timing::default(),
         })
@@ -172,6 +187,11 @@ impl Trainer {
     /// Resolved sampling worker count.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The run-lifetime sampling worker pool (None for the Full baseline).
+    pub fn pool(&self) -> Option<&WorkerPool> {
+        self.pool.as_ref()
     }
 
     /// Query embeddings for a batch (runs the encode artifact). `&self`:
@@ -205,7 +225,18 @@ impl Trainer {
         let (seed, positives, mut ids, mut log_q) = self.prepare_sample(targets);
         let t1 = Instant::now();
         let sampler = self.sampler.as_ref().expect("sample_negatives without sampler");
-        sampler.sample_batch(z, d, &positives, m, seed, self.threads, &mut ids, &mut log_q);
+        sample_batch_with(
+            self.pool.as_ref(),
+            sampler.core(),
+            z,
+            d,
+            &positives,
+            m,
+            seed,
+            self.threads,
+            &mut ids,
+            &mut log_q,
+        );
         self.timing.sample_s += t1.elapsed().as_secs_f64();
         (to_neg_ids(&ids), log_q)
     }
@@ -348,6 +379,7 @@ impl Trainer {
 
             let (seed, positives, mut neg_u32, mut log_q) = self.prepare_sample(batch.targets());
             // leave one core to the concurrent encode lane when it runs
+            // (lane cap per call; the pool itself keeps all its workers)
             let threads = if next.is_some() {
                 self.threads.saturating_sub(1).max(1)
             } else {
@@ -356,13 +388,14 @@ impl Trainer {
             // the worker lane borrows the Sync core, not the &mut-style
             // adapter — that is exactly what the shared-core split buys us
             let core = self.sampler.as_deref().expect("sampled epoch without sampler").core();
+            let pool = self.pool.as_ref();
 
             // lane A (workers): sample step i | lane B (main): encode step i+1
             let (sample_elapsed, encoded_next) = overlap(
                 || {
                     let t = Instant::now();
-                    sample_batch(
-                        core, &z, d, &positives, m, seed, threads, &mut neg_u32, &mut log_q,
+                    sample_batch_with(
+                        pool, core, &z, d, &positives, m, seed, threads, &mut neg_u32, &mut log_q,
                     );
                     t.elapsed().as_secs_f64()
                 },

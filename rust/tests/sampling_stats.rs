@@ -1,0 +1,107 @@
+//! Statistical goodness-of-fit for the whole sampler suite: ~100k draws
+//! from a fixed small problem, drawn through the production batched engine
+//! (persistent worker pool), must match each sampler's own reported
+//! proposal distribution under a Pearson χ² test and a KL check.
+//!
+//! Seeds are fixed, so the test is deterministic — the χ² critical value
+//! still uses a far-tail quantile (z = 4.5, α ≈ 3e-6) so only a systematic
+//! mismatch between `sample_into` and `proposal_dist` can fail it, never
+//! the particular fluctuation a fixed seed happens to land on.
+
+use midx::coordinator::WorkerPool;
+use midx::sampler::fixtures::{built_sampler, ALL_KINDS};
+use midx::sampler::sample_batch_pooled;
+use midx::stats::divergence::{chi_square_critical, chi_square_gof, empirical_kl};
+use midx::util::check::rand_matrix;
+use midx::util::Rng;
+
+/// Worker count under test: honors the CI matrix's THREADS env var,
+/// accepting the same comma-separated list golden_draws does (the first
+/// valid entry wins — the pool here is a single fixed size); 0 or unset =
+/// available parallelism. Results are bit-identical across counts; the
+/// matrix exercises the dispatch paths, not the statistics.
+fn pool_threads() -> usize {
+    std::env::var("THREADS")
+        .ok()
+        .and_then(|v| v.split(',').filter_map(|t| t.trim().parse::<usize>().ok()).find(|&t| t > 0))
+        .unwrap_or(0)
+}
+
+#[test]
+fn empirical_distribution_matches_reported_proposal() {
+    let (n, d) = (64usize, 8usize);
+    let b = 256usize; // rows per engine call (same query in every row)
+    let m = 16usize; // draws per row
+    let calls = 25usize; // 256 * 16 * 25 = 102_400 draws per sampler
+    let pool = WorkerPool::new(pool_threads());
+
+    for &kind in ALL_KINDS {
+        let mut s = built_sampler(kind, n, d, 0xC0FFEE ^ kind as u64);
+        let mut zrng = Rng::new(0x5EED ^ kind as u64);
+        let z = rand_matrix(&mut zrng, 1, d, 0.5);
+
+        // the sampler's own claim about its proposal Q(·|z)
+        let mut q = vec![0.0f32; n];
+        s.proposal_dist(&z, &mut q);
+
+        // ~100k unconditioned draws through the pooled engine
+        let core = s.core();
+        let zs: Vec<f32> = (0..b).flat_map(|_| z.iter().copied()).collect();
+        let positives = vec![u32::MAX; b];
+        let mut ids = vec![0u32; b * m];
+        let mut lq = vec![0.0f32; b * m];
+        let mut counts = vec![0u64; n];
+        for call in 0..calls {
+            let seed = 0xD1CE0000u64 ^ ((kind as u64) << 8) ^ call as u64;
+            sample_batch_pooled(&pool, core, &zs, d, &positives, m, seed, 0, &mut ids, &mut lq);
+            for &id in &ids {
+                counts[id as usize] += 1;
+            }
+        }
+        let draws = (b * m * calls) as u64;
+
+        let (stat, df) = chi_square_gof(&counts, &q, draws);
+        let crit = chi_square_critical(df, 4.5);
+        assert!(
+            stat < crit,
+            "{}: χ²={stat:.1} ≥ crit={crit:.1} (df={df}) — empirical draws diverge from \
+             the sampler's reported proposal",
+            core.name()
+        );
+
+        // KL(empirical ‖ reported) — the divergence the paper's theory
+        // bounds; E[KL] ≈ df/(2·draws) ≈ 3e-4 here, so 0.02 is pure slack
+        let emp: Vec<f32> = counts.iter().map(|&c| c as f32 / draws as f32).collect();
+        let kl = empirical_kl(&emp, &q);
+        assert!(kl < 0.02, "{}: KL(emp‖q) = {kl}", core.name());
+    }
+}
+
+#[test]
+fn reported_log_q_is_consistent_with_proposal_dist() {
+    // cheap cross-check reused from the conformance family: per-draw log q
+    // must be ln q[i] of the reported distribution (the quantity the L1
+    // sampled-softmax correction consumes)
+    let (n, d, m) = (48usize, 8usize, 24usize);
+    for &kind in ALL_KINDS {
+        let mut s = built_sampler(kind, n, d, 0xBEEF ^ kind as u64);
+        let mut rng = Rng::new(0xFACE ^ kind as u64);
+        let z = rand_matrix(&mut rng, 1, d, 0.5);
+        let mut q = vec![0.0f32; n];
+        s.proposal_dist(&z, &mut q);
+
+        let mut ids = vec![0u32; m];
+        let mut lq = vec![0.0f32; m];
+        s.sample_into(&z, u32::MAX, &mut rng, &mut ids, &mut lq);
+        for j in 0..m {
+            let want = (q[ids[j] as usize] as f64).max(1e-30).ln();
+            let got = lq[j] as f64;
+            assert!(
+                (got - want).abs() < 1e-2 * (1.0 + want.abs()),
+                "{}: draw {} log_q {got} vs dist {want}",
+                s.name(),
+                ids[j]
+            );
+        }
+    }
+}
