@@ -1,0 +1,124 @@
+//! `cargo bench --bench refresh` — full rebuild vs incremental refresh.
+//!
+//! Two sections, both artifact-free (pure library):
+//!
+//! 1. **Cost.** Per-epoch maintenance cost of a cold rebuild (k-means
+//!    retrain + index build) vs an incremental refresh (drift scan +
+//!    reassignment + mini-batch refinement) on a slowly drifting table.
+//!    The incremental path skips the k-means iterations entirely, so the
+//!    expected gap is roughly the k-means iteration count (~10×).
+//! 2. **Quality.** KL(proposal‖softmax) across simulated training epochs
+//!    for three maintenance strategies — never refresh (stale), refresh
+//!    incrementally each epoch, cold-rebuild each epoch — with each
+//!    strategy's cumulative maintenance time. Incremental must track the
+//!    cold-rebuild KL closely at a fraction of its cost; stale must fall
+//!    behind. (Absolute numbers vary by machine; the ordering is the
+//!    bench's contract.)
+
+use std::time::Instant;
+
+use midx::index::RefreshPolicy;
+use midx::quant::QuantKind;
+use midx::sampler::{MidxSampler, Sampler};
+use midx::stats::divergence::sampler_kl;
+use midx::util::bench::bench_ms;
+use midx::util::check::rand_matrix;
+use midx::util::Rng;
+
+/// One epoch of simulated optimizer drift: every row takes a small random
+/// step (matching the "embeddings move a little every step" regime the
+/// incremental path is built for).
+fn drift(table: &mut [f32], rng: &mut Rng, std: f32) {
+    for x in table.iter_mut() {
+        *x += rng.normal_f32(std);
+    }
+}
+
+fn cost_section() {
+    let d = 32;
+    let kmeans_iters = 10;
+    for &(n, k) in &[(2_000usize, 32usize), (10_000, 32)] {
+        let mut rng = Rng::new(3);
+        let table = rand_matrix(&mut rng, n, d, 0.3);
+
+        // cold rebuild: quantizer retrain + index build every time
+        let mut full = MidxSampler::new(n, QuantKind::Residual, k, kmeans_iters);
+        let mut frng = Rng::new(11);
+        bench_ms(&format!("refresh/full_rebuild/n{n}/k{k}"), 600, || {
+            full.rebuild(&table, n, d, &mut frng);
+        });
+
+        // incremental: drift the whole table a little, then refresh —
+        // tolerance 0 re-assesses every row, the worst case for the
+        // incremental path, and it still skips the k-means retrain
+        let mut incr = MidxSampler::new(n, QuantKind::Residual, k, kmeans_iters);
+        let mut irng = Rng::new(11);
+        let policy = RefreshPolicy::Incremental { tolerance: 0.0, refine_iters: 1 };
+        // first call under the incremental policy: cold build + tracker
+        incr.rebuild_with(&table, n, d, &mut irng, &policy);
+        let mut moving = table.clone();
+        let mut drng = Rng::new(29);
+        bench_ms(&format!("refresh/incremental/n{n}/k{k}"), 600, || {
+            drift(&mut moving, &mut drng, 0.003);
+            incr.rebuild_with(&moving, n, d, &mut irng, &policy);
+        });
+
+        // the drift scan alone (the incremental path's floor)
+        let mut scan = MidxSampler::new(n, QuantKind::Residual, k, kmeans_iters);
+        scan.rebuild_with(&table, n, d, &mut Rng::new(11), &policy);
+        bench_ms(&format!("refresh/noop_scan/n{n}/k{k}"), 300, || {
+            scan.rebuild_with(&table, n, d, &mut Rng::new(1), &policy);
+        });
+    }
+}
+
+fn quality_section() {
+    let (n, d, k, epochs) = (2_000usize, 16usize, 16usize, 6usize);
+    let mut rng = Rng::new(7);
+    let table0 = rand_matrix(&mut rng, n, d, 0.5);
+    let queries = rand_matrix(&mut rng, 8, d, 0.5);
+
+    let incr_policy = RefreshPolicy::Incremental { tolerance: 0.0, refine_iters: 2 };
+    // identical initial cores for all three strategies (same k-means rng;
+    // tracker creation consumes no randomness) — only `incr` needs one
+    let mk = |policy: &RefreshPolicy| {
+        let mut s = MidxSampler::new(n, QuantKind::Residual, k, 10);
+        s.rebuild_with(&table0, n, d, &mut Rng::new(5), policy);
+        s
+    };
+    let mut stale = mk(&RefreshPolicy::Full);
+    let mut incr = mk(&incr_policy);
+    let mut full = mk(&RefreshPolicy::Full);
+
+    let mut table = table0.clone();
+    let mut drng = Rng::new(41);
+    let (mut t_incr, mut t_full) = (0.0f64, 0.0f64);
+    println!("\nrefresh quality: KL(proposal‖softmax) per simulated epoch");
+    println!("{:<8} {:>12} {:>12} {:>12}", "epoch", "stale", "incremental", "full");
+    for epoch in 0..epochs {
+        drift(&mut table, &mut drng, 0.03);
+
+        let t = Instant::now();
+        incr.rebuild_with(&table, n, d, &mut Rng::new(100 + epoch as u64), &incr_policy);
+        t_incr += t.elapsed().as_secs_f64();
+
+        let t = Instant::now();
+        full.rebuild_with(&table, n, d, &mut Rng::new(100 + epoch as u64), &RefreshPolicy::Full);
+        t_full += t.elapsed().as_secs_f64();
+
+        let kl_stale = sampler_kl(&mut stale, &queries, &table, n, d);
+        let kl_incr = sampler_kl(&mut incr, &queries, &table, n, d);
+        let kl_full = sampler_kl(&mut full, &queries, &table, n, d);
+        println!("{epoch:<8} {kl_stale:>12.5} {kl_incr:>12.5} {kl_full:>12.5}");
+    }
+    println!(
+        "maintenance seconds over {epochs} epochs: incremental={t_incr:.3}s full={t_full:.3}s \
+         (speedup {:.1}x)",
+        t_full / t_incr.max(1e-9)
+    );
+}
+
+fn main() {
+    cost_section();
+    quality_section();
+}

@@ -6,6 +6,7 @@ use anyhow::Result;
 use super::{run_cell, Budget};
 use crate::coordinator::{fmt, Table};
 
+/// Regenerate this table/figure under the given budget.
 pub fn run(budget: &Budget) -> Result<()> {
     let model = "lm_ptb_lstm";
     let mut t = Table::new(

@@ -7,6 +7,7 @@ use super::{run_cell, Budget};
 use crate::coordinator::{fmt, Table};
 use crate::sampler::SamplerKind;
 
+/// Regenerate this table/figure under the given budget.
 pub fn run(budget: &Budget) -> Result<()> {
     let model = "lm_ptb_lstm";
     let ks: &[usize] = if budget.quick { &[8, 32, 128] } else { &[8, 16, 32, 64, 128] };

@@ -55,6 +55,7 @@ fn emit_curves(tag: &str, table: &[f32], z: &[f32], n: usize, d: usize, freqs: &
     t.emit(super::experiments_md().as_deref());
 }
 
+/// Regenerate this table/figure under the given budget.
 pub fn run(budget: &Budget) -> Result<()> {
     let manifest = load_model("lm_ptb_lstm")?;
     let n = manifest.dims.n_classes;

@@ -14,6 +14,7 @@ use crate::sampler::{self, sample_batch_pooled, SamplerKind, SamplerParams};
 use crate::util::check::rand_matrix;
 use crate::util::Rng;
 
+/// Regenerate this table/figure under the given budget.
 pub fn run(budget: &Budget) -> Result<()> {
     let ns: &[usize] = if budget.quick {
         &[1_000, 10_000]

@@ -8,6 +8,7 @@ use super::{run_cell, Budget};
 use crate::coordinator::{fmt, Table};
 use crate::sampler::SamplerKind;
 
+/// Regenerate this table/figure under the given budget.
 pub fn run(budget: &Budget) -> Result<()> {
     let ms: &[(usize, &str)] = if budget.quick {
         &[(5, "lm_ptb_lstm_m5"), (50, "lm_ptb_lstm_m50")]

@@ -43,16 +43,22 @@ use crate::train::{RunResult, TrainConfig};
 /// Shared budget knobs (CLI: --quick shrinks everything).
 #[derive(Clone, Copy, Debug)]
 pub struct Budget {
+    /// training epochs per cell
     pub epochs: usize,
+    /// optimizer steps per epoch
     pub steps: usize,
+    /// eval batches per pass (0 = all)
     pub eval_cap: usize,
+    /// true when running the shrunken --quick sweep
     pub quick: bool,
 }
 
 impl Budget {
+    /// The default full-size budget.
     pub fn standard() -> Self {
         Budget { epochs: 5, steps: 100, eval_cap: 20, quick: false }
     }
+    /// The shrunken `--quick` budget.
     pub fn quick() -> Self {
         Budget { epochs: 2, steps: 30, eval_cap: 6, quick: true }
     }

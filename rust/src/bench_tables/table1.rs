@@ -32,6 +32,7 @@ const ROWS: &[Row] = &[
     Row { kind: SamplerKind::MidxRq, init_formula: "K·N·D·t", sample_formula: "K·D + K² + M", space_formula: "K·D + K² + N" },
 ];
 
+/// Regenerate this table/figure under the given budget.
 pub fn run(budget: &Budget) -> Result<()> {
     let n = if budget.quick { 5_000 } else { 20_000 };
     let d = 64;

@@ -27,6 +27,7 @@ fn clustered_table(rng: &mut Rng, n: usize, d: usize, clusters: usize, scale: f3
     out
 }
 
+/// Regenerate this table/figure under the given budget.
 pub fn run(budget: &Budget) -> Result<()> {
     let n = if budget.quick { 500 } else { 2000 };
     let d = 32;

@@ -10,6 +10,7 @@ use crate::stats::grad_bias::grad_bias_estimate;
 use crate::util::check::rand_matrix;
 use crate::util::Rng;
 
+/// Regenerate this table/figure under the given budget.
 pub fn run(budget: &Budget) -> Result<()> {
     let n = if budget.quick { 300 } else { 1000 };
     let d = 16;

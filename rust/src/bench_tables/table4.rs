@@ -31,12 +31,14 @@ pub fn paper_ppl(model: &str, sampler: &str) -> Option<f64> {
     Some(row[col])
 }
 
+/// The sampler column of the paper's comparison tables (None = Full).
 pub fn samplers() -> Vec<Option<SamplerKind>> {
     let mut v: Vec<Option<SamplerKind>> = vec![None];
     v.extend(SamplerKind::all().iter().map(|&k| Some(k)));
     v
 }
 
+/// Regenerate this table/figure under the given budget.
 pub fn run(budget: &Budget) -> Result<()> {
     let models: &[&str] = if budget.quick {
         &["lm_ptb_lstm"]

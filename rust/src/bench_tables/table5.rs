@@ -160,6 +160,7 @@ fn run_variant(quantizer: QuantKind, learn: bool, budget: &Budget) -> Result<(f6
     Ok((final_kl, test.get("ppl").unwrap_or(f64::NAN)))
 }
 
+/// Regenerate this table/figure under the given budget.
 pub fn run(budget: &Budget) -> Result<()> {
     let mut t = Table::new(
         "Table 5 — learnable codebooks (lm_ptb_lstm): KL-loss and test ppl",

@@ -33,6 +33,7 @@ pub fn paper_row(model: &str, sampler: &str) -> Option<[f64; 4]> {
         .map(|(_, _, v)| *v)
 }
 
+/// Regenerate this table/figure under the given budget.
 pub fn run(budget: &Budget) -> Result<()> {
     let models: &[&str] = if budget.quick {
         &["rec_ml_gru"]

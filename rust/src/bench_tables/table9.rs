@@ -31,6 +31,7 @@ pub fn paper_row(model: &str, sampler: &str) -> Option<[f64; 3]> {
         .map(|(_, _, v)| *v)
 }
 
+/// Regenerate this table/figure under the given budget.
 pub fn run(budget: &Budget) -> Result<()> {
     let models: &[&str] =
         if budget.quick { &["xmc_amazoncat"] } else { &["xmc_amazoncat", "xmc_wiki"] };

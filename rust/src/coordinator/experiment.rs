@@ -18,19 +18,23 @@ use crate::runtime::{load_model, Manifest};
 use crate::sampler::{self, SamplerKind, SamplerParams};
 use crate::train::{RunResult, TaskData, TrainConfig, Trainer};
 
+/// One (model, sampler, config) experiment cell.
 #[derive(Clone, Debug)]
 pub struct ExperimentSpec {
     /// artifact directory name, e.g. "lm_ptb_lstm"
     pub model: String,
     /// None ⇒ Full-softmax baseline
     pub sampler: Option<SamplerKind>,
+    /// trainer knobs (epochs, steps, threads, refresh policy, ...)
     pub train: TrainConfig,
     /// MIDX codebook size (paper default 32; Fig 3 sweeps it)
     pub k_codewords: usize,
+    /// seed for the synthetic dataset generator
     pub dataset_seed: u64,
 }
 
 impl ExperimentSpec {
+    /// Spec with default training config and dataset seed.
     pub fn new(model: &str, sampler: Option<SamplerKind>) -> Self {
         ExperimentSpec {
             model: model.to_string(),
@@ -41,6 +45,7 @@ impl ExperimentSpec {
         }
     }
 
+    /// Sampler identifier for report rows ("full" for the baseline).
     pub fn sampler_label(&self) -> String {
         self.sampler.map(|s| s.name().to_string()).unwrap_or_else(|| "full".into())
     }

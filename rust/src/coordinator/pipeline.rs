@@ -17,6 +17,7 @@ pub struct Prefetcher<T> {
 }
 
 impl<T: Send + 'static> Prefetcher<T> {
+    /// Start the generator thread; items buffer up to `depth` deep.
     pub fn spawn<F>(depth: usize, total: usize, gen: F) -> Self
     where
         F: Fn(usize) -> T + Send + 'static,

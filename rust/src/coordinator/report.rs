@@ -4,13 +4,19 @@
 use std::fmt::Write as _;
 use std::path::Path;
 
+/// A titled table rendered as aligned text (stdout) or markdown
+/// (EXPERIMENTS.md).
 pub struct Table {
+    /// heading shown above the table
     pub title: String,
+    /// column names
     pub header: Vec<String>,
+    /// data rows (each the same arity as `header`)
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with the given title and column names.
     pub fn new(title: &str, header: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -19,6 +25,7 @@ impl Table {
         }
     }
 
+    /// Append one row; panics on arity mismatch with the header.
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
         self.rows.push(cells);

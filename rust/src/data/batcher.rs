@@ -3,6 +3,7 @@
 
 use crate::util::Rng;
 
+/// Shuffled index batcher with deterministic per-epoch permutations.
 pub struct Batcher {
     n: usize,
     batch: usize,
@@ -13,6 +14,7 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Batcher over `n` indices in batches of `batch` (requires n ≥ batch).
     pub fn new(n: usize, batch: usize, seed: u64) -> Self {
         assert!(batch > 0 && n >= batch, "need n >= batch ({n} vs {batch})");
         let mut b = Batcher { n, batch, perm: (0..n).collect(), cursor: 0, epoch: 0, seed };
@@ -43,10 +45,12 @@ impl Batcher {
         self.reshuffle();
     }
 
+    /// Full batches one epoch yields (the trailing partial is dropped).
     pub fn batches_per_epoch(&self) -> usize {
         self.n / self.batch
     }
 
+    /// Current epoch index (0-based).
     pub fn epoch(&self) -> u64 {
         self.epoch
     }

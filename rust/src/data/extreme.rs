@@ -11,8 +11,10 @@ use super::{zipf_weights, BagBatch};
 use crate::sampler::AliasTable;
 use crate::util::Rng;
 
+/// Generator knobs for the synthetic XMC data.
 #[derive(Clone, Debug)]
 pub struct XmcConfig {
+    /// label space size (the softmax's N)
     pub n_classes: usize,
     /// hashed feature vocabulary (model-side embedding rows)
     pub n_features: usize,
@@ -22,9 +24,13 @@ pub struct XmcConfig {
     pub signature: usize,
     /// fraction of nonzeros drawn from the class signature
     pub signal: f64,
+    /// training samples to generate
     pub n_train: usize,
+    /// test samples to generate
     pub n_test: usize,
+    /// Zipf exponent of the label prior
     pub label_zipf_s: f64,
+    /// generator seed
     pub seed: u64,
 }
 
@@ -44,21 +50,31 @@ impl Default for XmcConfig {
     }
 }
 
+/// One sparse bag-of-words sample with a single label.
 #[derive(Clone, Debug)]
 pub struct XmcSample {
+    /// nonzero feature ids ([nnz])
     pub feat_ids: Vec<u32>,
+    /// matching feature values ([nnz])
     pub feat_vals: Vec<f32>,
+    /// ground-truth class
     pub label: u32,
 }
 
+/// The generated XMC data: train/test samples + label counts.
 pub struct XmcDataset {
+    /// the generator config used
     pub cfg: XmcConfig,
+    /// training samples
     pub train: Vec<XmcSample>,
+    /// test samples (validation is carved off its head)
     pub test: Vec<XmcSample>,
+    /// training-set label counts (feeds the Unigram sampler)
     pub frequencies: Vec<f32>,
 }
 
 impl XmcDataset {
+    /// Generate train/test samples deterministically from `cfg.seed`.
     pub fn generate(cfg: XmcConfig) -> Self {
         let mut rng = Rng::new(cfg.seed);
         // class signatures

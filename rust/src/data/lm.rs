@@ -15,8 +15,10 @@ use super::{zipf_weights, SeqBatch};
 use crate::sampler::AliasTable;
 use crate::util::Rng;
 
+/// Generator knobs for the synthetic LM corpus.
 #[derive(Clone, Debug)]
 pub struct LmConfig {
+    /// vocabulary size (the softmax's N)
     pub vocab: usize,
     /// Zipf exponent of the global unigram component
     pub zipf_s: f64,
@@ -24,9 +26,13 @@ pub struct LmConfig {
     pub lambda: f64,
     /// geometric hop decay around π(prev)
     pub hop_p: f64,
+    /// training-stream length in tokens
     pub train_tokens: usize,
+    /// validation-stream length in tokens
     pub valid_tokens: usize,
+    /// test-stream length in tokens
     pub test_tokens: usize,
+    /// generator seed (streams are deterministic given it)
     pub seed: u64,
 }
 
@@ -45,16 +51,22 @@ impl Default for LmConfig {
     }
 }
 
+/// The generated corpus: three token streams + unigram counts.
 pub struct LmCorpus {
+    /// the generator config used
     pub cfg: LmConfig,
+    /// training token stream
     pub train: Vec<u32>,
+    /// validation token stream
     pub valid: Vec<u32>,
+    /// test token stream
     pub test: Vec<u32>,
     /// training-set unigram counts (feeds the Unigram sampler)
     pub frequencies: Vec<f32>,
 }
 
 impl LmCorpus {
+    /// Generate the three streams deterministically from `cfg.seed`.
     pub fn generate(cfg: LmConfig) -> Self {
         let mut rng = Rng::new(cfg.seed);
         let zipf = AliasTable::new(&zipf_weights(cfg.vocab, cfg.zipf_s));
@@ -161,10 +173,14 @@ impl LmCorpus {
     }
 }
 
+/// Corpus split selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Split {
+    /// training stream
     Train,
+    /// validation stream
     Valid,
+    /// test stream
     Test,
 }
 

@@ -26,19 +26,28 @@ pub fn zipf_weights(n: usize, s: f64) -> Vec<f32> {
 /// A batch for sequence tasks: inputs [b, t], flattened targets [b*t].
 #[derive(Clone, Debug)]
 pub struct SeqBatch {
+    /// input token/item ids, [b, t] row-major
     pub tokens: Vec<i32>,
+    /// next-token targets, [b*t]
     pub targets: Vec<i32>,
+    /// rows (sequences) in the batch
     pub b: usize,
+    /// timesteps per row
     pub t: usize,
 }
 
 /// A batch for the bag (XMC) task.
 #[derive(Clone, Debug)]
 pub struct BagBatch {
+    /// sparse feature ids, [b, s] row-major
     pub feat_ids: Vec<i32>,
+    /// matching feature values, [b, s]
     pub feat_vals: Vec<f32>,
+    /// one label per sample, [b]
     pub targets: Vec<i32>,
+    /// samples in the batch
     pub b: usize,
+    /// nonzeros per sample
     pub s: usize,
 }
 

@@ -12,12 +12,16 @@ use crate::sampler::AliasTable;
 use crate::util::math::{dot, softmax_inplace, top_k};
 use crate::util::Rng;
 
+/// Generator knobs for the synthetic interaction data.
 #[derive(Clone, Debug)]
 pub struct RecConfig {
+    /// catalog size (the softmax's N)
     pub n_items: usize,
+    /// number of user sequences to generate
     pub n_users: usize,
     /// latent factor dimensionality of the generator (not the model)
     pub factors: usize,
+    /// topic centers items/users cluster around
     pub topics: usize,
     /// interactions per user = seq_len + held-out items
     pub seq_len: usize,
@@ -25,6 +29,7 @@ pub struct RecConfig {
     pub zipf_s: f64,
     /// per-user candidate pool size (generation-time truncation)
     pub pool: usize,
+    /// generator seed
     pub seed: u64,
 }
 
@@ -60,18 +65,24 @@ impl RecConfig {
     }
 }
 
+/// The generated interaction data: per-user sequences + split ranges.
 pub struct RecDataset {
+    /// the generator config used
     pub cfg: RecConfig,
     /// user sequences, each of length cfg.seq_len (last item = eval target)
     pub sequences: Vec<Vec<u32>>,
     /// train/valid/test user index ranges (8:1:1 split)
     pub train_users: std::ops::Range<usize>,
+    /// validation user range
     pub valid_users: std::ops::Range<usize>,
+    /// test user range
     pub test_users: std::ops::Range<usize>,
+    /// item interaction counts (feeds the Unigram sampler)
     pub frequencies: Vec<f32>,
 }
 
 impl RecDataset {
+    /// Generate all user sequences deterministically from `cfg.seed`.
     pub fn generate(cfg: RecConfig) -> Self {
         let mut rng = Rng::new(cfg.seed);
         let f = cfg.factors;
@@ -180,6 +191,8 @@ impl RecDataset {
         out
     }
 
+    /// Interactions-per-user over catalog size — the sparsity axis paper
+    /// Finding 2 turns on.
     pub fn density(&self) -> f64 {
         self.cfg.seq_len as f64 / self.cfg.n_items as f64
     }

@@ -1,0 +1,340 @@
+//! Incremental index maintenance: drift tracking and refresh policy.
+//!
+//! The paper keeps the MIDX proposal adaptive by retraining the quantizer
+//! and rebuilding the inverted multi-index before every epoch (§4.4) — a
+//! stop-the-world cost that grows with N. This module provides the state
+//! behind the cheaper alternative: remember where every class embedding was
+//! when it was last assigned to a codeword pair, find the rows that have
+//! drifted past a tolerance, re-assign only those (and nudge the codewords
+//! with mini-batch k-means steps, [`crate::quant::kmeans::refine_step`]),
+//! and fall back to a cold rebuild only when the index has degraded past
+//! measured thresholds.
+//!
+//! Correctness note: an incrementally-refreshed index is *self-consistent*
+//! by construction — the proposal Q(i|z) and the reported log q are always
+//! computed from the same (codebooks, codes, bucket masses), whatever those
+//! are — so importance-weighted training stays unbiased exactly as with a
+//! stale epoch index. What refresh buys is a proposal *closer to the true
+//! softmax* (smaller KL ⇒ faster convergence per the paper's Theorems 5–6)
+//! at a fraction of the cold-rebuild cost.
+
+use crate::quant::Quantizer;
+use crate::util::math::{dist2, norm2};
+
+/// Auto policy: drift tolerance as a fraction of the mean class-embedding
+/// row norm (rows that moved less than this are not re-examined).
+pub const AUTO_TOLERANCE_FRAC: f32 = 0.02;
+
+/// Auto policy: mini-batch k-means refinement passes per refresh.
+pub const AUTO_REFINE_ITERS: usize = 2;
+
+/// Auto policy: cumulative fraction of classes that changed bucket since
+/// the last full rebuild before a cold rebuild is forced (past this the
+/// codewords no longer summarize the table they were trained on).
+pub const AUTO_MAX_MOVED_FRAC: f32 = 0.5;
+
+/// Auto policy: bucket imbalance (largest bucket over the mean occupied
+/// bucket, [`crate::index::InvertedMultiIndex::imbalance`]) before a cold
+/// rebuild is forced (a collapsed index degrades the uniform inner stage).
+pub const AUTO_MAX_IMBALANCE: f32 = 8.0;
+
+/// How `Sampler::rebuild_with` refreshes the index between epochs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RefreshPolicy {
+    /// Cold k-means retrain + index rebuild every epoch (paper §4.4) — the
+    /// historical behavior and the default.
+    Full,
+    /// Drift-driven refresh: re-assign only rows that moved beyond
+    /// `tolerance` (absolute ℓ2 movement since last assignment; 0 means
+    /// every row that moved at all), after `refine_iters` mini-batch
+    /// k-means passes over the drifted rows. Never cold-rebuilds (except
+    /// on the first build or a shape change).
+    Incremental {
+        /// ℓ2 movement since last assignment below which a row is skipped.
+        tolerance: f32,
+        /// mini-batch k-means passes over the drifted rows per refresh.
+        refine_iters: usize,
+    },
+    /// Incremental with measured defaults while the index is healthy; cold
+    /// rebuild when cumulative drift ([`AUTO_MAX_MOVED_FRAC`]) or bucket
+    /// imbalance ([`AUTO_MAX_IMBALANCE`]) crosses its threshold.
+    Auto,
+}
+
+impl RefreshPolicy {
+    /// Parse a CLI policy: `full` | `auto` | `incremental[:TOL[:ITERS]]`
+    /// (bare `incremental` means tolerance 0, one refine pass).
+    pub fn parse(s: &str) -> Option<RefreshPolicy> {
+        match s {
+            "full" => Some(RefreshPolicy::Full),
+            "auto" => Some(RefreshPolicy::Auto),
+            _ => {
+                let mut it = s.split(':');
+                if it.next()? != "incremental" {
+                    return None;
+                }
+                let tolerance = match it.next() {
+                    None => 0.0,
+                    Some(t) => t.parse().ok()?,
+                };
+                let refine_iters = match it.next() {
+                    None => 1,
+                    Some(t) => t.parse().ok()?,
+                };
+                if it.next().is_some() {
+                    return None;
+                }
+                Some(RefreshPolicy::Incremental { tolerance, refine_iters })
+            }
+        }
+    }
+
+    /// Short identifier used in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RefreshPolicy::Full => "full",
+            RefreshPolicy::Incremental { .. } => "incremental",
+            RefreshPolicy::Auto => "auto",
+        }
+    }
+}
+
+/// What a `rebuild_with` call actually did — lets the trainer attribute
+/// wall clock to cold rebuilds vs incremental refreshes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RefreshOutcome {
+    /// true ⇒ a cold retrain + rebuild ran (policy Full, first build,
+    /// shape change, or an Auto fallback).
+    pub full: bool,
+    /// rows examined by the drift scan (N for a cold rebuild).
+    pub scanned: usize,
+    /// rows whose movement exceeded the tolerance and were re-assessed.
+    pub drifted: usize,
+    /// rows whose codeword pair (bucket) actually changed.
+    pub reassigned: usize,
+}
+
+impl RefreshOutcome {
+    /// Outcome of a cold rebuild over `n` classes.
+    pub fn full_rebuild(n: usize) -> RefreshOutcome {
+        RefreshOutcome { full: true, scanned: n, drifted: n, reassigned: n }
+    }
+
+    /// Outcome of an incremental refresh.
+    pub fn incremental(scanned: usize, drifted: usize, reassigned: usize) -> RefreshOutcome {
+        RefreshOutcome { full: false, scanned, drifted, reassigned }
+    }
+}
+
+/// Per-class drift state between index refreshes.
+///
+/// Holds the embedding rows as they were when each class was last assigned
+/// to its codeword pair, the per-codeword mini-batch k-means counts (the
+/// 1/count learning-rate state of [`crate::quant::kmeans::refine_step`],
+/// seeded with the build-time cluster sizes so refinement continues the
+/// Lloyd's trajectory instead of restarting it), and the cumulative move
+/// count the Auto policy's full-rebuild trigger watches.
+#[derive(Clone, Debug)]
+pub struct DriftTracker {
+    n: usize,
+    d: usize,
+    /// [n, d] rows at last assignment
+    snapshot: Vec<f32>,
+    /// per-codeword update counts, stage 1 (mini-batch k-means state)
+    counts1: Vec<u64>,
+    /// per-codeword update counts, stage 2
+    counts2: Vec<u64>,
+    /// classes whose bucket changed since the last full rebuild
+    cum_moved: usize,
+    /// mean ℓ2 row norm at the last full rebuild (Auto tolerance scale)
+    mean_row_norm: f32,
+}
+
+impl DriftTracker {
+    /// Snapshot `table` ([n, d]) right after a full (re)build of `quant`:
+    /// counts are seeded with the cluster sizes of the fresh assignment.
+    pub fn new(table: &[f32], n: usize, d: usize, quant: &dyn Quantizer) -> DriftTracker {
+        assert_eq!(table.len(), n * d, "table must be [n, d]");
+        let k = quant.k();
+        let mut counts1 = vec![0u64; k];
+        let mut counts2 = vec![0u64; k];
+        let (a1, a2) = quant.codes();
+        for i in 0..n {
+            counts1[a1[i] as usize] += 1;
+            counts2[a2[i] as usize] += 1;
+        }
+        let mean_row_norm = if n == 0 {
+            0.0
+        } else {
+            ((0..n).map(|i| norm2(&table[i * d..(i + 1) * d]) as f64).sum::<f64>() / n as f64)
+                as f32
+        };
+        DriftTracker {
+            n,
+            d,
+            snapshot: table.to_vec(),
+            counts1,
+            counts2,
+            cum_moved: 0,
+            mean_row_norm,
+        }
+    }
+
+    /// Number of classes tracked.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Embedding dimension tracked.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Rows of `table` that moved more than `tolerance` (ℓ2) since their
+    /// last assignment. O(N·D) scan; tolerance 0 returns every row that
+    /// moved at all (bitwise-identical rows never drift).
+    pub fn drifted(&self, table: &[f32], tolerance: f32) -> Vec<u32> {
+        assert_eq!(table.len(), self.n * self.d, "table must be [n, d]");
+        let tol2 = tolerance * tolerance;
+        let d = self.d;
+        (0..self.n)
+            .filter(|&i| {
+                dist2(&table[i * d..(i + 1) * d], &self.snapshot[i * d..(i + 1) * d]) > tol2
+            })
+            .map(|i| i as u32)
+            .collect()
+    }
+
+    /// Record that `rows` of `table` were re-assessed: their snapshot rows
+    /// advance to the current embeddings.
+    pub fn note_refreshed(&mut self, table: &[f32], rows: &[u32]) {
+        let d = self.d;
+        for &r in rows {
+            let i = r as usize;
+            self.snapshot[i * d..(i + 1) * d].copy_from_slice(&table[i * d..(i + 1) * d]);
+        }
+    }
+
+    /// Record `count` bucket moves (feeds [`DriftTracker::moved_frac`]).
+    pub fn note_moved(&mut self, count: usize) {
+        self.cum_moved += count;
+    }
+
+    /// Fraction of classes that changed bucket since the last full rebuild
+    /// (may exceed 1 when classes move repeatedly — that is the point: it
+    /// measures accumulated churn, not unique movers).
+    pub fn moved_frac(&self) -> f32 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.cum_moved as f32 / self.n as f32
+    }
+
+    /// The Auto policy's drift tolerance: [`AUTO_TOLERANCE_FRAC`] of the
+    /// mean row norm at the last full rebuild.
+    pub fn auto_tolerance(&self) -> f32 {
+        AUTO_TOLERANCE_FRAC * self.mean_row_norm
+    }
+
+    /// Mutable access to the two per-codeword count vectors (the
+    /// mini-batch k-means learning-rate state handed to
+    /// [`crate::quant::Quantizer::refine`]).
+    pub fn counts_mut(&mut self) -> (&mut [u64], &mut [u64]) {
+        (&mut self.counts1, &mut self.counts2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::ProductQuantizer;
+    use crate::util::check::rand_matrix;
+    use crate::util::Rng;
+
+    fn setup(n: usize, d: usize) -> (Vec<f32>, ProductQuantizer) {
+        let mut rng = Rng::new(3);
+        let table = rand_matrix(&mut rng, n, d, 1.0);
+        let q = ProductQuantizer::build(&table, n, d, 4, 10, &mut rng);
+        (table, q)
+    }
+
+    #[test]
+    fn unchanged_table_never_drifts() {
+        let (table, q) = setup(40, 8);
+        let t = DriftTracker::new(&table, 40, 8, &q);
+        assert!(t.drifted(&table, 0.0).is_empty());
+        assert_eq!(t.n(), 40);
+        assert_eq!(t.d(), 8);
+    }
+
+    #[test]
+    fn drift_scan_respects_tolerance() {
+        let (mut table, q) = setup(40, 8);
+        let t = DriftTracker::new(&table, 40, 8, &q);
+        // move row 7 by exactly 0.5 in one coordinate
+        table[7 * 8] += 0.5;
+        assert_eq!(t.drifted(&table, 0.0), vec![7]);
+        assert_eq!(t.drifted(&table, 0.49), vec![7]);
+        assert!(t.drifted(&table, 0.51).is_empty());
+    }
+
+    #[test]
+    fn note_refreshed_clears_drift_and_moves_accumulate() {
+        let (mut table, q) = setup(30, 6);
+        let mut t = DriftTracker::new(&table, 30, 6, &q);
+        table[0] += 1.0;
+        table[6] += 1.0;
+        let drifted = t.drifted(&table, 0.0);
+        assert_eq!(drifted, vec![0, 1]);
+        t.note_refreshed(&table, &drifted);
+        assert!(t.drifted(&table, 0.0).is_empty());
+        assert_eq!(t.moved_frac(), 0.0);
+        t.note_moved(15);
+        assert!((t.moved_frac() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn counts_seeded_with_cluster_sizes() {
+        let (table, q) = setup(50, 8);
+        let mut t = DriftTracker::new(&table, 50, 8, &q);
+        let (c1, c2) = t.counts_mut();
+        assert_eq!(c1.iter().sum::<u64>(), 50);
+        assert_eq!(c2.iter().sum::<u64>(), 50);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        assert_eq!(RefreshPolicy::parse("full"), Some(RefreshPolicy::Full));
+        assert_eq!(RefreshPolicy::parse("auto"), Some(RefreshPolicy::Auto));
+        assert_eq!(
+            RefreshPolicy::parse("incremental"),
+            Some(RefreshPolicy::Incremental { tolerance: 0.0, refine_iters: 1 })
+        );
+        assert_eq!(
+            RefreshPolicy::parse("incremental:0.5"),
+            Some(RefreshPolicy::Incremental { tolerance: 0.5, refine_iters: 1 })
+        );
+        assert_eq!(
+            RefreshPolicy::parse("incremental:0.25:3"),
+            Some(RefreshPolicy::Incremental { tolerance: 0.25, refine_iters: 3 })
+        );
+        assert_eq!(RefreshPolicy::parse("incremental:0.25:3:9"), None);
+        assert_eq!(RefreshPolicy::parse("nope"), None);
+        assert_eq!(RefreshPolicy::parse("incremental:abc"), None);
+        assert_eq!(RefreshPolicy::Auto.name(), "auto");
+        assert_eq!(
+            RefreshPolicy::Incremental { tolerance: 0.0, refine_iters: 1 }.name(),
+            "incremental"
+        );
+    }
+
+    #[test]
+    fn outcome_constructors() {
+        let f = RefreshOutcome::full_rebuild(10);
+        assert!(f.full);
+        assert_eq!((f.scanned, f.drifted, f.reassigned), (10, 10, 10));
+        let i = RefreshOutcome::incremental(10, 3, 1);
+        assert!(!i.full);
+        assert_eq!((i.scanned, i.drifted, i.reassigned), (10, 3, 1));
+    }
+}

@@ -1,5 +1,9 @@
-//! Inverted multi-index (Babenko & Lempitsky 2014) over a quantizer.
+//! Inverted multi-index (Babenko & Lempitsky 2014) over a quantizer, plus
+//! the incremental maintenance layer (drift tracking + refresh policy)
+//! that keeps it close to the live embeddings without a cold rebuild.
 
+pub mod drift;
 pub mod multi_index;
 
+pub use drift::{DriftTracker, RefreshOutcome, RefreshPolicy};
 pub use multi_index::InvertedMultiIndex;

@@ -8,8 +8,10 @@
 
 use crate::quant::Quantizer;
 
+/// CSR layout of the K² buckets Ω_{k1,k2} over N classes.
 #[derive(Clone, Debug)]
 pub struct InvertedMultiIndex {
+    /// codewords per codebook (the grid is K×K)
     pub k: usize,
     /// CSR offsets: bucket b = k1*K + k2 owns members[offsets[b]..offsets[b+1]]
     pub offsets: Vec<u32>,
@@ -57,6 +59,7 @@ impl InvertedMultiIndex {
         InvertedMultiIndex { k, offsets, members, sizes, log_sizes }
     }
 
+    /// Bucket members by (stage-1, stage-2) codeword pair.
     #[inline]
     pub fn bucket(&self, k1: usize, k2: usize) -> &[u32] {
         self.bucket_flat(k1 * self.k + k2)
@@ -69,11 +72,13 @@ impl InvertedMultiIndex {
         &self.members[self.offsets[b] as usize..self.offsets[b + 1] as usize]
     }
 
+    /// |Ω_{k1,k2}| by (stage-1, stage-2) codeword pair.
     #[inline]
     pub fn bucket_size(&self, k1: usize, k2: usize) -> usize {
         self.sizes[k1 * self.k + k2] as usize
     }
 
+    /// Number of classes N the index partitions.
     pub fn n_classes(&self) -> usize {
         self.members.len()
     }
@@ -86,6 +91,58 @@ impl InvertedMultiIndex {
     /// Largest bucket size (diagnostic: worst-case uniform-stage bias).
     pub fn max_bucket(&self) -> usize {
         self.sizes.iter().cloned().fold(0.0, f32::max) as usize
+    }
+
+    /// Largest bucket over the mean occupied bucket (1.0 = perfectly
+    /// balanced). The Auto refresh policy falls back to a full rebuild
+    /// when this crosses [`crate::index::drift::AUTO_MAX_IMBALANCE`].
+    pub fn imbalance(&self) -> f32 {
+        let occ = self.occupied_buckets();
+        if occ == 0 {
+            return 0.0;
+        }
+        let mean = self.n_classes() as f32 / occ as f32;
+        self.max_bucket() as f32 / mean
+    }
+
+    /// Recompute bucket membership from the quantizer's *current* codes in
+    /// one O(N + K²) counting-sort pass, reusing the existing CSR buffers
+    /// — the in-place half of an incremental refresh (no k-means retrain,
+    /// no reallocation of `offsets`/`members`). Finishes by refreshing the
+    /// bucket masses via [`InvertedMultiIndex::update_bucket_masses`].
+    pub fn reassign(&mut self, a1: &[u32], a2: &[u32]) {
+        let n = self.members.len();
+        assert_eq!(a1.len(), n, "stage-1 codes must cover all classes");
+        assert_eq!(a2.len(), n, "stage-2 codes must cover all classes");
+        let k = self.k;
+        let nb = k * k;
+
+        let mut counts = vec![0u32; nb];
+        for i in 0..n {
+            counts[a1[i] as usize * k + a2[i] as usize] += 1;
+        }
+        self.offsets[0] = 0;
+        for b in 0..nb {
+            self.offsets[b + 1] = self.offsets[b] + counts[b];
+        }
+        let mut cursor = self.offsets[..nb].to_vec();
+        for i in 0..n {
+            let b = a1[i] as usize * k + a2[i] as usize;
+            self.members[cursor[b] as usize] = i as u32;
+            cursor[b] += 1;
+        }
+        self.update_bucket_masses();
+    }
+
+    /// Recompute `sizes` / `log_sizes` (the ω bucket masses the MIDX joint
+    /// proposal multiplies in) from the CSR offsets.
+    pub fn update_bucket_masses(&mut self) {
+        for b in 0..self.k * self.k {
+            let c = self.offsets[b + 1] - self.offsets[b];
+            self.sizes[b] = c as f32;
+            self.log_sizes[b] =
+                if c == 0 { f32::NEG_INFINITY } else { (c as f32).ln() };
+        }
     }
 }
 
@@ -160,6 +217,67 @@ mod tests {
                 assert!((idx.log_sizes[b] - idx.sizes[b].ln()).abs() < 1e-6);
             }
         }
+    }
+
+    #[test]
+    fn reassign_matches_a_fresh_build() {
+        // moving some classes to new codeword pairs and calling reassign
+        // must produce exactly the index a cold build over the new codes
+        // would — same partition, same sizes, same log masses.
+        for_all("reassign == rebuild", |rng, case| {
+            let n = 30 + rng.below(80);
+            let k = 2 + rng.below(6);
+            let (mut idx, table) = build_index(1000 + case, n, 6, k, case % 2 == 0);
+            let d = 6;
+            // derive fresh codes by re-quantizing a perturbed table
+            let mut table2 = table.clone();
+            for x in table2.iter_mut() {
+                *x += rng.normal_f32(0.5);
+            }
+            let q2 = ProductQuantizer::build(&table2, n, d, idx.k, 10, &mut Rng::new(case));
+            let (a1, a2) = q2.codes();
+            idx.reassign(a1, a2);
+            let want = InvertedMultiIndex::build(&q2, n);
+            if idx.offsets != want.offsets {
+                return Err("offsets diverge".into());
+            }
+            if idx.sizes != want.sizes {
+                return Err("sizes diverge".into());
+            }
+            for b in 0..idx.k * idx.k {
+                let (l, w) = (idx.log_sizes[b], want.log_sizes[b]);
+                if l != w && !(l.is_infinite() && w.is_infinite()) {
+                    return Err(format!("log_sizes diverge at {b}: {l} vs {w}"));
+                }
+                let mut got: Vec<u32> = idx.bucket_flat(b).to_vec();
+                let mut exp: Vec<u32> = want.bucket_flat(b).to_vec();
+                got.sort_unstable();
+                exp.sort_unstable();
+                if got != exp {
+                    return Err(format!("bucket {b} members diverge"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn imbalance_diagnostic() {
+        // single occupied bucket: max == n, mean occupied == n ⇒ 1.0
+        let mut rng = Rng::new(4);
+        let row: Vec<f32> = (0..6).map(|j| 0.1 * (j as f32 + 1.0)).collect();
+        let mut table = Vec::new();
+        for _ in 0..20 {
+            table.extend_from_slice(&row);
+        }
+        let q = ProductQuantizer::build(&table, 20, 6, 4, 5, &mut rng);
+        let idx = InvertedMultiIndex::build(&q, 20);
+        assert_eq!(idx.occupied_buckets(), 1);
+        assert!((idx.imbalance() - 1.0).abs() < 1e-6);
+
+        // balanced random index: imbalance stays modest and ≥ 1
+        let (idx2, _) = build_index(5, 200, 6, 4, true);
+        assert!(idx2.imbalance() >= 1.0 - 1e-6);
     }
 
     #[test]

@@ -39,13 +39,27 @@
 //! * the per-query [`sampler::Sampler`] adapter survives for the
 //!   stats/analysis paths (`proposal_dist`, divergence/bias estimators).
 //!
+//! ## Incremental index maintenance
+//!
+//! The paper refreshes the MIDX index with a cold k-means retrain + index
+//! rebuild before every epoch (§4.4). This crate additionally provides a
+//! drift-driven **incremental** path ([`index::drift`]): track how far
+//! each class embedding moved since its last assignment, re-assign only
+//! the rows past a tolerance, refine codewords with mini-batch k-means
+//! steps, and repack the CSR + bucket masses in place — falling back to a
+//! cold rebuild only when cumulative churn or bucket imbalance crosses a
+//! measured threshold. Selected per run via `--refresh
+//! full|incremental|auto` ([`index::RefreshPolicy`] →
+//! [`train::TrainConfig`] → [`sampler::Sampler::rebuild_with`]); the
+//! trainer books cold vs incremental maintenance time separately.
+//!
 //! ## Module map
 //!
 //! | module        | role |
 //! |---------------|------|
 //! | `sampler`     | proposal distributions; shared cores, batched engine |
 //! | `quant`       | PQ/RQ codebook learning (`&self` score paths) |
-//! | `index`       | inverted multi-index (CSR over K² buckets) |
+//! | `index`       | inverted multi-index (CSR over K² buckets) + drift-driven refresh |
 //! | `train`       | trainer (pipelined hot loop), Adam, params, metrics |
 //! | `coordinator` | experiment driver, prefetch + overlap pipeline, reports |
 //! | `stats`       | KL/Rényi divergence, gradient bias vs paper bounds |
@@ -58,6 +72,10 @@
 // mirror the paper's formulas); hot-path signatures mirror the [B,D]/[B,M]
 // artifact ABI rather than bundling structs.
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+// Every exported item carries rustdoc; CI's docs leg runs rustdoc with
+// `-D warnings`, so a missing doc on a new public item fails the build
+// there rather than rotting silently.
+#![warn(missing_docs)]
 
 pub mod bench_tables;
 pub mod coordinator;

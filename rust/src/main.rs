@@ -17,6 +17,7 @@ use anyhow::{anyhow, bail, Result};
 
 use midx::bench_tables::{run_bench, Budget};
 use midx::coordinator::{fmt, run_experiment, ExperimentSpec, Table};
+use midx::index::RefreshPolicy;
 use midx::runtime::{list_models, load_model};
 use midx::sampler::SamplerKind;
 use midx::train::TrainConfig;
@@ -73,6 +74,14 @@ const USAGE: &str = "usage:
              [--epochs N] [--steps N] [--lr F] [--seed N] [--k N] [--eval-cap N] [--patience N]
              [--threads N]   (persistent sampling worker pool size, fixed for the whole
                               run; 0 = available parallelism, the default)
+             [--refresh full|incremental|auto]
+                             (between-epoch index maintenance: full = cold k-means
+                              retrain + rebuild every epoch, the default; incremental =
+                              drift-driven reassignment + mini-batch codeword refinement;
+                              auto = incremental while healthy, full past the drift /
+                              imbalance thresholds)
+             [--refresh-tol F] [--refresh-iters N]
+                             (incremental knobs: l2 drift tolerance, refine passes)
   midx bench table1|table2|table3|table4|table5|table7|table9|fig2|fig3|fig45|fig6|fig7|all [--quick]
              [--epochs N] [--steps N] [--eval-cap N]";
 
@@ -124,6 +133,23 @@ fn cmd_train(args: &Args) -> Result<()> {
         "full" => None,
         s => Some(SamplerKind::parse(s).ok_or_else(|| anyhow!("unknown sampler '{s}'"))?),
     };
+    let mut refresh = match args.get("refresh") {
+        None => RefreshPolicy::Full,
+        Some(s) => {
+            RefreshPolicy::parse(s).ok_or_else(|| anyhow!("unknown refresh policy '{s}'"))?
+        }
+    };
+    match refresh {
+        RefreshPolicy::Incremental { ref mut tolerance, ref mut refine_iters } => {
+            *tolerance = args.f32_or("refresh-tol", *tolerance);
+            *refine_iters = args.usize_or("refresh-iters", *refine_iters);
+        }
+        _ if args.has("refresh-tol") || args.has("refresh-iters") => bail!(
+            "--refresh-tol/--refresh-iters only apply to --refresh incremental \
+             (auto derives its tolerance from the embedding scale)"
+        ),
+        _ => {}
+    }
     let mut spec = ExperimentSpec::new(model, sampler);
     spec.k_codewords = args.usize_or("k", 32);
     spec.train = TrainConfig {
@@ -137,6 +163,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         // pool-lifetime worker count (0 = available parallelism): the
         // trainer spawns its worker pool once and reuses it every step
         threads: args.usize_or("threads", 0),
+        refresh,
         verbose: true,
     };
     let res = run_experiment(&spec)?;
@@ -151,7 +178,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         "sample ms/step".into(),
         fmt(res.timing.sample_s * 1e3 / res.timing.steps.max(1) as f64),
     ]);
+    t.row(vec!["refresh policy".into(), refresh.name().into()]);
     t.row(vec!["rebuild s total".into(), fmt(res.timing.rebuild_s)]);
+    t.row(vec!["refresh s total".into(), fmt(res.timing.refresh_s)]);
+    t.row(vec![
+        "rebuilds full/incr".into(),
+        format!("{}/{}", res.timing.full_rebuilds, res.timing.incr_refreshes),
+    ]);
+    t.row(vec!["reassigned items".into(), res.timing.reassigned.to_string()]);
     print!("{}", t.render_text());
     Ok(())
 }

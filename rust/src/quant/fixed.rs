@@ -4,13 +4,21 @@
 //! this struct just assigns every class to its nearest codeword pair and
 //! serves the standard `Quantizer` interface.
 
-use super::{QuantKind, Quantizer};
-use crate::util::math::{dist2, dot};
+use super::{
+    nearest_codeword as nearest, pq_assign_row, pq_refine, rq_assign_row, rq_refine, QuantKind,
+    Quantizer,
+};
+use crate::util::math::dot;
 
+/// Quantizer serving externally-provided codebooks (MIDX-Learn): nearest
+/// assignment + the standard score/reconstruct interface, no k-means.
 #[derive(Clone, Debug)]
 pub struct FixedQuantizer {
+    /// which family's layout the codebooks use
     pub kind: QuantKind,
+    /// codewords per codebook
     pub k: usize,
+    /// full embedding dimension
     pub d: usize,
     d1: usize,
     c1: Vec<f32>,
@@ -18,20 +26,6 @@ pub struct FixedQuantizer {
     assign1: Vec<u32>,
     assign2: Vec<u32>,
     distortion: f64,
-}
-
-fn nearest(x: &[f32], codebook: &[f32], dc: usize) -> (u32, f32) {
-    let k = codebook.len() / dc;
-    let mut best = 0u32;
-    let mut best_d = f32::INFINITY;
-    for c in 0..k {
-        let dd = dist2(x, &codebook[c * dc..(c + 1) * dc]);
-        if dd < best_d {
-            best_d = dd;
-            best = c as u32;
-        }
-    }
-    (best, best_d)
 }
 
 impl FixedQuantizer {
@@ -139,6 +133,35 @@ impl Quantizer for FixedQuantizer {
             QuantKind::Residual => "rq-fixed",
         }
     }
+    fn assign_row(&self, row: &[f32]) -> (u32, u32) {
+        match self.kind {
+            QuantKind::Product => pq_assign_row(row, &self.c1, &self.c2, self.d1),
+            QuantKind::Residual => rq_assign_row(row, &self.c1, &self.c2),
+        }
+    }
+    fn set_code(&mut self, i: usize, a1: u32, a2: u32) {
+        self.assign1[i] = a1;
+        self.assign2[i] = a2;
+    }
+    fn refine(
+        &mut self,
+        table: &[f32],
+        rows: &[u32],
+        iters: usize,
+        counts1: &mut [u64],
+        counts2: &mut [u64],
+    ) -> bool {
+        let (d, d1) = (self.d, self.d1);
+        match self.kind {
+            QuantKind::Product => {
+                pq_refine(&mut self.c1, &mut self.c2, d1, table, d, rows, iters, counts1, counts2)
+            }
+            QuantKind::Residual => {
+                rq_refine(&mut self.c1, &mut self.c2, table, d, rows, iters, counts1, counts2)
+            }
+        }
+        true
+    }
 }
 
 #[cfg(test)]
@@ -146,6 +169,7 @@ mod tests {
     use super::*;
     use crate::quant::ProductQuantizer;
     use crate::util::check::rand_matrix;
+    use crate::util::math::dist2;
     use crate::util::Rng;
 
     #[test]

@@ -5,18 +5,55 @@
 use crate::util::math::dist2;
 use crate::util::Rng;
 
+/// Output of one [`kmeans`] run.
 #[derive(Clone, Debug)]
 pub struct KMeans {
     /// [k, d] centroids, row-major.
     pub centroids: Vec<f32>,
     /// assignment of each input row to its nearest centroid.
     pub assign: Vec<u32>,
+    /// number of centroids (clamped to the row count).
     pub k: usize,
+    /// dimensionality of the clustered rows.
     pub d: usize,
     /// sum of squared distances to assigned centroids (the distortion E of
     /// paper §5.1.3).
     pub inertia: f64,
+    /// Lloyd's iterations actually run before convergence/limit.
     pub iterations_run: usize,
+}
+
+/// One mini-batch k-means update (Sculley 2010) for a single row: find the
+/// row's nearest centroid, bump that centroid's `counts` entry, and move it
+/// toward the row with the per-centroid learning rate 1/count. Returns the
+/// updated centroid's index.
+///
+/// This is the codeword-refinement primitive of the incremental index
+/// refresh ([`crate::index::drift`]): counts seeded with the build-time
+/// cluster sizes make each nudge continue the Lloyd's trajectory (a
+/// running mean) instead of letting one drifted row teleport a codeword.
+pub fn refine_step(centroids: &mut [f32], counts: &mut [u64], row: &[f32]) -> u32 {
+    let d = row.len();
+    debug_assert!(d > 0 && centroids.len() % d == 0);
+    let k = centroids.len() / d;
+    debug_assert_eq!(counts.len(), k, "one count per centroid");
+
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    for c in 0..k {
+        let dd = dist2(row, &centroids[c * d..(c + 1) * d]);
+        if dd < best_d {
+            best_d = dd;
+            best = c;
+        }
+    }
+    counts[best] += 1;
+    let lr = 1.0 / counts[best] as f32;
+    for j in 0..d {
+        let cj = &mut centroids[best * d + j];
+        *cj += lr * (row[j] - *cj);
+    }
+    best as u32
 }
 
 /// k-means++ seeding: spread initial centroids proportionally to squared
@@ -211,6 +248,34 @@ mod tests {
                 Err(format!("k=8 inertia {} > k=2 {}", k8.inertia, k2.inertia))
             }
         });
+    }
+
+    #[test]
+    fn refine_step_moves_nearest_centroid_toward_row() {
+        // two centroids; the row is nearest to the second
+        let mut c = vec![0.0f32, 0.0, 10.0, 10.0];
+        let mut counts = vec![4u64, 4];
+        let row = [12.0f32, 12.0];
+        let hit = refine_step(&mut c, &mut counts, &row);
+        assert_eq!(hit, 1);
+        assert_eq!(counts, vec![4, 5]);
+        // lr = 1/5: centroid moves 2/5 of the way from 10 toward 12
+        assert!((c[2] - 10.4).abs() < 1e-6 && (c[3] - 10.4).abs() < 1e-6);
+        // untouched centroid stays put
+        assert_eq!(&c[..2], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn refine_step_converges_to_running_mean() {
+        // feeding the same centroid a stream of rows converges it to their
+        // mean (counts continue the 1/n running-average recursion)
+        let mut c = vec![0.0f32];
+        let mut counts = vec![0u64];
+        for x in [4.0f32, 8.0, 6.0, 6.0] {
+            refine_step(&mut c, &mut counts, &[x]);
+        }
+        assert!((c[0] - 6.0).abs() < 1e-5, "got {}", c[0]);
+        assert_eq!(counts[0], 4);
     }
 
     #[test]

@@ -50,11 +50,130 @@ pub trait Quantizer {
     fn codebook2(&self) -> &[f32];
     /// Quantizer family name ("pq" | "rq").
     fn family(&self) -> &'static str;
+
+    // --- incremental maintenance (drift-driven index refresh) ----------
+
+    /// Nearest-codeword (re)assignment of one embedding row under the same
+    /// metric the builder used: per-subspace Euclidean for PQ, greedy
+    /// stage-then-residual for RQ. Drives the incremental index refresh.
+    fn assign_row(&self, row: &[f32]) -> (u32, u32);
+
+    /// Overwrite the stored codeword assignment of class `i` with a pair
+    /// computed by [`Quantizer::assign_row`]. Note: [`Quantizer::distortion`]
+    /// keeps reporting the value measured at the last full build —
+    /// incremental moves do not re-derive it.
+    fn set_code(&mut self, i: usize, a1: u32, a2: u32);
+
+    /// Mini-batch codeword refinement: `iters` passes over `rows` of
+    /// `table` ([n, d] row-major), each row nudging its nearest codeword
+    /// toward itself with a per-codeword 1/count learning rate
+    /// ([`kmeans::refine_step`]). `counts1`/`counts2` are the persistent
+    /// per-codeword step-size state (one entry per codeword, owned by the
+    /// caller so it survives across refreshes). Returns false when the
+    /// quantizer has no learnable codebooks.
+    fn refine(
+        &mut self,
+        table: &[f32],
+        rows: &[u32],
+        iters: usize,
+        counts1: &mut [u64],
+        counts2: &mut [u64],
+    ) -> bool;
 }
 
+/// Index (and squared distance) of the codeword in `codebook` ([K, dc]
+/// row-major) nearest to `x` — the shared primitive behind build-time
+/// assignment, [`FixedQuantizer`], and incremental reassignment.
+pub(crate) fn nearest_codeword(x: &[f32], codebook: &[f32], dc: usize) -> (u32, f32) {
+    let k = codebook.len() / dc;
+    let mut best = 0u32;
+    let mut best_d = f32::INFINITY;
+    for c in 0..k {
+        let dd = crate::util::math::dist2(x, &codebook[c * dc..(c + 1) * dc]);
+        if dd < best_d {
+            best_d = dd;
+            best = c as u32;
+        }
+    }
+    (best, best_d)
+}
+
+/// Nearest-codeword pair under PQ geometry: each subspace independently.
+/// Shared by [`ProductQuantizer`] and [`FixedQuantizer`] so the families
+/// cannot silently diverge.
+pub(crate) fn pq_assign_row(row: &[f32], c1: &[f32], c2: &[f32], d1: usize) -> (u32, u32) {
+    let d2 = row.len() - d1;
+    let (a1, _) = nearest_codeword(&row[..d1], c1, d1);
+    let (a2, _) = nearest_codeword(&row[d1..], c2, d2);
+    (a1, a2)
+}
+
+/// Nearest-codeword pair under RQ geometry: level 1 on the row, level 2
+/// on the residual (the same greedy the builder uses).
+pub(crate) fn rq_assign_row(row: &[f32], c1: &[f32], c2: &[f32]) -> (u32, u32) {
+    let d = row.len();
+    let (a1, _) = nearest_codeword(row, c1, d);
+    let mut resid = vec![0.0f32; d];
+    for j in 0..d {
+        resid[j] = row[j] - c1[a1 as usize * d + j];
+    }
+    let (a2, _) = nearest_codeword(&resid, c2, d);
+    (a1, a2)
+}
+
+/// Mini-batch refinement passes under PQ geometry (each row nudges one
+/// codeword per subspace).
+pub(crate) fn pq_refine(
+    c1: &mut [f32],
+    c2: &mut [f32],
+    d1: usize,
+    table: &[f32],
+    d: usize,
+    rows: &[u32],
+    iters: usize,
+    counts1: &mut [u64],
+    counts2: &mut [u64],
+) {
+    for _ in 0..iters {
+        for &r in rows {
+            let row = &table[r as usize * d..(r as usize + 1) * d];
+            kmeans::refine_step(c1, counts1, &row[..d1]);
+            kmeans::refine_step(c2, counts2, &row[d1..]);
+        }
+    }
+}
+
+/// Mini-batch refinement passes under RQ geometry (level 2 sees the
+/// residual vs the just-updated level-1 codeword).
+pub(crate) fn rq_refine(
+    c1: &mut [f32],
+    c2: &mut [f32],
+    table: &[f32],
+    d: usize,
+    rows: &[u32],
+    iters: usize,
+    counts1: &mut [u64],
+    counts2: &mut [u64],
+) {
+    let mut resid = vec![0.0f32; d];
+    for _ in 0..iters {
+        for &r in rows {
+            let row = &table[r as usize * d..(r as usize + 1) * d];
+            let c = kmeans::refine_step(c1, counts1, row) as usize;
+            for j in 0..d {
+                resid[j] = row[j] - c1[c * d + j];
+            }
+            kmeans::refine_step(c2, counts2, &resid);
+        }
+    }
+}
+
+/// Two-stage quantizer family selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum QuantKind {
+    /// Product quantization: split the space, one codebook per half.
     Product,
+    /// Residual quantization: stage 2 clusters stage-1 residuals.
     Residual,
 }
 

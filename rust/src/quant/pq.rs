@@ -2,13 +2,16 @@
 //! structure underneath the standard inverted multi-index and MIDX-pq.
 
 use super::kmeans::kmeans;
-use super::Quantizer;
+use super::{pq_assign_row, pq_refine, Quantizer};
 use crate::util::math::dot;
 use crate::util::Rng;
 
+/// Two-codebook product quantizer over a class-embedding table.
 #[derive(Clone, Debug)]
 pub struct ProductQuantizer {
+    /// codewords per codebook
     pub k: usize,
+    /// full embedding dimension
     pub d: usize,
     /// first-half dimension (d/2, remainder goes to the second half)
     pub d1: usize,
@@ -16,8 +19,11 @@ pub struct ProductQuantizer {
     pub c1: Vec<f32>,
     /// [k, d2] codebook over the second subspace
     pub c2: Vec<f32>,
+    /// stage-1 code per class
     pub assign1: Vec<u32>,
+    /// stage-2 code per class
     pub assign2: Vec<u32>,
+    /// total squared reconstruction error at build time
     pub distortion: f64,
 }
 
@@ -94,6 +100,25 @@ impl Quantizer for ProductQuantizer {
     }
     fn family(&self) -> &'static str {
         "pq"
+    }
+    fn assign_row(&self, row: &[f32]) -> (u32, u32) {
+        pq_assign_row(row, &self.c1, &self.c2, self.d1)
+    }
+    fn set_code(&mut self, i: usize, a1: u32, a2: u32) {
+        self.assign1[i] = a1;
+        self.assign2[i] = a2;
+    }
+    fn refine(
+        &mut self,
+        table: &[f32],
+        rows: &[u32],
+        iters: usize,
+        counts1: &mut [u64],
+        counts2: &mut [u64],
+    ) -> bool {
+        let d = self.d;
+        pq_refine(&mut self.c1, &mut self.c2, self.d1, table, d, rows, iters, counts1, counts2);
+        true
     }
 }
 

@@ -7,24 +7,31 @@
 //! and by Theorem 5 a proportionally tighter KL bound.
 
 use super::kmeans::kmeans;
-use super::Quantizer;
+use super::{rq_assign_row, rq_refine, Quantizer};
 use crate::util::math::dot;
 use crate::util::Rng;
 
+/// Two-level residual quantizer over a class-embedding table.
 #[derive(Clone, Debug)]
 pub struct ResidualQuantizer {
+    /// codewords per level
     pub k: usize,
+    /// embedding dimension (both levels see the full space)
     pub d: usize,
     /// [k, d] level-1 codebook
     pub c1: Vec<f32>,
     /// [k, d] level-2 codebook (over residuals)
     pub c2: Vec<f32>,
+    /// level-1 code per class
     pub assign1: Vec<u32>,
+    /// level-2 code per class
     pub assign2: Vec<u32>,
+    /// total squared reconstruction error at build time (after BOTH levels)
     pub distortion: f64,
 }
 
 impl ResidualQuantizer {
+    /// Learn both levels from the class-embedding table [n, d].
     pub fn build(table: &[f32], n: usize, d: usize, k: usize, iters: usize, rng: &mut Rng) -> Self {
         let km1 = kmeans(table, n, d, k, iters, rng);
 
@@ -88,6 +95,24 @@ impl Quantizer for ResidualQuantizer {
     }
     fn family(&self) -> &'static str {
         "rq"
+    }
+    fn assign_row(&self, row: &[f32]) -> (u32, u32) {
+        rq_assign_row(row, &self.c1, &self.c2)
+    }
+    fn set_code(&mut self, i: usize, a1: u32, a2: u32) {
+        self.assign1[i] = a1;
+        self.assign2[i] = a2;
+    }
+    fn refine(
+        &mut self,
+        table: &[f32],
+        rows: &[u32],
+        iters: usize,
+        counts1: &mut [u64],
+        counts2: &mut [u64],
+    ) -> bool {
+        rq_refine(&mut self.c1, &mut self.c2, table, self.d, rows, iters, counts1, counts2);
+        true
     }
 }
 

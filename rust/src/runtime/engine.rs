@@ -11,6 +11,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
+/// A PJRT client wrapper: compiles HLO text into executables.
 pub struct Engine {
     client: PjRtClient,
 }
@@ -22,6 +23,7 @@ impl Engine {
         Ok(Engine { client })
     }
 
+    /// Backend platform name (diagnostics).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -39,6 +41,7 @@ impl Engine {
     }
 }
 
+/// One compiled artifact, ready to execute repeatedly.
 pub struct Executable {
     exe: PjRtLoadedExecutable,
     name: String,
@@ -73,7 +76,7 @@ pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
     Ok(Literal::vec1(data).reshape(&dims_i64)?)
 }
 
-/// Flatten a literal into Vec<f32>.
+/// Flatten a literal into `Vec<f32>`.
 pub fn to_f32(lit: &Literal) -> Result<Vec<f32>> {
     Ok(lit.to_vec::<f32>()?)
 }

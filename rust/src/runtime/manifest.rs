@@ -11,61 +11,90 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::util::Json;
 
+/// One model parameter's shape and init scheme.
 #[derive(Clone, Debug)]
 pub struct ParamSpec {
+    /// parameter name (manifest order defines the positional ABI)
     pub name: String,
+    /// tensor shape
     pub shape: Vec<usize>,
-    /// "normal:<std>" | "zeros" | "ones"
+    /// "normal:\<std\>" | "zeros" | "ones"
     pub init: String,
 }
 
 impl ParamSpec {
+    /// Element count of the tensor.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
 }
 
+/// One executable input's name, dtype and shape.
 #[derive(Clone, Debug)]
 pub struct IoSpec {
+    /// input name
     pub name: String,
-    pub dtype: String, // "f32" | "i32"
+    /// "f32" | "i32"
+    pub dtype: String,
+    /// input shape
     pub shape: Vec<usize>,
 }
 
+/// Every fixed dimension the artifacts were lowered with.
 #[derive(Clone, Debug, Default)]
 pub struct Dims {
+    /// number of classes N (softmax width)
     pub n_classes: usize,
+    /// class-embedding dimension D
     pub d: usize,
+    /// encoder hidden width
     pub hidden: usize,
+    /// encoder layers
     pub layers: usize,
+    /// sequence length T (sequence tasks)
     pub seq_len: usize,
+    /// batch rows B
     pub batch: usize,
+    /// negatives per query M
     pub m_neg: usize,
+    /// query rows per batch Bq (B·T for sequences, B for bags)
     pub bq: usize,
+    /// nonzeros per bag sample (XMC)
     pub bag_nnz: usize,
+    /// hashed feature vocabulary (XMC)
     pub bag_features: usize,
+    /// MIDX codebook size baked into codebook artifacts
     pub k_codewords: usize,
 }
 
 /// Artifact filenames present in a model directory.
 #[derive(Clone, Debug, Default)]
 pub struct ArtifactSet {
+    /// tag ("encode", "train_step", ...) → filename
     pub files: BTreeMap<String, String>,
 }
 
 impl ArtifactSet {
+    /// True when an artifact with this tag is available.
     pub fn has(&self, tag: &str) -> bool {
         self.files.contains_key(tag)
     }
 }
 
+/// One model's manifest: the rust↔python ABI contract.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// model name (artifact directory name)
     pub name: String,
+    /// encoder architecture ("lstm", "gru", "bag", ...)
     pub arch: String,
+    /// every fixed dimension the artifacts were lowered with
     pub dims: Dims,
+    /// parameter specs, in positional ABI order
     pub params: Vec<ParamSpec>,
+    /// encoder input specs, in positional ABI order
     pub inputs: Vec<IoSpec>,
+    /// available executables
     pub artifacts: ArtifactSet,
     /// directory the manifest was loaded from
     pub dir: PathBuf,
@@ -80,6 +109,7 @@ fn shape_of(j: &Json) -> Result<Vec<usize>> {
 }
 
 impl Manifest {
+    /// Load and validate `manifest.json` from a model directory.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -150,6 +180,7 @@ impl Manifest {
         })
     }
 
+    /// Absolute path of the artifact with this tag (error if absent).
     pub fn artifact_path(&self, tag: &str) -> Result<PathBuf> {
         let f = self
             .artifacts
@@ -165,13 +196,14 @@ impl Manifest {
     }
 }
 
-/// Root helper: artifacts/<name> manifests.
+/// Root helper: `artifacts/<name>` manifests.
 pub fn artifacts_root() -> PathBuf {
     std::env::var("MIDX_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
+/// Load the manifest of a model by name under [`artifacts_root`].
 pub fn load_model(name: &str) -> Result<Manifest> {
     Manifest::load(&artifacts_root().join(name))
 }

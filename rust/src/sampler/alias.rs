@@ -4,6 +4,7 @@
 
 use crate::util::Rng;
 
+/// A fixed discrete distribution with O(1) draws.
 #[derive(Clone, Debug)]
 pub struct AliasTable {
     /// acceptance probability per slot
@@ -88,10 +89,12 @@ impl AliasTable {
         }
     }
 
+    /// Number of outcomes.
     pub fn len(&self) -> usize {
         self.prob.len()
     }
 
+    /// True for a zero-outcome table (construction forbids it).
     pub fn is_empty(&self) -> bool {
         self.prob.is_empty()
     }

@@ -28,12 +28,14 @@
 //!   auto mode (`threads == 0`) applies the crossover below;
 //! * [`sample_batch_with`] — dispatcher: takes `Option<&WorkerPool>` and a
 //!   **measured crossover** decides per call whether the batch is big
-//!   enough to be worth waking workers at all. The crossover compares a
-//!   process-wide EWMA of per-query sampling cost (dispatch overhead
+//!   enough to be worth waking workers at all. The crossover compares the
+//!   core's own [`CostEwma`] of per-query sampling cost (dispatch overhead
 //!   subtracted before recording, so parallel runs cannot inflate it)
 //!   against the measured dispatch cost of the chosen backend (pool wake
 //!   vs per-thread spawn, the latter scaled by lane count); it replaces
-//!   the retired fixed `MIN_PAR_QUERIES` threshold.
+//!   the retired fixed `MIN_PAR_QUERIES` threshold. The estimate lives on
+//!   each [`SamplerCore`] (not in a process-global), so interleaving cheap
+//!   and expensive samplers cannot cross-contaminate the schedule.
 //!
 //! Degenerate inputs are first-class: B = 0 or m = 0 return immediately;
 //! m > N−1 falls back on bounded rejection (duplicates and positive
@@ -54,40 +56,73 @@ pub fn auto_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-/// Process-wide EWMA of per-query sequential sampling cost in ns (0 = no
-/// measurement yet). Feeds the inline-vs-parallel crossover; results are
-/// bit-identical either way, so a stale estimate only costs time.
+/// EWMA of measured sequential per-query sampling cost in nanoseconds
+/// (0 = no measurement yet), feeding the inline-vs-parallel crossover.
 ///
-/// Known limitation: the estimate is shared across all cores and problem
-/// sizes, so processes that interleave cheap and expensive samplers (the
-/// bench tables, sampler_analysis) can mis-schedule shortly after
-/// switching kinds until the EWMA re-converges. The trainer — the path
-/// that matters — runs one sampler per process. A per-core estimate is a
-/// ROADMAP item.
-static PER_QUERY_NS: AtomicU64 = AtomicU64::new(0);
+/// One cell lives on every [`SamplerCore`] ([`SamplerCore::cost_ewma`]) —
+/// this replaces the retired process-global `PER_QUERY_NS`, under which
+/// interleaving cheap and expensive samplers (the bench tables,
+/// sampler_analysis) mis-scheduled briefly after every switch while the
+/// shared estimate re-converged. Results are bit-identical whichever way
+/// the crossover decides, so a stale estimate only ever costs time.
+#[derive(Debug, Default)]
+pub struct CostEwma(AtomicU64);
 
-/// Record one batch's cost. `lanes` scales wall time back to an estimate of
-/// sequential per-query cost when the batch ran in parallel; callers
-/// subtract their measured dispatch overhead from `total_ns` first so the
-/// estimate tracks sampling work, not dispatch (otherwise a parallel run
-/// would inflate the estimate and bias the crossover toward itself).
-fn note_per_query_ns(total_ns: u64, b: usize, lanes: usize) {
-    if b == 0 {
-        return;
+impl Clone for CostEwma {
+    fn clone(&self) -> CostEwma {
+        CostEwma(AtomicU64::new(self.0.load(Ordering::Relaxed)))
     }
-    let per = (total_ns.saturating_mul(lanes.max(1) as u64) / b as u64).max(1);
-    let old = PER_QUERY_NS.load(Ordering::Relaxed);
-    let new = if old == 0 {
-        per
-    } else {
-        // EWMA with alpha = 1/4
-        (old - old / 4).saturating_add(per / 4).max(1)
-    };
-    PER_QUERY_NS.store(new, Ordering::Relaxed);
 }
 
-pub(crate) fn per_query_estimate_ns() -> u64 {
-    PER_QUERY_NS.load(Ordering::Relaxed)
+impl CostEwma {
+    /// Fresh cell with no measurement.
+    pub fn new() -> CostEwma {
+        CostEwma::default()
+    }
+
+    /// Carry an estimate over (e.g. from the previous epoch's core, so a
+    /// rebuilt sampler does not re-bootstrap its crossover).
+    pub fn seed(&self, ns: u64) {
+        self.0.store(ns, Ordering::Relaxed);
+    }
+
+    /// Seed this (fresh) cell from a retiring core's cell, when that one
+    /// holds a measurement — the one-line epoch-rebuild carry-over every
+    /// adaptive sampler's `rebuild` uses.
+    pub fn inherit(&self, prev: Option<&CostEwma>) {
+        if let Some(p) = prev {
+            let ns = p.estimate_ns();
+            if ns > 0 {
+                self.seed(ns);
+            }
+        }
+    }
+
+    /// Current per-query estimate in ns (0 = no measurement yet).
+    pub fn estimate_ns(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Record one batch's cost. `lanes` scales wall time back to an
+    /// estimate of sequential per-query cost when the batch ran in
+    /// parallel; callers subtract their measured dispatch overhead from
+    /// `total_ns` first so the estimate tracks sampling work, not dispatch
+    /// (otherwise a parallel run would inflate the estimate and bias the
+    /// crossover toward itself).
+    pub fn note(&self, total_ns: u64, b: usize, lanes: usize) {
+        if b == 0 {
+            return;
+        }
+        let per = (total_ns.saturating_mul(lanes.max(1) as u64) / b as u64).max(1);
+        let old = self.0.load(Ordering::Relaxed);
+        let new = if old == 0 {
+            per
+        } else {
+            // EWMA with alpha = 1/4
+            (old - old / 4).saturating_add(per / 4).max(1)
+        };
+        self.0.store(new, Ordering::Relaxed);
+    }
 }
 
 static SPAWN_NS: AtomicU64 = AtomicU64::new(0);
@@ -171,7 +206,7 @@ pub fn sample_batch(
     let threads = if threads == 0 {
         let t = auto_threads().clamp(1, b);
         let overhead = scoped_spawn_overhead_ns().saturating_mul(t as u64);
-        if worth_parallelizing(b, t, per_query_estimate_ns(), overhead) {
+        if worth_parallelizing(b, t, core.cost_ewma().estimate_ns(), overhead) {
             t
         } else {
             1
@@ -210,7 +245,7 @@ pub fn sample_batch(
     }
     let spent = t0.elapsed().as_nanos() as u64;
     let dispatch = scoped_spawn_overhead_ns().saturating_mul(threads.saturating_sub(1) as u64);
-    note_per_query_ns(spent.saturating_sub(dispatch), b, threads);
+    core.cost_ewma().note(spent.saturating_sub(dispatch), b, threads);
 }
 
 /// Pointer bundle handing the [B, M] output buffers to pool workers, which
@@ -276,7 +311,7 @@ pub fn sample_batch_pooled(
         run_rows(core, my_q, d, my_pos, m, seed, start, scratch, my_ids, my_lq);
     });
     let spent = t0.elapsed().as_nanos() as u64;
-    note_per_query_ns(spent.saturating_sub(pool.dispatch_overhead_ns()), b, lanes);
+    core.cost_ewma().note(spent.saturating_sub(pool.dispatch_overhead_ns()), b, lanes);
 }
 
 /// Dispatcher for callers that may or may not hold a pool: with a pool, a
@@ -302,8 +337,12 @@ pub fn sample_batch_with(
             let b = positives.len();
             let lanes = if threads == 0 { pool.workers() } else { threads.min(pool.workers()) }
                 .clamp(1, b.max(1));
-            if worth_parallelizing(b, lanes, per_query_estimate_ns(), pool.dispatch_overhead_ns())
-            {
+            if worth_parallelizing(
+                b,
+                lanes,
+                core.cost_ewma().estimate_ns(),
+                pool.dispatch_overhead_ns(),
+            ) {
                 sample_batch_pooled(pool, core, queries, d, positives, m, seed, lanes, ids, log_q);
             } else {
                 sample_batch(core, queries, d, positives, m, seed, 1, ids, log_q);
@@ -481,6 +520,39 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn cost_ewma_is_per_core_not_global() {
+        // the PR 2 review item: one sampler's measured cost must never
+        // steer another sampler's inline-vs-parallel decision
+        let a = built_sampler(SamplerKind::Uniform, 30, 8, 1);
+        let b = built_sampler(SamplerKind::Sphere, 30, 8, 2);
+        a.core().cost_ewma().note(30_000, 30, 1); // 1µs/query
+        assert_eq!(a.core().cost_ewma().estimate_ns(), 1_000);
+        assert_eq!(b.core().cost_ewma().estimate_ns(), 0, "estimate leaked across cores");
+        // EWMA with alpha = 1/4 blends a new 2µs/query measurement
+        a.core().cost_ewma().note(60_000, 30, 1);
+        let e = a.core().cost_ewma().estimate_ns();
+        assert!(e > 1_000 && e < 2_000, "ewma {e}");
+        // clone snapshots, seed overrides
+        let c = a.core().cost_ewma().clone();
+        assert_eq!(c.estimate_ns(), e);
+        c.seed(5);
+        assert_eq!(c.estimate_ns(), 5);
+        // lanes scale wall time back to sequential per-query cost
+        let fresh = CostEwma::new();
+        fresh.note(10_000, 10, 4);
+        assert_eq!(fresh.estimate_ns(), 4_000);
+        fresh.note(0, 0, 4); // empty batch: no-op
+        assert_eq!(fresh.estimate_ns(), 4_000);
+        // inherit carries a measurement, ignores empty/missing cells
+        let next = CostEwma::new();
+        next.inherit(None);
+        next.inherit(Some(&CostEwma::new()));
+        assert_eq!(next.estimate_ns(), 0);
+        next.inherit(Some(&fresh));
+        assert_eq!(next.estimate_ns(), 4_000);
     }
 
     #[test]

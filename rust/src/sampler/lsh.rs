@@ -17,7 +17,7 @@
 
 use std::sync::Arc;
 
-use super::{draw_excluding, Sampler, SamplerCore, Scratch};
+use super::{draw_excluding, CostEwma, Sampler, SamplerCore, Scratch};
 use crate::util::Rng;
 
 /// Immutable epoch state: hyperplanes, bucket CSR per table, class codes.
@@ -33,6 +33,7 @@ pub struct LshCore {
     members: Vec<Vec<u32>>,
     /// [n, tables] stored hash code of each class
     codes: Vec<u16>,
+    cost: CostEwma,
 }
 
 impl LshCore {
@@ -99,6 +100,7 @@ impl LshCore {
             offsets: Vec::with_capacity(tables),
             members: Vec::with_capacity(tables),
             codes: vec![0; n * tables],
+            cost: CostEwma::new(),
         };
         for t in 0..tables {
             let mut counts = vec![0u32; nb];
@@ -132,6 +134,10 @@ impl SamplerCore for LshCore {
 
     fn n_classes(&self) -> usize {
         self.n
+    }
+
+    fn cost_ewma(&self) -> &CostEwma {
+        &self.cost
     }
 
     fn sample_into(
@@ -179,6 +185,7 @@ pub struct LshSampler {
 }
 
 impl LshSampler {
+    /// SimHash sampler with `tables` hash tables of `bits` bits each.
     pub fn new(_n: usize, tables: usize, bits: usize) -> Self {
         assert!(bits <= 16, "bits > 16 unsupported");
         LshSampler {
@@ -205,14 +212,10 @@ impl Sampler for LshSampler {
                 (0..self.tables * self.bits * d).map(|_| rng.normal_f32(1.0)).collect(),
             );
         }
-        self.core = Some(LshCore::build(
-            Arc::clone(&self.planes),
-            self.tables,
-            self.bits,
-            table,
-            n,
-            d,
-        ));
+        let core =
+            LshCore::build(Arc::clone(&self.planes), self.tables, self.bits, table, n, d);
+        core.cost.inherit(self.core.as_ref().map(|c| &c.cost));
+        self.core = Some(core);
     }
 
     fn core(&self) -> &dyn SamplerCore {

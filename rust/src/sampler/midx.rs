@@ -16,8 +16,9 @@
 //! the saturated-tail guarantee, so −inf `log_sizes` buckets (empty) are
 //! never drawn — even in degenerate indexes with one occupied bucket.
 
-use super::{cdf, Sampler, SamplerCore, Scratch, MAX_REJECT};
-use crate::index::InvertedMultiIndex;
+use super::{cdf, CostEwma, Sampler, SamplerCore, Scratch, MAX_REJECT};
+use crate::index::drift::{AUTO_MAX_IMBALANCE, AUTO_MAX_MOVED_FRAC, AUTO_REFINE_ITERS};
+use crate::index::{DriftTracker, InvertedMultiIndex, RefreshOutcome, RefreshPolicy};
 use crate::quant::{self, QuantKind, Quantizer};
 use crate::util::math::{log_sum_exp, softmax_inplace};
 use crate::util::Rng;
@@ -28,18 +29,22 @@ pub struct MidxCore {
     name: &'static str,
     quant: Box<dyn Quantizer + Send + Sync>,
     index: InvertedMultiIndex,
+    cost: CostEwma,
 }
 
 impl MidxCore {
+    /// Build the inverted multi-index over `quant`'s codes for `n` classes.
     pub fn new(name: &'static str, quant: Box<dyn Quantizer + Send + Sync>, n: usize) -> Self {
         let index = InvertedMultiIndex::build(quant.as_ref(), n);
-        MidxCore { n, name, quant, index }
+        MidxCore { n, name, quant, index, cost: CostEwma::new() }
     }
 
+    /// The inverted multi-index this core draws buckets from.
     pub fn index(&self) -> &InvertedMultiIndex {
         &self.index
     }
 
+    /// The quantizer whose codes/codebooks define the proposal.
     pub fn quantizer(&self) -> &(dyn Quantizer + Send + Sync) {
         self.quant.as_ref()
     }
@@ -76,6 +81,10 @@ impl SamplerCore for MidxCore {
 
     fn n_classes(&self) -> usize {
         self.n
+    }
+
+    fn cost_ewma(&self) -> &CostEwma {
+        &self.cost
     }
 
     fn sample_into(
@@ -130,23 +139,131 @@ impl SamplerCore for MidxCore {
     }
 }
 
+/// The incremental refresh shared by both MIDX variants: drift scan →
+/// mini-batch codeword refinement over the drifted rows → nearest-codeword
+/// reassessment of exactly those rows → one in-place CSR repack + bucket
+/// mass update when any bucket actually changed. Never touches the RNG and
+/// never re-runs k-means; with zero drift the core is left bit-identical
+/// (the tolerance = 0 equivalence the tests pin).
+fn refresh_core(
+    quant: &mut Box<dyn Quantizer + Send + Sync>,
+    index: &mut InvertedMultiIndex,
+    maint: &mut DriftTracker,
+    table: &[f32],
+    d: usize,
+    tolerance: f32,
+    refine_iters: usize,
+) -> RefreshOutcome {
+    let n = index.n_classes();
+    let drifted = maint.drifted(table, tolerance);
+    if drifted.is_empty() {
+        return RefreshOutcome::incremental(n, 0, 0);
+    }
+    if refine_iters > 0 {
+        let (c1, c2) = maint.counts_mut();
+        quant.refine(table, &drifted, refine_iters, c1, c2);
+    }
+    // re-assess the drifted rows against the (possibly refined) codebooks
+    let mut updates = Vec::new();
+    {
+        let (a1, a2) = quant.codes();
+        for &it in &drifted {
+            let i = it as usize;
+            let (n1, n2) = quant.assign_row(&table[i * d..(i + 1) * d]);
+            if a1[i] != n1 || a2[i] != n2 {
+                updates.push((i, n1, n2));
+            }
+        }
+    }
+    for &(i, n1, n2) in &updates {
+        quant.set_code(i, n1, n2);
+    }
+    if !updates.is_empty() {
+        let (a1, a2) = quant.codes();
+        index.reassign(a1, a2);
+    }
+    maint.note_refreshed(table, &drifted);
+    maint.note_moved(updates.len());
+    RefreshOutcome::incremental(n, drifted.len(), updates.len())
+}
+
+/// The Full/Incremental/Auto arbitration shared by both MIDX adapters:
+/// Some((tolerance, refine_iters)) ⇒ proceed incrementally; None ⇒ the
+/// caller must cold-rebuild (Full policy, first build, shape change, or an
+/// Auto health-check fallback).
+fn decide_incremental(
+    policy: &RefreshPolicy,
+    core_shape: Option<usize>,
+    maint: Option<&DriftTracker>,
+    imbalance: f32,
+    n: usize,
+    d: usize,
+) -> Option<(f32, usize)> {
+    let (tolerance, refine_iters, auto) = match *policy {
+        RefreshPolicy::Full => return None,
+        RefreshPolicy::Incremental { tolerance, refine_iters } => (tolerance, refine_iters, false),
+        RefreshPolicy::Auto => (0.0, AUTO_REFINE_ITERS, true),
+    };
+    let maint = maint?;
+    if core_shape != Some(n) || maint.n() != n || maint.d() != d {
+        return None; // shape changed (or never built): must cold-rebuild
+    }
+    if auto && (maint.moved_frac() > AUTO_MAX_MOVED_FRAC || imbalance > AUTO_MAX_IMBALANCE) {
+        return None; // index degraded past the measured thresholds
+    }
+    let tolerance = if auto { maint.auto_tolerance() } else { tolerance };
+    Some((tolerance, refine_iters))
+}
+
 /// Fast MIDX (Theorem 2) — per-query adapter around [`MidxCore`].
 pub struct MidxSampler {
     kind: QuantKind,
+    /// codewords per codebook (K)
     pub k: usize,
     kmeans_iters: usize,
     name: &'static str,
     core: Option<MidxCore>,
     scratch: Scratch,
+    /// drift state for incremental refresh (None until the first build)
+    maint: Option<DriftTracker>,
 }
 
 impl MidxSampler {
+    /// New sampler; `rebuild` before drawing. `kind` picks PQ vs RQ.
     pub fn new(_n: usize, kind: QuantKind, k: usize, kmeans_iters: usize) -> Self {
         let name = match kind {
             QuantKind::Product => "midx-pq",
             QuantKind::Residual => "midx-rq",
         };
-        MidxSampler { kind, k, kmeans_iters, name, core: None, scratch: Scratch::new() }
+        MidxSampler {
+            kind,
+            k,
+            kmeans_iters,
+            name,
+            core: None,
+            scratch: Scratch::new(),
+            maint: None,
+        }
+    }
+
+    /// Cold rebuild, plus a fresh drift tracker when `track` (the N·D
+    /// snapshot is skipped entirely under the Full policy, which never
+    /// reads it — switching to an incremental policy later just pays one
+    /// cold rebuild to bootstrap the tracker).
+    fn full_refresh(
+        &mut self,
+        table: &[f32],
+        n: usize,
+        d: usize,
+        rng: &mut Rng,
+        track: bool,
+    ) -> RefreshOutcome {
+        Sampler::rebuild(self, table, n, d, rng);
+        if track {
+            let core = self.core.as_ref().expect("rebuild installs a core");
+            self.maint = Some(DriftTracker::new(table, n, d, core.quantizer()));
+        }
+        RefreshOutcome::full_rebuild(n)
     }
 
     /// Native computation of the joint proposal table (parity-checked
@@ -157,10 +274,12 @@ impl MidxSampler {
         self.scratch.joint.clone()
     }
 
+    /// The current core's inverted multi-index (None before `rebuild`).
     pub fn index(&self) -> Option<&InvertedMultiIndex> {
         self.core.as_ref().map(|c| c.index())
     }
 
+    /// The current core's quantizer (None before `rebuild`).
     pub fn quantizer(&self) -> Option<&(dyn Quantizer + Send + Sync)> {
         self.core.as_ref().map(|c| c.quantizer())
     }
@@ -173,7 +292,49 @@ impl Sampler for MidxSampler {
 
     fn rebuild(&mut self, table: &[f32], n: usize, d: usize, rng: &mut Rng) {
         let q = quant::build(self.kind, table, n, d, self.k, self.kmeans_iters, rng);
-        self.core = Some(MidxCore::new(self.name, q, n));
+        let core = MidxCore::new(self.name, q, n);
+        core.cost.inherit(self.core.as_ref().map(|c| &c.cost));
+        self.core = Some(core);
+        // a direct cold rebuild invalidates any drift snapshot; rebuild_with
+        // re-creates the tracker when its policy wants one
+        self.maint = None;
+    }
+
+    fn rebuild_with(
+        &mut self,
+        table: &[f32],
+        n: usize,
+        d: usize,
+        rng: &mut Rng,
+        policy: &RefreshPolicy,
+    ) -> RefreshOutcome {
+        let plan = decide_incremental(
+            policy,
+            self.core.as_ref().map(|c| c.n),
+            self.maint.as_ref(),
+            self.core.as_ref().map(|c| c.index.imbalance()).unwrap_or(0.0),
+            n,
+            d,
+        );
+        match plan {
+            None => {
+                let track = !matches!(policy, RefreshPolicy::Full);
+                self.full_refresh(table, n, d, rng, track)
+            }
+            Some((tolerance, refine_iters)) => {
+                let core = self.core.as_mut().expect("decide_incremental checked the core");
+                let maint = self.maint.as_mut().expect("decide_incremental checked the tracker");
+                refresh_core(
+                    &mut core.quant,
+                    &mut core.index,
+                    maint,
+                    table,
+                    d,
+                    tolerance,
+                    refine_iters,
+                )
+            }
+        }
     }
 
     fn core(&self) -> &dyn SamplerCore {
@@ -206,7 +367,12 @@ impl Sampler for MidxSampler {
             n,
             d,
         );
-        self.core = Some(MidxCore::new(self.name, Box::new(q), n));
+        let core = MidxCore::new(self.name, Box::new(q), n);
+        core.cost.inherit(self.core.as_ref().map(|c| &c.cost));
+        // externally-learned codebooks come with a live table: snapshot it
+        // so later incremental refreshes continue from here
+        self.maint = Some(DriftTracker::new(table, n, d, core.quantizer()));
+        self.core = Some(core);
         true
     }
 }
@@ -219,12 +385,14 @@ pub struct ExactMidxCore {
     quant: Box<dyn Quantizer + Send + Sync>,
     index: InvertedMultiIndex,
     table: Vec<f32>,
+    cost: CostEwma,
 }
 
 impl ExactMidxCore {
+    /// Build the index over `quant`'s codes and snapshot the live `table`.
     pub fn new(quant: Box<dyn Quantizer + Send + Sync>, table: &[f32], n: usize, d: usize) -> Self {
         let index = InvertedMultiIndex::build(quant.as_ref(), n);
-        ExactMidxCore { n, d, quant, index, table: table.to_vec() }
+        ExactMidxCore { n, d, quant, index, table: table.to_vec(), cost: CostEwma::new() }
     }
 
     /// O(N·D) per query: residual scores õ_i for every class, per-bucket
@@ -283,6 +451,10 @@ impl SamplerCore for ExactMidxCore {
 
     fn n_classes(&self) -> usize {
         self.n
+    }
+
+    fn cost_ewma(&self) -> &CostEwma {
+        &self.cost
     }
 
     fn sample_into(
@@ -354,11 +526,39 @@ pub struct ExactMidxSampler {
     kmeans_iters: usize,
     core: Option<ExactMidxCore>,
     scratch: Scratch,
+    /// drift state for incremental refresh (None until the first build)
+    maint: Option<DriftTracker>,
 }
 
 impl ExactMidxSampler {
+    /// New sampler; `rebuild` before drawing.
     pub fn new(_n: usize, kind: QuantKind, k: usize, kmeans_iters: usize) -> Self {
-        ExactMidxSampler { kind, k, kmeans_iters, core: None, scratch: Scratch::new() }
+        ExactMidxSampler {
+            kind,
+            k,
+            kmeans_iters,
+            core: None,
+            scratch: Scratch::new(),
+            maint: None,
+        }
+    }
+
+    /// Cold rebuild, plus a fresh drift tracker when `track` (skipped
+    /// under the Full policy — see [`MidxSampler`]'s twin).
+    fn full_refresh(
+        &mut self,
+        table: &[f32],
+        n: usize,
+        d: usize,
+        rng: &mut Rng,
+        track: bool,
+    ) -> RefreshOutcome {
+        Sampler::rebuild(self, table, n, d, rng);
+        if track {
+            let core = self.core.as_ref().expect("rebuild installs a core");
+            self.maint = Some(DriftTracker::new(table, n, d, core.quant.as_ref()));
+        }
+        RefreshOutcome::full_rebuild(n)
     }
 }
 
@@ -369,7 +569,53 @@ impl Sampler for ExactMidxSampler {
 
     fn rebuild(&mut self, table: &[f32], n: usize, d: usize, rng: &mut Rng) {
         let q = quant::build(self.kind, table, n, d, self.k, self.kmeans_iters, rng);
-        self.core = Some(ExactMidxCore::new(q, table, n, d));
+        let core = ExactMidxCore::new(q, table, n, d);
+        core.cost.inherit(self.core.as_ref().map(|c| &c.cost));
+        self.core = Some(core);
+        self.maint = None;
+    }
+
+    fn rebuild_with(
+        &mut self,
+        table: &[f32],
+        n: usize,
+        d: usize,
+        rng: &mut Rng,
+        policy: &RefreshPolicy,
+    ) -> RefreshOutcome {
+        let plan = decide_incremental(
+            policy,
+            self.core.as_ref().map(|c| c.n),
+            self.maint.as_ref(),
+            self.core.as_ref().map(|c| c.index.imbalance()).unwrap_or(0.0),
+            n,
+            d,
+        );
+        match plan {
+            None => {
+                let track = !matches!(policy, RefreshPolicy::Full);
+                self.full_refresh(table, n, d, rng, track)
+            }
+            Some((tolerance, refine_iters)) => {
+                let core = self.core.as_mut().expect("decide_incremental checked the core");
+                let maint = self.maint.as_mut().expect("decide_incremental checked the tracker");
+                let out = refresh_core(
+                    &mut core.quant,
+                    &mut core.index,
+                    maint,
+                    table,
+                    d,
+                    tolerance,
+                    refine_iters,
+                );
+                // the exact sampler's residual stage reads the live table:
+                // re-snapshot it so Theorem 1 exactness holds against the
+                // CURRENT embeddings (this is what keeps the proposal equal
+                // to the true softmax across refreshes)
+                core.table.copy_from_slice(table);
+                out
+            }
+        }
     }
 
     fn core(&self) -> &dyn SamplerCore {

@@ -50,7 +50,7 @@ pub mod uniform;
 pub mod unigram;
 
 pub use alias::AliasTable;
-pub use batch::{sample_batch, sample_batch_pooled, sample_batch_with};
+pub use batch::{sample_batch, sample_batch_pooled, sample_batch_with, CostEwma};
 pub use lsh::LshSampler;
 pub use midx::{ExactMidxSampler, MidxSampler};
 pub use rff::RffSampler;
@@ -58,9 +58,12 @@ pub use sphere::SphereSampler;
 pub use uniform::UniformSampler;
 pub use unigram::UnigramSampler;
 
+use crate::index::{RefreshOutcome, RefreshPolicy};
 use crate::quant::QuantKind;
 use crate::util::Rng;
 
+/// Bounded-rejection budget when excluding the positive class: after this
+/// many colliding draws the collision is kept (paper Eq. 1, `y_s = 1`).
 pub const MAX_REJECT: usize = 8;
 
 /// Per-thread working memory for sampling. One concrete struct shared by all
@@ -92,6 +95,7 @@ pub struct Scratch {
 }
 
 impl Scratch {
+    /// Empty scratch; buffers grow on first use and then amortize.
     pub fn new() -> Scratch {
         Scratch::default()
     }
@@ -128,6 +132,12 @@ pub trait SamplerCore: Send + Sync {
     /// Full normalized proposal distribution Q(·|z) over all N classes.
     /// O(N) — used by the stats/analysis benches only, never in training.
     fn proposal_dist(&self, z: &[f32], scratch: &mut Scratch, out: &mut [f32]);
+
+    /// The core's own crossover cost cell: an EWMA of measured sequential
+    /// per-query sampling cost ([`CostEwma`]). Per-core rather than
+    /// process-global, so interleaving cheap and expensive samplers cannot
+    /// cross-contaminate the inline-vs-parallel scheduling decision.
+    fn cost_ewma(&self) -> &CostEwma;
 }
 
 /// A proposal distribution over classes, conditioned (or not) on a query.
@@ -140,10 +150,32 @@ pub trait Sampler: Send {
     /// Short identifier used in reports ("midx-rq", "uniform", ...).
     fn name(&self) -> &str;
 
-    /// Refresh the shared core from the live class-embedding table [n, d].
+    /// Refresh the shared core from the live class-embedding table [n, d]
+    /// with a **cold rebuild** (full k-means retrain + index rebuild).
     /// Called once before each epoch (paper §4.4: "the initialization is
     /// only updated before each epoch"). Static samplers ignore it.
     fn rebuild(&mut self, table: &[f32], n: usize, d: usize, rng: &mut Rng);
+
+    /// Refresh the shared core under a [`RefreshPolicy`]. The default
+    /// implementation ignores the policy and performs a full
+    /// [`Sampler::rebuild`] — static samplers and samplers without an
+    /// index have nothing to refresh incrementally. The MIDX samplers
+    /// override this with the drift-driven incremental path
+    /// (`index::drift`): reassign only items that moved past the
+    /// tolerance, refine codewords with mini-batch k-means steps, and
+    /// update bucket masses in place.
+    fn rebuild_with(
+        &mut self,
+        table: &[f32],
+        n: usize,
+        d: usize,
+        rng: &mut Rng,
+        policy: &RefreshPolicy,
+    ) -> RefreshOutcome {
+        let _ = policy;
+        self.rebuild(table, n, d, rng);
+        RefreshOutcome::full_rebuild(n)
+    }
 
     /// The current shared core. Panics for adaptive samplers before the
     /// first `rebuild` (same contract the per-query path always had).
@@ -200,17 +232,26 @@ pub trait Sampler: Send {
 /// Sampler selector used across configs / CLI / benches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SamplerKind {
+    /// Q(i|z) = 1/N (static baseline).
     Uniform,
+    /// Q(i) ∝ training-set class frequency (static, alias table).
     Unigram,
+    /// SimHash bucket sampling (adaptive).
     Lsh,
+    /// Quadratic-kernel proposal α·s² + 1 (adaptive).
     Sphere,
+    /// Random-Fourier-feature kernel proposal (adaptive).
     Rff,
+    /// Fast MIDX over a product quantizer (Theorem 2).
     MidxPq,
+    /// Fast MIDX over a residual quantizer (Theorem 2).
     MidxRq,
+    /// Exact MIDX decomposition == true softmax (Theorem 1, O(N·D)).
     ExactMidx,
 }
 
 impl SamplerKind {
+    /// Parse a CLI sampler name (accepts `-` or `_` separators).
     pub fn parse(s: &str) -> Option<SamplerKind> {
         Some(match s {
             "uniform" => SamplerKind::Uniform,
@@ -225,6 +266,7 @@ impl SamplerKind {
         })
     }
 
+    /// Short identifier used in reports and CLI flags.
     pub fn name(&self) -> &'static str {
         match self {
             SamplerKind::Uniform => "uniform",

@@ -14,7 +14,7 @@
 
 use std::sync::Arc;
 
-use super::{cdf, draw_excluding, Sampler, SamplerCore, Scratch};
+use super::{cdf, draw_excluding, CostEwma, Sampler, SamplerCore, Scratch};
 use crate::util::math::{dot, norm2};
 use crate::util::Rng;
 
@@ -31,6 +31,7 @@ pub struct RffCore {
     b: Arc<Vec<f32>>,
     /// [n, r] class feature matrix (rebuilt per epoch)
     phi: Vec<f32>,
+    cost: CostEwma,
 }
 
 impl RffCore {
@@ -50,7 +51,7 @@ impl RffCore {
 
     /// Featurize every class row of `table`.
     pub fn build(w: Arc<Vec<f32>>, b: Arc<Vec<f32>>, r: usize, table: &[f32], n: usize, d: usize) -> Self {
-        let mut core = RffCore { n, r, d, w, b, phi: vec![0.0; n * r] };
+        let mut core = RffCore { n, r, d, w, b, phi: vec![0.0; n * r], cost: CostEwma::new() };
         let mut row = vec![0.0f32; r];
         for i in 0..n {
             core.features(&table[i * d..(i + 1) * d], &mut row);
@@ -80,6 +81,10 @@ impl SamplerCore for RffCore {
 
     fn n_classes(&self) -> usize {
         self.n
+    }
+
+    fn cost_ewma(&self) -> &CostEwma {
+        &self.cost
     }
 
     fn sample_into(
@@ -123,6 +128,7 @@ pub struct RffSampler {
 }
 
 impl RffSampler {
+    /// RFF sampler with feature dimension `r` and kernel temperature `tau`.
     pub fn new(_n: usize, r: usize, tau: f32) -> Self {
         RffSampler {
             r,
@@ -153,14 +159,10 @@ impl Sampler for RffSampler {
                     .collect(),
             );
         }
-        self.core = Some(RffCore::build(
-            Arc::clone(&self.w),
-            Arc::clone(&self.b),
-            self.r,
-            table,
-            n,
-            d,
-        ));
+        let core =
+            RffCore::build(Arc::clone(&self.w), Arc::clone(&self.b), self.r, table, n, d);
+        core.cost.inherit(self.core.as_ref().map(|c| &c.cost));
+        self.core = Some(core);
     }
 
     fn core(&self) -> &dyn SamplerCore {

@@ -10,7 +10,7 @@
 //! Split: the embedding snapshot is the shared [`SphereCore`]; per-query
 //! weights/CDF live in the scratch.
 
-use super::{cdf, draw_excluding, Sampler, SamplerCore, Scratch};
+use super::{cdf, draw_excluding, CostEwma, Sampler, SamplerCore, Scratch};
 use crate::util::math::dot;
 use crate::util::Rng;
 
@@ -21,11 +21,13 @@ pub struct SphereCore {
     d: usize,
     alpha: f32,
     table: Vec<f32>,
+    cost: CostEwma,
 }
 
 impl SphereCore {
+    /// Core over a snapshot of `table` ([n, d]) with kernel weight α.
     pub fn new(alpha: f32, table: &[f32], n: usize, d: usize) -> Self {
-        SphereCore { n, d, alpha, table: table.to_vec() }
+        SphereCore { n, d, alpha, table: table.to_vec(), cost: CostEwma::new() }
     }
 
     /// Fill scratch.weights / scratch.cdf / scratch.total for `z`.
@@ -47,6 +49,10 @@ impl SamplerCore for SphereCore {
 
     fn n_classes(&self) -> usize {
         self.n
+    }
+
+    fn cost_ewma(&self) -> &CostEwma {
+        &self.cost
     }
 
     fn sample_into(
@@ -86,6 +92,7 @@ pub struct SphereSampler {
 }
 
 impl SphereSampler {
+    /// Sphere sampler with kernel weight α (see the module docs).
     pub fn new(_n: usize, alpha: f32) -> Self {
         SphereSampler { alpha, core: None, scratch: Scratch::new() }
     }
@@ -97,7 +104,9 @@ impl Sampler for SphereSampler {
     }
 
     fn rebuild(&mut self, table: &[f32], n: usize, d: usize, _rng: &mut Rng) {
-        self.core = Some(SphereCore::new(self.alpha, table, n, d));
+        let core = SphereCore::new(self.alpha, table, n, d);
+        core.cost.inherit(self.core.as_ref().map(|c| &c.cost));
+        self.core = Some(core);
     }
 
     fn core(&self) -> &dyn SamplerCore {

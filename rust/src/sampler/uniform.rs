@@ -1,7 +1,7 @@
 //! Uniform proposal: Q(i|z) = 1/N. The simplest static baseline
 //! (paper §6.1); KL bound 2‖o‖∞ (Theorem 3).
 
-use super::{draw_excluding, Sampler, SamplerCore, Scratch};
+use super::{draw_excluding, CostEwma, Sampler, SamplerCore, Scratch};
 use crate::util::Rng;
 
 /// Shared core: just N (stateless per query, nothing to rebuild).
@@ -9,12 +9,14 @@ use crate::util::Rng;
 pub struct UniformCore {
     n: usize,
     log_q: f32,
+    cost: CostEwma,
 }
 
 impl UniformCore {
+    /// Core over `n` classes (`n > 0`).
     pub fn new(n: usize) -> Self {
         assert!(n > 0);
-        UniformCore { n, log_q: -(n as f32).ln() }
+        UniformCore { n, log_q: -(n as f32).ln(), cost: CostEwma::new() }
     }
 }
 
@@ -29,6 +31,10 @@ impl SamplerCore for UniformCore {
 
     fn is_adaptive(&self) -> bool {
         false
+    }
+
+    fn cost_ewma(&self) -> &CostEwma {
+        &self.cost
     }
 
     fn sample_into(
@@ -61,6 +67,7 @@ pub struct UniformSampler {
 }
 
 impl UniformSampler {
+    /// Uniform sampler over `n` classes.
     pub fn new(n: usize) -> Self {
         UniformSampler { core: UniformCore::new(n), scratch: Scratch::new() }
     }
@@ -72,7 +79,9 @@ impl Sampler for UniformSampler {
     }
 
     fn rebuild(&mut self, _table: &[f32], n: usize, _d: usize, _rng: &mut Rng) {
-        self.core = UniformCore::new(n);
+        let core = UniformCore::new(n);
+        core.cost.inherit(Some(&self.core.cost));
+        self.core = core;
     }
 
     fn core(&self) -> &dyn SamplerCore {

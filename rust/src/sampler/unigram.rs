@@ -2,7 +2,7 @@
 //! (paper §6.1, Mikolov et al. 2013). Static — an alias table built once.
 //! KL bound 2‖o‖∞ + ln(N·q_max) (Theorem 4).
 
-use super::{draw_excluding, AliasTable, Sampler, SamplerCore, Scratch};
+use super::{draw_excluding, AliasTable, CostEwma, Sampler, SamplerCore, Scratch};
 use crate::util::Rng;
 
 /// Shared core: the alias table + cached log probabilities. Built once from
@@ -13,6 +13,7 @@ pub struct UnigramCore {
     table: AliasTable,
     /// cached log-probabilities (avoids ln() per draw)
     log_p: Vec<f32>,
+    cost: CostEwma,
 }
 
 impl UnigramCore {
@@ -25,7 +26,7 @@ impl UnigramCore {
         let weights: Vec<f32> = freq.iter().map(|&f| f.max(floor)).collect();
         let table = AliasTable::new(&weights);
         let log_p = (0..weights.len()).map(|i| table.log_prob_of(i)).collect();
-        UnigramCore { table, log_p }
+        UnigramCore { table, log_p, cost: CostEwma::new() }
     }
 }
 
@@ -40,6 +41,10 @@ impl SamplerCore for UnigramCore {
 
     fn is_adaptive(&self) -> bool {
         false
+    }
+
+    fn cost_ewma(&self) -> &CostEwma {
+        &self.cost
     }
 
     fn sample_into(
@@ -73,6 +78,7 @@ pub struct UnigramSampler {
 }
 
 impl UnigramSampler {
+    /// Sampler over the given class frequencies (see [`UnigramCore::new`]).
     pub fn new(freq: &[f32]) -> Self {
         UnigramSampler { core: UnigramCore::new(freq), scratch: Scratch::new() }
     }

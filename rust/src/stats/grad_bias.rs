@@ -11,6 +11,7 @@ use crate::stats::divergence::{renyi_d2, softmax_dist};
 use crate::util::math::{dot, norm2, norm_inf};
 use crate::util::Rng;
 
+/// Measured gradient bias next to its Theorem 6 bound.
 #[derive(Clone, Debug)]
 pub struct GradBias {
     /// ‖E[ĝ] − g*‖₂ (measured)

@@ -2,10 +2,15 @@
 //! The paper trains all tasks with Adam (§6.3.1); gradients arrive from the
 //! train_step artifact, the update runs here — python stays off the path.
 
+/// Adam state over a fixed set of tensor shapes.
 pub struct Adam {
+    /// learning rate
     pub lr: f32,
+    /// first-moment decay
     pub beta1: f32,
+    /// second-moment decay
     pub beta2: f32,
+    /// denominator stabilizer
     pub eps: f32,
     /// optional global-norm gradient clip (0 = off)
     pub clip: f32,
@@ -15,6 +20,7 @@ pub struct Adam {
 }
 
 impl Adam {
+    /// Fresh optimizer state (paper defaults) for the given tensor sizes.
     pub fn new(lr: f32, shapes: &[usize]) -> Self {
         Adam {
             lr,
@@ -28,6 +34,8 @@ impl Adam {
         }
     }
 
+    /// One Adam update of every tensor from its gradient (with optional
+    /// global-norm clipping).
     pub fn step(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>]) {
         assert_eq!(params.len(), grads.len());
         self.t += 1;
@@ -69,6 +77,7 @@ impl Adam {
         }
     }
 
+    /// Update steps performed so far.
     pub fn steps_taken(&self) -> u64 {
         self.t
     }

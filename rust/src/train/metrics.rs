@@ -5,6 +5,7 @@
 
 use crate::util::math::{log_sum_exp, top_k};
 
+/// Metric family, selected by the task type.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EvalKind {
     /// exp(mean cross-entropy) over all positions
@@ -18,12 +19,14 @@ pub enum EvalKind {
 /// One evaluation pass, aggregated.
 #[derive(Clone, Debug, Default)]
 pub struct EvalResult {
+    /// metric family ("perplexity" | "ranking" | "precision")
     pub kind_name: String,
     /// metric name -> value ("ppl", "ndcg@10", "recall@50", "p@1", ...)
     pub values: Vec<(String, f64)>,
 }
 
 impl EvalResult {
+    /// Value of a named metric, if present.
     pub fn get(&self, name: &str) -> Option<f64> {
         self.values.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
     }
@@ -57,6 +60,7 @@ pub struct MetricAcc {
 }
 
 impl MetricAcc {
+    /// Fresh accumulator for the given metric family.
     pub fn new(kind: EvalKind) -> Self {
         let ks = match kind {
             EvalKind::RankingTopK => vec![10, 20, 50],
@@ -99,6 +103,7 @@ impl MetricAcc {
         }
     }
 
+    /// Aggregate everything added so far into named metric values.
     pub fn finish(&self) -> EvalResult {
         match self.kind {
             EvalKind::Perplexity => {

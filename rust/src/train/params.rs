@@ -12,12 +12,16 @@ use xla::Literal;
 use crate::runtime::{lit_f32, ParamSpec};
 use crate::util::Rng;
 
+/// Owner of every model tensor, in manifest order.
 pub struct ParamStore {
+    /// per-tensor shape/init specs (manifest order)
     pub specs: Vec<ParamSpec>,
+    /// the flat tensors themselves (manifest order)
     pub tensors: Vec<Vec<f32>>,
 }
 
 impl ParamStore {
+    /// Initialize every tensor from its manifest init scheme.
     pub fn init(specs: &[ParamSpec], seed: u64) -> Self {
         let mut rng = Rng::new(seed);
         let tensors = specs
@@ -53,18 +57,22 @@ impl ParamStore {
         self.tensors.last().expect("empty param store")
     }
 
+    /// Mutable class-embedding table (the MIDX-Learn harness writes it).
     pub fn q_table_mut(&mut self) -> &mut Vec<f32> {
         self.tensors.last_mut().expect("empty param store")
     }
 
+    /// Number of tensors.
     pub fn len(&self) -> usize {
         self.tensors.len()
     }
 
+    /// True when the store holds no tensors.
     pub fn is_empty(&self) -> bool {
         self.tensors.is_empty()
     }
 
+    /// Total float count across all tensors.
     pub fn total_params(&self) -> usize {
         self.tensors.iter().map(|t| t.len()).sum()
     }

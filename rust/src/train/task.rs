@@ -13,7 +13,9 @@ use crate::util::Rng;
 /// A materialized batch, arch-dependent.
 #[derive(Clone, Debug)]
 pub enum Batch {
+    /// sequence batch (LM / sequential recommendation)
     Seq(SeqBatch),
+    /// sparse bag batch (extreme classification)
     Bag(BagBatch),
 }
 
@@ -38,6 +40,7 @@ impl Batch {
         }
     }
 
+    /// Query rows this batch produces (B·T for sequences, B for bags).
     pub fn bq(&self) -> usize {
         match self {
             Batch::Seq(b) => b.b * b.t,
@@ -48,12 +51,31 @@ impl Batch {
 
 /// Dataset + shapes, shared (read-only) between trainer and prefetcher.
 pub enum TaskData {
-    Lm { corpus: LmCorpus, dims: Dims },
-    Rec { data: RecDataset, dims: Dims },
-    Xmc { data: XmcDataset, dims: Dims },
+    /// synthetic language-model corpus
+    Lm {
+        /// the generated corpus
+        corpus: LmCorpus,
+        /// artifact shapes the batches must match
+        dims: Dims,
+    },
+    /// synthetic sequential-recommendation interactions
+    Rec {
+        /// the generated interactions
+        data: RecDataset,
+        /// artifact shapes the batches must match
+        dims: Dims,
+    },
+    /// synthetic extreme-classification samples
+    Xmc {
+        /// the generated samples
+        data: XmcDataset,
+        /// artifact shapes the batches must match
+        dims: Dims,
+    },
 }
 
 impl TaskData {
+    /// The artifact shapes this task feeds.
     pub fn dims(&self) -> &Dims {
         match self {
             TaskData::Lm { dims, .. } | TaskData::Rec { dims, .. } | TaskData::Xmc { dims, .. } => {
@@ -62,6 +84,7 @@ impl TaskData {
         }
     }
 
+    /// Which metric family evaluation uses for this task.
     pub fn eval_kind(&self) -> EvalKind {
         match self {
             TaskData::Lm { .. } => EvalKind::Perplexity,

@@ -26,6 +26,7 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::pipeline::{overlap, Prefetcher};
 use crate::coordinator::pool::WorkerPool;
+use crate::index::RefreshPolicy;
 use crate::runtime::{lit_f32, lit_i32, to_f32, to_scalar_f32, Engine, Executable, Manifest};
 use crate::sampler::{batch::auto_threads, sample_batch_with, Sampler};
 use crate::train::metrics::{EvalResult, MetricAcc};
@@ -33,11 +34,16 @@ use crate::train::task::{Batch, TaskData};
 use crate::train::{Adam, ParamStore};
 use crate::util::Rng;
 
+/// Knobs of one training run.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// epochs to run (early stopping may cut this short)
     pub epochs: usize,
+    /// optimizer steps per epoch
     pub steps_per_epoch: usize,
+    /// Adam learning rate
     pub lr: f32,
+    /// master seed (parameters, batches, sampling streams)
     pub seed: u64,
     /// cap on eval batches per pass (0 = all)
     pub eval_cap: usize,
@@ -47,6 +53,10 @@ pub struct TrainConfig {
     pub prefetch: usize,
     /// sampling worker threads (0 = available parallelism)
     pub threads: usize,
+    /// how the sampler index is refreshed between epochs (CLI `--refresh`);
+    /// `Full` is the paper's once-per-epoch cold rebuild
+    pub refresh: RefreshPolicy,
+    /// print per-epoch progress lines
     pub verbose: bool,
 }
 
@@ -61,6 +71,7 @@ impl Default for TrainConfig {
             patience: 0,
             prefetch: 2,
             threads: 0,
+            refresh: RefreshPolicy::Full,
             verbose: false,
         }
     }
@@ -71,16 +82,32 @@ impl Default for TrainConfig {
 /// loop they overlap in wall clock, so their sum can exceed elapsed time.
 #[derive(Clone, Debug, Default)]
 pub struct Timing {
+    /// encode-artifact lane time
     pub encode_s: f64,
+    /// sampling lane time
     pub sample_s: f64,
+    /// train_step / full_step artifact time
     pub step_s: f64,
+    /// Adam update time
     pub update_s: f64,
+    /// cold sampler rebuilds (k-means retrain + index build)
     pub rebuild_s: f64,
+    /// incremental index refreshes (drift scan + reassign + refine)
+    pub refresh_s: f64,
+    /// evaluation passes
     pub eval_s: f64,
+    /// optimizer steps taken
     pub steps: usize,
+    /// cold rebuilds performed
+    pub full_rebuilds: usize,
+    /// incremental refreshes performed
+    pub incr_refreshes: usize,
+    /// classes whose bucket changed across all incremental refreshes
+    pub reassigned: usize,
 }
 
 impl Timing {
+    /// Mean wall-clock per optimizer step (all four step phases), in ms.
     pub fn per_step_ms(&self) -> f64 {
         if self.steps == 0 {
             return 0.0;
@@ -90,9 +117,12 @@ impl Timing {
     }
 }
 
+/// Everything one experiment run produces.
 #[derive(Clone, Debug)]
 pub struct RunResult {
+    /// sampler identifier ("full" for the O(N) baseline)
     pub sampler_name: String,
+    /// artifact model name
     pub model: String,
     /// mean train loss per epoch
     pub train_loss: Vec<f64>,
@@ -102,16 +132,21 @@ pub struct RunResult {
     /// reports the final-epoch model, matching the paper's protocol of
     /// early stopping on validation)
     pub test: EvalResult,
+    /// wall-clock breakdown
     pub timing: Timing,
 }
 
+/// The training loop driver: owns the executables, parameters, optimizer,
+/// sampler (plus its worker pool) and the timing ledger for one run.
 pub struct Trainer {
+    /// the model's artifact manifest (shapes, params, executable paths)
     pub manifest: Manifest,
     engine: Engine,
     encode: Executable,
     train_step: Executable,
     eval_scores: Executable,
     full_step: Option<Executable>,
+    /// live model parameters (the last tensor is the class table)
     pub params: ParamStore,
     adam: Adam,
     /// None ⇒ Full-softmax baseline
@@ -128,6 +163,9 @@ pub struct Trainer {
 }
 
 impl Trainer {
+    /// Load and compile the model's executables and initialize parameters,
+    /// optimizer, and (for sampled runs with `threads > 1`) the persistent
+    /// sampling worker pool. `sampler: None` selects the Full baseline.
     pub fn new(
         manifest: Manifest,
         sampler: Option<Box<dyn Sampler>>,
@@ -176,10 +214,12 @@ impl Trainer {
         })
     }
 
+    /// Sampler identifier ("full" for the O(N) baseline).
     pub fn sampler_name(&self) -> String {
         self.sampler.as_ref().map(|s| s.name().to_string()).unwrap_or_else(|| "full".into())
     }
 
+    /// The PJRT engine (for harnesses that load extra executables).
     pub fn engine(&self) -> &Engine {
         &self.engine
     }
@@ -303,13 +343,26 @@ impl Trainer {
         self.apply_sampled_step(batch, &neg_ids, &log_q)
     }
 
-    /// Rebuild the sampler index from the live class embeddings.
+    /// Refresh the sampler index from the live class embeddings under the
+    /// configured [`RefreshPolicy`] (`TrainConfig::refresh`): a cold
+    /// rebuild books into `timing.rebuild_s`, an incremental refresh into
+    /// `timing.refresh_s` + the refresh counters.
     pub fn rebuild_sampler(&mut self) {
+        let policy = self.cfg.refresh;
         if let Some(s) = self.sampler.as_mut() {
             let t0 = Instant::now();
             let dims = &self.manifest.dims;
-            s.rebuild(self.params.q_table(), dims.n_classes, dims.d, &mut self.rng);
-            self.timing.rebuild_s += t0.elapsed().as_secs_f64();
+            let table = self.params.q_table();
+            let outcome = s.rebuild_with(table, dims.n_classes, dims.d, &mut self.rng, &policy);
+            let dt = t0.elapsed().as_secs_f64();
+            if outcome.full {
+                self.timing.rebuild_s += dt;
+                self.timing.full_rebuilds += 1;
+            } else {
+                self.timing.refresh_s += dt;
+                self.timing.incr_refreshes += 1;
+                self.timing.reassigned += outcome.reassigned;
+            }
         }
     }
 
@@ -498,6 +551,7 @@ impl Trainer {
         })
     }
 
+    /// The run's wall-clock ledger so far.
     pub fn timing(&self) -> &Timing {
         &self.timing
     }
@@ -521,6 +575,7 @@ impl Trainer {
         Ok(loss_sum / steps.max(1) as f64)
     }
 
+    /// The run's configuration.
     pub fn config(&self) -> &TrainConfig {
         &self.cfg
     }

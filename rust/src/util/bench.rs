@@ -11,13 +11,20 @@
 
 use std::time::Instant;
 
+/// Robust timing summary of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct BenchStats {
+    /// case name ("group/name")
     pub name: String,
+    /// median per-iteration time in ns
     pub median_ns: f64,
+    /// mean per-iteration time in ns
     pub mean_ns: f64,
+    /// 10th-percentile per-iteration time in ns
     pub p10_ns: f64,
+    /// 90th-percentile per-iteration time in ns
     pub p90_ns: f64,
+    /// total iterations measured
     pub iters: usize,
 }
 
@@ -34,6 +41,7 @@ fn fmt_ns(ns: f64) -> String {
 }
 
 impl BenchStats {
+    /// Print the standard grep-able one-line summary.
     pub fn print(&self) {
         println!(
             "bench {:<44} median={:<10} mean={:<10} p10={:<10} p90={:<10} iters={}",

@@ -22,6 +22,7 @@ fn splitmix64(x: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seeded RNG (splitmix64-expanded 256-bit state).
     pub fn new(seed: u64) -> Self {
         let mut x = seed;
         let s = [
@@ -51,6 +52,7 @@ impl Rng {
         Rng::new(seed ^ idx.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit draw.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -75,6 +77,7 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Uniform f32 in [0, 1).
     #[inline]
     pub fn next_f32(&mut self) -> f32 {
         self.next_f64() as f32
@@ -118,6 +121,7 @@ impl Rng {
         }
     }
 
+    /// Normal deviate with the given standard deviation, as f32.
     #[inline]
     pub fn normal_f32(&mut self, std: f32) -> f32 {
         (self.normal() as f32) * std

@@ -110,6 +110,40 @@ fn training_reduces_loss_all_samplers() {
 }
 
 #[test]
+fn training_with_incremental_refresh_reduces_loss_and_books_refreshes() {
+    require_artifacts!();
+    // --refresh auto end to end: epoch 0 cold-rebuilds (no tracker yet),
+    // later epochs refresh incrementally; loss must still go down and the
+    // trainer must book the maintenance time in the right buckets.
+    let manifest = load_model("lm_ptb_lstm").unwrap();
+    let task = build_task(&manifest, 1).unwrap();
+    let spec = ExperimentSpec::new("lm_ptb_lstm", Some(SamplerKind::MidxRq));
+    let sampler = build_sampler(&spec, &manifest, &task);
+    let cfg = TrainConfig {
+        epochs: 3,
+        steps_per_epoch: 15,
+        eval_cap: 2,
+        refresh: midx::index::RefreshPolicy::Auto,
+        ..TrainConfig::default()
+    };
+    let trainer = Trainer::new(manifest, sampler, cfg).unwrap();
+    let res = trainer.run(Arc::new(task)).unwrap();
+    assert!(
+        res.train_loss.last().unwrap() < &res.train_loss[0],
+        "loss did not decrease: {:?}",
+        res.train_loss
+    );
+    assert!(res.timing.full_rebuilds >= 1, "first epoch must cold-rebuild");
+    assert!(
+        res.timing.incr_refreshes >= 1,
+        "later epochs should refresh incrementally (full={}, incr={})",
+        res.timing.full_rebuilds,
+        res.timing.incr_refreshes
+    );
+    assert_eq!(res.timing.full_rebuilds + res.timing.incr_refreshes, 3);
+}
+
+#[test]
 fn midx_probs_artifact_matches_native_sampler() {
     require_artifacts!();
     // The Pallas joint-proposal kernel and the native rust implementation

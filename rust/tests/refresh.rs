@@ -1,0 +1,268 @@
+//! Incremental index maintenance: the contracts the refresh subsystem must
+//! honor, artifact-free (pure library).
+//!
+//! * tolerance = 0 on an unchanged table is a no-op: draws stay bit-for-bit
+//!   identical to the full rebuild the core came from;
+//! * PQ reassignment never increases quantization distortion on the new
+//!   table (nearest-codeword per subspace is per-item optimal);
+//! * after heavy drift, an incremental refresh brings KL(proposal‖softmax)
+//!   back below the stale index's KL;
+//! * exact MIDX stays EXACT (proposal == softmax of the live table) across
+//!   incremental refreshes — the Theorem 1 identity survives maintenance;
+//! * the Auto policy cold-rebuilds on first use, refreshes while healthy,
+//!   and falls back to a cold rebuild after accumulated churn.
+
+use midx::index::RefreshPolicy;
+use midx::quant::{QuantKind, Quantizer};
+use midx::sampler::{ExactMidxSampler, MidxSampler, Sampler, UniformSampler};
+use midx::stats::divergence::{sampler_kl, softmax_dist};
+use midx::util::check::{for_all, rand_matrix};
+use midx::util::math::dist2;
+use midx::util::Rng;
+
+const INCR0: RefreshPolicy = RefreshPolicy::Incremental { tolerance: 0.0, refine_iters: 0 };
+
+fn draws(
+    s: &dyn Sampler,
+    d: usize,
+    n: usize,
+    b: usize,
+    m: usize,
+    seed: u64,
+) -> (Vec<u32>, Vec<u32>) {
+    let mut qrng = Rng::new(0xDEC0);
+    let queries = rand_matrix(&mut qrng, b, d, 0.7);
+    let positives: Vec<u32> = (0..b).map(|i| (i % n) as u32).collect();
+    let mut ids = vec![0u32; b * m];
+    let mut lq = vec![0.0f32; b * m];
+    s.sample_batch(&queries, d, &positives, m, seed, 1, &mut ids, &mut lq);
+    (ids, lq.iter().map(|x| x.to_bits()).collect())
+}
+
+fn measured_distortion(q: &dyn Quantizer, table: &[f32], n: usize, d: usize) -> f64 {
+    let mut rec = vec![0.0f32; d];
+    let mut total = 0.0f64;
+    for i in 0..n {
+        q.reconstruct(i, &mut rec);
+        total += dist2(&table[i * d..(i + 1) * d], &rec) as f64;
+    }
+    total
+}
+
+#[test]
+fn tolerance_zero_on_unchanged_table_is_draw_identical_to_full_rebuild() {
+    // Acceptance gate: incremental refresh must DEGRADE to exact
+    // full-rebuild behavior when nothing moved. Two samplers share the
+    // same cold rebuild (same k-means RNG); one then takes an incremental
+    // refresh over the unchanged table. Their draw streams must be
+    // bit-identical, for both quantizer families and with refinement
+    // requested (zero drift ⇒ refinement must not run).
+    let (n, d, b, m) = (60usize, 8usize, 16usize, 6usize);
+    let mut trng = Rng::new(9);
+    let table = rand_matrix(&mut trng, n, d, 0.8);
+    for kind in [QuantKind::Product, QuantKind::Residual] {
+        for refine_iters in [0usize, 3] {
+            let mut a = MidxSampler::new(n, kind, 4, 10);
+            a.rebuild(&table, n, d, &mut Rng::new(33));
+
+            let policy = RefreshPolicy::Incremental { tolerance: 0.0, refine_iters };
+            let mut bs = MidxSampler::new(n, kind, 4, 10);
+            // the first rebuild_with cold-rebuilds (no tracker yet) with
+            // the SAME k-means rng as `a`'s plain rebuild → identical cores
+            let first = bs.rebuild_with(&table, n, d, &mut Rng::new(33), &policy);
+            assert!(first.full, "no tracker yet: must cold-rebuild");
+
+            let out = bs.rebuild_with(&table, n, d, &mut Rng::new(77), &policy);
+            assert!(!out.full, "tracker present + unchanged table ⇒ incremental");
+            assert_eq!(out.drifted, 0, "no row moved");
+            assert_eq!(out.reassigned, 0, "no bucket may change");
+            assert_eq!(out.scanned, n);
+
+            let want = draws(&a, d, n, b, m, 0xFEED);
+            let got = draws(&bs, d, n, b, m, 0xFEED);
+            assert_eq!(got.0, want.0, "{kind:?} iters={refine_iters}: ids diverge");
+            assert_eq!(got.1, want.1, "{kind:?} iters={refine_iters}: log_q bits diverge");
+        }
+    }
+}
+
+#[test]
+fn prop_pq_reassignment_never_increases_distortion_on_drifted_table() {
+    // With refine_iters = 0 the codebooks are fixed, and PQ assigns each
+    // subspace to its nearest codeword independently — so re-assignment is
+    // per-item optimal and total distortion on the NEW table cannot exceed
+    // the stale assignment's.
+    for_all("PQ reassign distortion ≤ stale", |rng, _| {
+        let n = 40 + rng.below(60);
+        let d = 6 + 2 * rng.below(3);
+        let table0 = rand_matrix(rng, n, d, 0.8);
+        let mut table1 = table0.clone();
+        for x in table1.iter_mut() {
+            *x += rng.normal_f32(0.4);
+        }
+        let mut s = MidxSampler::new(n, QuantKind::Product, 5, 10);
+        // first call under the incremental policy cold-rebuilds AND
+        // bootstraps the drift tracker (Full would skip the tracker)
+        s.rebuild_with(&table0, n, d, &mut Rng::new(11), &INCR0);
+        let stale = measured_distortion(s.quantizer().unwrap(), &table1, n, d);
+        let out = s.rebuild_with(&table1, n, d, &mut Rng::new(12), &INCR0);
+        if out.full {
+            return Err("expected incremental refresh".into());
+        }
+        let fresh = measured_distortion(s.quantizer().unwrap(), &table1, n, d);
+        if fresh <= stale + 1e-3 {
+            Ok(())
+        } else {
+            Err(format!("distortion rose: {fresh} > {stale}"))
+        }
+    });
+}
+
+#[test]
+fn prop_incremental_refresh_restores_kl_after_heavy_drift() {
+    // The satellite's property: after the table drifts, KL(Q‖P) with an
+    // incrementally refreshed index must not exceed the stale index's KL.
+    // Drift here is heavy (an independent re-draw), where the stale index
+    // carries no information about the new table and the gap is wide.
+    for_all("KL(refreshed) ≤ KL(stale)", |rng, case| {
+        let n = 60 + rng.below(60);
+        let d = 8;
+        let kind = if case % 2 == 0 { QuantKind::Product } else { QuantKind::Residual };
+        let table0 = rand_matrix(rng, n, d, 0.8);
+        let table1 = rand_matrix(rng, n, d, 0.8);
+        let queries = rand_matrix(rng, 6, d, 0.8);
+
+        let policy = RefreshPolicy::Incremental { tolerance: 0.0, refine_iters: 2 };
+        let mut s = MidxSampler::new(n, kind, 6, 12);
+        s.rebuild_with(&table0, n, d, &mut Rng::new(5), &policy); // cold + tracker
+        let kl_stale = sampler_kl(&mut s, &queries, &table1, n, d);
+
+        let out = s.rebuild_with(&table1, n, d, &mut Rng::new(7), &policy);
+        if out.full {
+            return Err("expected incremental refresh".into());
+        }
+        let kl_fresh = sampler_kl(&mut s, &queries, &table1, n, d);
+        if kl_fresh <= kl_stale + 1e-6 {
+            Ok(())
+        } else {
+            Err(format!("KL rose after refresh: {kl_fresh} > {kl_stale}"))
+        }
+    });
+}
+
+#[test]
+fn prop_exact_midx_stays_exact_across_incremental_refresh() {
+    // Theorem 1 holds for ANY bucket partition as long as the residual
+    // stage sees the live table — so the exact sampler must still equal
+    // the true softmax after a drift-driven refresh (this pins the
+    // core-table re-snapshot).
+    for_all("exact MIDX == softmax after refresh", |rng, _| {
+        let n = 30 + rng.below(50);
+        let d = 4 + rng.below(6);
+        let table0 = rand_matrix(rng, n, d, 0.8);
+        let mut table1 = table0.clone();
+        for x in table1.iter_mut() {
+            *x += rng.normal_f32(0.5);
+        }
+        let z = rand_matrix(rng, 1, d, 0.8);
+
+        let policy = RefreshPolicy::Incremental { tolerance: 0.0, refine_iters: 1 };
+        let mut s = ExactMidxSampler::new(n, QuantKind::Product, 3, 8);
+        s.rebuild_with(&table0, n, d, &mut Rng::new(17), &policy); // cold + tracker
+        let out = s.rebuild_with(&table1, n, d, &mut Rng::new(19), &policy);
+        if out.full {
+            return Err("expected incremental refresh".into());
+        }
+        let mut q = vec![0.0f32; n];
+        s.proposal_dist(&z, &mut q);
+        let p = softmax_dist(&z, &table1, n, d);
+        for i in 0..n {
+            if (q[i] - p[i]).abs() > 1e-3 * (1.0 + p[i]) {
+                return Err(format!("class {i}: {} vs {}", q[i], p[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn auto_policy_rebuilds_cold_then_refreshes_then_falls_back_under_churn() {
+    let (n, d) = (80usize, 8usize);
+    let mut rng = Rng::new(21);
+    let mut table = rand_matrix(&mut rng, n, d, 0.8);
+    let mut s = MidxSampler::new(n, QuantKind::Residual, 6, 10);
+
+    // first build: nothing to refresh incrementally
+    let o0 = s.rebuild_with(&table, n, d, &mut Rng::new(1), &RefreshPolicy::Auto);
+    assert!(o0.full, "first build must be cold");
+
+    // sub-tolerance drift: incremental, and nothing re-assessed
+    for x in table.iter_mut() {
+        *x += rng.normal_f32(1e-4);
+    }
+    let o1 = s.rebuild_with(&table, n, d, &mut Rng::new(2), &RefreshPolicy::Auto);
+    assert!(!o1.full, "tiny drift must not trigger a cold rebuild");
+    assert_eq!(o1.drifted, 0, "movement below the auto tolerance");
+
+    // catastrophic churn: independent tables accumulate bucket moves past
+    // the Auto threshold, forcing a cold rebuild within a few epochs
+    let mut saw_full = false;
+    for epoch in 0u64..4 {
+        table = rand_matrix(&mut rng, n, d, 0.8);
+        let o = s.rebuild_with(&table, n, d, &mut Rng::new(3 + epoch), &RefreshPolicy::Auto);
+        if o.full {
+            saw_full = true;
+            break;
+        }
+    }
+    assert!(saw_full, "accumulated churn never forced a cold rebuild");
+}
+
+#[test]
+fn static_samplers_fall_back_to_full_rebuild_for_any_policy() {
+    let (n, d) = (20usize, 4usize);
+    let mut rng = Rng::new(2);
+    let table = rand_matrix(&mut rng, n, d, 1.0);
+    let mut s = UniformSampler::new(n);
+    for policy in [
+        RefreshPolicy::Full,
+        RefreshPolicy::Auto,
+        RefreshPolicy::Incremental { tolerance: 0.0, refine_iters: 1 },
+    ] {
+        let out = s.rebuild_with(&table, n, d, &mut Rng::new(3), &policy);
+        assert!(out.full, "default rebuild_with must report a full rebuild");
+        assert_eq!(out.scanned, n);
+    }
+}
+
+#[test]
+fn full_policy_keeps_no_tracker_so_switching_policies_cold_rebuilds_once() {
+    // Under Full the N·D drift snapshot is never allocated (it would never
+    // be read); the cost of switching to an incremental policy later is
+    // exactly one bootstrap cold rebuild.
+    let (n, d) = (40usize, 8usize);
+    let mut rng = Rng::new(8);
+    let table = rand_matrix(&mut rng, n, d, 0.8);
+    let mut s = MidxSampler::new(n, QuantKind::Product, 4, 8);
+    assert!(s.rebuild_with(&table, n, d, &mut Rng::new(1), &RefreshPolicy::Full).full);
+    assert!(s.rebuild_with(&table, n, d, &mut Rng::new(2), &INCR0).full, "tracker bootstrap");
+    assert!(!s.rebuild_with(&table, n, d, &mut Rng::new(3), &INCR0).full);
+}
+
+#[test]
+fn shape_change_forces_cold_rebuild_under_incremental_policy() {
+    let d = 8usize;
+    let mut rng = Rng::new(31);
+    let table_a = rand_matrix(&mut rng, 50, d, 0.8);
+    let table_b = rand_matrix(&mut rng, 70, d, 0.8);
+    let mut s = MidxSampler::new(50, QuantKind::Product, 4, 8);
+    let policy = RefreshPolicy::Incremental { tolerance: 0.0, refine_iters: 1 };
+    assert!(s.rebuild_with(&table_a, 50, d, &mut Rng::new(1), &policy).full);
+    // N changed: the tracker no longer matches, must cold-rebuild
+    let out = s.rebuild_with(&table_b, 70, d, &mut Rng::new(2), &policy);
+    assert!(out.full, "shape change must cold-rebuild");
+    assert_eq!(out.scanned, 70);
+    // and from there incremental works again
+    let out2 = s.rebuild_with(&table_b, 70, d, &mut Rng::new(3), &policy);
+    assert!(!out2.full);
+}
