@@ -1,0 +1,116 @@
+//! `cargo bench --bench serve` — serve-layer cost: snapshot export/load
+//! and batched top-k latency percentiles.
+//!
+//! Three sections, all artifact-free:
+//!
+//! 1. **Snapshot cost.** Serialize (`to_bytes`) and parse+validate
+//!    (`from_bytes`) throughput at two model sizes, plus one-shot
+//!    file write/read round trips.
+//! 2. **Top-k latency.** Per-batch latency percentiles (p50/p95/p99) and
+//!    QPS for `top_k_batch` across batch sizes × worker-thread counts —
+//!    the acceptance-criteria table. Single-query latency stays flat as
+//!    threads grow (no work to fan out); large batches should scale until
+//!    dispatch overhead dominates.
+//! 3. **Sampling latency.** The served proposal-draw path (`sample`) at
+//!    one representative shape, for comparison against the training-time
+//!    numbers in `benches/sampling_time.rs`.
+
+use std::time::Instant;
+
+use midx::sampler::{build, Sampler, SamplerKind, SamplerParams};
+use midx::serve::{QueryEngine, Snapshot};
+use midx::util::bench::{bench_ms, time_once};
+use midx::util::check::rand_matrix;
+use midx::util::Rng;
+
+fn snapshot_for(n: usize, d: usize, k: usize, seed: u64) -> Snapshot {
+    let mut rng = Rng::new(seed);
+    let table = rand_matrix(&mut rng, n, d, 0.5);
+    let params = SamplerParams { k_codewords: k, ..Default::default() };
+    let mut s = build(SamplerKind::MidxRq, n, &params);
+    s.rebuild(&table, n, d, &mut rng);
+    s.snapshot(&table, n, d).expect("midx-rq snapshots")
+}
+
+fn snapshot_section() {
+    for &(n, d, k) in &[(2_000usize, 32usize, 32usize), (20_000, 32, 32)] {
+        let snap = snapshot_for(n, d, k, 3);
+        let bytes = snap.to_bytes();
+        println!("snapshot n{n}: {} bytes", bytes.len());
+        bench_ms(&format!("serve/export_bytes/n{n}"), 400, || {
+            std::hint::black_box(snap.to_bytes());
+        });
+        bench_ms(&format!("serve/load_bytes/n{n}"), 400, || {
+            std::hint::black_box(Snapshot::from_bytes(&bytes).expect("valid snapshot"));
+        });
+
+        let path = std::env::temp_dir().join(format!("midx_bench_{n}.midx"));
+        time_once(&format!("serve/export_file/n{n}"), || snap.write(&path).unwrap());
+        time_once(&format!("serve/load_file/n{n}"), || Snapshot::read(&path).unwrap());
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// Latency percentiles over `reps` timed calls of `f`, printed with QPS
+/// (queries, not calls: each call answers `batch` queries).
+fn percentiles(name: &str, batch: usize, reps: usize, mut f: impl FnMut()) {
+    // warmup
+    f();
+    let mut us: Vec<u64> = Vec::with_capacity(reps);
+    let t_all = Instant::now();
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        us.push(t.elapsed().as_micros() as u64);
+    }
+    let wall = t_all.elapsed().as_secs_f64();
+    us.sort_unstable();
+    let pct = |p: f64| us[((p / 100.0 * (us.len() - 1) as f64).round() as usize).min(us.len() - 1)];
+    println!(
+        "bench {name:<44} p50={}µs p95={}µs p99={}µs qps={:.0}",
+        pct(50.0),
+        pct(95.0),
+        pct(99.0),
+        (reps * batch) as f64 / wall,
+    );
+}
+
+fn topk_section() {
+    let (n, d, k_codewords, k) = (20_000usize, 32usize, 32usize, 10usize);
+    let snap = snapshot_for(n, d, k_codewords, 7);
+    let mut rng = Rng::new(11);
+    let queries = rand_matrix(&mut rng, 256, d, 0.5);
+
+    println!("\ntop-{k} latency vs batch size and worker threads (N={n}, D={d}, K={k_codewords})");
+    for &threads in &[1usize, 2, 4, 8] {
+        let engine = QueryEngine::new(snap.clone(), threads);
+        for &b in &[1usize, 8, 64, 256] {
+            let q = &queries[..b * d];
+            percentiles(&format!("serve/topk/b{b}/t{threads}"), b, 60, || {
+                std::hint::black_box(engine.top_k_batch(q, k));
+            });
+        }
+    }
+}
+
+fn sample_section() {
+    let (n, d, k_codewords, m) = (20_000usize, 32usize, 32usize, 16usize);
+    let snap = snapshot_for(n, d, k_codewords, 13);
+    let mut rng = Rng::new(17);
+    let queries = rand_matrix(&mut rng, 64, d, 0.5);
+    println!("\nserved proposal draws (B=64, M={m})");
+    for &threads in &[1usize, 4] {
+        let engine = QueryEngine::new(snap.clone(), threads);
+        let mut seed = 0u64;
+        percentiles(&format!("serve/sample/b64/t{threads}"), 64, 60, || {
+            seed = seed.wrapping_add(1);
+            std::hint::black_box(engine.sample(&queries, m, seed));
+        });
+    }
+}
+
+fn main() {
+    snapshot_section();
+    topk_section();
+    sample_section();
+}

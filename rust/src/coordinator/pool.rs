@@ -39,6 +39,13 @@
 //! `run` must not be called from inside a job (the pool is a single-level
 //! fork-join, not a task graph); submitters on different threads are
 //! serialized by an internal lock.
+//!
+//! The training loop is not the only consumer: the serve layer
+//! ([`crate::serve::query`]) owns an engine-lifetime pool too — batched
+//! top-k fans query rows across lanes exactly like `sample_batch_pooled`,
+//! and the micro-batcher strides whole coalesced requests across lanes in
+//! one dispatch. Both lean on the same guarantees (blocking `run`,
+//! per-worker scratch reuse, panic containment).
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};

@@ -59,6 +59,55 @@ impl InvertedMultiIndex {
         InvertedMultiIndex { k, offsets, members, sizes, log_sizes }
     }
 
+    /// Reassemble an index from serialized CSR parts (the `serve::snapshot`
+    /// load path — no quantizer, no counting sort). Validates the layout
+    /// structurally: `offsets` must be a monotone [K²+1] prefix array
+    /// starting at 0 and ending at `members.len()`, and `members` must be a
+    /// permutation of `0..n` (every class in exactly one bucket). Bucket
+    /// masses (`sizes` / `log_sizes`) are recomputed from the offsets, so
+    /// they cannot disagree with the membership.
+    pub fn from_csr(k: usize, offsets: Vec<u32>, members: Vec<u32>) -> Result<Self, String> {
+        let nb = k * k;
+        if k == 0 {
+            return Err("index has zero codewords".into());
+        }
+        if offsets.len() != nb + 1 {
+            return Err(format!("offsets length {} != K²+1 = {}", offsets.len(), nb + 1));
+        }
+        if offsets[0] != 0 {
+            return Err(format!("offsets must start at 0, got {}", offsets[0]));
+        }
+        for b in 0..nb {
+            if offsets[b + 1] < offsets[b] {
+                return Err(format!("offsets decrease at bucket {b}"));
+            }
+        }
+        let n = members.len();
+        if offsets[nb] as usize != n {
+            return Err(format!("offsets end at {} but index holds {n} members", offsets[nb]));
+        }
+        let mut seen = vec![false; n];
+        for &c in &members {
+            let i = c as usize;
+            if i >= n {
+                return Err(format!("member id {c} out of range (N = {n})"));
+            }
+            if seen[i] {
+                return Err(format!("class {c} appears in two buckets"));
+            }
+            seen[i] = true;
+        }
+        let mut idx = InvertedMultiIndex {
+            k,
+            offsets,
+            members,
+            sizes: vec![0.0; nb],
+            log_sizes: vec![0.0; nb],
+        };
+        idx.update_bucket_masses();
+        Ok(idx)
+    }
+
     /// Bucket members by (stage-1, stage-2) codeword pair.
     #[inline]
     pub fn bucket(&self, k1: usize, k2: usize) -> &[u32] {
@@ -259,6 +308,29 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn from_csr_roundtrips_and_rejects_corruption() {
+        let (idx, _) = build_index(7, 90, 8, 4, true);
+        let re = InvertedMultiIndex::from_csr(idx.k, idx.offsets.clone(), idx.members.clone())
+            .expect("valid CSR");
+        assert_eq!(re.offsets, idx.offsets);
+        assert_eq!(re.members, idx.members);
+        assert_eq!(re.sizes, idx.sizes);
+
+        // wrong offsets length
+        assert!(InvertedMultiIndex::from_csr(idx.k, idx.offsets[1..].to_vec(), idx.members.clone())
+            .is_err());
+        // duplicated member (a class in two buckets)
+        let mut dup = idx.members.clone();
+        dup[0] = dup[1];
+        assert!(InvertedMultiIndex::from_csr(idx.k, idx.offsets.clone(), dup).is_err());
+        // non-monotone offsets
+        let mut bad = idx.offsets.clone();
+        let mid = bad.len() / 2;
+        bad[mid] = bad[mid - 1].wrapping_add(u32::MAX);
+        assert!(InvertedMultiIndex::from_csr(idx.k, bad, idx.members.clone()).is_err());
     }
 
     #[test]

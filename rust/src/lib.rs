@@ -53,6 +53,17 @@
 //! [`train::TrainConfig`] → [`sampler::Sampler::rebuild_with`]); the
 //! trainer books cold vs incremental maintenance time separately.
 //!
+//! ## Serving
+//!
+//! Trained cores no longer die with the training process: `midx export`
+//! (or `midx train --export PATH`) persists the quantizer, inverted
+//! multi-index and class embeddings as a versioned, checksummed snapshot
+//! ([`serve::snapshot`]), and `midx serve` / `midx query` answer top-k and
+//! proposal-draw requests against it. A loaded core is draw-for-draw
+//! bit-identical to the in-memory one; concurrent callers are coalesced by
+//! a micro-batching dispatcher ([`serve::query::MicroBatcher`]) into
+//! single [`coordinator::WorkerPool`] dispatches (DESIGN.md §6).
+//!
 //! ## Module map
 //!
 //! | module        | role |
@@ -62,6 +73,7 @@
 //! | `index`       | inverted multi-index (CSR over K² buckets) + drift-driven refresh |
 //! | `train`       | trainer (pipelined hot loop), Adam, params, metrics |
 //! | `coordinator` | experiment driver, prefetch + overlap pipeline, reports |
+//! | `serve`       | sampler snapshots, query engine, micro-batched frontend |
 //! | `stats`       | KL/Rényi divergence, gradient bias vs paper bounds |
 //! | `data`        | synthetic LM / recsys / XMC substrates |
 //! | `bench_tables`| regenerate every paper table/figure |
@@ -84,6 +96,7 @@ pub mod index;
 pub mod quant;
 pub mod runtime;
 pub mod sampler;
+pub mod serve;
 pub mod stats;
 pub mod train;
 pub mod util;

@@ -3,15 +3,20 @@
 //! ```text
 //! midx list                         # models available in artifacts/
 //! midx info  --model NAME          # manifest summary
-//! midx train --model NAME --sampler midx-rq [--epochs 6 --steps 120 ...]
+//! midx train --model NAME --sampler midx-rq [--export snap.midx ...]
 //! midx bench table4 [--quick]      # regenerate a paper table/figure
-//! midx bench all [--quick]
+//! midx export --synthetic --out snap.midx   # artifact-free snapshot
+//! midx query --snapshot snap.midx --topk 5  # one-shot batched answers
+//! midx serve --snapshot snap.midx [--tcp 127.0.0.1:7070]
 //! ```
 //!
 //! (Arg parsing is hand-rolled — the offline build environment carries no
 //! clap; see DESIGN.md §2.)
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -19,8 +24,12 @@ use midx::bench_tables::{run_bench, Budget};
 use midx::coordinator::{fmt, run_experiment, ExperimentSpec, Table};
 use midx::index::RefreshPolicy;
 use midx::runtime::{list_models, load_model};
-use midx::sampler::SamplerKind;
+use midx::sampler::{self, SamplerKind, SamplerParams};
+use midx::serve::{serve_stdin, serve_tcp, LatencyRecorder, MicroBatcher, QueryEngine, Snapshot};
 use midx::train::TrainConfig;
+use midx::util::check::rand_matrix;
+use midx::util::json::{from_f32s, from_u32s};
+use midx::util::{Json, Rng};
 
 struct Args {
     positional: Vec<String>,
@@ -82,8 +91,24 @@ const USAGE: &str = "usage:
                               imbalance thresholds)
              [--refresh-tol F] [--refresh-iters N]
                              (incremental knobs: l2 drift tolerance, refine passes)
+             [--export FILE] (after training, write a servable sampler snapshot —
+                              MIDX-family samplers only)
   midx bench table1|table2|table3|table4|table5|table7|table9|fig2|fig3|fig45|fig6|fig7|all [--quick]
-             [--epochs N] [--steps N] [--eval-cap N]";
+             [--epochs N] [--steps N] [--eval-cap N]
+  midx export --out FILE ( --model NAME [train flags above]
+                         | --synthetic [--n N] [--d D] [--k K] [--sampler midx-pq|midx-rq|exact-midx]
+                           [--seed N] [--kmeans-iters N] )
+                             (persist a trained sampler core: quantizer codebooks + codes,
+                              CSR inverted index, class embeddings — loadable by serve/query)
+  midx query --snapshot FILE [--topk K | --sample M] [--threads N] [--beam F]
+             [--q \"f,f,...\"] | [--queries B --seed N]
+                             (one-shot batched answers against a snapshot; one JSON line
+                              per query on stdout, timing summary on stderr)
+  midx serve --snapshot FILE [--tcp ADDR] [--threads N] [--beam F]
+             [--window-us N] [--max-batch N]
+                             (line-delimited JSON frontend: op topk|sample|info|stats;
+                              stdin/stdout by default, --tcp for one thread per
+                              connection coalesced by the micro-batcher)";
 
 fn cmd_list() -> Result<()> {
     let mut t = Table::new("models (artifacts/)", &["model", "arch", "N", "D", "Bq", "M", "params"]);
@@ -127,12 +152,31 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Sampler kinds that can be exported as a servable snapshot.
+fn is_exportable(kind: SamplerKind) -> bool {
+    matches!(kind, SamplerKind::MidxPq | SamplerKind::MidxRq | SamplerKind::ExactMidx)
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
+    run_training(args, args.get("export").map(|s| s.to_string()))
+}
+
+/// Shared train driver behind `midx train` and `midx export --model`:
+/// parses the training flags, runs the experiment, and (optionally) has
+/// the trainer emit a servable snapshot at the end.
+fn run_training(args: &Args, export: Option<String>) -> Result<()> {
     let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
     let sampler = match args.get("sampler").unwrap_or("midx-rq") {
         "full" => None,
         s => Some(SamplerKind::parse(s).ok_or_else(|| anyhow!("unknown sampler '{s}'"))?),
     };
+    if export.is_some() && !sampler.map(is_exportable).unwrap_or(false) {
+        bail!(
+            "--export requires a MIDX-family sampler (midx-pq, midx-rq, exact-midx), \
+             got '{}'",
+            sampler.map(|s| s.name()).unwrap_or("full")
+        );
+    }
     let mut refresh = match args.get("refresh") {
         None => RefreshPolicy::Full,
         Some(s) => {
@@ -164,6 +208,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         // trainer spawns its worker pool once and reuses it every step
         threads: args.usize_or("threads", 0),
         refresh,
+        export,
         verbose: true,
     };
     let res = run_experiment(&spec)?;
@@ -188,6 +233,134 @@ fn cmd_train(args: &Args) -> Result<()> {
     t.row(vec!["reassigned items".into(), res.timing.reassigned.to_string()]);
     print!("{}", t.render_text());
     Ok(())
+}
+
+fn cmd_export(args: &Args) -> Result<()> {
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow!("--out FILE required (where to write the snapshot)"))?
+        .to_string();
+    if !args.has("synthetic") {
+        // train → snapshot: exactly `midx train --export OUT`
+        return run_training(args, Some(out));
+    }
+    // artifact-free path: a deterministic random table stands in for the
+    // trained embeddings (CI smoke, quickstarts, serve-layer testing)
+    let n = args.usize_or("n", 1000);
+    let d = args.usize_or("d", 16);
+    let k = args.usize_or("k", 8);
+    let seed = args.u64_or("seed", 42);
+    let kind_name = args.get("sampler").unwrap_or("midx-rq");
+    let kind =
+        SamplerKind::parse(kind_name).ok_or_else(|| anyhow!("unknown sampler '{kind_name}'"))?;
+    if !is_exportable(kind) {
+        bail!("--synthetic export requires a MIDX-family sampler, got '{kind_name}'");
+    }
+    let mut rng = Rng::new(seed);
+    let table = rand_matrix(&mut rng, n, d, 0.5);
+    let params = SamplerParams {
+        k_codewords: k,
+        kmeans_iters: args.usize_or("kmeans-iters", 10),
+        ..Default::default()
+    };
+    let mut s = sampler::build(kind, n, &params);
+    s.rebuild(&table, n, d, &mut rng);
+    let snap = s
+        .snapshot(&table, n, d)
+        .ok_or_else(|| anyhow!("sampler '{}' produced no snapshot", kind.name()))?;
+    snap.write(Path::new(&out))?;
+    println!(
+        "exported synthetic {} snapshot: N={n} D={d} K={k} seed={seed} -> {out} ({} bytes)",
+        kind.name(),
+        snap.size_bytes()
+    );
+    Ok(())
+}
+
+/// Load a snapshot and build a query engine from the shared serve flags
+/// (`--snapshot`, `--threads`, `--beam`).
+fn load_engine(args: &Args, default_threads: usize) -> Result<QueryEngine> {
+    let path = args
+        .get("snapshot")
+        .ok_or_else(|| anyhow!("--snapshot FILE required (produced by `midx export`)"))?;
+    let snap = Snapshot::read(Path::new(path))?;
+    let mut engine = QueryEngine::new(snap, args.usize_or("threads", default_threads));
+    if args.has("beam") {
+        engine.set_beam_factor(args.usize_or("beam", midx::serve::query::DEFAULT_BEAM_FACTOR));
+    }
+    Ok(engine)
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    let engine = load_engine(args, 1)?;
+    let d = engine.dim();
+    let queries: Vec<f32> = match args.get("q") {
+        Some(csv) => {
+            let v: Result<Vec<f32>, _> = csv.split(',').map(|t| t.trim().parse()).collect();
+            let v = v.map_err(|e| anyhow!("bad --q float list: {e}"))?;
+            if v.is_empty() || v.len() % d != 0 {
+                bail!("--q carries {} floats; the model dimension is {d}", v.len());
+            }
+            v
+        }
+        None => {
+            let b = args.usize_or("queries", 1);
+            rand_matrix(&mut Rng::new(args.u64_or("seed", 1)), b, d, 0.5)
+        }
+    };
+    let b = queries.len() / d;
+    let t0 = Instant::now();
+    if args.has("sample") {
+        let m = args.usize_or("sample", 16);
+        let seed = args.u64_or("seed", 1);
+        let (ids, log_q) = engine.sample(&queries, m, seed);
+        for row in 0..b {
+            let (lo, hi) = (row * m, (row + 1) * m);
+            print_row(row, &ids[lo..hi], "log_q", &log_q[lo..hi]);
+        }
+        eprintln!("sampled {m} draws for {b} queries in {:.2?}", t0.elapsed());
+    } else {
+        let k = args.usize_or("topk", 10).min(engine.n_classes());
+        let (ids, scores) = engine.top_k_batch(&queries, k);
+        for row in 0..b {
+            let (lo, hi) = (row * k, (row + 1) * k);
+            print_row(row, &ids[lo..hi], "scores", &scores[lo..hi]);
+        }
+        eprintln!(
+            "answered top-{k} for {b} queries in {:.2?} ({} worker threads)",
+            t0.elapsed(),
+            engine.workers()
+        );
+    }
+    Ok(())
+}
+
+/// One `midx query` result line: `{"ids":[…],"query":i,"scores":[…]}`.
+fn print_row(row: usize, ids: &[u32], score_field: &str, scores: &[f32]) {
+    let mut m = BTreeMap::new();
+    m.insert("query".to_string(), Json::Num(row as f64));
+    m.insert("ids".to_string(), from_u32s(ids));
+    m.insert(score_field.to_string(), from_f32s(scores));
+    println!("{}", Json::Obj(m));
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let engine = Arc::new(load_engine(args, 0)?);
+    eprintln!(
+        "loaded {} snapshot: N={} D={} ({} worker threads)",
+        engine.kind().name(),
+        engine.n_classes(),
+        engine.dim(),
+        engine.workers()
+    );
+    let window = Duration::from_micros(args.u64_or("window-us", 200));
+    let max_batch = args.usize_or("max-batch", 64);
+    let batcher = MicroBatcher::new(engine, window, max_batch);
+    let rec = LatencyRecorder::new();
+    match args.get("tcp") {
+        Some(addr) => serve_tcp(Arc::new(batcher), Arc::new(rec), addr),
+        None => serve_stdin(&batcher, &rec),
+    }
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
@@ -217,13 +390,18 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(&args),
         Some("train") => cmd_train(&args),
         Some("bench") => cmd_bench(&args),
-        _ => {
+        Some("export") => cmd_export(&args),
+        Some("query") => cmd_query(&args),
+        Some("serve") => cmd_serve(&args),
+        Some(other) => {
+            // unknown subcommand: full usage listing on stderr (stdout
+            // stays machine-readable) and a non-zero exit
+            eprintln!("{USAGE}");
+            bail!("unknown command '{other}'")
+        }
+        None => {
             println!("{USAGE}");
-            if args.positional.is_empty() {
-                Ok(())
-            } else {
-                bail!("unknown command '{}'", args.positional[0])
-            }
+            Ok(())
         }
     }
 }

@@ -28,6 +28,26 @@ pub struct ProductQuantizer {
 }
 
 impl ProductQuantizer {
+    /// Reassemble a quantizer from serialized parts (the `serve::snapshot`
+    /// load path): codebooks, assignments and the build-time distortion are
+    /// taken as given — no k-means runs, so the result is bit-identical to
+    /// the quantizer the parts were captured from.
+    pub fn from_parts(
+        k: usize,
+        d: usize,
+        d1: usize,
+        c1: Vec<f32>,
+        c2: Vec<f32>,
+        assign1: Vec<u32>,
+        assign2: Vec<u32>,
+        distortion: f64,
+    ) -> Self {
+        assert_eq!(c1.len(), k * d1, "stage-1 codebook must be [k, d1]");
+        assert_eq!(c2.len(), k * (d - d1), "stage-2 codebook must be [k, d-d1]");
+        assert_eq!(assign1.len(), assign2.len(), "code arrays must match");
+        ProductQuantizer { k, d, d1, c1, c2, assign1, assign2, distortion }
+    }
+
     /// Learn codebooks from the class-embedding table [n, d].
     pub fn build(table: &[f32], n: usize, d: usize, k: usize, iters: usize, rng: &mut Rng) -> Self {
         assert!(d >= 2, "PQ needs d >= 2 to split");

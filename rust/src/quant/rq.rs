@@ -31,6 +31,25 @@ pub struct ResidualQuantizer {
 }
 
 impl ResidualQuantizer {
+    /// Reassemble a quantizer from serialized parts (the `serve::snapshot`
+    /// load path): codebooks, assignments and the build-time distortion are
+    /// taken as given — no k-means runs, so the result is bit-identical to
+    /// the quantizer the parts were captured from.
+    pub fn from_parts(
+        k: usize,
+        d: usize,
+        c1: Vec<f32>,
+        c2: Vec<f32>,
+        assign1: Vec<u32>,
+        assign2: Vec<u32>,
+        distortion: f64,
+    ) -> Self {
+        assert_eq!(c1.len(), k * d, "level-1 codebook must be [k, d]");
+        assert_eq!(c2.len(), k * d, "level-2 codebook must be [k, d]");
+        assert_eq!(assign1.len(), assign2.len(), "code arrays must match");
+        ResidualQuantizer { k, d, c1, c2, assign1, assign2, distortion }
+    }
+
     /// Learn both levels from the class-embedding table [n, d].
     pub fn build(table: &[f32], n: usize, d: usize, k: usize, iters: usize, rng: &mut Rng) -> Self {
         let km1 = kmeans(table, n, d, k, iters, rng);

@@ -39,6 +39,18 @@ impl MidxCore {
         MidxCore { n, name, quant, index, cost: CostEwma::new() }
     }
 
+    /// Reassemble a core from snapshot parts: a quantizer plus the CSR
+    /// index over its codes (the `serve::snapshot` load path — no k-means,
+    /// no index rebuild, so the core is bit-identical to the one captured).
+    pub fn from_parts(
+        name: &'static str,
+        quant: Box<dyn Quantizer + Send + Sync>,
+        index: InvertedMultiIndex,
+    ) -> Self {
+        let n = index.n_classes();
+        MidxCore { n, name, quant, index, cost: CostEwma::new() }
+    }
+
     /// The inverted multi-index this core draws buckets from.
     pub fn index(&self) -> &InvertedMultiIndex {
         &self.index
@@ -375,6 +387,15 @@ impl Sampler for MidxSampler {
         self.core = Some(core);
         true
     }
+
+    fn snapshot(&self, table: &[f32], n: usize, d: usize) -> Option<crate::serve::Snapshot> {
+        let core = self.core.as_ref()?;
+        let kind = match self.kind {
+            QuantKind::Product => crate::serve::SnapshotKind::MidxPq,
+            QuantKind::Residual => crate::serve::SnapshotKind::MidxRq,
+        };
+        Some(crate::serve::Snapshot::capture(kind, core.quantizer(), core.index(), table, n, d))
+    }
 }
 
 /// Immutable epoch state of the exact sampler (Theorem 1): additionally
@@ -393,6 +414,35 @@ impl ExactMidxCore {
     pub fn new(quant: Box<dyn Quantizer + Send + Sync>, table: &[f32], n: usize, d: usize) -> Self {
         let index = InvertedMultiIndex::build(quant.as_ref(), n);
         ExactMidxCore { n, d, quant, index, table: table.to_vec(), cost: CostEwma::new() }
+    }
+
+    /// Reassemble a core from snapshot parts (the `serve::snapshot` load
+    /// path): the quantizer, the CSR index over its codes, and the class
+    /// table the residual stage scores against — no k-means, no rebuild.
+    pub fn from_parts(
+        quant: Box<dyn Quantizer + Send + Sync>,
+        index: InvertedMultiIndex,
+        table: Vec<f32>,
+        d: usize,
+    ) -> Self {
+        let n = index.n_classes();
+        assert_eq!(table.len(), n * d, "table must be [n, d]");
+        ExactMidxCore { n, d, quant, index, table, cost: CostEwma::new() }
+    }
+
+    /// The inverted multi-index this core draws buckets from.
+    pub fn index(&self) -> &InvertedMultiIndex {
+        &self.index
+    }
+
+    /// The quantizer whose codes define the exact decomposition.
+    pub fn quantizer(&self) -> &(dyn Quantizer + Send + Sync) {
+        self.quant.as_ref()
+    }
+
+    /// The class-embedding snapshot the residual stage scores against.
+    pub fn table(&self) -> &[f32] {
+        &self.table
     }
 
     /// O(N·D) per query: residual scores õ_i for every class, per-bucket
@@ -630,6 +680,22 @@ impl Sampler for ExactMidxSampler {
     fn proposal_dist(&mut self, z: &[f32], out: &mut [f32]) {
         let core = self.core.as_ref().expect("rebuild() before sampling");
         core.proposal_dist(z, &mut self.scratch, out);
+    }
+
+    /// The exact core's residual stage scores against its own table
+    /// snapshot, so the captured table is the core's — not the live one —
+    /// to keep loaded draws bit-identical (Theorem 1 exactness holds
+    /// against the table the core indexes).
+    fn snapshot(&self, _table: &[f32], n: usize, d: usize) -> Option<crate::serve::Snapshot> {
+        let core = self.core.as_ref()?;
+        Some(crate::serve::Snapshot::capture(
+            crate::serve::SnapshotKind::ExactMidx,
+            core.quantizer(),
+            core.index(),
+            core.table(),
+            n,
+            d,
+        ))
     }
 }
 

@@ -213,6 +213,17 @@ pub trait Sampler: Send {
         batch::sample_batch(self.core(), queries, d, positives, m, seed, threads, ids, log_q);
     }
 
+    /// Capture the current core as a servable [`crate::serve::Snapshot`]:
+    /// quantizer codebooks + codes, the CSR inverted index with its bucket
+    /// masses, and the class-embedding table `table` ([n, d]) for exact
+    /// re-ranking at query time. Returns `None` for samplers without a
+    /// serializable index (everything outside the MIDX family today), and
+    /// for adaptive samplers before their first `rebuild`.
+    fn snapshot(&self, table: &[f32], n: usize, d: usize) -> Option<crate::serve::Snapshot> {
+        let _ = (table, n, d);
+        None
+    }
+
     /// Install externally-learned codebooks (paper §6.2.3 MIDX-Learn):
     /// classes are re-assigned to their nearest codewords and the inverted
     /// multi-index is rebuilt around the given codebooks instead of k-means

@@ -1,0 +1,29 @@
+//! Query-time serving: persistent sampler snapshots + a batched frontend.
+//!
+//! Training (`midx train`) learns the quantizer, the inverted multi-index
+//! and the class embeddings — this module is everything downstream of that
+//! (the system's query-time half; see DESIGN.md §6):
+//!
+//! * [`snapshot`] — a versioned, checksummed binary format that persists a
+//!   trained MIDX core losslessly: a loaded core is draw-for-draw
+//!   bit-identical to the in-memory one.
+//! * [`query`] — the [`query::QueryEngine`] (exact-reranked beam top-k +
+//!   the training-time proposal draws, both batched over the persistent
+//!   [`crate::coordinator::WorkerPool`]) and the [`query::MicroBatcher`]
+//!   that coalesces concurrent callers into single pool dispatches.
+//! * [`server`] — a line-delimited JSON frontend (stdin or TCP, no new
+//!   dependencies) with per-request latency accounting and a p50/p95/p99 +
+//!   QPS report.
+//!
+//! CLI surface: `midx export` (train → snapshot, or `--synthetic` for an
+//! artifact-free snapshot), `midx serve` (snapshot → frontend), and
+//! `midx query` (snapshot → one-shot batched answers); `midx train
+//! --export PATH` makes every training run emit a servable artifact.
+
+pub mod query;
+pub mod server;
+pub mod snapshot;
+
+pub use query::{MicroBatcher, QueryEngine, Reply, Request};
+pub use server::{handle_line, serve_stdin, serve_tcp, LatencyRecorder};
+pub use snapshot::{Snapshot, SnapshotKind};

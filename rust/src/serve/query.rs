@@ -1,0 +1,700 @@
+//! Query engine over a loaded snapshot: batched top-k retrieval, proposal
+//! draws, and dynamic micro-batching for concurrent callers.
+//!
+//! * **`top_k`** — beam search over the codeword-pair grid: buckets are
+//!   ranked by their stage score `s1[k1] + s2[k2]` (the MIDX approximation
+//!   of every member's score), members of the best buckets are gathered
+//!   into a shortlist of `beam_factor · k` candidates, and the shortlist is
+//!   re-ranked by the **exact** inner product against the stored class
+//!   table. With `beam_factor` large enough to cover all classes this
+//!   equals brute force (pinned by `rust/tests/serve.rs`); at the default
+//!   it trades a bounded amount of recall for O(K² log K² + beam·D) per
+//!   query instead of O(N·D).
+//! * **`sample`** — the training-time proposal draws, verbatim: the loaded
+//!   core goes through [`crate::sampler::sample_batch_with`], so served
+//!   draws are bit-identical to the in-memory sampler for any thread count.
+//! * **[`MicroBatcher`]** — concurrent callers (e.g. one thread per TCP
+//!   connection) enqueue single requests; a dispatcher thread drains the
+//!   queue after a short coalescing window and executes the whole batch in
+//!   **one** [`WorkerPool`] dispatch (requests strided across lanes), so R
+//!   concurrent requests cost one condvar wake instead of R. Each request
+//!   is computed independently with its own seed/stream, so replies never
+//!   depend on how requests happened to be batched.
+//!
+//! Both query paths are deterministic: top-k is a pure function of the
+//! snapshot and the query, and sampling depends only on `(seed, row)` —
+//! never on batching, threading, or arrival order.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::WorkerPool;
+use crate::index::InvertedMultiIndex;
+use crate::quant::Quantizer;
+use crate::sampler::batch::auto_threads;
+use crate::sampler::midx::{ExactMidxCore, MidxCore};
+use crate::sampler::{sample_batch_with, SamplerCore, Scratch};
+use crate::serve::snapshot::{Snapshot, SnapshotKind};
+use crate::util::math::dot;
+use crate::util::Rng;
+
+/// Default shortlist size as a multiple of k: the beam gathers
+/// `beam_factor · k` candidates before the exact re-rank.
+pub const DEFAULT_BEAM_FACTOR: usize = 4;
+
+/// Reusable per-thread buffers for the top-k path (bucket ranking and the
+/// candidate shortlist), so batched queries do not reallocate per row.
+#[derive(Clone, Debug, Default)]
+pub struct TopKScratch {
+    /// (stage score, bucket id) for every occupied bucket
+    buckets: Vec<(f32, u32)>,
+    /// (exact score, class id) shortlist being re-ranked
+    cand: Vec<(f32, u32)>,
+}
+
+/// The reassembled core, held concretely so the top-k path can borrow the
+/// quantizer / index / table from the very same structures the sampling
+/// path draws from — one copy of the model in memory, not two.
+enum ServedCore {
+    /// fast MIDX (midx-pq / midx-rq)
+    Midx(MidxCore),
+    /// exact MIDX (owns its own class-table snapshot)
+    Exact(ExactMidxCore),
+}
+
+impl ServedCore {
+    fn core(&self) -> &dyn SamplerCore {
+        match self {
+            ServedCore::Midx(c) => c,
+            ServedCore::Exact(c) => c,
+        }
+    }
+
+    fn quantizer(&self) -> &(dyn Quantizer + Send + Sync) {
+        match self {
+            ServedCore::Midx(c) => c.quantizer(),
+            ServedCore::Exact(c) => c.quantizer(),
+        }
+    }
+
+    fn index(&self) -> &InvertedMultiIndex {
+        match self {
+            ServedCore::Midx(c) => c.index(),
+            ServedCore::Exact(c) => c.index(),
+        }
+    }
+}
+
+/// A servable sampler reassembled from a [`Snapshot`]: the shared core for
+/// proposal draws plus the quantizer / index / class table for exact
+/// top-k, and an optional persistent [`WorkerPool`] that both batched
+/// paths and the [`MicroBatcher`] dispatch onto.
+pub struct QueryEngine {
+    kind: SnapshotKind,
+    served: ServedCore,
+    /// exact re-rank table for the fast-MIDX kinds (moved, not copied,
+    /// out of the snapshot); empty for exact-midx, whose core owns the
+    /// table itself (see `rerank_table`)
+    table: Vec<f32>,
+    n: usize,
+    d: usize,
+    pool: Option<WorkerPool>,
+    beam_factor: usize,
+}
+
+impl QueryEngine {
+    /// Build an engine over a loaded snapshot. `threads` sizes the
+    /// engine-lifetime worker pool (0 = available parallelism, 1 = no
+    /// pool — everything runs inline on the calling thread). The snapshot
+    /// is consumed: its vectors move into the engine, they are not
+    /// duplicated between the sampling and top-k paths.
+    pub fn new(snap: Snapshot, threads: usize) -> QueryEngine {
+        let quant = snap.build_quantizer();
+        let index = snap.build_index();
+        let (n, d, kind) = (snap.n, snap.d, snap.kind);
+        let (served, table) = match kind {
+            SnapshotKind::MidxPq | SnapshotKind::MidxRq => {
+                (ServedCore::Midx(MidxCore::from_parts(kind.name(), quant, index)), snap.table)
+            }
+            SnapshotKind::ExactMidx => (
+                ServedCore::Exact(ExactMidxCore::from_parts(quant, index, snap.table, d)),
+                Vec::new(),
+            ),
+        };
+        let threads = if threads == 0 { auto_threads() } else { threads };
+        let pool = if threads > 1 { Some(WorkerPool::new(threads)) } else { None };
+        QueryEngine { kind, served, table, n, d, pool, beam_factor: DEFAULT_BEAM_FACTOR }
+    }
+
+    /// The [N, D] table the exact re-rank scores against: the engine's own
+    /// for the fast-MIDX kinds, the core's snapshot for exact-midx.
+    fn rerank_table(&self) -> &[f32] {
+        match &self.served {
+            ServedCore::Exact(c) => c.table(),
+            _ => &self.table,
+        }
+    }
+
+    /// Number of classes the loaded core indexes.
+    pub fn n_classes(&self) -> usize {
+        self.n
+    }
+
+    /// Embedding dimension queries must carry.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Which sampler the snapshot serves.
+    pub fn kind(&self) -> SnapshotKind {
+        self.kind
+    }
+
+    /// Worker threads the engine dispatches onto (1 = inline).
+    pub fn workers(&self) -> usize {
+        self.pool.as_ref().map(|p| p.workers()).unwrap_or(1)
+    }
+
+    /// The loaded sampler core (for callers that drive the batched
+    /// sampling engine directly, e.g. the bit-identity tests).
+    pub fn core(&self) -> &dyn SamplerCore {
+        self.served.core()
+    }
+
+    /// Override the shortlist width: the beam gathers `factor · k`
+    /// candidates before the exact re-rank. `usize::MAX` (or any factor
+    /// with `factor · k ≥ N`) makes top-k exactly brute force.
+    pub fn set_beam_factor(&mut self, factor: usize) {
+        self.beam_factor = factor.max(1);
+    }
+
+    /// Top-k for one query into caller buffers (`ids`/`scores` are [k],
+    /// k ≤ N enforced by callers). Deterministic: ties break toward the
+    /// smaller class id.
+    fn top_k_into(
+        &self,
+        z: &[f32],
+        k: usize,
+        scratch: &mut Scratch,
+        tk: &mut TopKScratch,
+        ids: &mut [u32],
+        scores: &mut [f32],
+    ) {
+        debug_assert_eq!(z.len(), self.d);
+        let quant = self.served.quantizer();
+        let index = self.served.index();
+        let table = self.rerank_table();
+        let kq = quant.k();
+        scratch.s1.resize(kq, 0.0);
+        scratch.s2.resize(kq, 0.0);
+        quant.stage1_scores(z, &mut scratch.s1);
+        quant.stage2_scores(z, &mut scratch.s2);
+
+        tk.buckets.clear();
+        for k1 in 0..kq {
+            let base = scratch.s1[k1];
+            for k2 in 0..kq {
+                let b = k1 * kq + k2;
+                if index.sizes[b] > 0.0 {
+                    tk.buckets.push((base + scratch.s2[k2], b as u32));
+                }
+            }
+        }
+        tk.buckets.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+
+        let target = self.beam_factor.saturating_mul(k).max(k).min(self.n);
+        tk.cand.clear();
+        for &(_, b) in tk.buckets.iter() {
+            for &c in index.bucket_flat(b as usize) {
+                let i = c as usize;
+                tk.cand.push((dot(z, &table[i * self.d..(i + 1) * self.d]), c));
+            }
+            if tk.cand.len() >= target {
+                break;
+            }
+        }
+        tk.cand.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        for (j, &(s, c)) in tk.cand.iter().take(k).enumerate() {
+            ids[j] = c;
+            scores[j] = s;
+        }
+    }
+
+    /// Top-k for one query: (class id, exact score) pairs, best first.
+    /// `k` is clamped to N.
+    pub fn top_k(&self, z: &[f32], k: usize) -> Vec<(u32, f32)> {
+        let k = k.min(self.n);
+        let mut ids = vec![0u32; k];
+        let mut scores = vec![0.0f32; k];
+        let mut scratch = Scratch::new();
+        let mut tk = TopKScratch::default();
+        self.top_k_into(z, k, &mut scratch, &mut tk, &mut ids, &mut scores);
+        ids.into_iter().zip(scores).collect()
+    }
+
+    /// Batched top-k over a [B, D] query block, fanned across the worker
+    /// pool (contiguous row partition, bit-identical to the sequential
+    /// path — top-k has no RNG, so threading cannot change answers).
+    /// Returns row-major ([B, k] ids, [B, k] scores) with `k` clamped to N.
+    pub fn top_k_batch(&self, queries: &[f32], k: usize) -> (Vec<u32>, Vec<f32>) {
+        let d = self.d;
+        assert_eq!(queries.len() % d, 0, "queries must be [B, D={d}]");
+        let b = queries.len() / d;
+        let k = k.min(self.n);
+        let mut ids = vec![0u32; b * k];
+        let mut scores = vec![0.0f32; b * k];
+        if b == 0 || k == 0 {
+            return (ids, scores);
+        }
+        match &self.pool {
+            Some(pool) if b > 1 => {
+                let lanes = pool.workers().min(b);
+                let rows = (b + lanes - 1) / lanes;
+                let out = TopKOut { ids: ids.as_mut_ptr(), scores: scores.as_mut_ptr() };
+                pool.run(lanes, |t, scratch| {
+                    let start = t * rows;
+                    let end = ((t + 1) * rows).min(b);
+                    if start >= end {
+                        return;
+                    }
+                    let count = end - start;
+                    // SAFETY: `[start, end)` windows are disjoint across
+                    // workers and the buffers outlive the dispatch
+                    // (`WorkerPool::run` blocks until every worker checks
+                    // in) — the same contract as `sampler::batch`'s pooled
+                    // path.
+                    let (my_ids, my_scores) = unsafe {
+                        (
+                            std::slice::from_raw_parts_mut(out.ids.add(start * k), count * k),
+                            std::slice::from_raw_parts_mut(out.scores.add(start * k), count * k),
+                        )
+                    };
+                    let mut tk = TopKScratch::default();
+                    for i in 0..count {
+                        let row = start + i;
+                        self.top_k_into(
+                            &queries[row * d..(row + 1) * d],
+                            k,
+                            scratch,
+                            &mut tk,
+                            &mut my_ids[i * k..(i + 1) * k],
+                            &mut my_scores[i * k..(i + 1) * k],
+                        );
+                    }
+                });
+            }
+            _ => {
+                let mut scratch = Scratch::new();
+                let mut tk = TopKScratch::default();
+                for row in 0..b {
+                    self.top_k_into(
+                        &queries[row * d..(row + 1) * d],
+                        k,
+                        &mut scratch,
+                        &mut tk,
+                        &mut ids[row * k..(row + 1) * k],
+                        &mut scores[row * k..(row + 1) * k],
+                    );
+                }
+            }
+        }
+        (ids, scores)
+    }
+
+    /// Batched proposal draws over a [B, D] query block: `m` unconditioned
+    /// draws (no positive to exclude) + log proposal probabilities per
+    /// query, through the training-time batched engine — row `i` uses
+    /// `Rng::stream(seed, i)`, so output is bit-identical to the in-memory
+    /// sampler for any thread count. Returns row-major [B, m] (ids, log q).
+    pub fn sample(&self, queries: &[f32], m: usize, seed: u64) -> (Vec<u32>, Vec<f32>) {
+        let d = self.d;
+        assert_eq!(queries.len() % d, 0, "queries must be [B, D={d}]");
+        let b = queries.len() / d;
+        let positives = vec![u32::MAX; b];
+        let mut ids = vec![0u32; b * m];
+        let mut log_q = vec![0.0f32; b * m];
+        sample_batch_with(
+            self.pool.as_ref(),
+            self.served.core(),
+            queries,
+            d,
+            &positives,
+            m,
+            seed,
+            0,
+            &mut ids,
+            &mut log_q,
+        );
+        (ids, log_q)
+    }
+
+    /// Execute one request with per-thread buffers (the unit of work the
+    /// [`MicroBatcher`] strides across pool lanes).
+    fn execute(&self, req: &Request, scratch: &mut Scratch, tk: &mut TopKScratch) -> Reply {
+        match req {
+            Request::TopK { q, k } => {
+                let k = (*k).min(self.n);
+                let mut ids = vec![0u32; k];
+                let mut scores = vec![0.0f32; k];
+                self.top_k_into(q, k, scratch, tk, &mut ids, &mut scores);
+                Reply { ids, scores }
+            }
+            Request::Sample { q, m, seed } => {
+                let mut ids = vec![0u32; *m];
+                let mut log_q = vec![0.0f32; *m];
+                if *m > 0 {
+                    // identical to sample()/sample_batch with B = 1: the
+                    // single row draws from Rng::stream(seed, 0)
+                    let mut rng = Rng::stream(*seed, 0);
+                    self.served.core().sample_into(
+                        q,
+                        u32::MAX,
+                        &mut rng,
+                        scratch,
+                        &mut ids,
+                        &mut log_q,
+                    );
+                }
+                Reply { ids, scores: log_q }
+            }
+        }
+    }
+
+    /// Run a slice of independent requests as **one** pool dispatch,
+    /// requests strided across lanes (request `j` runs on lane
+    /// `j mod lanes`). Falls back to an inline loop without a pool. Reply
+    /// `j` corresponds to request `j`; results are independent of lane
+    /// count and batching by construction.
+    pub fn run_requests(&self, reqs: &[Request]) -> Vec<Reply> {
+        match &self.pool {
+            Some(pool) if reqs.len() > 1 => {
+                let lanes = pool.workers().min(reqs.len());
+                let slots: Vec<Mutex<Option<Reply>>> =
+                    reqs.iter().map(|_| Mutex::new(None)).collect();
+                pool.run(lanes, |t, scratch| {
+                    let mut tk = TopKScratch::default();
+                    let mut j = t;
+                    while j < reqs.len() {
+                        let reply = self.execute(&reqs[j], scratch, &mut tk);
+                        *slots[j].lock().unwrap_or_else(|e| e.into_inner()) = Some(reply);
+                        j += lanes;
+                    }
+                });
+                slots
+                    .into_iter()
+                    .map(|s| {
+                        s.into_inner()
+                            .unwrap_or_else(|e| e.into_inner())
+                            .expect("every request slot filled")
+                    })
+                    .collect()
+            }
+            _ => {
+                let mut scratch = Scratch::new();
+                let mut tk = TopKScratch::default();
+                reqs.iter().map(|r| self.execute(r, &mut scratch, &mut tk)).collect()
+            }
+        }
+    }
+}
+
+/// Pointer bundle handing the [B, k] top-k output buffers to pool workers
+/// (disjoint contiguous row windows — see the SAFETY comments at use).
+struct TopKOut {
+    ids: *mut u32,
+    scores: *mut f32,
+}
+
+// SAFETY: workers only touch disjoint row windows of the two buffers and
+// `WorkerPool::run` blocks until every worker is done with them.
+unsafe impl Sync for TopKOut {}
+
+/// One serving request (single query vector — batching across requests is
+/// the [`MicroBatcher`]'s job, batching within a caller goes through
+/// [`QueryEngine::top_k_batch`] / [`QueryEngine::sample`]).
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Exact-reranked top-k retrieval.
+    TopK {
+        /// query vector [D]
+        q: Vec<f32>,
+        /// results wanted (clamped to N)
+        k: usize,
+    },
+    /// Proposal draws (the training-time sampler, served).
+    Sample {
+        /// query vector [D]
+        q: Vec<f32>,
+        /// number of draws
+        m: usize,
+        /// RNG stream base — same seed, same draws, regardless of batching
+        seed: u64,
+    },
+}
+
+/// One serving reply: class ids plus their exact scores (top-k) or log
+/// proposal probabilities (sample).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Reply {
+    /// class ids, best-first (top-k) or draw order (sample)
+    pub ids: Vec<u32>,
+    /// exact scores (top-k) or log q (sample), aligned with `ids`
+    pub scores: Vec<f32>,
+}
+
+struct BatcherQueue {
+    pending: Vec<(Request, mpsc::Sender<Reply>)>,
+    shutdown: bool,
+}
+
+struct BatcherShared {
+    q: Mutex<BatcherQueue>,
+    cv: Condvar,
+    /// total requests accepted (diagnostics)
+    requests: AtomicU64,
+    /// pool dispatches performed — `requests / dispatches` is the realized
+    /// coalescing factor
+    dispatches: AtomicU64,
+}
+
+fn lock_queue(m: &Mutex<BatcherQueue>) -> MutexGuard<'_, BatcherQueue> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Dynamic micro-batching front of a [`QueryEngine`]: concurrent callers
+/// block in [`MicroBatcher::submit`] while a dispatcher thread coalesces
+/// everything that arrived within a short window into one pool dispatch.
+///
+/// Shutdown is automatic: dropping the batcher stops the dispatcher after
+/// it drains any queued requests.
+pub struct MicroBatcher {
+    engine: Arc<QueryEngine>,
+    shared: Arc<BatcherShared>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MicroBatcher {
+    /// Spawn the dispatcher. `window` is how long the dispatcher waits for
+    /// more requests to join a batch once one is pending (0 = dispatch
+    /// immediately); `max_batch` caps requests per dispatch.
+    pub fn new(engine: Arc<QueryEngine>, window: Duration, max_batch: usize) -> MicroBatcher {
+        let shared = Arc::new(BatcherShared {
+            q: Mutex::new(BatcherQueue { pending: Vec::new(), shutdown: false }),
+            cv: Condvar::new(),
+            requests: AtomicU64::new(0),
+            dispatches: AtomicU64::new(0),
+        });
+        let max_batch = max_batch.max(1);
+        let handle = {
+            let engine = Arc::clone(&engine);
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("midx-serve-batcher".into())
+                .spawn(move || dispatcher_loop(&engine, &shared, window, max_batch))
+                .expect("spawn micro-batch dispatcher")
+        };
+        MicroBatcher { engine, shared, handle: Some(handle) }
+    }
+
+    /// The engine this batcher serves.
+    pub fn engine(&self) -> &QueryEngine {
+        &self.engine
+    }
+
+    /// Submit one request and block until its reply is ready. Safe to call
+    /// from any number of threads — concurrency is what the batcher
+    /// coalesces.
+    pub fn submit(&self, req: Request) -> Reply {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut g = lock_queue(&self.shared.q);
+            g.pending.push((req, tx));
+            self.shared.requests.fetch_add(1, Ordering::Relaxed);
+            self.shared.cv.notify_all();
+        }
+        rx.recv().expect("dispatcher alive for the batcher's lifetime")
+    }
+
+    /// (requests accepted, batch dispatches performed) so far — their ratio
+    /// is the realized coalescing factor.
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.shared.requests.load(Ordering::Relaxed),
+            self.shared.dispatches.load(Ordering::Relaxed),
+        )
+    }
+}
+
+impl Drop for MicroBatcher {
+    fn drop(&mut self) {
+        {
+            let mut g = lock_queue(&self.shared.q);
+            g.shutdown = true;
+            self.shared.cv.notify_all();
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn dispatcher_loop(
+    engine: &QueryEngine,
+    shared: &BatcherShared,
+    window: Duration,
+    max_batch: usize,
+) {
+    loop {
+        let batch = {
+            let mut g = lock_queue(&shared.q);
+            loop {
+                if !g.pending.is_empty() {
+                    break;
+                }
+                if g.shutdown {
+                    return;
+                }
+                g = shared.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
+            // coalescing window: give concurrent callers until a fixed
+            // deadline to join this batch. Every submit notify_all wakes
+            // the wait_timeout early, so loop until the deadline actually
+            // passes (or the batch fills) — a single wait would end the
+            // window at the first new arrival.
+            if !window.is_zero() {
+                let deadline = Instant::now() + window;
+                while g.pending.len() < max_batch && !g.shutdown {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    g = shared
+                        .cv
+                        .wait_timeout(g, deadline - now)
+                        .unwrap_or_else(|e| e.into_inner())
+                        .0;
+                }
+            }
+            let take = g.pending.len().min(max_batch);
+            g.pending.drain(..take).collect::<Vec<_>>()
+        };
+        if batch.is_empty() {
+            continue;
+        }
+        shared.dispatches.fetch_add(1, Ordering::Relaxed);
+        let (reqs, txs): (Vec<Request>, Vec<mpsc::Sender<Reply>>) = batch.into_iter().unzip();
+        let replies = engine.run_requests(&reqs);
+        for (tx, reply) in txs.into_iter().zip(replies) {
+            // a caller that gave up (dropped its receiver) is not an error
+            let _ = tx.send(reply);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::fixtures::built_sampler;
+    use crate::sampler::{Sampler, SamplerKind};
+    use crate::util::check::rand_matrix;
+
+    fn engine(kind: SamplerKind, threads: usize, seed: u64) -> (QueryEngine, Vec<f32>, usize) {
+        let (n, d) = (60usize, 8usize);
+        let mut rng = Rng::new(seed);
+        let table = rand_matrix(&mut rng, n, d, 0.5);
+        let mut s = built_sampler(kind, n, d, seed);
+        s.rebuild(&table, n, d, &mut rng);
+        let snap = s.snapshot(&table, n, d).unwrap();
+        (QueryEngine::new(snap, threads), table, d)
+    }
+
+    fn brute_force(table: &[f32], d: usize, z: &[f32], k: usize) -> Vec<(u32, f32)> {
+        let n = table.len() / d;
+        let mut all: Vec<(f32, u32)> =
+            (0..n).map(|i| (dot(z, &table[i * d..(i + 1) * d]), i as u32)).collect();
+        all.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        all.into_iter().take(k).map(|(s, c)| (c, s)).collect()
+    }
+
+    #[test]
+    fn full_beam_top_k_equals_brute_force() {
+        for kind in [SamplerKind::MidxPq, SamplerKind::MidxRq, SamplerKind::ExactMidx] {
+            let (mut eng, table, d) = engine(kind, 1, 21 + kind as u64);
+            eng.set_beam_factor(usize::MAX);
+            let mut rng = Rng::new(5);
+            let z = rand_matrix(&mut rng, 1, d, 0.7);
+            let got = eng.top_k(&z, 7);
+            let want = brute_force(&table, d, &z, 7);
+            assert_eq!(got, want, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn batched_top_k_matches_sequential_at_any_thread_count() {
+        let (eng1, _, d) = engine(SamplerKind::MidxRq, 1, 31);
+        let (eng4, _, _) = engine(SamplerKind::MidxRq, 4, 31);
+        let mut rng = Rng::new(6);
+        let queries = rand_matrix(&mut rng, 13, d, 0.7);
+        let (ids1, s1) = eng1.top_k_batch(&queries, 5);
+        let (ids4, s4) = eng4.top_k_batch(&queries, 5);
+        assert_eq!(ids1, ids4);
+        assert_eq!(
+            s1.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            s4.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        // row 0 of the batch equals the one-query path
+        let one = eng1.top_k(&queries[..d], 5);
+        assert_eq!(ids1[..5], one.iter().map(|&(c, _)| c).collect::<Vec<_>>()[..]);
+    }
+
+    #[test]
+    fn degenerate_top_k_shapes() {
+        let (eng, _, d) = engine(SamplerKind::MidxPq, 2, 33);
+        // k > N clamps; B = 0 and k = 0 are no-ops
+        let mut rng = Rng::new(7);
+        let z = rand_matrix(&mut rng, 1, d, 0.7);
+        assert_eq!(eng.top_k(&z, 10_000).len(), eng.n_classes());
+        let (ids, scores) = eng.top_k_batch(&[], 5);
+        assert!(ids.is_empty() && scores.is_empty());
+        let (ids, scores) = eng.top_k_batch(&z, 0);
+        assert!(ids.is_empty() && scores.is_empty());
+    }
+
+    #[test]
+    fn micro_batcher_replies_match_direct_execution() {
+        let (eng, _, d) = engine(SamplerKind::MidxRq, 3, 41);
+        let eng = Arc::new(eng);
+        let batcher =
+            Arc::new(MicroBatcher::new(Arc::clone(&eng), Duration::from_micros(200), 64));
+        let mut rng = Rng::new(8);
+        let queries: Vec<Vec<f32>> =
+            (0..8).map(|_| rand_matrix(&mut rng, 1, d, 0.7)).collect();
+
+        let mut handles = Vec::new();
+        for (i, q) in queries.iter().cloned().enumerate() {
+            let b = Arc::clone(&batcher);
+            handles.push(std::thread::spawn(move || {
+                if i % 2 == 0 {
+                    (i, b.submit(Request::TopK { q, k: 4 }))
+                } else {
+                    (i, b.submit(Request::Sample { q, m: 6, seed: 1000 + i as u64 }))
+                }
+            }));
+        }
+        for h in handles {
+            let (i, reply) = h.join().unwrap();
+            let want = if i % 2 == 0 {
+                let (ids, scores) = eng.top_k_batch(&queries[i], 4);
+                Reply { ids, scores }
+            } else {
+                let (ids, log_q) = eng.sample(&queries[i], 6, 1000 + i as u64);
+                Reply { ids, scores: log_q }
+            };
+            assert_eq!(reply, want, "request {i} diverged under coalescing");
+        }
+        let (reqs, disp) = batcher.stats();
+        assert_eq!(reqs, 8);
+        assert!(disp >= 1 && disp <= 8, "dispatches {disp}");
+    }
+}

@@ -1,0 +1,402 @@
+//! Request frontend: line-delimited JSON over stdin or TCP.
+//!
+//! One request per line, one reply per line — no framing, no heavyweight
+//! dependencies, just [`crate::util::json`]:
+//!
+//! ```text
+//! → {"op":"topk","q":[0.1,0.2,0.3,0.4],"k":5}
+//! ← {"ok":true,"ids":[17,3,44,9,20],"scores":[1.91,…],"us":142}
+//! → {"op":"sample","q":[0.1,0.2,0.3,0.4],"m":8,"seed":42}
+//! ← {"ok":true,"ids":[…],"log_q":[…],"us":97}
+//! → {"op":"info"}
+//! ← {"ok":true,"kind":"midx-rq","n":10000,"d":16,"workers":8}
+//! → {"op":"stats"}
+//! ← {"ok":true,"report":"serve: 1207 requests …"}
+//! ```
+//!
+//! Malformed input never kills the server: every error comes back as
+//! `{"ok":false,"error":"…"}` on the same line slot. Requests funnel into
+//! the shared [`MicroBatcher`], so concurrent TCP connections are coalesced
+//! into single pool dispatches; per-request latency lands in a
+//! [`LatencyRecorder`] whose p50/p95/p99 + QPS report prints on shutdown
+//! (stdin EOF) and is queryable live via `{"op":"stats"}`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::serve::query::{MicroBatcher, Reply, Request};
+use crate::util::json::{from_f32s, from_u32s};
+use crate::util::Json;
+
+/// Latency samples kept by the [`LatencyRecorder`] reservoir: enough for
+/// stable p99s, bounded so a long-running server cannot grow without limit.
+const LATENCY_RESERVOIR: usize = 1 << 16;
+
+/// Per-request draw cap for the `sample` op: one well-formed request line
+/// must never be able to allocate unbounded output buffers ('k' needs no
+/// cap — the engine clamps it to N).
+pub const MAX_DRAWS_PER_REQUEST: usize = 1 << 16;
+
+struct LatencyState {
+    /// total requests observed (reservoir element index)
+    total: u64,
+    /// uniform sample of request latencies, ≤ [`LATENCY_RESERVOIR`] entries
+    us: Vec<u64>,
+    /// running maximum over ALL requests (the tail the reservoir may miss)
+    max_us: u64,
+}
+
+/// Thread-safe per-request latency ledger with a percentile + QPS report.
+/// Memory is bounded: latencies land in a fixed-size uniform reservoir
+/// (Vitter's algorithm R with a deterministic splitmix64 index), so a
+/// server at high QPS keeps O(1) state no matter how long it runs.
+pub struct LatencyRecorder {
+    start: Instant,
+    state: Mutex<LatencyState>,
+}
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        LatencyRecorder::new()
+    }
+}
+
+/// splitmix64 — the deterministic stand-in for the reservoir's RNG.
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+impl LatencyRecorder {
+    /// Empty ledger; the QPS clock starts now.
+    pub fn new() -> LatencyRecorder {
+        LatencyRecorder {
+            start: Instant::now(),
+            state: Mutex::new(LatencyState { total: 0, us: Vec::new(), max_us: 0 }),
+        }
+    }
+
+    /// Record one request's latency in microseconds.
+    pub fn record(&self, us: u64) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.total += 1;
+        st.max_us = st.max_us.max(us);
+        if st.us.len() < LATENCY_RESERVOIR {
+            st.us.push(us);
+        } else {
+            // algorithm R: element t replaces a random slot with
+            // probability RESERVOIR/t — uniform over the whole history
+            let slot = mix64(st.total) % st.total;
+            if (slot as usize) < LATENCY_RESERVOIR {
+                st.us[slot as usize] = us;
+            }
+        }
+    }
+
+    /// Requests recorded so far (all of them, not just the reservoir).
+    pub fn count(&self) -> usize {
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).total as usize
+    }
+
+    /// One-line report: request count, wall-clock QPS, and latency
+    /// percentiles (p50/p95/p99/max) in microseconds. Percentiles are
+    /// exact until the reservoir fills, estimates from a uniform sample
+    /// after; max is tracked exactly over every request.
+    pub fn report(&self) -> String {
+        let (total, mut us, max_us) = {
+            let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            (st.total, st.us.clone(), st.max_us)
+        };
+        if us.is_empty() {
+            return "serve: 0 requests".to_string();
+        }
+        us.sort_unstable();
+        let pct = |p: f64| {
+            let at = (p / 100.0 * (us.len() - 1) as f64).round() as usize;
+            us[at.min(us.len() - 1)]
+        };
+        let secs = self.start.elapsed().as_secs_f64().max(1e-9);
+        format!(
+            "serve: {total} requests in {secs:.2}s ({:.0} QPS) | latency µs p50={} p95={} p99={} max={max_us}",
+            total as f64 / secs,
+            pct(50.0),
+            pct(95.0),
+            pct(99.0),
+        )
+    }
+}
+
+fn err_json(msg: &str) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("ok".to_string(), Json::Bool(false));
+    m.insert("error".to_string(), Json::Str(msg.to_string()));
+    Json::Obj(m)
+}
+
+fn ok_obj() -> std::collections::BTreeMap<String, Json> {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("ok".to_string(), Json::Bool(true));
+    m
+}
+
+/// Parse the query vector field `"q"` and check it against the engine's
+/// dimension.
+fn parse_query(req: &Json, d: usize) -> Result<Vec<f32>, String> {
+    let q = req
+        .get("q")
+        .ok_or_else(|| "missing field 'q' (the query vector)".to_string())?;
+    let v = q
+        .f32_vec()
+        .ok_or_else(|| "'q' must be an array of numbers".to_string())?;
+    if v.len() != d {
+        return Err(format!("'q' has {} entries, model dimension is {d}", v.len()));
+    }
+    Ok(v)
+}
+
+/// Handle one request line end to end: parse, dispatch through the
+/// batcher, render the reply (including the `us` latency field that also
+/// lands in `rec`). Never panics on malformed input — errors render as
+/// `{"ok":false,"error":…}`.
+pub fn handle_line(batcher: &MicroBatcher, rec: &LatencyRecorder, line: &str) -> String {
+    let out = match Json::parse(line.trim()) {
+        Err(e) => err_json(&format!("bad JSON: {e}")),
+        Ok(req) => handle_request(batcher, rec, &req),
+    };
+    out.to_string()
+}
+
+fn handle_request(batcher: &MicroBatcher, rec: &LatencyRecorder, req: &Json) -> Json {
+    let engine = batcher.engine();
+    let op = match req.get("op").and_then(|o| o.as_str()) {
+        Some(op) => op,
+        None => return err_json("missing field 'op' (\"topk\" | \"sample\" | \"info\" | \"stats\")"),
+    };
+    match op {
+        "info" => {
+            let mut m = ok_obj();
+            m.insert("kind".into(), Json::Str(engine.kind().name().to_string()));
+            m.insert("n".into(), Json::Num(engine.n_classes() as f64));
+            m.insert("d".into(), Json::Num(engine.dim() as f64));
+            m.insert("workers".into(), Json::Num(engine.workers() as f64));
+            Json::Obj(m)
+        }
+        "stats" => {
+            let mut m = ok_obj();
+            m.insert("report".into(), Json::Str(rec.report()));
+            let (reqs, disp) = batcher.stats();
+            m.insert("requests".into(), Json::Num(reqs as f64));
+            m.insert("dispatches".into(), Json::Num(disp as f64));
+            Json::Obj(m)
+        }
+        "topk" => {
+            let q = match parse_query(req, engine.dim()) {
+                Ok(q) => q,
+                Err(e) => return err_json(&e),
+            };
+            let k = req.get("k").and_then(|v| v.as_usize()).unwrap_or(10);
+            let t0 = Instant::now();
+            let reply = batcher.submit(Request::TopK { q, k });
+            let us = t0.elapsed().as_micros() as u64;
+            rec.record(us);
+            render_reply(&reply, "scores", us)
+        }
+        "sample" => {
+            let q = match parse_query(req, engine.dim()) {
+                Ok(q) => q,
+                Err(e) => return err_json(&e),
+            };
+            let m = req.get("m").and_then(|v| v.as_usize()).unwrap_or(16);
+            if m > MAX_DRAWS_PER_REQUEST {
+                return err_json(&format!(
+                    "'m' = {m} exceeds the per-request cap of {MAX_DRAWS_PER_REQUEST} draws"
+                ));
+            }
+            // seeds travel as JSON numbers (f64): only integers below 2^53
+            // round-trip exactly. Anything else would silently draw from a
+            // different stream than the caller asked for, so reject it —
+            // the serve layer's contract is same-seed-same-draws.
+            let seed_f = req.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let seed = seed_f as u64;
+            if seed_f < 0.0 || seed_f.fract() != 0.0 || seed as f64 != seed_f {
+                return err_json(&format!(
+                    "'seed' = {seed_f} is not an exactly-representable integer in [0, 2^53)"
+                ));
+            }
+            let t0 = Instant::now();
+            let reply = batcher.submit(Request::Sample { q, m, seed });
+            let us = t0.elapsed().as_micros() as u64;
+            rec.record(us);
+            render_reply(&reply, "log_q", us)
+        }
+        other => err_json(&format!("unknown op '{other}' (\"topk\" | \"sample\" | \"info\" | \"stats\")")),
+    }
+}
+
+fn render_reply(reply: &Reply, score_field: &str, us: u64) -> Json {
+    let mut m = ok_obj();
+    m.insert("ids".into(), from_u32s(&reply.ids));
+    m.insert(score_field.into(), from_f32s(&reply.scores));
+    m.insert("us".into(), Json::Num(us as f64));
+    Json::Obj(m)
+}
+
+/// Serve line-delimited JSON requests from stdin, replies to stdout, until
+/// EOF; the latency report prints to stderr on exit.
+pub fn serve_stdin(batcher: &MicroBatcher, rec: &LatencyRecorder) -> Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    for line in stdin.lock().lines() {
+        let line = line.context("reading stdin")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = handle_line(batcher, rec, &line);
+        writeln!(out, "{reply}").context("writing stdout")?;
+        out.flush().context("flushing stdout")?;
+    }
+    eprintln!("{}", rec.report());
+    Ok(())
+}
+
+fn serve_conn(
+    batcher: &MicroBatcher,
+    rec: &LatencyRecorder,
+    stream: TcpStream,
+) -> std::io::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = handle_line(batcher, rec, &line);
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+/// Serve line-delimited JSON over TCP: one thread per connection, all
+/// connections funneling into the shared [`MicroBatcher`] (which is what
+/// coalesces concurrent callers into single batched dispatches). Runs
+/// until the process is killed; per-request latency is queryable live via
+/// `{"op":"stats"}`.
+pub fn serve_tcp(
+    batcher: Arc<MicroBatcher>,
+    rec: Arc<LatencyRecorder>,
+    addr: &str,
+) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    eprintln!("serving on {addr} (line-delimited JSON; op topk|sample|info|stats)");
+    for stream in listener.incoming() {
+        let stream = stream.context("accepting connection")?;
+        let batcher = Arc::clone(&batcher);
+        let rec = Arc::clone(&rec);
+        std::thread::spawn(move || {
+            if let Err(e) = serve_conn(&batcher, &rec, stream) {
+                eprintln!("connection error: {e}");
+            }
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::fixtures::built_sampler;
+    use crate::sampler::{Sampler, SamplerKind};
+    use crate::serve::query::QueryEngine;
+    use crate::util::check::rand_matrix;
+    use crate::util::Rng;
+    use std::time::Duration;
+
+    fn batcher() -> (MicroBatcher, usize) {
+        let (n, d) = (50usize, 6usize);
+        let mut rng = Rng::new(77);
+        let table = rand_matrix(&mut rng, n, d, 0.5);
+        let mut s = built_sampler(SamplerKind::MidxRq, n, d, 77);
+        s.rebuild(&table, n, d, &mut rng);
+        let snap = s.snapshot(&table, n, d).unwrap();
+        let engine = Arc::new(QueryEngine::new(snap, 2));
+        (MicroBatcher::new(engine, Duration::ZERO, 16), d)
+    }
+
+    #[test]
+    fn protocol_round_trips_and_reports_errors() {
+        let (b, d) = batcher();
+        let rec = LatencyRecorder::new();
+
+        let info = handle_line(&b, &rec, r#"{"op":"info"}"#);
+        assert!(info.contains(r#""ok":true"#) && info.contains(r#""kind":"midx-rq""#), "{info}");
+
+        let q: Vec<String> = (0..d).map(|j| format!("0.{}", j + 1)).collect();
+        let topk = handle_line(&b, &rec, &format!(r#"{{"op":"topk","q":[{}],"k":3}}"#, q.join(",")));
+        assert!(topk.contains(r#""ok":true"#) && topk.contains(r#""ids":["#), "{topk}");
+        // deterministic: the same request gives the same ids
+        let topk2 =
+            handle_line(&b, &rec, &format!(r#"{{"op":"topk","q":[{}],"k":3}}"#, q.join(",")));
+        let strip = |s: &str| s.split(r#","us":"#).next().unwrap().to_string();
+        assert_eq!(strip(&topk), strip(&topk2));
+
+        let sample = handle_line(
+            &b,
+            &rec,
+            &format!(r#"{{"op":"sample","q":[{}],"m":4,"seed":9}}"#, q.join(",")),
+        );
+        assert!(sample.contains(r#""log_q":["#), "{sample}");
+
+        // malformed inputs answer with ok:false instead of dying
+        for bad in [
+            "not json at all",
+            r#"{"op":"warp"}"#,
+            r#"{"q":[1,2]}"#,
+            r#"{"op":"topk","q":[1.0]}"#,
+            r#"{"op":"topk","q":"nope"}"#,
+        ] {
+            let r = handle_line(&b, &rec, bad);
+            assert!(r.contains(r#""ok":false"#), "{bad} -> {r}");
+        }
+
+        // resource / precision guards: oversized m and non-integer or
+        // non-representable seeds are rejected, not served wrongly
+        for (extra, needle) in [
+            (r#""m":99999999"#, "per-request cap"),
+            (r#""seed":-3"#, "not an exactly-representable"),
+            (r#""seed":1.5"#, "not an exactly-representable"),
+            (r#""seed":1e300"#, "not an exactly-representable"),
+        ] {
+            let line = format!(r#"{{"op":"sample","q":[{}],{extra}}}"#, q.join(","));
+            let r = handle_line(&b, &rec, &line);
+            assert!(r.contains(r#""ok":false"#) && r.contains(needle), "{extra} -> {r}");
+        }
+
+        assert_eq!(rec.count(), 3, "three well-formed query requests recorded");
+        let stats = handle_line(&b, &rec, r#"{"op":"stats"}"#);
+        assert!(stats.contains("requests"), "{stats}");
+    }
+
+    #[test]
+    fn latency_report_percentiles() {
+        let rec = LatencyRecorder::new();
+        assert_eq!(rec.report(), "serve: 0 requests");
+        for us in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 1000] {
+            rec.record(us);
+        }
+        let r = rec.report();
+        assert!(r.contains("10 requests"), "{r}");
+        // sorted [10..=90, 1000]: p50 → index round(0.5·9) = 5 → 60;
+        // p95/p99 → index 9 → 1000
+        assert!(r.contains("p50=60") && r.contains("p95=1000") && r.contains("max=1000"), "{r}");
+    }
+}

@@ -1,0 +1,592 @@
+//! Versioned binary snapshots of trained sampler cores.
+//!
+//! A snapshot persists everything a query-time process needs to serve a
+//! trained MIDX sampler: the quantizer codebooks and per-class codes, the
+//! CSR inverted multi-index (bucket masses are recomputed from it on load),
+//! the class-embedding table (for exact re-ranking), and a small JSON meta
+//! blob (sampler name, provenance). Loading reassembles the exact structs
+//! the trainer held — no k-means, no counting sort over fresh RNG — so a
+//! loaded core is **draw-for-draw bit-identical** to the in-memory one
+//! (pinned by `rust/tests/serve.rs`).
+//!
+//! ## File layout (little-endian)
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  "MIDXSNAP"
+//! 8       4     format version (this build reads 1)
+//! 12      1     sampler kind   (0 midx-pq, 1 midx-rq, 2 exact-midx)
+//! 13      1     quantizer family (0 product, 1 residual)
+//! 14      2     reserved (0)
+//! 16      8     N  (classes)
+//! 24      8     D  (embedding dimension)
+//! 32      8     K  (codewords per codebook)
+//! 40      8     D1 (stage-1 codeword dimension; D for residual)
+//! 48      8     payload length in bytes
+//! 56      8     FNV-1a64 checksum of the payload
+//! 64      …     payload: c1 · c2 · assign1 · assign2 · offsets · members
+//!               · table · distortion (f64) · meta length (u32) · meta JSON
+//! ```
+//!
+//! Every section length is derivable from the header, so truncation,
+//! header corruption, and version skew are all rejected with a specific
+//! error before any structural parsing happens; the checksum catches
+//! payload corruption, and a final structural pass (codes in range, CSR a
+//! partition consistent with the codes) catches a well-formed file that
+//! lies about its contents.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::index::InvertedMultiIndex;
+use crate::quant::{ProductQuantizer, QuantKind, Quantizer, ResidualQuantizer};
+use crate::sampler::midx::{ExactMidxCore, MidxCore};
+use crate::sampler::SamplerCore;
+use crate::util::Json;
+
+/// File magic: the first 8 bytes of every snapshot.
+pub const MAGIC: [u8; 8] = *b"MIDXSNAP";
+
+/// Snapshot format version this build writes and reads.
+pub const VERSION: u32 = 1;
+
+/// Fixed header size in bytes (payload starts here).
+pub const HEADER_LEN: usize = 64;
+
+/// Which sampler a snapshot serves (decides the core reassembled on load).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SnapshotKind {
+    /// Fast MIDX over a product quantizer (Theorem 2).
+    MidxPq,
+    /// Fast MIDX over a residual quantizer (Theorem 2).
+    MidxRq,
+    /// Exact MIDX decomposition == true softmax (Theorem 1, O(N·D)/query).
+    ExactMidx,
+}
+
+impl SnapshotKind {
+    /// Header tag byte.
+    fn tag(self) -> u8 {
+        match self {
+            SnapshotKind::MidxPq => 0,
+            SnapshotKind::MidxRq => 1,
+            SnapshotKind::ExactMidx => 2,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<SnapshotKind> {
+        Ok(match t {
+            0 => SnapshotKind::MidxPq,
+            1 => SnapshotKind::MidxRq,
+            2 => SnapshotKind::ExactMidx,
+            _ => bail!("unknown sampler kind tag {t} (corrupted header?)"),
+        })
+    }
+
+    /// Sampler identifier, matching [`crate::sampler::SamplerCore::name`].
+    pub fn name(self) -> &'static str {
+        match self {
+            SnapshotKind::MidxPq => "midx-pq",
+            SnapshotKind::MidxRq => "midx-rq",
+            SnapshotKind::ExactMidx => "exact-midx",
+        }
+    }
+}
+
+/// FNV-1a 64-bit hash (payload checksum — fast, dependency-free, and
+/// matching the golden-draw suite's hash family).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// A deserialized (or to-be-serialized) sampler snapshot: the full state a
+/// query-time process needs, as plain vectors. Use [`Snapshot::capture`] to
+/// take one from a live core, [`Snapshot::build_core`] to reassemble a
+/// servable [`SamplerCore`] from it.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// which sampler this snapshot serves
+    pub kind: SnapshotKind,
+    /// quantizer family (decides codebook geometry on load)
+    pub family: QuantKind,
+    /// number of classes N
+    pub n: usize,
+    /// embedding dimension D
+    pub d: usize,
+    /// codewords per codebook K
+    pub k: usize,
+    /// stage-1 codeword dimension (D/2 for product, D for residual)
+    pub d1: usize,
+    /// stage-1 codebook, [K, D1] row-major
+    pub c1: Vec<f32>,
+    /// stage-2 codebook, [K, D−D1] (product) or [K, D] (residual)
+    pub c2: Vec<f32>,
+    /// stage-1 code per class, [N]
+    pub assign1: Vec<u32>,
+    /// stage-2 code per class, [N]
+    pub assign2: Vec<u32>,
+    /// CSR bucket offsets, [K²+1]
+    pub offsets: Vec<u32>,
+    /// CSR bucket members (class ids grouped by bucket), [N]
+    pub members: Vec<u32>,
+    /// class-embedding table, [N, D] row-major (exact re-rank scores)
+    pub table: Vec<f32>,
+    /// quantizer distortion at capture time (diagnostic)
+    pub distortion: f64,
+    /// free-form JSON provenance (sampler name, source, …)
+    pub meta: Json,
+}
+
+impl Snapshot {
+    /// Capture a snapshot from a live quantizer + index + class table.
+    /// The capture is pure reads — the core keeps serving while it runs.
+    pub fn capture(
+        kind: SnapshotKind,
+        quant: &dyn Quantizer,
+        index: &InvertedMultiIndex,
+        table: &[f32],
+        n: usize,
+        d: usize,
+    ) -> Snapshot {
+        let k = quant.k();
+        let family =
+            if quant.family().starts_with("rq") { QuantKind::Residual } else { QuantKind::Product };
+        let c1 = quant.codebook1().to_vec();
+        let c2 = quant.codebook2().to_vec();
+        let d1 = c1.len() / k;
+        let (a1, a2) = quant.codes();
+        assert_eq!(a1.len(), n, "stage-1 codes must cover all classes");
+        assert_eq!(a2.len(), n, "stage-2 codes must cover all classes");
+        assert_eq!(table.len(), n * d, "table must be [n, d]");
+        assert_eq!(index.n_classes(), n, "index must cover all classes");
+        let dc2 = match family {
+            QuantKind::Product => d - d1,
+            QuantKind::Residual => d,
+        };
+        assert_eq!(c2.len(), k * dc2, "stage-2 codebook shape mismatch");
+        let mut meta = std::collections::BTreeMap::new();
+        meta.insert("sampler".to_string(), Json::Str(kind.name().to_string()));
+        Snapshot {
+            kind,
+            family,
+            n,
+            d,
+            k,
+            d1,
+            c1,
+            c2,
+            assign1: a1.to_vec(),
+            assign2: a2.to_vec(),
+            offsets: index.offsets.clone(),
+            members: index.members.clone(),
+            table: table.to_vec(),
+            distortion: quant.distortion(),
+            meta: Json::Obj(meta),
+        }
+    }
+
+    /// Stage-2 codeword dimension under this snapshot's family.
+    fn dc2(&self) -> usize {
+        match self.family {
+            QuantKind::Product => self.d - self.d1,
+            QuantKind::Residual => self.d,
+        }
+    }
+
+    /// Serialize to the versioned binary format (header + checksummed
+    /// payload; see the module docs for the layout).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut payload = Vec::new();
+        put_f32s(&mut payload, &self.c1);
+        put_f32s(&mut payload, &self.c2);
+        put_u32s(&mut payload, &self.assign1);
+        put_u32s(&mut payload, &self.assign2);
+        put_u32s(&mut payload, &self.offsets);
+        put_u32s(&mut payload, &self.members);
+        put_f32s(&mut payload, &self.table);
+        payload.extend_from_slice(&self.distortion.to_le_bytes());
+        let meta = self.meta.to_string();
+        payload.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+        payload.extend_from_slice(meta.as_bytes());
+
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.push(self.kind.tag());
+        out.push(match self.family {
+            QuantKind::Product => 0u8,
+            QuantKind::Residual => 1u8,
+        });
+        out.extend_from_slice(&[0u8; 2]);
+        out.extend_from_slice(&(self.n as u64).to_le_bytes());
+        out.extend_from_slice(&(self.d as u64).to_le_bytes());
+        out.extend_from_slice(&(self.k as u64).to_le_bytes());
+        out.extend_from_slice(&(self.d1 as u64).to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+        debug_assert_eq!(out.len(), HEADER_LEN);
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Parse and fully validate a snapshot: magic, version, section sizes,
+    /// checksum, then structure (codes in range, CSR a partition of the
+    /// classes consistent with the codes). Every rejection names what is
+    /// wrong with the file.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Snapshot> {
+        if bytes.len() < HEADER_LEN {
+            bail!(
+                "snapshot truncated: {} bytes is smaller than the {HEADER_LEN}-byte header",
+                bytes.len()
+            );
+        }
+        if bytes[..8] != MAGIC {
+            bail!("not a MIDX snapshot (bad magic)");
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != VERSION {
+            bail!("snapshot version {version} unsupported (this build reads version {VERSION})");
+        }
+        let kind = SnapshotKind::from_tag(bytes[12])?;
+        let family = match bytes[13] {
+            0 => QuantKind::Product,
+            1 => QuantKind::Residual,
+            t => bail!("unknown quantizer family tag {t} (corrupted header?)"),
+        };
+        let header_u64 = |at: usize| u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap());
+        let n = header_u64(16) as usize;
+        let d = header_u64(24) as usize;
+        let k = header_u64(32) as usize;
+        let d1 = header_u64(40) as usize;
+        let payload_len = header_u64(48) as usize;
+        let checksum = header_u64(56);
+        if n == 0 || d < 2 || k == 0 || d1 == 0 || d1 > d {
+            bail!("implausible header dims n={n} d={d} k={k} d1={d1} (corrupted header?)");
+        }
+        let dc2 = match family {
+            QuantKind::Product => d - d1,
+            QuantKind::Residual => d,
+        };
+        // fixed payload size up to the variable-length meta blob, computed
+        // in u128 so a corrupted header cannot overflow (or allocate) here
+        let fixed: u128 = 4 * (k as u128) * (d1 as u128 + dc2 as u128)
+            + 4 * 3 * n as u128
+            + 4 * ((k as u128) * (k as u128) + 1)
+            + 4 * (n as u128) * (d as u128)
+            + 8
+            + 4;
+        if (payload_len as u128) < fixed {
+            bail!(
+                "snapshot payload length {payload_len} is smaller than the {fixed} bytes its \
+                 header dims require (corrupted header?)"
+            );
+        }
+        let actual = bytes.len() - HEADER_LEN;
+        if actual != payload_len {
+            bail!("snapshot truncated: header wants {payload_len} payload bytes, file has {actual}");
+        }
+        let payload = &bytes[HEADER_LEN..];
+        let computed = fnv1a64(payload);
+        if computed != checksum {
+            bail!(
+                "snapshot checksum mismatch (corrupted payload): stored {checksum:#018x}, \
+                 computed {computed:#018x}"
+            );
+        }
+
+        let mut r = Reader { b: payload, i: 0 };
+        let c1 = r.f32s(k * d1, "stage-1 codebook")?;
+        let c2 = r.f32s(k * dc2, "stage-2 codebook")?;
+        let assign1 = r.u32s(n, "stage-1 codes")?;
+        let assign2 = r.u32s(n, "stage-2 codes")?;
+        let offsets = r.u32s(k * k + 1, "CSR offsets")?;
+        let members = r.u32s(n, "CSR members")?;
+        let table = r.f32s(n * d, "class table")?;
+        let distortion = f64::from_le_bytes(r.take(8, "distortion")?.try_into().unwrap());
+        let meta_len = u32::from_le_bytes(r.take(4, "meta length")?.try_into().unwrap()) as usize;
+        let meta_bytes = r.take(meta_len, "meta blob")?;
+        let meta_str = std::str::from_utf8(meta_bytes).context("snapshot meta is not UTF-8")?;
+        let meta = Json::parse(meta_str)
+            .map_err(|e| anyhow!("snapshot meta is not valid JSON: {e}"))?;
+        if r.i != payload.len() {
+            bail!("snapshot has {} trailing payload bytes", payload.len() - r.i);
+        }
+
+        let snap = Snapshot {
+            kind,
+            family,
+            n,
+            d,
+            k,
+            d1,
+            c1,
+            c2,
+            assign1,
+            assign2,
+            offsets,
+            members,
+            table,
+            distortion,
+            meta,
+        };
+        snap.validate()?;
+        Ok(snap)
+    }
+
+    /// Structural validation: codes in range, CSR offsets monotone and a
+    /// partition of the classes, and every bucket's members carrying
+    /// exactly that bucket's codeword pair.
+    pub fn validate(&self) -> Result<()> {
+        let k = self.k as u32;
+        for (stage, codes) in [(1, &self.assign1), (2, &self.assign2)] {
+            if let Some(&bad) = codes.iter().find(|&&c| c >= k) {
+                bail!("stage-{stage} code {bad} out of range (K = {k})");
+            }
+        }
+        let index = InvertedMultiIndex::from_csr(
+            self.k,
+            self.offsets.clone(),
+            self.members.clone(),
+        )
+        .map_err(|e| anyhow!("snapshot index is structurally invalid: {e}"))?;
+        for b in 0..self.k * self.k {
+            for &c in index.bucket_flat(b) {
+                let i = c as usize;
+                let want = self.assign1[i] as usize * self.k + self.assign2[i] as usize;
+                if want != b {
+                    bail!(
+                        "class {c} sits in bucket {b} but its codes place it in bucket {want} \
+                         (index and codes disagree)"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Reassemble the quantizer this snapshot captured (bit-identical
+    /// codebooks, codes and distortion; no k-means).
+    pub fn build_quantizer(&self) -> Box<dyn Quantizer + Send + Sync> {
+        match self.family {
+            QuantKind::Product => Box::new(ProductQuantizer::from_parts(
+                self.k,
+                self.d,
+                self.d1,
+                self.c1.clone(),
+                self.c2.clone(),
+                self.assign1.clone(),
+                self.assign2.clone(),
+                self.distortion,
+            )),
+            QuantKind::Residual => Box::new(ResidualQuantizer::from_parts(
+                self.k,
+                self.d,
+                self.c1.clone(),
+                self.c2.clone(),
+                self.assign1.clone(),
+                self.assign2.clone(),
+                self.distortion,
+            )),
+        }
+    }
+
+    /// Reassemble the CSR inverted multi-index (bucket masses recomputed
+    /// from the offsets). Panics only on a snapshot that skipped
+    /// [`Snapshot::validate`] — `from_bytes` always validates.
+    pub fn build_index(&self) -> InvertedMultiIndex {
+        InvertedMultiIndex::from_csr(self.k, self.offsets.clone(), self.members.clone())
+            .expect("validated snapshot CSR")
+    }
+
+    /// Reassemble a servable sampler core. The loaded core is draw-for-draw
+    /// bit-identical to the one [`Snapshot::capture`] saw: same codebooks,
+    /// same codes, same CSR layout, same bucket masses.
+    pub fn build_core(&self) -> Box<dyn SamplerCore> {
+        let quant = self.build_quantizer();
+        let index = self.build_index();
+        match self.kind {
+            SnapshotKind::MidxPq | SnapshotKind::MidxRq => {
+                Box::new(MidxCore::from_parts(self.kind.name(), quant, index))
+            }
+            SnapshotKind::ExactMidx => {
+                Box::new(ExactMidxCore::from_parts(quant, index, self.table.clone(), self.d))
+            }
+        }
+    }
+
+    /// Write the snapshot to `path` (atomic enough for our use: full
+    /// buffer, single `fs::write`).
+    pub fn write(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("writing snapshot to {}", path.display()))
+    }
+
+    /// Read and validate a snapshot from `path`.
+    pub fn read(path: &Path) -> Result<Snapshot> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading snapshot from {}", path.display()))?;
+        Snapshot::from_bytes(&bytes)
+            .with_context(|| format!("loading snapshot {}", path.display()))
+    }
+
+    /// Serialized size in bytes (header + payload).
+    pub fn size_bytes(&self) -> usize {
+        // meta is re-rendered, matching to_bytes exactly
+        let floats = self.c1.len() + self.c2.len() + self.table.len();
+        let ints =
+            self.assign1.len() + self.assign2.len() + self.offsets.len() + self.members.len();
+        HEADER_LEN + 4 * (floats + ints) + 8 + 4 + self.meta.to_string().len()
+    }
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_u32s(out: &mut Vec<u8>, xs: &[u32]) {
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bounds-checked sequential payload reader: every over-read names the
+/// section it died in instead of panicking.
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, len: usize, what: &str) -> Result<&'a [u8]> {
+        let have = self.b.len() - self.i;
+        if len > have {
+            bail!("snapshot truncated inside {what}: need {len} bytes, have {have}");
+        }
+        let s = &self.b[self.i..self.i + len];
+        self.i += len;
+        Ok(s)
+    }
+
+    fn f32s(&mut self, count: usize, what: &str) -> Result<Vec<f32>> {
+        let raw = self.take(count * 4, what)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn u32s(&mut self, count: usize, what: &str) -> Result<Vec<u32>> {
+        let raw = self.take(count * 4, what)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::fixtures::built_sampler;
+    use crate::sampler::{Sampler, SamplerKind};
+    use crate::util::check::rand_matrix;
+    use crate::util::Rng;
+
+    fn small_snapshot(kind: SamplerKind, seed: u64) -> Snapshot {
+        let (n, d) = (40usize, 8usize);
+        let mut rng = Rng::new(seed);
+        let table = rand_matrix(&mut rng, n, d, 0.5);
+        let mut s = built_sampler(kind, n, d, seed);
+        s.rebuild(&table, n, d, &mut rng);
+        s.snapshot(&table, n, d).expect("MIDX samplers snapshot")
+    }
+
+    #[test]
+    fn byte_roundtrip_preserves_every_field() {
+        for (kind, seed) in
+            [(SamplerKind::MidxPq, 3u64), (SamplerKind::MidxRq, 4), (SamplerKind::ExactMidx, 5)]
+        {
+            let snap = small_snapshot(kind, seed);
+            let bytes = snap.to_bytes();
+            assert_eq!(bytes.len(), snap.size_bytes(), "size_bytes disagrees with to_bytes");
+            let back = Snapshot::from_bytes(&bytes).expect("roundtrip parse");
+            assert_eq!(back.kind, snap.kind);
+            assert_eq!(back.family, snap.family);
+            assert_eq!((back.n, back.d, back.k, back.d1), (snap.n, snap.d, snap.k, snap.d1));
+            assert_eq!(back.c1, snap.c1);
+            assert_eq!(back.c2, snap.c2);
+            assert_eq!(back.assign1, snap.assign1);
+            assert_eq!(back.assign2, snap.assign2);
+            assert_eq!(back.offsets, snap.offsets);
+            assert_eq!(back.members, snap.members);
+            assert_eq!(back.table, snap.table);
+            assert_eq!(back.distortion.to_bits(), snap.distortion.to_bits());
+            assert_eq!(back.meta, snap.meta);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_truncation_and_corruption() {
+        let snap = small_snapshot(SamplerKind::MidxRq, 9);
+        let good = snap.to_bytes();
+
+        // bad magic
+        let mut b = good.clone();
+        b[0] ^= 0xFF;
+        let e = Snapshot::from_bytes(&b).unwrap_err().to_string();
+        assert!(e.contains("bad magic"), "{e}");
+
+        // version skew
+        let mut b = good.clone();
+        b[8] = 2;
+        let e = Snapshot::from_bytes(&b).unwrap_err().to_string();
+        assert!(e.contains("version 2 unsupported"), "{e}");
+
+        // truncated mid-payload
+        let b = &good[..good.len() - 10];
+        let e = Snapshot::from_bytes(b).unwrap_err().to_string();
+        assert!(e.contains("truncated"), "{e}");
+
+        // shorter than the header
+        let e = Snapshot::from_bytes(&good[..20]).unwrap_err().to_string();
+        assert!(e.contains("smaller than"), "{e}");
+
+        // flipped payload byte: checksum catches it
+        let mut b = good.clone();
+        let at = HEADER_LEN + 13;
+        b[at] ^= 0x40;
+        let e = Snapshot::from_bytes(&b).unwrap_err().to_string();
+        assert!(e.contains("checksum mismatch"), "{e}");
+    }
+
+    #[test]
+    fn rejects_codes_index_disagreement() {
+        let mut snap = small_snapshot(SamplerKind::MidxPq, 11);
+        // move one class's code without repacking the CSR: structure check
+        // must notice the file lying about itself
+        snap.assign1[0] = (snap.assign1[0] + 1) % snap.k as u32;
+        let bytes = snap.to_bytes();
+        let e = Snapshot::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(e.contains("disagree"), "{e}");
+    }
+
+    #[test]
+    fn loaded_quantizer_matches_source_scores() {
+        let snap = small_snapshot(SamplerKind::MidxRq, 13);
+        let quant = snap.build_quantizer();
+        let mut rng = Rng::new(99);
+        let z = rand_matrix(&mut rng, 1, snap.d, 0.5);
+        let mut s1 = vec![0.0f32; snap.k];
+        let mut s2 = vec![0.0f32; snap.k];
+        quant.stage1_scores(&z, &mut s1);
+        quant.stage2_scores(&z, &mut s2);
+        assert!(s1.iter().chain(s2.iter()).all(|x| x.is_finite()));
+        let index = snap.build_index();
+        assert_eq!(index.n_classes(), snap.n);
+        let core = snap.build_core();
+        assert_eq!(core.n_classes(), snap.n);
+        assert_eq!(core.name(), "midx-rq");
+    }
+}

@@ -56,6 +56,9 @@ pub struct TrainConfig {
     /// how the sampler index is refreshed between epochs (CLI `--refresh`);
     /// `Full` is the paper's once-per-epoch cold rebuild
     pub refresh: RefreshPolicy,
+    /// write a servable sampler snapshot here after training (CLI
+    /// `--export`); requires a MIDX-family sampler
+    pub export: Option<String>,
     /// print per-epoch progress lines
     pub verbose: bool,
 }
@@ -72,6 +75,7 @@ impl Default for TrainConfig {
             prefetch: 2,
             threads: 0,
             refresh: RefreshPolicy::Full,
+            export: None,
             verbose: false,
         }
     }
@@ -541,6 +545,13 @@ impl Trainer {
         }
 
         let test = self.evaluate(&task, true)?;
+        if let Some(path) = self.cfg.export.clone() {
+            // refresh the index from the FINAL embeddings first, so the
+            // exported core serves what the run actually learned (the
+            // last in-loop rebuild saw the start-of-epoch table)
+            self.rebuild_sampler();
+            self.export_snapshot(&path)?;
+        }
         Ok(RunResult {
             sampler_name: self.sampler_name(),
             model: self.manifest.name.clone(),
@@ -549,6 +560,35 @@ impl Trainer {
             test,
             timing: self.timing,
         })
+    }
+
+    /// Export the current sampler core + class embeddings as a servable
+    /// snapshot (`TrainConfig::export`, CLI `--export`). Errors for the
+    /// Full baseline and for samplers without a serializable core
+    /// (everything outside the MIDX family).
+    pub fn export_snapshot(&self, path: &str) -> Result<()> {
+        let dims = &self.manifest.dims;
+        let sampler = self.sampler.as_ref().ok_or_else(|| {
+            anyhow!("--export requires a sampler (the Full baseline has no index to serve)")
+        })?;
+        let snap = sampler
+            .snapshot(self.params.q_table(), dims.n_classes, dims.d)
+            .ok_or_else(|| {
+                anyhow!(
+                    "sampler '{}' has no servable snapshot (only the MIDX family exports: \
+                     midx-pq, midx-rq, exact-midx)",
+                    sampler.name()
+                )
+            })?;
+        snap.write(std::path::Path::new(path))?;
+        if self.cfg.verbose {
+            println!(
+                "exported servable snapshot to {path} ({} classes, {} bytes)",
+                dims.n_classes,
+                snap.size_bytes()
+            );
+        }
+        Ok(())
     }
 
     /// The run's wall-clock ledger so far.

@@ -88,6 +88,27 @@ impl Json {
     pub fn req<'a>(&'a self, key: &str) -> Result<&'a Json, String> {
         self.get(key).ok_or_else(|| format!("missing key '{key}'"))
     }
+
+    /// Collect a numeric array into f32s (None if this is not an array of
+    /// numbers) — the serve protocol's query-vector accessor.
+    pub fn f32_vec(&self) -> Option<Vec<f32>> {
+        let arr = self.as_arr()?;
+        let mut out = Vec::with_capacity(arr.len());
+        for v in arr {
+            out.push(v.as_f64()? as f32);
+        }
+        Some(out)
+    }
+}
+
+/// Build a JSON array from f32 values (stored as JSON numbers).
+pub fn from_f32s(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+/// Build a JSON array from u32 ids (stored as JSON numbers).
+pub fn from_u32s(xs: &[u32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
 }
 
 struct Parser<'a> {
@@ -368,5 +389,16 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(Default::default()));
+    }
+
+    #[test]
+    fn numeric_array_helpers() {
+        let xs = [0.5f32, -1.25, 3.0];
+        let j = from_f32s(&xs);
+        assert_eq!(j.f32_vec().unwrap(), xs.to_vec());
+        let ids = from_u32s(&[7, 0, 42]);
+        assert_eq!(ids.to_string(), "[7,0,42]");
+        assert_eq!(Json::parse("[1,\"x\"]").unwrap().f32_vec(), None);
+        assert_eq!(Json::Str("nope".into()).f32_vec(), None);
     }
 }

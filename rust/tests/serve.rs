@@ -1,0 +1,251 @@
+//! Serve-layer integration tests: snapshot round-trips, corruption
+//! rejection, loaded-core bit-identity with the source sampler, and top-k
+//! agreement with brute force. Artifact-free — everything runs on
+//! synthetic tables through the public serve API.
+//!
+//! The headline contract (ISSUE 4 acceptance): a snapshot exported from a
+//! live sampler and reloaded from bytes/disk produces **bit-identical**
+//! draws to the in-memory core, for every MIDX variant and for every
+//! thread count.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use midx::coordinator::WorkerPool;
+use midx::sampler::fixtures::small_params;
+use midx::sampler::{build, sample_batch, sample_batch_pooled, Sampler, SamplerKind};
+use midx::serve::{MicroBatcher, QueryEngine, Request, Snapshot};
+use midx::util::check::rand_matrix;
+use midx::util::math::dot;
+use midx::util::Rng;
+
+const MIDX_KINDS: &[SamplerKind] =
+    &[SamplerKind::MidxPq, SamplerKind::MidxRq, SamplerKind::ExactMidx];
+
+/// Build + rebuild a MIDX-family sampler on a deterministic random table.
+fn trained(kind: SamplerKind, n: usize, d: usize, seed: u64) -> (Box<dyn Sampler>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let table = rand_matrix(&mut rng, n, d, 0.5);
+    let mut s = build(kind, n, &small_params(n));
+    s.rebuild(&table, n, d, &mut rng);
+    (s, table)
+}
+
+/// Unique-ish temp path for file round-trip tests.
+fn temp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("midx_serve_test_{}_{tag}.midx", std::process::id()))
+}
+
+#[test]
+fn loaded_core_draws_bit_identical_at_t1_and_t8() {
+    let (n, d, b, m, seed) = (80usize, 8usize, 17usize, 6usize, 0x5EEDu64);
+    for &kind in MIDX_KINDS {
+        let (s, table) = trained(kind, n, d, 500 + kind as u64);
+        let snap = s.snapshot(&table, n, d).expect("MIDX samplers snapshot");
+
+        // through bytes AND through a file: both must reproduce the core
+        let from_mem = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+        let path = temp_path(snap.kind.name());
+        snap.write(&path).unwrap();
+        let from_disk = Snapshot::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        let mut rng = Rng::new(9);
+        let queries = rand_matrix(&mut rng, b, d, 0.5);
+        let positives: Vec<u32> = (0..b).map(|i| (i % n) as u32).collect();
+        let sample = |core: &dyn midx::sampler::SamplerCore, threads: usize| {
+            let mut ids = vec![0u32; b * m];
+            let mut lq = vec![0.0f32; b * m];
+            sample_batch(core, &queries, d, &positives, m, seed, threads, &mut ids, &mut lq);
+            let bits: Vec<u32> = lq.iter().map(|x| x.to_bits()).collect();
+            (ids, bits)
+        };
+
+        let src = s.core();
+        for threads in [1usize, 8] {
+            let want = sample(src, threads);
+            for (label, loaded) in [("bytes", &from_mem), ("disk", &from_disk)] {
+                let core = loaded.build_core();
+                let got = sample(core.as_ref(), threads);
+                assert_eq!(
+                    got, want,
+                    "{} via {label} at T={threads}: loaded draws diverge",
+                    snap.kind.name()
+                );
+            }
+        }
+
+        // and through the pooled path an engine actually serves with
+        let pool = WorkerPool::new(3);
+        let core = from_mem.build_core();
+        let mut ids = vec![0u32; b * m];
+        let mut lq = vec![0.0f32; b * m];
+        sample_batch_pooled(
+            &pool, core.as_ref(), &queries, d, &positives, m, seed, 0, &mut ids, &mut lq,
+        );
+        let want = sample(src, 1);
+        assert_eq!(ids, want.0, "{}: pooled loaded draws diverge", snap.kind.name());
+    }
+}
+
+#[test]
+fn corrupted_and_truncated_files_are_rejected_with_useful_errors() {
+    let (s, table) = trained(SamplerKind::MidxRq, 50, 8, 7);
+    let snap = s.snapshot(&table, 50, 8).unwrap();
+    let good = snap.to_bytes();
+
+    let cases: Vec<(Vec<u8>, &str)> = vec![
+        ({ let mut b = good.clone(); b[0] ^= 0xFF; b }, "bad magic"),
+        ({ let mut b = good.clone(); b[8] = 99; b }, "version 99 unsupported"),
+        (good[..good.len() / 2].to_vec(), "truncated"),
+        (good[..40].to_vec(), "smaller than"),
+        ({ let mut b = good.clone(); let at = b.len() - 30; b[at] ^= 1; b }, "checksum mismatch"),
+    ];
+    for (bytes, needle) in cases {
+        let path = temp_path(needle.split(' ').next().unwrap());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Snapshot::read(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains(needle), "want '{needle}' in: {err}");
+        // the path the operator passed must appear in the error chain
+        assert!(err.contains("midx_serve_test"), "no file context in: {err}");
+    }
+
+    // a missing file also names itself
+    let err = Snapshot::read(std::path::Path::new("/nonexistent/nope.midx"))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("nope.midx"), "{err}");
+}
+
+#[test]
+fn top_k_with_full_beam_matches_brute_force_exactly() {
+    let (n, d, k) = (70usize, 8usize, 9usize);
+    for &kind in MIDX_KINDS {
+        let (s, table) = trained(kind, n, d, 900 + kind as u64);
+        let snap = s.snapshot(&table, n, d).unwrap();
+        // exact-midx snapshots carry the core's own table; score against
+        // the table the engine will actually use
+        let served = snap.table.clone();
+        let mut engine = QueryEngine::new(snap, 2);
+        engine.set_beam_factor(usize::MAX);
+
+        let mut rng = Rng::new(31);
+        let queries = rand_matrix(&mut rng, 5, d, 0.7);
+        let (ids, scores) = engine.top_k_batch(&queries, k);
+        for (row, query) in queries.chunks(d).enumerate() {
+            let mut want: Vec<(f32, u32)> = (0..n)
+                .map(|i| (dot(query, &served[i * d..(i + 1) * d]), i as u32))
+                .collect();
+            want.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+            for j in 0..k {
+                assert_eq!(ids[row * k + j], want[j].1, "{kind:?} row {row} rank {j}");
+                assert_eq!(
+                    scores[row * k + j].to_bits(),
+                    want[j].0.to_bits(),
+                    "{kind:?} row {row} rank {j}: score"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn default_beam_recall_is_high_on_clustered_data() {
+    // well-clustered table: members of the same cluster share a bucket, so
+    // the stage-score beam finds the right buckets and the exact re-rank
+    // must recover most of the true top-k even at the default beam width
+    let (n, d, k) = (200usize, 8usize, 10usize);
+    let mut rng = Rng::new(5);
+    let mut table = vec![0.0f32; n * d];
+    for i in 0..n {
+        let c = i % 8;
+        for j in 0..d {
+            let base = if j == c { 2.0 } else { 0.0 };
+            table[i * d + j] = base + rng.normal_f32(0.15);
+        }
+    }
+    let mut params = small_params(n);
+    params.k_codewords = 8; // one codeword per planted cluster
+    let mut s = build(SamplerKind::MidxRq, n, &params);
+    s.rebuild(&table, n, d, &mut rng);
+    let snap = s.snapshot(&table, n, d).unwrap();
+    let engine = QueryEngine::new(snap, 1);
+
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    for case in 0..10 {
+        let z = rand_matrix(&mut Rng::new(100 + case), 1, d, 0.7);
+        let got: Vec<u32> = engine.top_k(&z, k).into_iter().map(|(c, _)| c).collect();
+        let mut want: Vec<(f32, u32)> =
+            (0..n).map(|i| (dot(&z, &table[i * d..(i + 1) * d]), i as u32)).collect();
+        want.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        let truth: Vec<u32> = want.iter().take(k).map(|&(_, c)| c).collect();
+        hits += got.iter().filter(|&&c| truth.contains(&c)).count();
+        total += k;
+    }
+    let recall = hits as f64 / total as f64;
+    assert!(recall >= 0.5, "default-beam recall {recall} (chance would be {})", k as f64 / n as f64);
+}
+
+#[test]
+fn engine_sample_is_bit_identical_to_source_unconditioned_draws() {
+    let (n, d, b, m) = (60usize, 8usize, 9usize, 5usize);
+    let (s, table) = trained(SamplerKind::MidxPq, n, d, 77);
+    let snap = s.snapshot(&table, n, d).unwrap();
+    let engine = QueryEngine::new(snap, 3);
+
+    let mut rng = Rng::new(13);
+    let queries = rand_matrix(&mut rng, b, d, 0.5);
+    let (got_ids, got_lq) = engine.sample(&queries, m, 0xFACE);
+
+    let positives = vec![u32::MAX; b];
+    let mut want_ids = vec![0u32; b * m];
+    let mut want_lq = vec![0.0f32; b * m];
+    sample_batch(s.core(), &queries, d, &positives, m, 0xFACE, 1, &mut want_ids, &mut want_lq);
+    assert_eq!(got_ids, want_ids);
+    assert_eq!(
+        got_lq.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        want_lq.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn micro_batched_requests_are_independent_of_coalescing() {
+    // the same request must get the same answer whether it was served
+    // alone (window 0, sequential submits) or coalesced with 15 others
+    let (s, table) = trained(SamplerKind::MidxRq, 60, 8, 21);
+    let snap = s.snapshot(&table, 60, 8).unwrap();
+    let engine = Arc::new(QueryEngine::new(snap, 4));
+
+    let mut rng = Rng::new(3);
+    let queries: Vec<Vec<f32>> = (0..16).map(|_| rand_matrix(&mut rng, 1, 8, 0.5)).collect();
+    let request = |i: usize| {
+        if i % 2 == 0 {
+            Request::TopK { q: queries[i].clone(), k: 5 }
+        } else {
+            Request::Sample { q: queries[i].clone(), m: 4, seed: i as u64 }
+        }
+    };
+
+    // alone: no window, submitted one by one
+    let solo = MicroBatcher::new(Arc::clone(&engine), Duration::ZERO, 1);
+    let alone: Vec<_> = (0..16).map(|i| solo.submit(request(i))).collect();
+    drop(solo);
+
+    // coalesced: generous window, concurrent submitters
+    let batcher = Arc::new(MicroBatcher::new(engine, Duration::from_millis(2), 64));
+    let handles: Vec<_> = (0..16)
+        .map(|i| {
+            let b = Arc::clone(&batcher);
+            let req = request(i);
+            std::thread::spawn(move || b.submit(req))
+        })
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let got = h.join().unwrap();
+        assert_eq!(got, alone[i], "request {i} changed under coalescing");
+    }
+    let (reqs, _) = batcher.stats();
+    assert_eq!(reqs, 16);
+}
