@@ -1,7 +1,7 @@
-//! `cargo bench --bench serve` — serve-layer cost: snapshot export/load
-//! and batched top-k latency percentiles.
+//! `cargo bench --bench serve` — serve-layer cost: snapshot export/load,
+//! batched top-k latency percentiles, and reactor connection scaling.
 //!
-//! Three sections, all artifact-free:
+//! Four sections, all artifact-free:
 //!
 //! 1. **Snapshot cost.** Serialize (`to_bytes`) and parse+validate
 //!    (`from_bytes`) throughput at two model sizes, plus one-shot
@@ -14,6 +14,11 @@
 //! 3. **Sampling latency.** The served proposal-draw path (`sample`) at
 //!    one representative shape, for comparison against the training-time
 //!    numbers in `benches/sampling_time.rs`.
+//! 4. **Connection scaling (unix).** End-to-end request latency and QPS
+//!    through the event-driven reactor at 1/8/64/256 concurrent
+//!    closed-loop TCP connections — the table that shows one poll thread
+//!    multiplexing hundreds of sockets without per-connection threads on
+//!    the server side.
 
 use std::time::Instant;
 
@@ -83,7 +88,7 @@ fn topk_section() {
 
     println!("\ntop-{k} latency vs batch size and worker threads (N={n}, D={d}, K={k_codewords})");
     for &threads in &[1usize, 2, 4, 8] {
-        let engine = QueryEngine::new(snap.clone(), threads);
+        let engine = QueryEngine::new(snap.clone(), threads).unwrap();
         for &b in &[1usize, 8, 64, 256] {
             let q = &queries[..b * d];
             percentiles(&format!("serve/topk/b{b}/t{threads}"), b, 60, || {
@@ -100,7 +105,7 @@ fn sample_section() {
     let queries = rand_matrix(&mut rng, 64, d, 0.5);
     println!("\nserved proposal draws (B=64, M={m})");
     for &threads in &[1usize, 4] {
-        let engine = QueryEngine::new(snap.clone(), threads);
+        let engine = QueryEngine::new(snap.clone(), threads).unwrap();
         let mut seed = 0u64;
         percentiles(&format!("serve/sample/b64/t{threads}"), 64, 60, || {
             seed = seed.wrapping_add(1);
@@ -109,8 +114,92 @@ fn sample_section() {
     }
 }
 
+/// Connection-scaling table: C closed-loop TCP clients against one
+/// reactor, per-request latency percentiles + aggregate QPS.
+#[cfg(unix)]
+fn reactor_section() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use midx::serve::{LatencyRecorder, MicroBatcher, Reactor, ReactorConfig};
+
+    let (n, d, k_codewords) = (20_000usize, 32usize, 32usize);
+    let snap = snapshot_for(n, d, k_codewords, 19);
+    let engine = Arc::new(QueryEngine::new(snap, 4).unwrap());
+    let batcher = Arc::new(MicroBatcher::with_queue_cap(
+        engine,
+        Duration::from_micros(100),
+        256,
+        16_384,
+    ));
+    let rec = Arc::new(LatencyRecorder::new());
+    let cfg = ReactorConfig {
+        max_conns: 512,
+        idle_timeout: Duration::ZERO,
+        ..Default::default()
+    };
+    let reactor = Reactor::bind("127.0.0.1:0", Arc::clone(&batcher), rec, cfg).unwrap();
+    let addr = reactor.local_addr().unwrap();
+    let handle = reactor.handle();
+    let server = std::thread::spawn(move || reactor.run());
+
+    println!("\nreactor connection scaling (N={n}, D={d}, closed-loop clients, topk k=10)");
+    let q: Vec<String> = (0..d).map(|j| format!("0.{:02}", (j + 1) % 100)).collect();
+    let line = format!(r#"{{"op":"topk","q":[{}],"k":10}}"#, q.join(","));
+    for &conns in &[1usize, 8, 64, 256] {
+        let reqs_per_conn = (2048 / conns).max(8);
+        let t_all = Instant::now();
+        let workers: Vec<_> = (0..conns)
+            .map(|_| {
+                let line = line.clone();
+                std::thread::spawn(move || {
+                    let mut s = std::net::TcpStream::connect(addr).unwrap();
+                    s.set_nodelay(true).ok();
+                    let mut rd = BufReader::new(s.try_clone().unwrap());
+                    let mut us = Vec::with_capacity(reqs_per_conn);
+                    let mut reply = String::new();
+                    for _ in 0..reqs_per_conn {
+                        let t = Instant::now();
+                        s.write_all(line.as_bytes()).unwrap();
+                        s.write_all(b"\n").unwrap();
+                        reply.clear();
+                        rd.read_line(&mut reply).unwrap();
+                        us.push(t.elapsed().as_micros() as u64);
+                        assert!(reply.contains("\"ok\":true"), "{reply}");
+                    }
+                    us
+                })
+            })
+            .collect();
+        let mut us: Vec<u64> = Vec::new();
+        for w in workers {
+            us.extend(w.join().unwrap());
+        }
+        let wall = t_all.elapsed().as_secs_f64();
+        us.sort_unstable();
+        let pct =
+            |p: f64| us[((p / 100.0 * (us.len() - 1) as f64).round() as usize).min(us.len() - 1)];
+        println!(
+            "bench serve/reactor/conns{conns:<4} p50={}µs p95={}µs p99={}µs qps={:.0}",
+            pct(50.0),
+            pct(95.0),
+            pct(99.0),
+            us.len() as f64 / wall,
+        );
+    }
+    handle.shutdown();
+    server.join().unwrap().unwrap();
+}
+
+#[cfg(not(unix))]
+fn reactor_section() {
+    println!("\nreactor connection scaling: skipped (non-unix target, no poll(2) reactor)");
+}
+
 fn main() {
     snapshot_section();
     topk_section();
     sample_section();
+    reactor_section();
 }

@@ -62,7 +62,16 @@
 //! proposal-draw requests against it. A loaded core is draw-for-draw
 //! bit-identical to the in-memory one; concurrent callers are coalesced by
 //! a micro-batching dispatcher ([`serve::query::MicroBatcher`]) into
-//! single [`coordinator::WorkerPool`] dispatches (DESIGN.md §6).
+//! single [`coordinator::WorkerPool`] dispatches (DESIGN.md §6). On unix,
+//! `midx serve --tcp` runs the event-driven reactor (`serve::reactor`,
+//! DESIGN.md §7): one thread multiplexing thousands of non-blocking
+//! connections over raw `poll(2)`, with in-order multiplexed replies, a
+//! bounded admission queue answering overload with explicit `busy`
+//! refusals, idle-connection reaping, and graceful drain. Snapshots also
+//! cover the static samplers (uniform, unigram — the alias table persists
+//! verbatim), servable as cheap fallback proposals
+//! ([`serve::query::QueryEngine::attach_fallback`]) while a MIDX core
+//! refreshes.
 //!
 //! ## Module map
 //!

@@ -25,7 +25,7 @@ use midx::coordinator::{fmt, run_experiment, ExperimentSpec, Table};
 use midx::index::RefreshPolicy;
 use midx::runtime::{list_models, load_model};
 use midx::sampler::{self, SamplerKind, SamplerParams};
-use midx::serve::{serve_stdin, serve_tcp, LatencyRecorder, MicroBatcher, QueryEngine, Snapshot};
+use midx::serve::{serve_stdin, LatencyRecorder, MicroBatcher, QueryEngine, Snapshot};
 use midx::train::TrainConfig;
 use midx::util::check::rand_matrix;
 use midx::util::json::{from_f32s, from_u32s};
@@ -96,19 +96,29 @@ const USAGE: &str = "usage:
   midx bench table1|table2|table3|table4|table5|table7|table9|fig2|fig3|fig45|fig6|fig7|all [--quick]
              [--epochs N] [--steps N] [--eval-cap N]
   midx export --out FILE ( --model NAME [train flags above]
-                         | --synthetic [--n N] [--d D] [--k K] [--sampler midx-pq|midx-rq|exact-midx]
+                         | --synthetic [--n N] [--d D] [--k K]
+                           [--sampler midx-pq|midx-rq|exact-midx|uniform|unigram]
                            [--seed N] [--kmeans-iters N] )
                              (persist a trained sampler core: quantizer codebooks + codes,
-                              CSR inverted index, class embeddings — loadable by serve/query)
-  midx query --snapshot FILE [--topk K | --sample M] [--threads N] [--beam F]
-             [--q \"f,f,...\"] | [--queries B --seed N]
+                              CSR inverted index, class embeddings — loadable by serve/query;
+                              uniform/unigram export static fallback snapshots)
+  midx query --snapshot FILE [--topk K | --sample M [--fallback FILE]] [--threads N]
+             [--beam F] [--q \"f,f,...\"] | [--queries B --seed N]
                              (one-shot batched answers against a snapshot; one JSON line
-                              per query on stdout, timing summary on stderr)
-  midx serve --snapshot FILE [--tcp ADDR] [--threads N] [--beam F]
+                              per query on stdout, timing summary on stderr; --fallback
+                              draws --sample from a static uniform/unigram snapshot)
+  midx serve --snapshot FILE [--fallback FILE] [--tcp ADDR] [--threads N] [--beam F]
              [--window-us N] [--max-batch N]
+             [--max-conns N] [--queue-cap N] [--idle-ms N]
                              (line-delimited JSON frontend: op topk|sample|info|stats;
-                              stdin/stdout by default, --tcp for one thread per
-                              connection coalesced by the micro-batcher)";
+                              stdin/stdout by default. --tcp serves through the
+                              event-driven reactor: one thread multiplexing up to
+                              --max-conns connections, admission bounded at
+                              --queue-cap queued requests — overflow answers
+                              {\"ok\":false,\"busy\":true} instead of queueing, idle
+                              connections close after --idle-ms. --fallback loads a
+                              static uniform/unigram snapshot served via
+                              {\"op\":\"sample\",\"fallback\":true})";
 
 fn cmd_list() -> Result<()> {
     let mut t = Table::new("models (artifacts/)", &["model", "arch", "N", "D", "Bq", "M", "params"]);
@@ -152,9 +162,17 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Sampler kinds that can be exported as a servable snapshot.
+/// Sampler kinds that can be exported as a servable snapshot (the MIDX
+/// family plus the static fallback proposals).
 fn is_exportable(kind: SamplerKind) -> bool {
-    matches!(kind, SamplerKind::MidxPq | SamplerKind::MidxRq | SamplerKind::ExactMidx)
+    matches!(
+        kind,
+        SamplerKind::MidxPq
+            | SamplerKind::MidxRq
+            | SamplerKind::ExactMidx
+            | SamplerKind::Uniform
+            | SamplerKind::Unigram
+    )
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -172,8 +190,8 @@ fn run_training(args: &Args, export: Option<String>) -> Result<()> {
     };
     if export.is_some() && !sampler.map(is_exportable).unwrap_or(false) {
         bail!(
-            "--export requires a MIDX-family sampler (midx-pq, midx-rq, exact-midx), \
-             got '{}'",
+            "--export requires an exportable sampler (midx-pq, midx-rq, exact-midx, uniform, \
+             unigram), got '{}'",
             sampler.map(|s| s.name()).unwrap_or("full")
         );
     }
@@ -254,13 +272,16 @@ fn cmd_export(args: &Args) -> Result<()> {
     let kind =
         SamplerKind::parse(kind_name).ok_or_else(|| anyhow!("unknown sampler '{kind_name}'"))?;
     if !is_exportable(kind) {
-        bail!("--synthetic export requires a MIDX-family sampler, got '{kind_name}'");
+        bail!("--synthetic export requires an exportable sampler, got '{kind_name}'");
     }
     let mut rng = Rng::new(seed);
     let table = rand_matrix(&mut rng, n, d, 0.5);
     let params = SamplerParams {
         k_codewords: k,
         kmeans_iters: args.usize_or("kmeans-iters", 10),
+        // synthetic unigram fallback: harmonic class frequencies (the
+        // factory degenerates to uniform without counts)
+        frequencies: (0..n).map(|i| 1.0 / (i + 1) as f32).collect(),
         ..Default::default()
     };
     let mut s = sampler::build(kind, n, &params);
@@ -278,15 +299,19 @@ fn cmd_export(args: &Args) -> Result<()> {
 }
 
 /// Load a snapshot and build a query engine from the shared serve flags
-/// (`--snapshot`, `--threads`, `--beam`).
+/// (`--snapshot`, `--threads`, `--beam`, `--fallback`).
 fn load_engine(args: &Args, default_threads: usize) -> Result<QueryEngine> {
     let path = args
         .get("snapshot")
         .ok_or_else(|| anyhow!("--snapshot FILE required (produced by `midx export`)"))?;
     let snap = Snapshot::read(Path::new(path))?;
-    let mut engine = QueryEngine::new(snap, args.usize_or("threads", default_threads));
+    let mut engine = QueryEngine::new(snap, args.usize_or("threads", default_threads))?;
     if args.has("beam") {
         engine.set_beam_factor(args.usize_or("beam", midx::serve::query::DEFAULT_BEAM_FACTOR));
+    }
+    if let Some(fb) = args.get("fallback") {
+        let fb_snap = Snapshot::read(Path::new(fb))?;
+        engine.attach_fallback(fb_snap)?;
     }
     Ok(engine)
 }
@@ -313,13 +338,25 @@ fn cmd_query(args: &Args) -> Result<()> {
     if args.has("sample") {
         let m = args.usize_or("sample", 16);
         let seed = args.u64_or("seed", 1);
-        let (ids, log_q) = engine.sample(&queries, m, seed);
+        // --fallback routes the draws to the attached static proposal
+        let (ids, log_q) = if args.has("fallback") {
+            engine.sample_fallback(&queries, m, seed)?
+        } else {
+            engine.sample(&queries, m, seed)
+        };
         for row in 0..b {
             let (lo, hi) = (row * m, (row + 1) * m);
             print_row(row, &ids[lo..hi], "log_q", &log_q[lo..hi]);
         }
-        eprintln!("sampled {m} draws for {b} queries in {:.2?}", t0.elapsed());
+        eprintln!(
+            "sampled {m} draws for {b} queries in {:.2?}{}",
+            t0.elapsed(),
+            if args.has("fallback") { " (fallback proposal)" } else { "" }
+        );
     } else {
+        if args.has("fallback") {
+            bail!("--fallback draws only apply to --sample (static proposals serve no top-k)");
+        }
         let k = args.usize_or("topk", 10).min(engine.n_classes());
         let (ids, scores) = engine.top_k_batch(&queries, k);
         for row in 0..b {
@@ -347,20 +384,64 @@ fn print_row(row: usize, ids: &[u32], score_field: &str, scores: &[f32]) {
 fn cmd_serve(args: &Args) -> Result<()> {
     let engine = Arc::new(load_engine(args, 0)?);
     eprintln!(
-        "loaded {} snapshot: N={} D={} ({} worker threads)",
+        "loaded {} snapshot: N={} D={} ({} worker threads{})",
         engine.kind().name(),
         engine.n_classes(),
         engine.dim(),
-        engine.workers()
+        engine.workers(),
+        match engine.fallback_kind() {
+            Some(kind) => format!(", {} fallback", kind.name()),
+            None => String::new(),
+        }
     );
     let window = Duration::from_micros(args.u64_or("window-us", 200));
     let max_batch = args.usize_or("max-batch", 64);
-    let batcher = MicroBatcher::new(engine, window, max_batch);
+    let queue_cap = args.usize_or("queue-cap", 4096);
+    let batcher = MicroBatcher::with_queue_cap(engine, window, max_batch, queue_cap);
     let rec = LatencyRecorder::new();
     match args.get("tcp") {
-        Some(addr) => serve_tcp(Arc::new(batcher), Arc::new(rec), addr),
+        Some(addr) => serve_over_tcp(args, addr, Arc::new(batcher), Arc::new(rec)),
         None => serve_stdin(&batcher, &rec),
     }
+}
+
+/// TCP serving: the event-driven reactor on unix, the legacy
+/// thread-per-connection loop elsewhere.
+#[cfg(unix)]
+fn serve_over_tcp(
+    args: &Args,
+    addr: &str,
+    batcher: Arc<MicroBatcher>,
+    rec: Arc<LatencyRecorder>,
+) -> Result<()> {
+    let cfg = midx::serve::ReactorConfig {
+        max_conns: args.usize_or("max-conns", 1024),
+        idle_timeout: Duration::from_millis(args.u64_or("idle-ms", 60_000)),
+        ..Default::default()
+    };
+    midx::serve::serve_reactor(batcher, rec, addr, cfg)
+}
+
+/// TCP serving fallback for non-unix targets (no `poll(2)`): the legacy
+/// thread-per-connection loop, which has no admission bound — warn about
+/// any reactor knobs that would otherwise be silently inert.
+#[cfg(not(unix))]
+fn serve_over_tcp(
+    args: &Args,
+    addr: &str,
+    batcher: Arc<MicroBatcher>,
+    rec: Arc<LatencyRecorder>,
+) -> Result<()> {
+    for flag in ["max-conns", "queue-cap", "idle-ms"] {
+        if args.has(flag) {
+            eprintln!(
+                "warning: --{flag} has no effect on this platform — the poll(2) reactor is \
+                 unix-only, falling back to thread-per-connection serving with an unbounded \
+                 queue (no busy backpressure)"
+            );
+        }
+    }
+    midx::serve::serve_tcp(batcher, rec, addr)
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {

@@ -89,6 +89,28 @@ impl AliasTable {
         }
     }
 
+    /// The table's raw state `(prob, alias, p)` — everything a byte-exact
+    /// reconstruction via [`AliasTable::from_parts`] needs. Used by the
+    /// serve layer to persist static samplers losslessly.
+    pub fn parts(&self) -> (&[f32], &[u32], &[f32]) {
+        (&self.prob, &self.alias, &self.p)
+    }
+
+    /// Reassemble a table from previously captured [`AliasTable::parts`]
+    /// verbatim — no re-derivation, so draws from the reassembled table are
+    /// bit-identical to the source for the same RNG stream. Panics on
+    /// structurally impossible parts (length mismatch, alias out of range);
+    /// the serve layer's snapshot validation rejects such files first with
+    /// a descriptive error.
+    pub fn from_parts(prob: Vec<f32>, alias: Vec<u32>, p: Vec<f32>) -> Self {
+        let n = prob.len();
+        assert!(n > 0, "empty alias table");
+        assert_eq!(alias.len(), n, "alias/prob length mismatch");
+        assert_eq!(p.len(), n, "p/prob length mismatch");
+        assert!(alias.iter().all(|&a| (a as usize) < n), "alias target out of range");
+        AliasTable { prob, alias, p }
+    }
+
     /// Number of outcomes.
     pub fn len(&self) -> usize {
         self.prob.len()
@@ -170,6 +192,30 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn from_parts_round_trip_is_draw_identical() {
+        let w = [3.0f32, 0.5, 7.25, 1.0, 0.0, 2.5];
+        let t = AliasTable::new(&w);
+        let (prob, alias, p) = t.parts();
+        let back = AliasTable::from_parts(prob.to_vec(), alias.to_vec(), p.to_vec());
+        // same RNG stream → bit-identical draw sequence and probabilities
+        let mut r1 = Rng::new(99);
+        let mut r2 = Rng::new(99);
+        for _ in 0..5_000 {
+            assert_eq!(t.sample(&mut r1), back.sample(&mut r2));
+        }
+        for i in 0..w.len() {
+            assert_eq!(t.prob_of(i).to_bits(), back.prob_of(i).to_bits());
+            assert_eq!(t.log_prob_of(i).to_bits(), back.log_prob_of(i).to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "alias target out of range")]
+    fn from_parts_rejects_bad_alias() {
+        AliasTable::from_parts(vec![1.0, 1.0], vec![0, 9], vec![0.5, 0.5]);
     }
 
     #[test]

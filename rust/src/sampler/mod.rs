@@ -213,12 +213,14 @@ pub trait Sampler: Send {
         batch::sample_batch(self.core(), queries, d, positives, m, seed, threads, ids, log_q);
     }
 
-    /// Capture the current core as a servable [`crate::serve::Snapshot`]:
-    /// quantizer codebooks + codes, the CSR inverted index with its bucket
-    /// masses, and the class-embedding table `table` ([n, d]) for exact
-    /// re-ranking at query time. Returns `None` for samplers without a
-    /// serializable index (everything outside the MIDX family today), and
-    /// for adaptive samplers before their first `rebuild`.
+    /// Capture the current core as a servable [`crate::serve::Snapshot`].
+    /// For the MIDX family: quantizer codebooks + codes, the CSR inverted
+    /// index with its bucket masses, and the class-embedding table `table`
+    /// ([n, d]) for exact re-ranking at query time. For the static samplers
+    /// (uniform, unigram): the proposal itself — the alias table verbatim —
+    /// so a served engine can keep them as cheap fallback proposals.
+    /// Returns `None` for samplers without serializable state (LSH, sphere,
+    /// RFF today), and for adaptive samplers before their first `rebuild`.
     fn snapshot(&self, table: &[f32], n: usize, d: usize) -> Option<crate::serve::Snapshot> {
         let _ = (table, n, d);
         None

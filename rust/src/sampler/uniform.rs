@@ -99,6 +99,11 @@ impl Sampler for UniformSampler {
     fn is_adaptive(&self) -> bool {
         false
     }
+
+    fn snapshot(&self, _table: &[f32], n: usize, d: usize) -> Option<crate::serve::Snapshot> {
+        assert_eq!(n, self.core.n, "snapshot n must match the core");
+        Some(crate::serve::Snapshot::capture_uniform(n, d))
+    }
 }
 
 #[cfg(test)]

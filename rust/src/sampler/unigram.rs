@@ -24,8 +24,16 @@ impl UnigramCore {
         let total: f64 = freq.iter().map(|&f| f as f64).sum();
         let floor = (total.max(1.0) * 1e-6 / freq.len() as f64) as f32;
         let weights: Vec<f32> = freq.iter().map(|&f| f.max(floor)).collect();
-        let table = AliasTable::new(&weights);
-        let log_p = (0..weights.len()).map(|i| table.log_prob_of(i)).collect();
+        UnigramCore::from_table(AliasTable::new(&weights))
+    }
+
+    /// Core over an already-built alias table (the serve layer's snapshot
+    /// load path). The cached log probabilities are a pure function of the
+    /// table's outcome probabilities, so a core reassembled from persisted
+    /// [`AliasTable::parts`] draws — and reports log q — bit-identically to
+    /// the captured one.
+    pub fn from_table(table: AliasTable) -> Self {
+        let log_p = (0..table.len()).map(|i| table.log_prob_of(i)).collect();
         UnigramCore { table, log_p, cost: CostEwma::new() }
     }
 }
@@ -107,6 +115,11 @@ impl Sampler for UnigramSampler {
 
     fn is_adaptive(&self) -> bool {
         false
+    }
+
+    fn snapshot(&self, _table: &[f32], n: usize, d: usize) -> Option<crate::serve::Snapshot> {
+        assert_eq!(n, self.core.table.len(), "snapshot n must match the core");
+        Some(crate::serve::Snapshot::capture_unigram(&self.core.table, d))
     }
 }
 

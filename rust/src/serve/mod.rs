@@ -14,16 +14,32 @@
 //! * [`server`] — a line-delimited JSON frontend (stdin or TCP, no new
 //!   dependencies) with per-request latency accounting and a p50/p95/p99 +
 //!   QPS report.
+//! * [`reactor`] (unix) — the production TCP frontend: one event-loop
+//!   thread multiplexing thousands of non-blocking connections over raw
+//!   `poll(2)`, with per-connection framing buffers, in-order replies, a
+//!   bounded admission queue with explicit `busy` backpressure, idle
+//!   timeouts, and graceful drain (DESIGN.md §7).
+//!
+//! Snapshots cover the static samplers too (uniform, unigram — the alias
+//! table persists verbatim), so a served engine can attach one as a cheap
+//! **fallback proposal** ([`query::QueryEngine::attach_fallback`]) and
+//! answer `{"op":"sample","fallback":true}` from it while the MIDX core
+//! is refreshing.
 //!
 //! CLI surface: `midx export` (train → snapshot, or `--synthetic` for an
-//! artifact-free snapshot), `midx serve` (snapshot → frontend), and
+//! artifact-free snapshot), `midx serve` (snapshot → frontend, with
+//! `--max-conns`/`--queue-cap`/`--fallback` on the reactor path), and
 //! `midx query` (snapshot → one-shot batched answers); `midx train
 //! --export PATH` makes every training run emit a servable artifact.
 
 pub mod query;
+#[cfg(unix)]
+pub mod reactor;
 pub mod server;
 pub mod snapshot;
 
 pub use query::{MicroBatcher, QueryEngine, Reply, Request};
+#[cfg(unix)]
+pub use reactor::{serve_reactor, Reactor, ReactorConfig, ReactorCounters, ReactorHandle};
 pub use server::{handle_line, serve_stdin, serve_tcp, LatencyRecorder};
-pub use snapshot::{Snapshot, SnapshotKind};
+pub use snapshot::{AliasParts, Snapshot, SnapshotKind};

@@ -29,6 +29,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
+use anyhow::{bail, Result};
+
 use crate::coordinator::WorkerPool;
 use crate::index::InvertedMultiIndex;
 use crate::quant::Quantizer;
@@ -101,6 +103,10 @@ pub struct QueryEngine {
     d: usize,
     pool: Option<WorkerPool>,
     beam_factor: usize,
+    /// optional cheap static proposal served alongside the primary (the
+    /// standby distribution a deployment can answer from while the MIDX
+    /// core is refreshing)
+    fallback: Option<(SnapshotKind, Box<dyn SamplerCore>)>,
 }
 
 impl QueryEngine {
@@ -108,8 +114,17 @@ impl QueryEngine {
     /// engine-lifetime worker pool (0 = available parallelism, 1 = no
     /// pool — everything runs inline on the calling thread). The snapshot
     /// is consumed: its vectors move into the engine, they are not
-    /// duplicated between the sampling and top-k paths.
-    pub fn new(snap: Snapshot, threads: usize) -> QueryEngine {
+    /// duplicated between the sampling and top-k paths. Static snapshots
+    /// (uniform, unigram) are rejected here — they carry no index to serve
+    /// top-k from; attach them via [`QueryEngine::attach_fallback`].
+    pub fn new(snap: Snapshot, threads: usize) -> Result<QueryEngine> {
+        if snap.kind.is_static() {
+            bail!(
+                "a '{}' snapshot is a static proposal with no index: it cannot serve as the \
+                 primary engine — attach it as a fallback next to a MIDX snapshot instead",
+                snap.kind.name()
+            );
+        }
         let quant = snap.build_quantizer();
         let index = snap.build_index();
         let (n, d, kind) = (snap.n, snap.d, snap.kind);
@@ -121,10 +136,51 @@ impl QueryEngine {
                 ServedCore::Exact(ExactMidxCore::from_parts(quant, index, snap.table, d)),
                 Vec::new(),
             ),
+            _ => unreachable!("static kinds rejected above"),
         };
         let threads = if threads == 0 { auto_threads() } else { threads };
         let pool = if threads > 1 { Some(WorkerPool::new(threads)) } else { None };
-        QueryEngine { kind, served, table, n, d, pool, beam_factor: DEFAULT_BEAM_FACTOR }
+        Ok(QueryEngine {
+            kind,
+            served,
+            table,
+            n,
+            d,
+            pool,
+            beam_factor: DEFAULT_BEAM_FACTOR,
+            fallback: None,
+        })
+    }
+
+    /// Attach a static snapshot (uniform, unigram) as the engine's cheap
+    /// fallback proposal: `sample` requests flagged `fallback` draw from it
+    /// instead of the MIDX core. Rejects non-static snapshots and class
+    /// count mismatches (a fallback must propose over the same classes).
+    pub fn attach_fallback(&mut self, snap: Snapshot) -> Result<()> {
+        if !snap.kind.is_static() {
+            bail!(
+                "fallback snapshots must be static (uniform or unigram), got '{}'",
+                snap.kind.name()
+            );
+        }
+        if snap.n != self.n {
+            bail!(
+                "fallback snapshot proposes over {} classes, the primary serves {}",
+                snap.n,
+                self.n
+            );
+        }
+        self.fallback = Some((snap.kind, snap.build_core()));
+        Ok(())
+    }
+
+    /// Which static proposal is on standby, if any.
+    pub fn fallback_kind(&self) -> Option<SnapshotKind> {
+        self.fallback.as_ref().map(|(k, _)| *k)
+    }
+
+    fn fallback_core(&self) -> Option<&dyn SamplerCore> {
+        self.fallback.as_ref().map(|(_, c)| c.as_ref())
     }
 
     /// The [N, D] table the exact re-rank scores against: the engine's own
@@ -308,6 +364,30 @@ impl QueryEngine {
     /// `Rng::stream(seed, i)`, so output is bit-identical to the in-memory
     /// sampler for any thread count. Returns row-major [B, m] (ids, log q).
     pub fn sample(&self, queries: &[f32], m: usize, seed: u64) -> (Vec<u32>, Vec<f32>) {
+        self.sample_on(self.served.core(), queries, m, seed)
+    }
+
+    /// Batched draws from the standby static proposal (same shape contract
+    /// as [`QueryEngine::sample`]). Errors if no fallback is attached.
+    pub fn sample_fallback(
+        &self,
+        queries: &[f32],
+        m: usize,
+        seed: u64,
+    ) -> Result<(Vec<u32>, Vec<f32>)> {
+        match self.fallback_core() {
+            Some(core) => Ok(self.sample_on(core, queries, m, seed)),
+            None => bail!("no fallback proposal attached to this engine"),
+        }
+    }
+
+    fn sample_on(
+        &self,
+        core: &dyn SamplerCore,
+        queries: &[f32],
+        m: usize,
+        seed: u64,
+    ) -> (Vec<u32>, Vec<f32>) {
         let d = self.d;
         assert_eq!(queries.len() % d, 0, "queries must be [B, D={d}]");
         let b = queries.len() / d;
@@ -316,7 +396,7 @@ impl QueryEngine {
         let mut log_q = vec![0.0f32; b * m];
         sample_batch_with(
             self.pool.as_ref(),
-            self.served.core(),
+            core,
             queries,
             d,
             &positives,
@@ -340,21 +420,27 @@ impl QueryEngine {
                 self.top_k_into(q, k, scratch, tk, &mut ids, &mut scores);
                 Reply { ids, scores }
             }
-            Request::Sample { q, m, seed } => {
+            Request::Sample { q, m, seed, fallback } => {
+                let core = if *fallback {
+                    match self.fallback_core() {
+                        Some(core) => core,
+                        // the serving frontends reject unrouted fallback
+                        // requests before enqueueing; a direct API caller
+                        // that skips that guard gets an empty reply — a
+                        // panic here would kill the shared dispatcher
+                        // thread and wedge every other caller
+                        None => return Reply { ids: Vec::new(), scores: Vec::new() },
+                    }
+                } else {
+                    self.served.core()
+                };
                 let mut ids = vec![0u32; *m];
                 let mut log_q = vec![0.0f32; *m];
                 if *m > 0 {
                     // identical to sample()/sample_batch with B = 1: the
                     // single row draws from Rng::stream(seed, 0)
                     let mut rng = Rng::stream(*seed, 0);
-                    self.served.core().sample_into(
-                        q,
-                        u32::MAX,
-                        &mut rng,
-                        scratch,
-                        &mut ids,
-                        &mut log_q,
-                    );
+                    core.sample_into(q, u32::MAX, &mut rng, scratch, &mut ids, &mut log_q);
                 }
                 Reply { ids, scores: log_q }
             }
@@ -430,6 +516,11 @@ pub enum Request {
         m: usize,
         /// RNG stream base — same seed, same draws, regardless of batching
         seed: u64,
+        /// draw from the engine's static fallback proposal instead of the
+        /// MIDX core (requires [`QueryEngine::attach_fallback`]; without
+        /// one attached the request degrades to an empty reply — the
+        /// serving frontends reject such requests before enqueueing)
+        fallback: bool,
     },
 }
 
@@ -443,9 +534,33 @@ pub struct Reply {
     pub scores: Vec<f32>,
 }
 
+/// How a queued request's reply gets back to its caller: a channel for
+/// blocking [`MicroBatcher::submit`] callers, a callback for the reactor's
+/// non-blocking [`MicroBatcher::try_submit_with`] path.
+enum Responder {
+    Channel(mpsc::Sender<Reply>),
+    Callback(Box<dyn FnOnce(Reply) + Send>),
+}
+
+impl Responder {
+    fn respond(self, reply: Reply) {
+        match self {
+            // a caller that gave up (dropped its receiver) is not an error
+            Responder::Channel(tx) => {
+                let _ = tx.send(reply);
+            }
+            Responder::Callback(f) => f(reply),
+        }
+    }
+}
+
 struct BatcherQueue {
-    pending: Vec<(Request, mpsc::Sender<Reply>)>,
+    pending: Vec<(Request, Responder)>,
     shutdown: bool,
+    /// while set, the dispatcher holds off draining (quiesce hook: lets
+    /// tests and operators build deterministic overload, and lets a
+    /// deployment park the queue during a planned core swap)
+    paused: bool,
 }
 
 struct BatcherShared {
@@ -456,6 +571,9 @@ struct BatcherShared {
     /// pool dispatches performed — `requests / dispatches` is the realized
     /// coalescing factor
     dispatches: AtomicU64,
+    /// requests refused by `try_submit_with` because the admission queue
+    /// was at capacity (the backpressure signal)
+    rejected: AtomicU64,
 }
 
 fn lock_queue(m: &Mutex<BatcherQueue>) -> MutexGuard<'_, BatcherQueue> {
@@ -471,19 +589,40 @@ fn lock_queue(m: &Mutex<BatcherQueue>) -> MutexGuard<'_, BatcherQueue> {
 pub struct MicroBatcher {
     engine: Arc<QueryEngine>,
     shared: Arc<BatcherShared>,
+    queue_cap: usize,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
 impl MicroBatcher {
     /// Spawn the dispatcher. `window` is how long the dispatcher waits for
     /// more requests to join a batch once one is pending (0 = dispatch
-    /// immediately); `max_batch` caps requests per dispatch.
+    /// immediately); `max_batch` caps requests per dispatch. The admission
+    /// queue is unbounded — serve frontends that need backpressure use
+    /// [`MicroBatcher::with_queue_cap`].
     pub fn new(engine: Arc<QueryEngine>, window: Duration, max_batch: usize) -> MicroBatcher {
+        MicroBatcher::with_queue_cap(engine, window, max_batch, usize::MAX)
+    }
+
+    /// Like [`MicroBatcher::new`], with a bounded admission queue:
+    /// [`MicroBatcher::try_submit_with`] refuses (returns `false`) whenever
+    /// `queue_cap` requests are already waiting — the reactor turns that
+    /// refusal into an explicit `busy` reply instead of queueing without
+    /// bound. `queue_cap = 0` admits nothing (useful to smoke the busy
+    /// path deterministically). Blocking [`MicroBatcher::submit`] callers
+    /// are exempt from the cap: they carry their own backpressure by
+    /// occupying their calling thread.
+    pub fn with_queue_cap(
+        engine: Arc<QueryEngine>,
+        window: Duration,
+        max_batch: usize,
+        queue_cap: usize,
+    ) -> MicroBatcher {
         let shared = Arc::new(BatcherShared {
-            q: Mutex::new(BatcherQueue { pending: Vec::new(), shutdown: false }),
+            q: Mutex::new(BatcherQueue { pending: Vec::new(), shutdown: false, paused: false }),
             cv: Condvar::new(),
             requests: AtomicU64::new(0),
             dispatches: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
         });
         let max_batch = max_batch.max(1);
         let handle = {
@@ -494,12 +633,18 @@ impl MicroBatcher {
                 .spawn(move || dispatcher_loop(&engine, &shared, window, max_batch))
                 .expect("spawn micro-batch dispatcher")
         };
-        MicroBatcher { engine, shared, handle: Some(handle) }
+        MicroBatcher { engine, shared, queue_cap, handle: Some(handle) }
     }
 
     /// The engine this batcher serves.
     pub fn engine(&self) -> &QueryEngine {
         &self.engine
+    }
+
+    /// The admission-queue bound `try_submit_with` enforces
+    /// (`usize::MAX` = unbounded).
+    pub fn queue_cap(&self) -> usize {
+        self.queue_cap
     }
 
     /// Submit one request and block until its reply is ready. Safe to call
@@ -509,11 +654,48 @@ impl MicroBatcher {
         let (tx, rx) = mpsc::channel();
         {
             let mut g = lock_queue(&self.shared.q);
-            g.pending.push((req, tx));
+            g.pending.push((req, Responder::Channel(tx)));
             self.shared.requests.fetch_add(1, Ordering::Relaxed);
             self.shared.cv.notify_all();
         }
         rx.recv().expect("dispatcher alive for the batcher's lifetime")
+    }
+
+    /// Non-blocking submission for event-loop callers: enqueue `req` and
+    /// return `true`, with `complete` invoked (on the dispatcher thread)
+    /// once the reply is ready — or return `false` without enqueueing
+    /// anything when the admission queue is at [`MicroBatcher::queue_cap`].
+    /// Exactly one of the two happens, so every admitted request completes
+    /// exactly once.
+    pub fn try_submit_with<F>(&self, req: Request, complete: F) -> bool
+    where
+        F: FnOnce(Reply) + Send + 'static,
+    {
+        let mut g = lock_queue(&self.shared.q);
+        if g.pending.len() >= self.queue_cap {
+            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        g.pending.push((req, Responder::Callback(Box::new(complete))));
+        self.shared.requests.fetch_add(1, Ordering::Relaxed);
+        self.shared.cv.notify_all();
+        true
+    }
+
+    /// Quiesce: the dispatcher stops draining the queue until
+    /// [`MicroBatcher::resume`]. Queued and newly submitted requests wait
+    /// (or, past the cap, get refused) — this is how tests build
+    /// deterministic overload and how an operator can park traffic during
+    /// a planned snapshot swap. Dropping the batcher drains regardless.
+    pub fn pause(&self) {
+        lock_queue(&self.shared.q).paused = true;
+    }
+
+    /// Undo [`MicroBatcher::pause`]: the dispatcher resumes draining.
+    pub fn resume(&self) {
+        let mut g = lock_queue(&self.shared.q);
+        g.paused = false;
+        self.shared.cv.notify_all();
     }
 
     /// (requests accepted, batch dispatches performed) so far — their ratio
@@ -523,6 +705,12 @@ impl MicroBatcher {
             self.shared.requests.load(Ordering::Relaxed),
             self.shared.dispatches.load(Ordering::Relaxed),
         )
+    }
+
+    /// Requests refused by [`MicroBatcher::try_submit_with`] because the
+    /// admission queue was full.
+    pub fn rejected(&self) -> u64 {
+        self.shared.rejected.load(Ordering::Relaxed)
     }
 }
 
@@ -549,11 +737,13 @@ fn dispatcher_loop(
         let batch = {
             let mut g = lock_queue(&shared.q);
             loop {
-                if !g.pending.is_empty() {
-                    break;
-                }
-                if g.shutdown {
+                if g.shutdown && g.pending.is_empty() {
                     return;
+                }
+                // paused: hold off draining — except at shutdown, which
+                // always drains whatever is queued before returning
+                if !g.pending.is_empty() && (!g.paused || g.shutdown) {
+                    break;
                 }
                 g = shared.cv.wait(g).unwrap_or_else(|e| e.into_inner());
             }
@@ -583,11 +773,10 @@ fn dispatcher_loop(
             continue;
         }
         shared.dispatches.fetch_add(1, Ordering::Relaxed);
-        let (reqs, txs): (Vec<Request>, Vec<mpsc::Sender<Reply>>) = batch.into_iter().unzip();
+        let (reqs, responders): (Vec<Request>, Vec<Responder>) = batch.into_iter().unzip();
         let replies = engine.run_requests(&reqs);
-        for (tx, reply) in txs.into_iter().zip(replies) {
-            // a caller that gave up (dropped its receiver) is not an error
-            let _ = tx.send(reply);
+        for (responder, reply) in responders.into_iter().zip(replies) {
+            responder.respond(reply);
         }
     }
 }
@@ -606,7 +795,7 @@ mod tests {
         let mut s = built_sampler(kind, n, d, seed);
         s.rebuild(&table, n, d, &mut rng);
         let snap = s.snapshot(&table, n, d).unwrap();
-        (QueryEngine::new(snap, threads), table, d)
+        (QueryEngine::new(snap, threads).unwrap(), table, d)
     }
 
     fn brute_force(table: &[f32], d: usize, z: &[f32], k: usize) -> Vec<(u32, f32)> {
@@ -678,7 +867,8 @@ mod tests {
                 if i % 2 == 0 {
                     (i, b.submit(Request::TopK { q, k: 4 }))
                 } else {
-                    (i, b.submit(Request::Sample { q, m: 6, seed: 1000 + i as u64 }))
+                    let seed = 1000 + i as u64;
+                    (i, b.submit(Request::Sample { q, m: 6, seed, fallback: false }))
                 }
             }));
         }
@@ -696,5 +886,87 @@ mod tests {
         let (reqs, disp) = batcher.stats();
         assert_eq!(reqs, 8);
         assert!(disp >= 1 && disp <= 8, "dispatches {disp}");
+    }
+
+    #[test]
+    fn static_snapshot_rejected_as_primary_but_serves_as_fallback() {
+        let (mut eng, _, d) = engine(SamplerKind::MidxRq, 1, 51);
+        let n = eng.n_classes();
+
+        let uni = Snapshot::capture_uniform(n, d);
+        let e = match QueryEngine::new(uni.clone(), 1) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("static primary must be rejected"),
+        };
+        assert!(e.contains("fallback"), "{e}");
+
+        // wrong class count refused
+        let e = eng.attach_fallback(Snapshot::capture_uniform(n + 1, d)).unwrap_err().to_string();
+        assert!(e.contains("classes"), "{e}");
+        assert!(eng.fallback_kind().is_none());
+        assert!(eng.sample_fallback(&vec![0.0; d], 4, 1).is_err());
+
+        eng.attach_fallback(uni).unwrap();
+        assert_eq!(eng.fallback_kind(), Some(SnapshotKind::Uniform));
+
+        // fallback draws == the static core drawn directly (bit-identical)
+        let mut rng = Rng::new(9);
+        let queries = rand_matrix(&mut rng, 5, d, 0.5);
+        let (ids, lq) = eng.sample_fallback(&queries, 6, 0xFA11).unwrap();
+        let core = crate::sampler::uniform::UniformCore::new(n);
+        let mut want_ids = vec![0u32; 5 * 6];
+        let mut want_lq = vec![0.0f32; 5 * 6];
+        crate::sampler::sample_batch(
+            &core,
+            &queries,
+            d,
+            &[u32::MAX; 5],
+            6,
+            0xFA11,
+            1,
+            &mut want_ids,
+            &mut want_lq,
+        );
+        assert_eq!(ids, want_ids);
+        assert_eq!(
+            lq.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want_lq.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+
+        // and through the request path (what the reactor enqueues)
+        let req = Request::Sample { q: queries[..d].to_vec(), m: 6, seed: 0xFA11, fallback: true };
+        let replies = eng.run_requests(std::slice::from_ref(&req));
+        assert_eq!(replies[0].ids, want_ids[..6]);
+    }
+
+    #[test]
+    fn paused_batcher_holds_requests_and_bounded_queue_refuses() {
+        let (eng, _, d) = engine(SamplerKind::MidxRq, 1, 61);
+        let eng = Arc::new(eng);
+        let batcher = MicroBatcher::with_queue_cap(Arc::clone(&eng), Duration::ZERO, 16, 2);
+        batcher.pause();
+
+        let q = vec![0.25f32; d];
+        let accepted = Arc::new(AtomicU64::new(0));
+        for i in 0..5u64 {
+            let a = Arc::clone(&accepted);
+            let ok = batcher.try_submit_with(
+                Request::Sample { q: q.clone(), m: 2, seed: i, fallback: false },
+                move |_reply| {
+                    a.fetch_add(1, Ordering::SeqCst);
+                },
+            );
+            // cap 2: exactly the first two are admitted
+            assert_eq!(ok, i < 2, "request {i}");
+        }
+        assert_eq!(batcher.rejected(), 3);
+        assert_eq!(accepted.load(Ordering::SeqCst), 0, "paused batcher must not dispatch");
+
+        batcher.resume();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while accepted.load(Ordering::SeqCst) < 2 && Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(accepted.load(Ordering::SeqCst), 2, "admitted requests complete exactly once");
     }
 }

@@ -132,10 +132,24 @@ impl LatencyRecorder {
     }
 }
 
-fn err_json(msg: &str) -> Json {
+pub(crate) fn err_json(msg: &str) -> Json {
     let mut m = std::collections::BTreeMap::new();
     m.insert("ok".to_string(), Json::Bool(false));
     m.insert("error".to_string(), Json::Str(msg.to_string()));
+    Json::Obj(m)
+}
+
+/// The backpressure reply: `{"ok":false,"busy":true,"error":…}`. Clients
+/// distinguish overload (retry later, the request was **not** executed)
+/// from protocol errors by the `busy` flag.
+pub(crate) fn busy_json() -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("ok".to_string(), Json::Bool(false));
+    m.insert("busy".to_string(), Json::Bool(true));
+    m.insert(
+        "error".to_string(),
+        Json::Str("server overloaded: admission queue full, retry later".to_string()),
+    );
     Json::Obj(m)
 }
 
@@ -160,63 +174,65 @@ fn parse_query(req: &Json, d: usize) -> Result<Vec<f32>, String> {
     Ok(v)
 }
 
-/// Handle one request line end to end: parse, dispatch through the
-/// batcher, render the reply (including the `us` latency field that also
-/// lands in `rec`). Never panics on malformed input — errors render as
-/// `{"ok":false,"error":…}`.
-pub fn handle_line(batcher: &MicroBatcher, rec: &LatencyRecorder, line: &str) -> String {
-    let out = match Json::parse(line.trim()) {
-        Err(e) => err_json(&format!("bad JSON: {e}")),
-        Ok(req) => handle_request(batcher, rec, &req),
-    };
-    out.to_string()
+/// A parsed request line, classified by how it must be answered. The
+/// blocking stdin/TCP frontends and the event-driven reactor share this
+/// parser, so the protocol (and every validation error) is identical on
+/// both paths.
+pub enum ParsedOp {
+    /// Answer immediately with this JSON (malformed input, validation
+    /// failures — never executed, never counted as a query).
+    Reply(Json),
+    /// `{"op":"info"}` — engine metadata, rendered by [`info_json`].
+    Info,
+    /// `{"op":"stats"}` — live latency/coalescing report.
+    Stats,
+    /// A query to execute through the batcher.
+    Query {
+        /// the request to enqueue
+        req: Request,
+        /// true for `sample` (the reply's score field is `log_q`, not
+        /// `scores`)
+        sample: bool,
+    },
 }
 
-fn handle_request(batcher: &MicroBatcher, rec: &LatencyRecorder, req: &Json) -> Json {
-    let engine = batcher.engine();
-    let op = match req.get("op").and_then(|o| o.as_str()) {
-        Some(op) => op,
-        None => return err_json("missing field 'op' (\"topk\" | \"sample\" | \"info\" | \"stats\")"),
+/// Parse + validate one request line against `engine`'s dimensions.
+/// Infallible in the sense that every malformed input becomes
+/// [`ParsedOp::Reply`] with a descriptive `{"ok":false}` body.
+pub fn parse_op(engine: &QueryEngine, line: &str) -> ParsedOp {
+    let req = match Json::parse(line.trim()) {
+        Err(e) => return ParsedOp::Reply(err_json(&format!("bad JSON: {e}"))),
+        Ok(req) => req,
     };
-    match op {
-        "info" => {
-            let mut m = ok_obj();
-            m.insert("kind".into(), Json::Str(engine.kind().name().to_string()));
-            m.insert("n".into(), Json::Num(engine.n_classes() as f64));
-            m.insert("d".into(), Json::Num(engine.dim() as f64));
-            m.insert("workers".into(), Json::Num(engine.workers() as f64));
-            Json::Obj(m)
+    let op = match req.get("op").and_then(|o| o.as_str()) {
+        Some(op) => op.to_string(),
+        None => {
+            return ParsedOp::Reply(err_json(
+                "missing field 'op' (\"topk\" | \"sample\" | \"info\" | \"stats\")",
+            ))
         }
-        "stats" => {
-            let mut m = ok_obj();
-            m.insert("report".into(), Json::Str(rec.report()));
-            let (reqs, disp) = batcher.stats();
-            m.insert("requests".into(), Json::Num(reqs as f64));
-            m.insert("dispatches".into(), Json::Num(disp as f64));
-            Json::Obj(m)
-        }
+    };
+    match op.as_str() {
+        "info" => ParsedOp::Info,
+        "stats" => ParsedOp::Stats,
         "topk" => {
-            let q = match parse_query(req, engine.dim()) {
+            let q = match parse_query(&req, engine.dim()) {
                 Ok(q) => q,
-                Err(e) => return err_json(&e),
+                Err(e) => return ParsedOp::Reply(err_json(&e)),
             };
             let k = req.get("k").and_then(|v| v.as_usize()).unwrap_or(10);
-            let t0 = Instant::now();
-            let reply = batcher.submit(Request::TopK { q, k });
-            let us = t0.elapsed().as_micros() as u64;
-            rec.record(us);
-            render_reply(&reply, "scores", us)
+            ParsedOp::Query { req: Request::TopK { q, k }, sample: false }
         }
         "sample" => {
-            let q = match parse_query(req, engine.dim()) {
+            let q = match parse_query(&req, engine.dim()) {
                 Ok(q) => q,
-                Err(e) => return err_json(&e),
+                Err(e) => return ParsedOp::Reply(err_json(&e)),
             };
             let m = req.get("m").and_then(|v| v.as_usize()).unwrap_or(16);
             if m > MAX_DRAWS_PER_REQUEST {
-                return err_json(&format!(
+                return ParsedOp::Reply(err_json(&format!(
                     "'m' = {m} exceeds the per-request cap of {MAX_DRAWS_PER_REQUEST} draws"
-                ));
+                )));
             }
             // seeds travel as JSON numbers (f64): only integers below 2^53
             // round-trip exactly. Anything else would silently draw from a
@@ -225,21 +241,70 @@ fn handle_request(batcher: &MicroBatcher, rec: &LatencyRecorder, req: &Json) -> 
             let seed_f = req.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0);
             let seed = seed_f as u64;
             if seed_f < 0.0 || seed_f.fract() != 0.0 || seed as f64 != seed_f {
-                return err_json(&format!(
+                return ParsedOp::Reply(err_json(&format!(
                     "'seed' = {seed_f} is not an exactly-representable integer in [0, 2^53)"
+                )));
+            }
+            let fallback = matches!(req.get("fallback"), Some(Json::Bool(true)));
+            if fallback && engine.fallback_kind().is_none() {
+                return ParsedOp::Reply(err_json(
+                    "no fallback proposal loaded (serve with --fallback SNAPSHOT)",
                 ));
             }
-            let t0 = Instant::now();
-            let reply = batcher.submit(Request::Sample { q, m, seed });
-            let us = t0.elapsed().as_micros() as u64;
-            rec.record(us);
-            render_reply(&reply, "log_q", us)
+            ParsedOp::Query { req: Request::Sample { q, m, seed, fallback }, sample: true }
         }
-        other => err_json(&format!("unknown op '{other}' (\"topk\" | \"sample\" | \"info\" | \"stats\")")),
+        other => ParsedOp::Reply(err_json(&format!(
+            "unknown op '{other}' (\"topk\" | \"sample\" | \"info\" | \"stats\")"
+        ))),
     }
 }
 
-fn render_reply(reply: &Reply, score_field: &str, us: u64) -> Json {
+/// The `{"op":"info"}` reply body for `engine`.
+pub fn info_json(engine: &QueryEngine) -> Json {
+    let mut m = ok_obj();
+    m.insert("kind".into(), Json::Str(engine.kind().name().to_string()));
+    m.insert("n".into(), Json::Num(engine.n_classes() as f64));
+    m.insert("d".into(), Json::Num(engine.dim() as f64));
+    m.insert("workers".into(), Json::Num(engine.workers() as f64));
+    match engine.fallback_kind() {
+        Some(kind) => m.insert("fallback".into(), Json::Str(kind.name().to_string())),
+        None => m.insert("fallback".into(), Json::Null),
+    };
+    Json::Obj(m)
+}
+
+/// The `{"op":"stats"}` reply body: latency report + coalescing counters.
+/// The reactor augments this with its own connection counters.
+pub fn stats_json(batcher: &MicroBatcher, rec: &LatencyRecorder) -> Json {
+    let mut m = ok_obj();
+    m.insert("report".into(), Json::Str(rec.report()));
+    let (reqs, disp) = batcher.stats();
+    m.insert("requests".into(), Json::Num(reqs as f64));
+    m.insert("dispatches".into(), Json::Num(disp as f64));
+    Json::Obj(m)
+}
+
+/// Handle one request line end to end: parse, dispatch through the
+/// batcher (blocking), render the reply (including the `us` latency field
+/// that also lands in `rec`). Never panics on malformed input — errors
+/// render as `{"ok":false,"error":…}`.
+pub fn handle_line(batcher: &MicroBatcher, rec: &LatencyRecorder, line: &str) -> String {
+    let out = match parse_op(batcher.engine(), line) {
+        ParsedOp::Reply(j) => j,
+        ParsedOp::Info => info_json(batcher.engine()),
+        ParsedOp::Stats => stats_json(batcher, rec),
+        ParsedOp::Query { req, sample } => {
+            let t0 = Instant::now();
+            let reply = batcher.submit(req);
+            let us = t0.elapsed().as_micros() as u64;
+            rec.record(us);
+            render_reply(&reply, if sample { "log_q" } else { "scores" }, us)
+        }
+    };
+    out.to_string()
+}
+
+pub(crate) fn render_reply(reply: &Reply, score_field: &str, us: u64) -> Json {
     let mut m = ok_obj();
     m.insert("ids".into(), from_u32s(&reply.ids));
     m.insert(score_field.into(), from_f32s(&reply.scores));
@@ -291,6 +356,11 @@ fn serve_conn(
 /// coalesces concurrent callers into single batched dispatches). Runs
 /// until the process is killed; per-request latency is queryable live via
 /// `{"op":"stats"}`.
+///
+/// This is the **legacy** frontend (and the non-unix fallback): it spends
+/// a thread per socket. Production serving goes through the event-driven
+/// [`crate::serve::reactor`], which multiplexes thousands of connections
+/// on one thread with bounded admission and explicit backpressure.
 pub fn serve_tcp(
     batcher: Arc<MicroBatcher>,
     rec: Arc<LatencyRecorder>,
@@ -328,7 +398,7 @@ mod tests {
         let mut s = built_sampler(SamplerKind::MidxRq, n, d, 77);
         s.rebuild(&table, n, d, &mut rng);
         let snap = s.snapshot(&table, n, d).unwrap();
-        let engine = Arc::new(QueryEngine::new(snap, 2));
+        let engine = Arc::new(QueryEngine::new(snap, 2).unwrap());
         (MicroBatcher::new(engine, Duration::ZERO, 16), d)
     }
 
@@ -375,6 +445,7 @@ mod tests {
             (r#""seed":-3"#, "not an exactly-representable"),
             (r#""seed":1.5"#, "not an exactly-representable"),
             (r#""seed":1e300"#, "not an exactly-representable"),
+            (r#""m":4,"fallback":true"#, "no fallback proposal"),
         ] {
             let line = format!(r#"{{"op":"sample","q":[{}],{extra}}}"#, q.join(","));
             let r = handle_line(&b, &rec, &line);

@@ -1,13 +1,18 @@
 //! Versioned binary snapshots of trained sampler cores.
 //!
 //! A snapshot persists everything a query-time process needs to serve a
-//! trained MIDX sampler: the quantizer codebooks and per-class codes, the
-//! CSR inverted multi-index (bucket masses are recomputed from it on load),
-//! the class-embedding table (for exact re-ranking), and a small JSON meta
-//! blob (sampler name, provenance). Loading reassembles the exact structs
-//! the trainer held — no k-means, no counting sort over fresh RNG — so a
-//! loaded core is **draw-for-draw bit-identical** to the in-memory one
-//! (pinned by `rust/tests/serve.rs`).
+//! trained sampler. For the MIDX family that is the quantizer codebooks and
+//! per-class codes, the CSR inverted multi-index (bucket masses are
+//! recomputed from it on load), the class-embedding table (for exact
+//! re-ranking), and a small JSON meta blob (sampler name, provenance). The
+//! **static** samplers (uniform, unigram) snapshot too — a unigram snapshot
+//! carries its alias table verbatim — so a served engine can keep a cheap
+//! static fallback proposal on standby while its MIDX core refreshes
+//! (Blanc & Rendle-style kernel samplers keep exactly such a distribution).
+//! Loading reassembles the exact structs the trainer held — no k-means, no
+//! counting sort over fresh RNG, no alias-table rebuild — so a loaded core
+//! is **draw-for-draw bit-identical** to the in-memory one (pinned by
+//! `rust/tests/serve.rs` for every snapshot kind).
 //!
 //! ## File layout (little-endian)
 //!
@@ -15,25 +20,32 @@
 //! offset  size  field
 //! 0       8     magic  "MIDXSNAP"
 //! 8       4     format version (this build reads 1)
-//! 12      1     sampler kind   (0 midx-pq, 1 midx-rq, 2 exact-midx)
-//! 13      1     quantizer family (0 product, 1 residual)
+//! 12      1     sampler kind   (0 midx-pq, 1 midx-rq, 2 exact-midx,
+//!                               3 uniform, 4 unigram)
+//! 13      1     quantizer family (0 product, 1 residual; must be 0 for
+//!                               the static kinds, which carry none)
 //! 14      2     reserved (0)
 //! 16      8     N  (classes)
 //! 24      8     D  (embedding dimension)
-//! 32      8     K  (codewords per codebook)
-//! 40      8     D1 (stage-1 codeword dimension; D for residual)
+//! 32      8     K  (codewords per codebook; 0 for static kinds)
+//! 40      8     D1 (stage-1 codeword dimension; D for residual; 0 for
+//!                   static kinds)
 //! 48      8     payload length in bytes
 //! 56      8     FNV-1a64 checksum of the payload
-//! 64      …     payload: c1 · c2 · assign1 · assign2 · offsets · members
-//!               · table · distortion (f64) · meta length (u32) · meta JSON
+//! 64      …     payload, by kind:
+//!               MIDX   : c1 · c2 · assign1 · assign2 · offsets · members
+//!                        · table · distortion (f64) · meta len (u32) · meta
+//!               uniform: meta len (u32) · meta JSON
+//!               unigram: prob[N] f32 · alias[N] u32 · p[N] f32
+//!                        · meta len (u32) · meta JSON
 //! ```
 //!
 //! Every section length is derivable from the header, so truncation,
 //! header corruption, and version skew are all rejected with a specific
 //! error before any structural parsing happens; the checksum catches
 //! payload corruption, and a final structural pass (codes in range, CSR a
-//! partition consistent with the codes) catches a well-formed file that
-//! lies about its contents.
+//! partition consistent with the codes; alias targets in range, p a
+//! distribution) catches a well-formed file that lies about its contents.
 
 use std::path::Path;
 
@@ -42,7 +54,9 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::index::InvertedMultiIndex;
 use crate::quant::{ProductQuantizer, QuantKind, Quantizer, ResidualQuantizer};
 use crate::sampler::midx::{ExactMidxCore, MidxCore};
-use crate::sampler::SamplerCore;
+use crate::sampler::uniform::UniformCore;
+use crate::sampler::unigram::UnigramCore;
+use crate::sampler::{AliasTable, SamplerCore};
 use crate::util::Json;
 
 /// File magic: the first 8 bytes of every snapshot.
@@ -63,6 +77,10 @@ pub enum SnapshotKind {
     MidxRq,
     /// Exact MIDX decomposition == true softmax (Theorem 1, O(N·D)/query).
     ExactMidx,
+    /// Static uniform proposal Q(i) = 1/N (fallback-capable).
+    Uniform,
+    /// Static unigram proposal over an alias table (fallback-capable).
+    Unigram,
 }
 
 impl SnapshotKind {
@@ -72,6 +90,8 @@ impl SnapshotKind {
             SnapshotKind::MidxPq => 0,
             SnapshotKind::MidxRq => 1,
             SnapshotKind::ExactMidx => 2,
+            SnapshotKind::Uniform => 3,
+            SnapshotKind::Unigram => 4,
         }
     }
 
@@ -80,6 +100,8 @@ impl SnapshotKind {
             0 => SnapshotKind::MidxPq,
             1 => SnapshotKind::MidxRq,
             2 => SnapshotKind::ExactMidx,
+            3 => SnapshotKind::Uniform,
+            4 => SnapshotKind::Unigram,
             _ => bail!("unknown sampler kind tag {t} (corrupted header?)"),
         })
     }
@@ -90,8 +112,30 @@ impl SnapshotKind {
             SnapshotKind::MidxPq => "midx-pq",
             SnapshotKind::MidxRq => "midx-rq",
             SnapshotKind::ExactMidx => "exact-midx",
+            SnapshotKind::Uniform => "uniform",
+            SnapshotKind::Unigram => "unigram",
         }
     }
+
+    /// True for the query-independent kinds (uniform, unigram), which carry
+    /// no quantizer / index / table sections and can serve as a cheap
+    /// fallback proposal next to a MIDX primary.
+    pub fn is_static(self) -> bool {
+        matches!(self, SnapshotKind::Uniform | SnapshotKind::Unigram)
+    }
+}
+
+/// The raw state of a persisted [`AliasTable`] (unigram snapshots): slot
+/// acceptance probabilities, slot alias targets, and the normalized
+/// per-outcome probabilities, exactly as the live table held them.
+#[derive(Clone, Debug)]
+pub struct AliasParts {
+    /// acceptance probability per slot, [N]
+    pub prob: Vec<f32>,
+    /// alternative outcome per slot, [N]
+    pub alias: Vec<u32>,
+    /// normalized probability per outcome, [N]
+    pub p: Vec<f32>,
 }
 
 /// FNV-1a 64-bit hash (payload checksum — fast, dependency-free, and
@@ -139,6 +183,8 @@ pub struct Snapshot {
     pub table: Vec<f32>,
     /// quantizer distortion at capture time (diagnostic)
     pub distortion: f64,
+    /// persisted alias table (`Some` iff `kind` is [`SnapshotKind::Unigram`])
+    pub alias: Option<AliasParts>,
     /// free-form JSON provenance (sampler name, source, …)
     pub meta: Json,
 }
@@ -170,8 +216,6 @@ impl Snapshot {
             QuantKind::Residual => d,
         };
         assert_eq!(c2.len(), k * dc2, "stage-2 codebook shape mismatch");
-        let mut meta = std::collections::BTreeMap::new();
-        meta.insert("sampler".to_string(), Json::Str(kind.name().to_string()));
         Snapshot {
             kind,
             family,
@@ -187,7 +231,63 @@ impl Snapshot {
             members: index.members.clone(),
             table: table.to_vec(),
             distortion: quant.distortion(),
-            meta: Json::Obj(meta),
+            alias: None,
+            meta: meta_for(kind),
+        }
+    }
+
+    /// Capture a static uniform snapshot over `n` classes (`d` records the
+    /// model dimension for serve-side query validation). Nothing beyond
+    /// `n` is needed: the loaded core is `UniformCore::new(n)`, whose draw
+    /// stream is a pure function of `(n, seed)`.
+    pub fn capture_uniform(n: usize, d: usize) -> Snapshot {
+        assert!(n > 0, "uniform snapshot needs n > 0");
+        Snapshot {
+            kind: SnapshotKind::Uniform,
+            family: QuantKind::Product, // placeholder — static kinds carry no quantizer
+            n,
+            d,
+            k: 0,
+            d1: 0,
+            c1: Vec::new(),
+            c2: Vec::new(),
+            assign1: Vec::new(),
+            assign2: Vec::new(),
+            offsets: Vec::new(),
+            members: Vec::new(),
+            table: Vec::new(),
+            distortion: 0.0,
+            alias: None,
+            meta: meta_for(SnapshotKind::Uniform),
+        }
+    }
+
+    /// Capture a static unigram snapshot: the live [`AliasTable`] is
+    /// persisted verbatim (slot probabilities, alias targets, outcome
+    /// probabilities), so the loaded core draws bit-identically.
+    pub fn capture_unigram(table: &AliasTable, d: usize) -> Snapshot {
+        let (prob, alias, p) = table.parts();
+        Snapshot {
+            kind: SnapshotKind::Unigram,
+            family: QuantKind::Product, // placeholder — static kinds carry no quantizer
+            n: table.len(),
+            d,
+            k: 0,
+            d1: 0,
+            c1: Vec::new(),
+            c2: Vec::new(),
+            assign1: Vec::new(),
+            assign2: Vec::new(),
+            offsets: Vec::new(),
+            members: Vec::new(),
+            table: Vec::new(),
+            distortion: 0.0,
+            alias: Some(AliasParts {
+                prob: prob.to_vec(),
+                alias: alias.to_vec(),
+                p: p.to_vec(),
+            }),
+            meta: meta_for(SnapshotKind::Unigram),
         }
     }
 
@@ -200,17 +300,28 @@ impl Snapshot {
     }
 
     /// Serialize to the versioned binary format (header + checksummed
-    /// payload; see the module docs for the layout).
+    /// payload; see the module docs for the kind-dependent layout).
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut payload = Vec::new();
-        put_f32s(&mut payload, &self.c1);
-        put_f32s(&mut payload, &self.c2);
-        put_u32s(&mut payload, &self.assign1);
-        put_u32s(&mut payload, &self.assign2);
-        put_u32s(&mut payload, &self.offsets);
-        put_u32s(&mut payload, &self.members);
-        put_f32s(&mut payload, &self.table);
-        payload.extend_from_slice(&self.distortion.to_le_bytes());
+        match self.kind {
+            SnapshotKind::Uniform => {}
+            SnapshotKind::Unigram => {
+                let a = self.alias.as_ref().expect("unigram snapshot carries an alias table");
+                put_f32s(&mut payload, &a.prob);
+                put_u32s(&mut payload, &a.alias);
+                put_f32s(&mut payload, &a.p);
+            }
+            _ => {
+                put_f32s(&mut payload, &self.c1);
+                put_f32s(&mut payload, &self.c2);
+                put_u32s(&mut payload, &self.assign1);
+                put_u32s(&mut payload, &self.assign2);
+                put_u32s(&mut payload, &self.offsets);
+                put_u32s(&mut payload, &self.members);
+                put_f32s(&mut payload, &self.table);
+                payload.extend_from_slice(&self.distortion.to_le_bytes());
+            }
+        }
         let meta = self.meta.to_string();
         payload.extend_from_slice(&(meta.len() as u32).to_le_bytes());
         payload.extend_from_slice(meta.as_bytes());
@@ -266,21 +377,37 @@ impl Snapshot {
         let d1 = header_u64(40) as usize;
         let payload_len = header_u64(48) as usize;
         let checksum = header_u64(56);
-        if n == 0 || d < 2 || k == 0 || d1 == 0 || d1 > d {
+        if kind.is_static() {
+            if n == 0 || d == 0 || k != 0 || d1 != 0 {
+                bail!(
+                    "implausible static-snapshot header dims n={n} d={d} k={k} d1={d1} \
+                     (corrupted header?)"
+                );
+            }
+            if bytes[13] != 0 {
+                bail!("static snapshot carries a quantizer family tag (corrupted header?)");
+            }
+        } else if n == 0 || d < 2 || k == 0 || d1 == 0 || d1 > d {
             bail!("implausible header dims n={n} d={d} k={k} d1={d1} (corrupted header?)");
         }
         let dc2 = match family {
-            QuantKind::Product => d - d1,
+            QuantKind::Product => d.saturating_sub(d1),
             QuantKind::Residual => d,
         };
         // fixed payload size up to the variable-length meta blob, computed
         // in u128 so a corrupted header cannot overflow (or allocate) here
-        let fixed: u128 = 4 * (k as u128) * (d1 as u128 + dc2 as u128)
-            + 4 * 3 * n as u128
-            + 4 * ((k as u128) * (k as u128) + 1)
-            + 4 * (n as u128) * (d as u128)
-            + 8
-            + 4;
+        let fixed: u128 = match kind {
+            SnapshotKind::Uniform => 4,
+            SnapshotKind::Unigram => 4 * 3 * n as u128 + 4,
+            _ => {
+                4 * (k as u128) * (d1 as u128 + dc2 as u128)
+                    + 4 * 3 * n as u128
+                    + 4 * ((k as u128) * (k as u128) + 1)
+                    + 4 * (n as u128) * (d as u128)
+                    + 8
+                    + 4
+            }
+        };
         if (payload_len as u128) < fixed {
             bail!(
                 "snapshot payload length {payload_len} is smaller than the {fixed} bytes its \
@@ -301,14 +428,30 @@ impl Snapshot {
         }
 
         let mut r = Reader { b: payload, i: 0 };
-        let c1 = r.f32s(k * d1, "stage-1 codebook")?;
-        let c2 = r.f32s(k * dc2, "stage-2 codebook")?;
-        let assign1 = r.u32s(n, "stage-1 codes")?;
-        let assign2 = r.u32s(n, "stage-2 codes")?;
-        let offsets = r.u32s(k * k + 1, "CSR offsets")?;
-        let members = r.u32s(n, "CSR members")?;
-        let table = r.f32s(n * d, "class table")?;
-        let distortion = f64::from_le_bytes(r.take(8, "distortion")?.try_into().unwrap());
+        let (mut c1, mut c2) = (Vec::new(), Vec::new());
+        let (mut assign1, mut assign2) = (Vec::new(), Vec::new());
+        let (mut offsets, mut members, mut table) = (Vec::new(), Vec::new(), Vec::new());
+        let mut distortion = 0.0f64;
+        let mut alias = None;
+        match kind {
+            SnapshotKind::Uniform => {}
+            SnapshotKind::Unigram => {
+                let prob = r.f32s(n, "alias slot probabilities")?;
+                let targets = r.u32s(n, "alias targets")?;
+                let p = r.f32s(n, "alias outcome probabilities")?;
+                alias = Some(AliasParts { prob, alias: targets, p });
+            }
+            _ => {
+                c1 = r.f32s(k * d1, "stage-1 codebook")?;
+                c2 = r.f32s(k * dc2, "stage-2 codebook")?;
+                assign1 = r.u32s(n, "stage-1 codes")?;
+                assign2 = r.u32s(n, "stage-2 codes")?;
+                offsets = r.u32s(k * k + 1, "CSR offsets")?;
+                members = r.u32s(n, "CSR members")?;
+                table = r.f32s(n * d, "class table")?;
+                distortion = f64::from_le_bytes(r.take(8, "distortion")?.try_into().unwrap());
+            }
+        }
         let meta_len = u32::from_le_bytes(r.take(4, "meta length")?.try_into().unwrap()) as usize;
         let meta_bytes = r.take(meta_len, "meta blob")?;
         let meta_str = std::str::from_utf8(meta_bytes).context("snapshot meta is not UTF-8")?;
@@ -333,6 +476,7 @@ impl Snapshot {
             members,
             table,
             distortion,
+            alias,
             meta,
         };
         snap.validate()?;
@@ -341,8 +485,43 @@ impl Snapshot {
 
     /// Structural validation: codes in range, CSR offsets monotone and a
     /// partition of the classes, and every bucket's members carrying
-    /// exactly that bucket's codeword pair.
+    /// exactly that bucket's codeword pair. For static kinds: the alias
+    /// table (if any) is structurally a distribution with in-range targets.
     pub fn validate(&self) -> Result<()> {
+        match self.kind {
+            SnapshotKind::Uniform => return Ok(()),
+            SnapshotKind::Unigram => {
+                let a = self
+                    .alias
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("unigram snapshot is missing its alias table"))?;
+                if a.prob.len() != self.n || a.alias.len() != self.n || a.p.len() != self.n {
+                    bail!(
+                        "alias table sections have lengths {}/{}/{}, header says N = {}",
+                        a.prob.len(),
+                        a.alias.len(),
+                        a.p.len(),
+                        self.n
+                    );
+                }
+                if let Some(&bad) = a.alias.iter().find(|&&t| t as usize >= self.n) {
+                    bail!("alias target {bad} out of range (N = {})", self.n);
+                }
+                for (what, xs) in [("slot probability", &a.prob), ("outcome probability", &a.p)] {
+                    if let Some(&bad) =
+                        xs.iter().find(|&&x| !x.is_finite() || !(0.0..=1.0 + 1e-4).contains(&x))
+                    {
+                        bail!("alias {what} {bad} outside [0, 1]");
+                    }
+                }
+                let sum: f64 = a.p.iter().map(|&x| x as f64).sum();
+                if (sum - 1.0).abs() > 1e-3 {
+                    bail!("alias outcome probabilities sum to {sum}, not 1");
+                }
+                return Ok(());
+            }
+            _ => {}
+        }
         let k = self.k as u32;
         for (stage, codes) in [(1, &self.assign1), (2, &self.assign2)] {
             if let Some(&bad) = codes.iter().find(|&&c| c >= k) {
@@ -371,8 +550,11 @@ impl Snapshot {
     }
 
     /// Reassemble the quantizer this snapshot captured (bit-identical
-    /// codebooks, codes and distortion; no k-means).
+    /// codebooks, codes and distortion; no k-means). Panics for static
+    /// kinds, which carry no quantizer — check [`SnapshotKind::is_static`]
+    /// first (the query engine rejects static primaries with a real error).
     pub fn build_quantizer(&self) -> Box<dyn Quantizer + Send + Sync> {
+        assert!(!self.kind.is_static(), "static snapshots carry no quantizer");
         match self.family {
             QuantKind::Product => Box::new(ProductQuantizer::from_parts(
                 self.k,
@@ -397,17 +579,30 @@ impl Snapshot {
     }
 
     /// Reassemble the CSR inverted multi-index (bucket masses recomputed
-    /// from the offsets). Panics only on a snapshot that skipped
-    /// [`Snapshot::validate`] — `from_bytes` always validates.
+    /// from the offsets). Panics on static kinds (no index) and on a
+    /// snapshot that skipped [`Snapshot::validate`] — `from_bytes` always
+    /// validates.
     pub fn build_index(&self) -> InvertedMultiIndex {
+        assert!(!self.kind.is_static(), "static snapshots carry no inverted index");
         InvertedMultiIndex::from_csr(self.k, self.offsets.clone(), self.members.clone())
             .expect("validated snapshot CSR")
     }
 
     /// Reassemble a servable sampler core. The loaded core is draw-for-draw
-    /// bit-identical to the one [`Snapshot::capture`] saw: same codebooks,
-    /// same codes, same CSR layout, same bucket masses.
+    /// bit-identical to the one the capture saw: same codebooks, same
+    /// codes, same CSR layout, same bucket masses — or, for static kinds,
+    /// the same `n` / the same alias table verbatim.
     pub fn build_core(&self) -> Box<dyn SamplerCore> {
+        match self.kind {
+            SnapshotKind::Uniform => return Box::new(UniformCore::new(self.n)),
+            SnapshotKind::Unigram => {
+                let a = self.alias.as_ref().expect("validated unigram snapshot");
+                let table =
+                    AliasTable::from_parts(a.prob.clone(), a.alias.clone(), a.p.clone());
+                return Box::new(UnigramCore::from_table(table));
+            }
+            _ => {}
+        }
         let quant = self.build_quantizer();
         let index = self.build_index();
         match self.kind {
@@ -417,6 +612,7 @@ impl Snapshot {
             SnapshotKind::ExactMidx => {
                 Box::new(ExactMidxCore::from_parts(quant, index, self.table.clone(), self.d))
             }
+            _ => unreachable!("static kinds returned above"),
         }
     }
 
@@ -438,11 +634,30 @@ impl Snapshot {
     /// Serialized size in bytes (header + payload).
     pub fn size_bytes(&self) -> usize {
         // meta is re-rendered, matching to_bytes exactly
-        let floats = self.c1.len() + self.c2.len() + self.table.len();
-        let ints =
-            self.assign1.len() + self.assign2.len() + self.offsets.len() + self.members.len();
-        HEADER_LEN + 4 * (floats + ints) + 8 + 4 + self.meta.to_string().len()
+        let body = match self.kind {
+            SnapshotKind::Uniform => 0,
+            SnapshotKind::Unigram => {
+                let a = self.alias.as_ref().expect("unigram snapshot carries an alias table");
+                4 * (a.prob.len() + a.alias.len() + a.p.len())
+            }
+            _ => {
+                let floats = self.c1.len() + self.c2.len() + self.table.len();
+                let ints = self.assign1.len()
+                    + self.assign2.len()
+                    + self.offsets.len()
+                    + self.members.len();
+                4 * (floats + ints) + 8
+            }
+        };
+        HEADER_LEN + body + 4 + self.meta.to_string().len()
     }
+}
+
+/// Default provenance blob: `{"sampler": "<name>"}`.
+fn meta_for(kind: SnapshotKind) -> Json {
+    let mut meta = std::collections::BTreeMap::new();
+    meta.insert("sampler".to_string(), Json::Str(kind.name().to_string()));
+    Json::Obj(meta)
 }
 
 fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
@@ -570,6 +785,49 @@ mod tests {
         let bytes = snap.to_bytes();
         let e = Snapshot::from_bytes(&bytes).unwrap_err().to_string();
         assert!(e.contains("disagree"), "{e}");
+    }
+
+    #[test]
+    fn static_snapshots_round_trip_every_field() {
+        let mut rng = Rng::new(21);
+        let freq: Vec<f32> = (0..33).map(|_| rng.next_f32() * 5.0 + 0.01).collect();
+        let alias = AliasTable::new(&freq);
+        for snap in [Snapshot::capture_uniform(33, 8), Snapshot::capture_unigram(&alias, 8)] {
+            let bytes = snap.to_bytes();
+            assert_eq!(bytes.len(), snap.size_bytes(), "size_bytes disagrees with to_bytes");
+            let back = Snapshot::from_bytes(&bytes).expect("static roundtrip parse");
+            assert_eq!(back.kind, snap.kind);
+            assert_eq!((back.n, back.d, back.k, back.d1), (snap.n, snap.d, 0, 0));
+            assert_eq!(back.meta, snap.meta);
+            match (&snap.alias, &back.alias) {
+                (None, None) => {}
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.prob, b.prob);
+                    assert_eq!(a.alias, b.alias);
+                    assert_eq!(a.p, b.p);
+                }
+                _ => panic!("alias presence changed across the roundtrip"),
+            }
+            let core = back.build_core();
+            assert_eq!(core.n_classes(), snap.n);
+            assert_eq!(core.name(), snap.kind.name());
+            assert!(!core.is_adaptive());
+        }
+    }
+
+    #[test]
+    fn corrupted_alias_sections_are_rejected() {
+        let alias = AliasTable::new(&[1.0, 2.0, 3.0, 4.0]);
+        let mut snap = Snapshot::capture_unigram(&alias, 4);
+        // out-of-range alias target: structure check must catch the file lying
+        snap.alias.as_mut().unwrap().alias[1] = 99;
+        let e = Snapshot::from_bytes(&snap.to_bytes()).unwrap_err().to_string();
+        assert!(e.contains("out of range"), "{e}");
+
+        let mut snap = Snapshot::capture_unigram(&alias, 4);
+        snap.alias.as_mut().unwrap().p[0] = 0.9; // breaks the sum-to-1 invariant
+        let e = Snapshot::from_bytes(&snap.to_bytes()).unwrap_err().to_string();
+        assert!(e.contains("sum to"), "{e}");
     }
 
     #[test]

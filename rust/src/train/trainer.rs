@@ -565,7 +565,7 @@ impl Trainer {
     /// Export the current sampler core + class embeddings as a servable
     /// snapshot (`TrainConfig::export`, CLI `--export`). Errors for the
     /// Full baseline and for samplers without a serializable core
-    /// (everything outside the MIDX family).
+    /// (everything outside the MIDX family and the static samplers).
     pub fn export_snapshot(&self, path: &str) -> Result<()> {
         let dims = &self.manifest.dims;
         let sampler = self.sampler.as_ref().ok_or_else(|| {
@@ -575,8 +575,8 @@ impl Trainer {
             .snapshot(self.params.q_table(), dims.n_classes, dims.d)
             .ok_or_else(|| {
                 anyhow!(
-                    "sampler '{}' has no servable snapshot (only the MIDX family exports: \
-                     midx-pq, midx-rq, exact-midx)",
+                    "sampler '{}' has no servable snapshot (exportable: midx-pq, midx-rq, \
+                     exact-midx, uniform, unigram)",
                     sampler.name()
                 )
             })?;

@@ -127,7 +127,7 @@ fn top_k_with_full_beam_matches_brute_force_exactly() {
         // exact-midx snapshots carry the core's own table; score against
         // the table the engine will actually use
         let served = snap.table.clone();
-        let mut engine = QueryEngine::new(snap, 2);
+        let mut engine = QueryEngine::new(snap, 2).unwrap();
         engine.set_beam_factor(usize::MAX);
 
         let mut rng = Rng::new(31);
@@ -170,7 +170,7 @@ fn default_beam_recall_is_high_on_clustered_data() {
     let mut s = build(SamplerKind::MidxRq, n, &params);
     s.rebuild(&table, n, d, &mut rng);
     let snap = s.snapshot(&table, n, d).unwrap();
-    let engine = QueryEngine::new(snap, 1);
+    let engine = QueryEngine::new(snap, 1).unwrap();
 
     let mut hits = 0usize;
     let mut total = 0usize;
@@ -193,7 +193,7 @@ fn engine_sample_is_bit_identical_to_source_unconditioned_draws() {
     let (n, d, b, m) = (60usize, 8usize, 9usize, 5usize);
     let (s, table) = trained(SamplerKind::MidxPq, n, d, 77);
     let snap = s.snapshot(&table, n, d).unwrap();
-    let engine = QueryEngine::new(snap, 3);
+    let engine = QueryEngine::new(snap, 3).unwrap();
 
     let mut rng = Rng::new(13);
     let queries = rand_matrix(&mut rng, b, d, 0.5);
@@ -216,7 +216,7 @@ fn micro_batched_requests_are_independent_of_coalescing() {
     // alone (window 0, sequential submits) or coalesced with 15 others
     let (s, table) = trained(SamplerKind::MidxRq, 60, 8, 21);
     let snap = s.snapshot(&table, 60, 8).unwrap();
-    let engine = Arc::new(QueryEngine::new(snap, 4));
+    let engine = Arc::new(QueryEngine::new(snap, 4).unwrap());
 
     let mut rng = Rng::new(3);
     let queries: Vec<Vec<f32>> = (0..16).map(|_| rand_matrix(&mut rng, 1, 8, 0.5)).collect();
@@ -224,7 +224,7 @@ fn micro_batched_requests_are_independent_of_coalescing() {
         if i % 2 == 0 {
             Request::TopK { q: queries[i].clone(), k: 5 }
         } else {
-            Request::Sample { q: queries[i].clone(), m: 4, seed: i as u64 }
+            Request::Sample { q: queries[i].clone(), m: 4, seed: i as u64, fallback: false }
         }
     };
 
@@ -248,4 +248,95 @@ fn micro_batched_requests_are_independent_of_coalescing() {
     }
     let (reqs, _) = batcher.stats();
     assert_eq!(reqs, 16);
+}
+
+// --------------------------------------------------------------------------
+// Static-sampler snapshots (uniform, unigram / alias): round-trip pinned
+// like the MIDX family — a loaded core must be draw-for-draw bit-identical
+// to the source, through bytes and through disk, at T ∈ {1, 8}.
+
+#[test]
+fn static_sampler_snapshots_are_draw_for_draw_bit_identical() {
+    let (n, d, b, m, seed) = (90usize, 8usize, 13usize, 7usize, 0xB00Fu64);
+    for &kind in &[SamplerKind::Uniform, SamplerKind::Unigram] {
+        let mut rng = Rng::new(700 + kind as u64);
+        let table = rand_matrix(&mut rng, n, d, 0.5);
+        let mut s = build(kind, n, &small_params(n));
+        s.rebuild(&table, n, d, &mut rng);
+        let snap = s.snapshot(&table, n, d).expect("static samplers snapshot");
+        assert_eq!(snap.kind.name(), s.name());
+
+        let from_mem = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+        let path = temp_path(snap.kind.name());
+        snap.write(&path).unwrap();
+        let from_disk = Snapshot::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        let queries = rand_matrix(&mut Rng::new(4), b, d, 0.5);
+        let positives: Vec<u32> = (0..b).map(|i| (i % n) as u32).collect();
+        let sample = |core: &dyn midx::sampler::SamplerCore, threads: usize| {
+            let mut ids = vec![0u32; b * m];
+            let mut lq = vec![0.0f32; b * m];
+            sample_batch(core, &queries, d, &positives, m, seed, threads, &mut ids, &mut lq);
+            let bits: Vec<u32> = lq.iter().map(|x| x.to_bits()).collect();
+            (ids, bits)
+        };
+
+        let src = s.core();
+        for threads in [1usize, 8] {
+            let want = sample(src, threads);
+            for (label, loaded) in [("bytes", &from_mem), ("disk", &from_disk)] {
+                let core = loaded.build_core();
+                let got = sample(core.as_ref(), threads);
+                assert_eq!(
+                    got, want,
+                    "{} via {label} at T={threads}: loaded static draws diverge",
+                    snap.kind.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fallback_snapshot_served_draws_match_the_static_core() {
+    // a MIDX primary with a unigram fallback: fallback-flagged sample
+    // requests must reproduce the static core's draws exactly, and must
+    // not perturb the primary's
+    let (n, d, m) = (60usize, 8usize, 6usize);
+    let (s, table) = trained(SamplerKind::MidxRq, n, d, 33);
+    let snap = s.snapshot(&table, n, d).unwrap();
+    let mut engine = QueryEngine::new(snap, 2).unwrap();
+
+    let mut static_s = build(SamplerKind::Unigram, n, &small_params(n));
+    let mut rng = Rng::new(5);
+    static_s.rebuild(&table, n, d, &mut rng);
+    let fb_snap = static_s.snapshot(&table, n, d).unwrap();
+    engine.attach_fallback(Snapshot::from_bytes(&fb_snap.to_bytes()).unwrap()).unwrap();
+
+    let queries = rand_matrix(&mut Rng::new(6), 9, d, 0.5);
+    let (fb_ids, fb_lq) = engine.sample_fallback(&queries, m, 0xFEED).unwrap();
+
+    let positives = vec![u32::MAX; 9];
+    let mut want_ids = vec![0u32; 9 * m];
+    let mut want_lq = vec![0.0f32; 9 * m];
+    sample_batch(
+        static_s.core(), &queries, d, &positives, m, 0xFEED, 1, &mut want_ids, &mut want_lq,
+    );
+    assert_eq!(fb_ids, want_ids, "fallback draws diverge from the static core");
+    assert_eq!(
+        fb_lq.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        want_lq.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+    );
+
+    // primary unaffected: same answers as an engine without a fallback
+    let (s2, table2) = trained(SamplerKind::MidxRq, n, d, 33);
+    let plain = QueryEngine::new(s2.snapshot(&table2, n, d).unwrap(), 2).unwrap();
+    let (a_ids, a_lq) = engine.sample(&queries, m, 0xFEED);
+    let (b_ids, b_lq) = plain.sample(&queries, m, 0xFEED);
+    assert_eq!(a_ids, b_ids);
+    assert_eq!(
+        a_lq.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        b_lq.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+    );
 }

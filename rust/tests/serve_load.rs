@@ -1,0 +1,498 @@
+//! Deterministic load/soak harness for the event-driven serving frontend
+//! (`serve::reactor`).
+//!
+//! What it proves (ISSUE 5 acceptance):
+//!
+//! * **Exactly-once, in-order, bit-identical**: N client threads × M
+//!   pipelined requests over multiplexed connections each get exactly one
+//!   reply, in request order, byte-identical (modulo the `us` latency
+//!   field) to the same line answered by the blocking single-connection
+//!   baseline (`serve::server::handle_line`).
+//! * **Deterministic backpressure**: with the batcher paused and the
+//!   admission queue capped at C, a pipeline of C+X requests yields
+//!   exactly C real replies and exactly X `busy` replies — the busy path
+//!   fires iff the cap is exceeded, never sooner, never later.
+//! * **Statistics survive the reactor**: draws from the served `sample`
+//!   op collected over multiplexed connections pass a Pearson χ²
+//!   goodness-of-fit test against the core's own proposal distribution —
+//!   coalescing + the event loop do not perturb sampling.
+//! * **Hostile input is contained**: oversized lines, frames split across
+//!   arbitrary writes, interleaved garbage, and abrupt mid-request
+//!   disconnects never panic the server or stall other connections.
+//! * **Graceful drain**: shutdown answers everything in flight, flushes,
+//!   then closes; idle connections are reaped on their timeout.
+//!
+//! The reactor is unix-only (raw `poll(2)`), so this whole suite is too.
+#![cfg(unix)]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use midx::sampler::fixtures::built_sampler;
+use midx::sampler::{SamplerKind, Scratch};
+use midx::serve::{
+    handle_line, LatencyRecorder, MicroBatcher, QueryEngine, Reactor, ReactorConfig,
+    ReactorHandle,
+};
+use midx::stats::divergence::{chi_square_critical, chi_square_gof};
+use midx::util::{Json, Rng};
+
+// -- scaffolding -----------------------------------------------------------
+
+/// Build a served engine over a fresh synthetic midx-rq snapshot.
+fn engine(n: usize, d: usize, seed: u64, threads: usize) -> Arc<QueryEngine> {
+    let mut rng = Rng::new(seed);
+    let table = midx::util::check::rand_matrix(&mut rng, n, d, 0.5);
+    let s = built_sampler(SamplerKind::MidxRq, n, d, seed);
+    let snap = s.snapshot(&table, n, d).expect("midx-rq snapshots");
+    Arc::new(QueryEngine::new(snap, threads).unwrap())
+}
+
+struct Served {
+    addr: SocketAddr,
+    handle: ReactorHandle,
+    thread: JoinHandle<anyhow::Result<()>>,
+    batcher: Arc<MicroBatcher>,
+    rec: Arc<LatencyRecorder>,
+}
+
+impl Served {
+    /// Graceful drain; panics if the reactor errored.
+    fn stop(self) {
+        self.handle.shutdown();
+        self.thread.join().expect("reactor thread").expect("reactor run");
+    }
+}
+
+/// Spin a reactor over `batcher` on an ephemeral port.
+fn serve(batcher: Arc<MicroBatcher>, cfg: ReactorConfig) -> Served {
+    let rec = Arc::new(LatencyRecorder::new());
+    let reactor =
+        Reactor::bind("127.0.0.1:0", Arc::clone(&batcher), Arc::clone(&rec), cfg).unwrap();
+    let addr = reactor.local_addr().unwrap();
+    let handle = reactor.handle();
+    let thread = std::thread::spawn(move || reactor.run());
+    Served { addr, handle, thread, batcher, rec }
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).expect("connect to reactor");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.set_nodelay(true).ok();
+    s
+}
+
+/// Read exactly `count` reply lines (panics on EOF or timeout — a stalled
+/// or dropped reply is exactly what this harness exists to catch).
+fn read_replies(reader: &mut BufReader<TcpStream>, count: usize, who: &str) -> Vec<String> {
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).unwrap_or_else(|e| {
+            panic!("{who}: read of reply {i}/{count} failed: {e}");
+        });
+        assert!(n > 0, "{who}: connection closed after {i}/{count} replies");
+        out.push(line.trim_end().to_string());
+    }
+    out
+}
+
+/// Drop the non-deterministic `us` latency field before byte comparison.
+fn strip_us(s: &str) -> String {
+    s.split(",\"us\":").next().unwrap().to_string()
+}
+
+/// Deterministic query-vector JSON for (client, request) — both the load
+/// clients and the baseline render the exact same text.
+fn q_json(client: usize, req: usize, d: usize) -> String {
+    let vals: Vec<String> =
+        (0..d).map(|j| format!("{}", ((client * 31 + req * 7 + j) % 97) as f64 / 97.0)).collect();
+    format!("[{}]", vals.join(","))
+}
+
+/// The request line client `c` sends as its `j`-th request (alternating
+/// topk / sample, unique seeds per request).
+fn request_line(c: usize, j: usize, d: usize) -> String {
+    let q = q_json(c, j, d);
+    if (c + j) % 2 == 0 {
+        format!(r#"{{"op":"topk","q":{q},"k":5}}"#)
+    } else {
+        format!(r#"{{"op":"sample","q":{q},"m":6,"seed":{}}}"#, 10_000 + c * 100 + j)
+    }
+}
+
+// -- the load harness ------------------------------------------------------
+
+#[test]
+fn sixty_four_multiplexed_connections_answer_exactly_once_and_identically() {
+    const CLIENTS: usize = 64;
+    const REQS: usize = 20;
+    let (n, d) = (60usize, 8usize);
+    let eng = engine(n, d, 0x10AD, 2);
+    let batcher = Arc::new(MicroBatcher::with_queue_cap(
+        Arc::clone(&eng),
+        Duration::from_micros(200),
+        64,
+        4096,
+    ));
+    let served = serve(
+        Arc::clone(&batcher),
+        ReactorConfig {
+            max_conns: CLIENTS + 8,
+            idle_timeout: Duration::ZERO,
+            ..Default::default()
+        },
+    );
+
+    // single-connection baseline through the blocking frontend, on its own
+    // batcher over the very same engine
+    let solo = MicroBatcher::new(Arc::clone(&eng), Duration::ZERO, 1);
+    let solo_rec = LatencyRecorder::new();
+    let mut baseline: Vec<Vec<String>> = Vec::with_capacity(CLIENTS);
+    for c in 0..CLIENTS {
+        baseline.push(
+            (0..REQS)
+                .map(|j| strip_us(&handle_line(&solo, &solo_rec, &request_line(c, j, d))))
+                .collect(),
+        );
+    }
+
+    let addr = served.addr;
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut stream = connect(addr);
+                // pipeline all M requests in one burst
+                let burst: String =
+                    (0..REQS).map(|j| request_line(c, j, d) + "\n").collect();
+                stream.write_all(burst.as_bytes()).unwrap();
+                stream.flush().unwrap();
+                let mut reader = BufReader::new(stream);
+                read_replies(&mut reader, REQS, &format!("client {c}"))
+            })
+        })
+        .collect();
+
+    for (c, h) in clients.into_iter().enumerate() {
+        let replies = h.join().expect("client thread");
+        assert_eq!(replies.len(), REQS, "client {c}: exactly one reply per request");
+        for (j, reply) in replies.iter().enumerate() {
+            assert!(reply.contains(r#""ok":true"#), "client {c} req {j}: {reply}");
+            assert_eq!(
+                strip_us(reply),
+                baseline[c][j],
+                "client {c} req {j}: multiplexed reply diverges from the single-connection \
+                 baseline"
+            );
+        }
+    }
+
+    // exactly-once at the server, too: every request admitted and recorded
+    // exactly once, nothing refused at this cap
+    let (accepted, dispatches) = served.batcher.stats();
+    assert_eq!(accepted, (CLIENTS * REQS) as u64, "admitted request count");
+    assert!(dispatches >= 1 && dispatches <= accepted, "dispatches {dispatches}");
+    assert_eq!(served.batcher.rejected(), 0);
+    assert_eq!(served.rec.count(), CLIENTS * REQS, "latency ledger count");
+    let counters = served.handle.counters();
+    assert_eq!(counters.accepted, CLIENTS as u64);
+    assert_eq!(counters.busy, 0);
+    served.stop();
+}
+
+#[test]
+fn busy_fires_exactly_when_the_admission_queue_cap_is_exceeded() {
+    const CAP: usize = 8;
+    const TOTAL: usize = 20;
+    let (n, d) = (50usize, 6usize);
+    let eng = engine(n, d, 0xB551, 1);
+    let batcher =
+        Arc::new(MicroBatcher::with_queue_cap(Arc::clone(&eng), Duration::ZERO, 64, CAP));
+    let served = serve(
+        Arc::clone(&batcher),
+        ReactorConfig { idle_timeout: Duration::ZERO, ..Default::default() },
+    );
+
+    // freeze the dispatcher: admissions queue up deterministically
+    batcher.pause();
+    let mut stream = connect(served.addr);
+    let burst: String = (0..TOTAL)
+        .map(|j| format!(r#"{{"op":"sample","q":{},"m":3,"seed":{j}}}"#, q_json(0, j, d)) + "\n")
+        .collect();
+    stream.write_all(burst.as_bytes()).unwrap();
+    stream.flush().unwrap();
+
+    // wait until the reactor has classified every request (busy counter is
+    // the last thing it bumps), then unfreeze
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while served.handle.counters().busy < (TOTAL - CAP) as u64 {
+        assert!(Instant::now() < deadline, "reactor never refused the overflow");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    batcher.resume();
+
+    let mut reader = BufReader::new(stream);
+    let replies = read_replies(&mut reader, TOTAL, "busy client");
+    for (j, reply) in replies.iter().enumerate() {
+        if j < CAP {
+            assert!(
+                reply.contains(r#""ok":true"#),
+                "request {j} was under the cap and must be served: {reply}"
+            );
+        } else {
+            assert!(
+                reply.contains(r#""busy":true"#),
+                "request {j} exceeded the cap and must be refused: {reply}"
+            );
+        }
+    }
+    assert_eq!(served.batcher.rejected(), (TOTAL - CAP) as u64);
+    assert_eq!(served.handle.counters().busy, (TOTAL - CAP) as u64);
+
+    // the cap is about queue depth, not history: once drained, the same
+    // connection serves again with zero additional busy replies
+    let mut stream2 = reader.into_inner();
+    let retry: String = (0..CAP).map(|j| request_line(1, j, d) + "\n").collect();
+    stream2.write_all(retry.as_bytes()).unwrap();
+    let mut reader2 = BufReader::new(stream2);
+    for reply in read_replies(&mut reader2, CAP, "retry client") {
+        assert!(reply.contains(r#""ok":true"#), "{reply}");
+    }
+    assert_eq!(served.handle.counters().busy, (TOTAL - CAP) as u64, "no new busy replies");
+    served.stop();
+}
+
+#[test]
+fn served_sample_statistics_survive_multiplexing() {
+    const CLIENTS: usize = 4;
+    const REQS: usize = 30;
+    const M: usize = 500; // 4 × 30 × 500 = 60k draws
+    let (n, d) = (48usize, 8usize);
+    let eng = engine(n, d, 0xC417, 2);
+
+    // one fixed query; its JSON text round-trips to the exact f32s below
+    let z: Vec<f32> = {
+        let mut rng = Rng::new(0x21);
+        midx::util::check::rand_matrix(&mut rng, 1, d, 0.5)
+    };
+    let z_json =
+        format!("[{}]", z.iter().map(|x| format!("{x}")).collect::<Vec<_>>().join(","));
+
+    // the core's own claim about Q(·|z)
+    let mut q = vec![0.0f32; n];
+    eng.core().proposal_dist(&z, &mut Scratch::new(), &mut q);
+
+    let batcher = Arc::new(MicroBatcher::with_queue_cap(
+        Arc::clone(&eng),
+        Duration::from_micros(200),
+        64,
+        4096,
+    ));
+    let served = serve(
+        Arc::clone(&batcher),
+        ReactorConfig { idle_timeout: Duration::ZERO, ..Default::default() },
+    );
+
+    let addr = served.addr;
+    let workers: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let z_json = z_json.clone();
+            std::thread::spawn(move || {
+                let mut stream = connect(addr);
+                let burst: String = (0..REQS)
+                    .map(|j| {
+                        format!(
+                            r#"{{"op":"sample","q":{z_json},"m":{M},"seed":{}}}"#,
+                            77_000 + c * 1000 + j
+                        ) + "\n"
+                    })
+                    .collect();
+                stream.write_all(burst.as_bytes()).unwrap();
+                let mut reader = BufReader::new(stream);
+                let mut counts = vec![0u64; n];
+                for reply in read_replies(&mut reader, REQS, &format!("χ² client {c}")) {
+                    let j = Json::parse(&reply).expect("reply is JSON");
+                    assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{reply}");
+                    for id in j.get("ids").and_then(|v| v.as_arr()).expect("ids array") {
+                        counts[id.as_usize().unwrap()] += 1;
+                    }
+                }
+                counts
+            })
+        })
+        .collect();
+
+    let mut counts = vec![0u64; n];
+    for h in workers {
+        for (i, c) in h.join().expect("χ² client").into_iter().enumerate() {
+            counts[i] += c;
+        }
+    }
+    let draws = (CLIENTS * REQS * M) as u64;
+    assert_eq!(counts.iter().sum::<u64>(), draws, "every draw accounted for");
+
+    let (stat, df) = chi_square_gof(&counts, &q, draws);
+    let crit = chi_square_critical(df, 4.5);
+    assert!(
+        stat < crit,
+        "χ²={stat:.1} ≥ crit={crit:.1} (df={df}): draws served through the reactor diverge \
+         from the core's proposal distribution"
+    );
+    served.stop();
+}
+
+#[test]
+fn hostile_input_is_contained_to_its_connection() {
+    let (n, d) = (50usize, 6usize);
+    let eng = engine(n, d, 0xBAD, 1);
+    let batcher = Arc::new(MicroBatcher::new(Arc::clone(&eng), Duration::ZERO, 16));
+    let served = serve(
+        Arc::clone(&batcher),
+        ReactorConfig {
+            max_line: 1024,
+            idle_timeout: Duration::ZERO,
+            ..Default::default()
+        },
+    );
+
+    // a well-behaved bystander connection, kept open throughout
+    let mut bystander = connect(served.addr);
+    bystander.write_all((request_line(9, 0, d) + "\n").as_bytes()).unwrap();
+    let mut bystander_rd = BufReader::new(bystander.try_clone().unwrap());
+    let r = read_replies(&mut bystander_rd, 1, "bystander");
+    assert!(r[0].contains(r#""ok":true"#));
+
+    // (1) oversized line: one descriptive error, then the connection closes
+    {
+        let mut s = connect(served.addr);
+        s.write_all(&vec![b'x'; 4096]).unwrap();
+        s.write_all(b"\n").unwrap();
+        let mut rd = BufReader::new(s);
+        let r = read_replies(&mut rd, 1, "oversize");
+        assert!(r[0].contains("frame limit"), "{}", r[0]);
+        let mut end = String::new();
+        assert_eq!(rd.read_line(&mut end).unwrap(), 0, "oversized conn must close");
+    }
+
+    // (2) a frame split across many tiny writes still parses
+    {
+        let mut s = connect(served.addr);
+        let line = request_line(5, 1, d) + "\n";
+        for chunk in line.as_bytes().chunks(3) {
+            s.write_all(chunk).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let mut rd = BufReader::new(s);
+        let r = read_replies(&mut rd, 1, "split-frame");
+        assert!(r[0].contains(r#""ok":true"#), "{}", r[0]);
+    }
+
+    // (3) garbage interleaved between valid requests: error replies in
+    // order, valid requests unharmed, connection stays up
+    {
+        let mut s = connect(served.addr);
+        let burst = format!(
+            "not json at all\n{}\n\n\x07\x03garbage\u{1}bytes\n{}\n",
+            request_line(6, 0, d),
+            request_line(6, 1, d)
+        );
+        s.write_all(burst.as_bytes()).unwrap();
+        let mut rd = BufReader::new(s);
+        let r = read_replies(&mut rd, 4, "garbage-interleaved");
+        assert!(r[0].contains(r#""ok":false"#) && r[0].contains("bad JSON"), "{}", r[0]);
+        assert!(r[1].contains(r#""ok":true"#), "{}", r[1]);
+        assert!(r[2].contains(r#""ok":false"#), "{}", r[2]);
+        assert!(r[3].contains(r#""ok":true"#), "{}", r[3]);
+    }
+
+    // (4) abrupt disconnect mid-request: no reply owed, nothing leaks
+    {
+        let mut s = connect(served.addr);
+        s.write_all(br#"{"op":"topk","q":[0.1,"#).unwrap();
+        s.flush().unwrap();
+        drop(s); // vanish mid-frame
+    }
+
+    // the bystander (and the server) survived all of it
+    bystander.write_all((request_line(9, 1, d) + "\n").as_bytes()).unwrap();
+    let r = read_replies(&mut bystander_rd, 1, "bystander after chaos");
+    assert!(r[0].contains(r#""ok":true"#), "{}", r[0]);
+    served.stop();
+}
+
+#[test]
+fn graceful_drain_answers_in_flight_requests_then_closes() {
+    const CLIENTS: usize = 2;
+    const REQS: usize = 5;
+    let (n, d) = (50usize, 6usize);
+    let eng = engine(n, d, 0xD7A1, 2);
+    let batcher = Arc::new(MicroBatcher::new(Arc::clone(&eng), Duration::from_micros(100), 32));
+    let served = serve(
+        Arc::clone(&batcher),
+        ReactorConfig { idle_timeout: Duration::ZERO, ..Default::default() },
+    );
+
+    let mut streams = Vec::new();
+    for c in 0..CLIENTS {
+        let mut s = connect(served.addr);
+        let burst: String = (0..REQS).map(|j| request_line(c, j, d) + "\n").collect();
+        s.write_all(burst.as_bytes()).unwrap();
+        streams.push(s);
+    }
+
+    // all requests ingested → drain
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while served.batcher.stats().0 < (CLIENTS * REQS) as u64 {
+        assert!(Instant::now() < deadline, "requests never ingested");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    served.handle.shutdown();
+
+    for (c, s) in streams.into_iter().enumerate() {
+        let mut rd = BufReader::new(s);
+        let replies = read_replies(&mut rd, REQS, &format!("drain client {c}"));
+        for (j, r) in replies.iter().enumerate() {
+            assert!(r.contains(r#""ok":true"#), "client {c} req {j}: {r}");
+        }
+        // after the drain: EOF, not a hang
+        let mut end = String::new();
+        assert_eq!(rd.read_line(&mut end).unwrap(), 0, "client {c}: drained conn must close");
+    }
+    served.thread.join().expect("reactor thread").expect("reactor run");
+}
+
+#[test]
+fn idle_connections_are_reaped_and_stats_report_reactor_counters() {
+    let (n, d) = (50usize, 6usize);
+    let eng = engine(n, d, 0x1D1E, 1);
+    let batcher = Arc::new(MicroBatcher::new(Arc::clone(&eng), Duration::ZERO, 16));
+    let served = serve(
+        Arc::clone(&batcher),
+        ReactorConfig {
+            idle_timeout: Duration::from_millis(200),
+            ..Default::default()
+        },
+    );
+
+    let mut s = connect(served.addr);
+    s.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+    let mut rd = BufReader::new(s.try_clone().unwrap());
+    let r = read_replies(&mut rd, 1, "stats");
+    assert!(r[0].contains(r#""conns":1"#), "{}", r[0]);
+    assert!(r[0].contains(r#""busy":0"#), "{}", r[0]);
+
+    // now go quiet: the reactor must reap us on the idle timeout
+    let mut end = String::new();
+    let n_read = rd.read_line(&mut end).unwrap();
+    assert_eq!(n_read, 0, "idle connection must be closed by the server");
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while served.handle.counters().idle_closed < 1 {
+        assert!(Instant::now() < deadline, "idle close not counted");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    served.stop();
+}
