@@ -1,20 +1,27 @@
 //! `cargo bench --bench serve` — serve-layer cost: snapshot export/load,
 //! batched top-k latency percentiles, and reactor connection scaling.
 //!
-//! Four sections, all artifact-free:
+//! Seven sections, all artifact-free:
 //!
 //! 1. **Snapshot cost.** Serialize (`to_bytes`) and parse+validate
 //!    (`from_bytes`) throughput at two model sizes, plus one-shot
 //!    file write/read round trips.
-//! 2. **Top-k latency.** Per-batch latency percentiles (p50/p95/p99) and
+//! 2. **Load modes (unix).** Eager read vs zero-copy `mmap` load
+//!    wall-time, with the eager/mmap ratio (target: ≥10× on the larger
+//!    model — the mmap path is O(header), not O(file)).
+//! 3. **Top-k latency.** Per-batch latency percentiles (p50/p95/p99) and
 //!    QPS for `top_k_batch` across batch sizes × worker-thread counts —
 //!    the acceptance-criteria table. Single-query latency stays flat as
 //!    threads grow (no work to fan out); large batches should scale until
 //!    dispatch overhead dominates.
-//! 3. **Sampling latency.** The served proposal-draw path (`sample`) at
+//! 4. **Scalar vs SIMD fast-scan.** The same top-k with the SIMD tier
+//!    forced to scalar and then restored, asserted bit-identical first.
+//! 5. **Beam-factor sweep.** recall@k vs p50 latency as the candidate
+//!    pool widens — the `--beam` knob's whole trade-off in one table.
+//! 6. **Sampling latency.** The served proposal-draw path (`sample`) at
 //!    one representative shape, for comparison against the training-time
 //!    numbers in `benches/sampling_time.rs`.
-//! 4. **Connection scaling (unix).** End-to-end request latency and QPS
+//! 7. **Connection scaling (unix).** End-to-end request latency and QPS
 //!    through the event-driven reactor at 1/8/64/256 concurrent
 //!    closed-loop TCP connections — the table that shows one poll thread
 //!    multiplexing hundreds of sockets without per-connection threads on
@@ -23,9 +30,10 @@
 use std::time::Instant;
 
 use midx::sampler::{build, Sampler, SamplerKind, SamplerParams};
-use midx::serve::{QueryEngine, Snapshot};
+use midx::serve::{LoadMode, QueryEngine, Snapshot};
 use midx::util::bench::{bench_ms, time_once};
 use midx::util::check::rand_matrix;
+use midx::util::math::{dot, set_simd_level, simd_level, SimdLevel};
 use midx::util::Rng;
 
 fn snapshot_for(n: usize, d: usize, k: usize, seed: u64) -> Snapshot {
@@ -80,6 +88,43 @@ fn percentiles(name: &str, batch: usize, reps: usize, mut f: impl FnMut()) {
     );
 }
 
+/// Eager vs zero-copy load wall-time: the mmap path parses the 64-byte
+/// header, borrows every array section in place, and returns — O(header)
+/// instead of O(file). The acceptance target is ≥10× on the larger model.
+#[cfg(unix)]
+fn load_mode_section() {
+    println!("\nsnapshot load wall-time: eager read vs zero-copy mmap");
+    for &(n, d, k) in &[(2_000usize, 32usize, 32usize), (20_000, 32, 32)] {
+        let snap = snapshot_for(n, d, k, 23);
+        let path = std::env::temp_dir().join(format!("midx_bench_mmap_{n}.midx"));
+        snap.write(&path).unwrap();
+
+        let median_us = |mode: LoadMode| {
+            let reps = 60usize;
+            let mut us: Vec<u64> = Vec::with_capacity(reps);
+            for _ in 0..reps {
+                let t = Instant::now();
+                std::hint::black_box(Snapshot::read_with(&path, mode).expect("valid snapshot"));
+                us.push(t.elapsed().as_micros() as u64);
+            }
+            us.sort_unstable();
+            us[reps / 2]
+        };
+        let eager = median_us(LoadMode::Eager).max(1);
+        let mapped = median_us(LoadMode::Mmap).max(1);
+        std::fs::remove_file(&path).ok();
+        println!(
+            "bench serve/load/n{n:<28} eager={eager}µs mmap={mapped}µs ratio={:.1}x",
+            eager as f64 / mapped as f64
+        );
+    }
+}
+
+#[cfg(not(unix))]
+fn load_mode_section() {
+    println!("\nsnapshot load wall-time: skipped (non-unix target, mmap falls back to eager)");
+}
+
 fn topk_section() {
     let (n, d, k_codewords, k) = (20_000usize, 32usize, 32usize, 10usize);
     let snap = snapshot_for(n, d, k_codewords, 7);
@@ -95,6 +140,78 @@ fn topk_section() {
                 std::hint::black_box(engine.top_k_batch(q, k));
             });
         }
+    }
+}
+
+/// Scalar vs SIMD fast-scan top-k: the same engine, the same queries, with
+/// the process-wide SIMD level forced to scalar and then restored. Outputs
+/// are asserted bit-identical first — the table below is purely a speed
+/// comparison of the u8 ADC scan + dot kernels.
+fn fastscan_section() {
+    let (n, d, k_codewords, k) = (20_000usize, 32usize, 32usize, 10usize);
+    let snap = snapshot_for(n, d, k_codewords, 29);
+    let engine = QueryEngine::new(snap, 1).unwrap();
+    let mut rng = Rng::new(37);
+    let queries = rand_matrix(&mut rng, 256, d, 0.5);
+    let detected = simd_level();
+
+    println!("\ntop-{k} scalar vs SIMD fast-scan (N={n}, D={d}, detected tier: {detected:?})");
+    for &b in &[1usize, 32, 256] {
+        let q = &queries[..b * d];
+        set_simd_level(detected);
+        let fast = engine.top_k_batch(q, k);
+        set_simd_level(SimdLevel::Scalar);
+        let slow = engine.top_k_batch(q, k);
+        assert_eq!(slow.0, fast.0, "b{b}: scalar/SIMD top-k ids diverge");
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&slow.1), bits(&fast.1), "b{b}: scalar/SIMD top-k scores diverge");
+
+        percentiles(&format!("serve/topk_scalar/b{b}"), b, 60, || {
+            std::hint::black_box(engine.top_k_batch(q, k));
+        });
+        set_simd_level(detected);
+        percentiles(&format!("serve/topk_simd/b{b}"), b, 60, || {
+            std::hint::black_box(engine.top_k_batch(q, k));
+        });
+    }
+    set_simd_level(detected);
+}
+
+/// Beam-factor sweep: candidate-pool width (`beam_factor · k`) against
+/// recall@k versus brute force and p50 latency — the knob's whole
+/// accuracy/latency trade-off in one table.
+fn beam_sweep_section() {
+    let (n, d, k_codewords, k, b) = (20_000usize, 32usize, 32usize, 10usize, 64usize);
+    let snap = snapshot_for(n, d, k_codewords, 31);
+    let table = snap.table.to_vec();
+    let mut engine = QueryEngine::new(snap, 1).unwrap();
+    let mut rng = Rng::new(41);
+    let queries = rand_matrix(&mut rng, b, d, 0.5);
+
+    // brute-force truth once
+    let truth: Vec<Vec<u32>> = queries
+        .chunks(d)
+        .map(|z| {
+            let mut all: Vec<(f32, u32)> =
+                (0..n).map(|i| (dot(z, &table[i * d..(i + 1) * d]), i as u32)).collect();
+            all.sort_unstable_by(|x, y| y.0.total_cmp(&x.0).then(x.1.cmp(&y.1)));
+            all.truncate(k);
+            all.into_iter().map(|(_, c)| c).collect()
+        })
+        .collect();
+
+    println!("\nbeam-factor sweep (N={n}, D={d}, K={k_codewords}, top-{k}, B={b})");
+    for &beam in &[1usize, 2, 4, 8, 16, 32] {
+        engine.set_beam_factor(beam);
+        let (ids, _) = engine.top_k_batch(&queries, k);
+        let mut hits = 0usize;
+        for (row, want) in truth.iter().enumerate() {
+            hits += ids[row * k..(row + 1) * k].iter().filter(|c| want.contains(c)).count();
+        }
+        let recall = hits as f64 / (b * k) as f64;
+        percentiles(&format!("serve/beam{beam:<3}  recall={recall:.3}"), b, 40, || {
+            std::hint::black_box(engine.top_k_batch(&queries, k));
+        });
     }
 }
 
@@ -199,7 +316,10 @@ fn reactor_section() {
 
 fn main() {
     snapshot_section();
+    load_mode_section();
     topk_section();
+    fastscan_section();
+    beam_sweep_section();
     sample_section();
     reactor_section();
 }

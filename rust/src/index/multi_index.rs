@@ -7,16 +7,21 @@
 //! we store a CSR (offsets + members) over the flattened K² bucket grid.
 
 use crate::quant::Quantizer;
+use crate::util::Storage;
 
 /// CSR layout of the K² buckets Ω_{k1,k2} over N classes.
+///
+/// The CSR arrays live in [`Storage`]: owned when the index is built in
+/// process, zero-copy mapped when reassembled from an mmap-loaded snapshot
+/// (an incremental [`InvertedMultiIndex::reassign`] copy-on-writes them).
 #[derive(Clone, Debug)]
 pub struct InvertedMultiIndex {
     /// codewords per codebook (the grid is K×K)
     pub k: usize,
     /// CSR offsets: bucket b = k1*K + k2 owns members[offsets[b]..offsets[b+1]]
-    pub offsets: Vec<u32>,
+    pub offsets: Storage<u32>,
     /// class ids, grouped by bucket
-    pub members: Vec<u32>,
+    pub members: Storage<u32>,
     /// |Ω_{k1,k2}| as f32 (the ω weights of Theorem 2's uniform variant)
     pub sizes: Vec<f32>,
     /// ln |Ω_{k1,k2}|, with empty buckets at -inf (never sampled)
@@ -56,7 +61,7 @@ impl InvertedMultiIndex {
             .map(|&c| if c == 0 { f32::NEG_INFINITY } else { (c as f32).ln() })
             .collect();
 
-        InvertedMultiIndex { k, offsets, members, sizes, log_sizes }
+        InvertedMultiIndex { k, offsets: offsets.into(), members: members.into(), sizes, log_sizes }
     }
 
     /// Reassemble an index from serialized CSR parts (the `serve::snapshot`
@@ -65,8 +70,15 @@ impl InvertedMultiIndex {
     /// starting at 0 and ending at `members.len()`, and `members` must be a
     /// permutation of `0..n` (every class in exactly one bucket). Bucket
     /// masses (`sizes` / `log_sizes`) are recomputed from the offsets, so
-    /// they cannot disagree with the membership.
-    pub fn from_csr(k: usize, offsets: Vec<u32>, members: Vec<u32>) -> Result<Self, String> {
+    /// they cannot disagree with the membership. Parts arrive as plain
+    /// `Vec`s (eager load) or mapped [`Storage`] sections (zero-copy load).
+    pub fn from_csr(
+        k: usize,
+        offsets: impl Into<Storage<u32>>,
+        members: impl Into<Storage<u32>>,
+    ) -> Result<Self, String> {
+        let offsets = offsets.into();
+        let members = members.into();
         let nb = k * k;
         if k == 0 {
             return Err("index has zero codewords".into());
@@ -87,7 +99,7 @@ impl InvertedMultiIndex {
             return Err(format!("offsets end at {} but index holds {n} members", offsets[nb]));
         }
         let mut seen = vec![false; n];
-        for &c in &members {
+        for &c in members.iter() {
             let i = c as usize;
             if i >= n {
                 return Err(format!("member id {c} out of range (N = {n})"));

@@ -73,6 +73,17 @@
 //! ([`serve::query::QueryEngine::attach_fallback`]) while a MIDX core
 //! refreshes.
 //!
+//! The serving hot path is additionally optimized without changing any
+//! answered bit (DESIGN.md §8): snapshot format v2 64-byte-aligns every
+//! array section so `--load mmap` ([`serve::snapshot::Snapshot::read_mmap`])
+//! borrows the file zero-copy through [`util::Storage`] — O(header) load
+//! instead of O(file) — and top-k ranks buckets via a u8 ADC fast-scan
+//! ([`quant::adc`], AVX2/SSE2/scalar kernels dispatched by
+//! [`util::math::simd_level`], bit-identical at every tier) before an
+//! exact f32 re-rank. The sampling-side u8 fast path is opt-in
+//! ([`sampler::midx::MidxCore::set_fast_scan`]) since it perturbs the
+//! proposal distribution; it is χ²-gated like every sampler.
+//!
 //! ## Module map
 //!
 //! | module        | role |

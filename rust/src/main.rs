@@ -25,7 +25,7 @@ use midx::coordinator::{fmt, run_experiment, ExperimentSpec, Table};
 use midx::index::RefreshPolicy;
 use midx::runtime::{list_models, load_model};
 use midx::sampler::{self, SamplerKind, SamplerParams};
-use midx::serve::{serve_stdin, LatencyRecorder, MicroBatcher, QueryEngine, Snapshot};
+use midx::serve::{serve_stdin, LatencyRecorder, LoadMode, MicroBatcher, QueryEngine, Snapshot};
 use midx::train::TrainConfig;
 use midx::util::check::rand_matrix;
 use midx::util::json::{from_f32s, from_u32s};
@@ -103,11 +103,17 @@ const USAGE: &str = "usage:
                               CSR inverted index, class embeddings — loadable by serve/query;
                               uniform/unigram export static fallback snapshots)
   midx query --snapshot FILE [--topk K | --sample M [--fallback FILE]] [--threads N]
-             [--beam F] [--q \"f,f,...\"] | [--queries B --seed N]
+             [--beam F] [--load eager|mmap] [--fast-sample] [--no-simd]
+             [--q \"f,f,...\"] | [--queries B --seed N]
                              (one-shot batched answers against a snapshot; one JSON line
                               per query on stdout, timing summary on stderr; --fallback
-                              draws --sample from a static uniform/unigram snapshot)
+                              draws --sample from a static uniform/unigram snapshot;
+                              --load mmap borrows the snapshot zero-copy from the page
+                              cache instead of reading it eagerly — same answers, near-
+                              instant load; --fast-sample opts draws into the u8 ADC
+                              fast proposal; --no-simd forces the scalar kernels)
   midx serve --snapshot FILE [--fallback FILE] [--tcp ADDR] [--threads N] [--beam F]
+             [--load eager|mmap] [--fast-sample] [--no-simd]
              [--window-us N] [--max-batch N]
              [--max-conns N] [--queue-cap N] [--idle-ms N]
                              (line-delimited JSON frontend: op topk|sample|info|stats;
@@ -299,15 +305,31 @@ fn cmd_export(args: &Args) -> Result<()> {
 }
 
 /// Load a snapshot and build a query engine from the shared serve flags
-/// (`--snapshot`, `--threads`, `--beam`, `--fallback`).
+/// (`--snapshot`, `--load`, `--threads`, `--beam`, `--fast-sample`,
+/// `--fallback`).
 fn load_engine(args: &Args, default_threads: usize) -> Result<QueryEngine> {
     let path = args
         .get("snapshot")
         .ok_or_else(|| anyhow!("--snapshot FILE required (produced by `midx export`)"))?;
-    let snap = Snapshot::read(Path::new(path))?;
+    let mode = match args.get("load") {
+        None => LoadMode::Eager,
+        Some(s) => LoadMode::parse(s)
+            .ok_or_else(|| anyhow!("--load must be 'eager' or 'mmap', got '{s}'"))?,
+    };
+    let t0 = Instant::now();
+    let snap = Snapshot::read_with(Path::new(path), mode)?;
+    let load_millis = t0.elapsed().as_secs_f64() * 1e3;
     let mut engine = QueryEngine::new(snap, args.usize_or("threads", default_threads))?;
+    engine.set_load_info(mode, load_millis);
     if args.has("beam") {
         engine.set_beam_factor(args.usize_or("beam", midx::serve::query::DEFAULT_BEAM_FACTOR));
+    }
+    if args.has("fast-sample") && !engine.set_fast_sample(true) {
+        eprintln!(
+            "warning: --fast-sample has no effect on a '{}' snapshot (needs a fast-MIDX \
+             core with K <= 256)",
+            engine.kind().name()
+        );
     }
     if let Some(fb) = args.get("fallback") {
         let fb_snap = Snapshot::read(Path::new(fb))?;
@@ -384,11 +406,15 @@ fn print_row(row: usize, ids: &[u32], score_field: &str, scores: &[f32]) {
 fn cmd_serve(args: &Args) -> Result<()> {
     let engine = Arc::new(load_engine(args, 0)?);
     eprintln!(
-        "loaded {} snapshot: N={} D={} ({} worker threads{})",
+        "loaded {} snapshot: N={} D={} in {:.2}ms ({} load, {} worker threads, simd {}{}{})",
         engine.kind().name(),
         engine.n_classes(),
         engine.dim(),
+        engine.load_millis(),
+        engine.load_mode().name(),
         engine.workers(),
+        midx::util::math::simd_level().name(),
+        if engine.fast_sample() { ", fast-sample" } else { "" },
         match engine.fallback_kind() {
             Some(kind) => format!(", {} fallback", kind.name()),
             None => String::new(),
@@ -466,6 +492,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let args = parse_args(&raw);
+    if args.has("no-simd") {
+        // force every dispatched kernel onto its scalar mirror (the CI
+        // fallback leg; answers are bit-identical either way, so this
+        // only ever changes speed)
+        midx::util::math::set_simd_level(midx::util::math::SimdLevel::Scalar);
+    }
     match args.positional.first().map(|s| s.as_str()) {
         Some("list") => cmd_list(),
         Some("info") => cmd_info(&args),

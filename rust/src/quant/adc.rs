@@ -1,0 +1,358 @@
+//! u8 asymmetric-distance (ADC) fast-scan kernels for the serving hot
+//! path — the classic PQ trick (faiss's fast-scan): quantize the per-query
+//! codeword score tables to u8 once, then scan buckets and class codes
+//! with wide integer SIMD instead of per-entry f32 arithmetic.
+//!
+//! The pipeline per query:
+//!
+//! 1. [`AdcLut::quantize`] — map the two stage score tables `s1`/`s2`
+//!    (each K entries) onto a shared u8 grid: `step = (range₁+range₂)/254`
+//!    and `lo = min₁+min₂`, so any bucket's quantized score `q₁[k₁]+q₂[k₂]`
+//!    fits u8 and dequantizes as `lo + q·step`. Per-stage rounding is at
+//!    most `step/2`, so a bucket score is off by at most one `step` —
+//!    under 0.4% of the query's total score range.
+//! 2. [`scan_grid`] — materialize all K² bucket scores with 32-lane
+//!    (AVX2) / 16-lane (SSE2) u8 adds. Integer adds are exact, so every
+//!    tier produces **identical bytes**; callers' orderings cannot differ
+//!    between a SIMD and a scalar machine.
+//! 3. [`gather_codes`] — per-class quantized scores via
+//!    `_mm256_shuffle_epi8` 16-entry LUT lookups when K ≤ 16 (the
+//!    fast-scan register trick), scalar gathers otherwise.
+//! 4. [`AdcLut::fill_exp`] — a 256-entry `exp` table turning quantized
+//!    scores into unnormalized softmax weights with one lookup per bucket
+//!    instead of one `exp` per bucket (shifted by the grid maximum, like
+//!    the max-subtraction in a stable softmax, so nothing overflows).
+//!
+//! Consumers: the serve layer's beam top-k (`serve::query`) uses 1–2 and
+//! re-ranks candidates with exact f32 `dot`, so its final top-k is
+//! bit-identical to the pure-scalar engine; the opt-in sampling fast path
+//! (`sampler::midx`) uses all four and is gated by a χ² goodness-of-fit
+//! test instead.
+
+use crate::util::math::{simd_level, SimdLevel};
+
+/// Largest quantized bucket score the two stages can sum to (each stage
+/// is scaled so the *combined* range spans `0..=GRID_MAX`).
+pub const GRID_MAX: u32 = 254;
+
+/// Per-query u8 ADC lookup state: quantized stage tables, the scanned
+/// bucket grid, and the scale/bias to dequantize (plus the optional exp
+/// table and per-class gather buffer the sampling fast path uses). Lives
+/// in per-thread scratch — building it is O(K), using it is O(K²) integer
+/// ops.
+#[derive(Clone, Debug, Default)]
+pub struct AdcLut {
+    /// quantized stage-1 scores, [K]
+    pub q1: Vec<u8>,
+    /// quantized stage-2 scores, [K]
+    pub q2: Vec<u8>,
+    /// scanned bucket scores `q1[k1] + q2[k2]`, [K²] (filled by [`scan_grid`])
+    pub grid: Vec<u8>,
+    /// dequantization bias: `min(s1) + min(s2)`
+    pub lo: f32,
+    /// dequantization scale: combined score range / [`GRID_MAX`]
+    pub step: f32,
+    /// `exp[q] = exp((q as f32 - GRID_MAX) * step)`, [256] (filled by
+    /// [`AdcLut::fill_exp`]; the shift by `GRID_MAX·step` cancels under
+    /// normalization, exactly like max-subtraction in a stable softmax)
+    pub exp: Vec<f32>,
+    /// per-class gathered quantized scores, [N] (filled by [`gather_codes`])
+    pub class_q: Vec<u8>,
+}
+
+fn min_max(xs: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    (lo, hi)
+}
+
+impl AdcLut {
+    /// Quantize the per-query stage score tables onto the shared u8 grid
+    /// (see the module docs for the scale/bias construction). Scalar and
+    /// cheap — O(K) — so it is not itself dispatched.
+    pub fn quantize(&mut self, s1: &[f32], s2: &[f32]) {
+        let (min1, max1) = min_max(s1);
+        let (min2, max2) = min_max(s2);
+        let range = (max1 - min1) + (max2 - min2);
+        // degenerate (constant or empty tables): any positive step makes
+        // every quantized score 0, which dequantizes back to lo exactly
+        let step = if range > 0.0 { range / GRID_MAX as f32 } else { 1.0 };
+        self.lo = min1 + min2;
+        self.step = step;
+        let quant = |xs: &[f32], min: f32, out: &mut Vec<u8>| {
+            out.clear();
+            out.extend(xs.iter().map(|&x| ((x - min) / step).round() as u8));
+        };
+        quant(s1, min1, &mut self.q1);
+        quant(s2, min2, &mut self.q2);
+    }
+
+    /// Dequantize a scanned bucket score back to the f32 scale.
+    pub fn dequant(&self, q: u8) -> f32 {
+        self.lo + q as f32 * self.step
+    }
+
+    /// Fill the 256-entry exp table for the sampling fast path: 256 `exp`
+    /// calls replace one per bucket (K² of them).
+    pub fn fill_exp(&mut self) {
+        self.exp.resize(256, 0.0);
+        for (q, e) in self.exp.iter_mut().enumerate() {
+            *e = ((q as f32 - GRID_MAX as f32) * self.step).exp();
+        }
+    }
+}
+
+/// Scan all `q1.len() × q2.len()` bucket scores into `grid` (row-major:
+/// `grid[k1 * K + k2] = q1[k1] + q2[k2]`). Dispatched over [`simd_level`];
+/// integer adds make every tier byte-identical.
+pub fn scan_grid(q1: &[u8], q2: &[u8], grid: &mut [u8]) {
+    debug_assert_eq!(grid.len(), q1.len() * q2.len());
+    match simd_level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => {
+            // SAFETY: Avx2 tier is only set when AVX2 was detected.
+            unsafe { scan_grid_avx2(q1, q2, grid) }
+        }
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Ssse3 => scan_grid_sse2(q1, q2, grid),
+        _ => scan_grid_scalar(q1, q2, grid),
+    }
+}
+
+/// Portable scan kernel (also the mirror the equality tests pin against).
+pub fn scan_grid_scalar(q1: &[u8], q2: &[u8], grid: &mut [u8]) {
+    let k2 = q2.len();
+    for (i, &v) in q1.iter().enumerate() {
+        let row = &mut grid[i * k2..(i + 1) * k2];
+        for (g, &w) in row.iter_mut().zip(q2) {
+            *g = v.wrapping_add(w);
+        }
+    }
+}
+
+/// SSE2 scan kernel — 16 buckets per add. SSE2 is baseline on x86_64, so
+/// no feature gate is needed; used for the Ssse3 dispatch tier.
+#[cfg(target_arch = "x86_64")]
+fn scan_grid_sse2(q1: &[u8], q2: &[u8], grid: &mut [u8]) {
+    use std::arch::x86_64::*;
+    let k2 = q2.len();
+    for (i, &v) in q1.iter().enumerate() {
+        let row = &mut grid[i * k2..(i + 1) * k2];
+        // SAFETY: loads/stores stay within q2/row, 16 bytes at a time.
+        unsafe {
+            let bv = _mm_set1_epi8(v as i8);
+            let mut j = 0;
+            while j + 16 <= k2 {
+                let x = _mm_loadu_si128(q2.as_ptr().add(j) as *const __m128i);
+                _mm_storeu_si128(
+                    row.as_mut_ptr().add(j) as *mut __m128i,
+                    _mm_add_epi8(x, bv),
+                );
+                j += 16;
+            }
+            while j < k2 {
+                row[j] = v.wrapping_add(q2[j]);
+                j += 1;
+            }
+        }
+    }
+}
+
+/// AVX2 scan kernel — 32 buckets per add.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scan_grid_avx2(q1: &[u8], q2: &[u8], grid: &mut [u8]) {
+    use std::arch::x86_64::*;
+    let k2 = q2.len();
+    for (i, &v) in q1.iter().enumerate() {
+        let row = grid.as_mut_ptr().add(i * k2);
+        let bv = _mm256_set1_epi8(v as i8);
+        let mut j = 0;
+        while j + 32 <= k2 {
+            let x = _mm256_loadu_si256(q2.as_ptr().add(j) as *const __m256i);
+            _mm256_storeu_si256(row.add(j) as *mut __m256i, _mm256_add_epi8(x, bv));
+            j += 32;
+        }
+        while j < k2 {
+            *row.add(j) = v.wrapping_add(q2[j]);
+            j += 1;
+        }
+    }
+}
+
+/// Gather per-class quantized scores: `out[i] = q1[codes1[i]] +
+/// q2[codes2[i]]`. When both LUTs fit a 16-byte register (K ≤ 16) this is
+/// the fast-scan `pshufb` trick — 16 (SSSE3) or 32 (AVX2) table lookups
+/// per instruction; larger K falls back to scalar gathers. Codes arrive
+/// pre-packed as u8 (the caller packs them once per core — they are
+/// static between index refreshes).
+pub fn gather_codes(q1: &[u8], q2: &[u8], codes1: &[u8], codes2: &[u8], out: &mut [u8]) {
+    debug_assert_eq!(codes1.len(), out.len());
+    debug_assert_eq!(codes2.len(), out.len());
+    if q1.len() <= 16 && q2.len() <= 16 {
+        match simd_level() {
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx2 => {
+                // SAFETY: Avx2 tier is only set when AVX2 was detected.
+                return unsafe { gather_codes_avx2(q1, q2, codes1, codes2, out) };
+            }
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Ssse3 => {
+                // SAFETY: Ssse3 tier is only set when SSSE3 was detected.
+                return unsafe { gather_codes_ssse3(q1, q2, codes1, codes2, out) };
+            }
+            _ => {}
+        }
+    }
+    gather_codes_scalar(q1, q2, codes1, codes2, out)
+}
+
+/// Portable gather kernel (the mirror the equality tests pin against).
+pub fn gather_codes_scalar(q1: &[u8], q2: &[u8], codes1: &[u8], codes2: &[u8], out: &mut [u8]) {
+    for ((o, &c1), &c2) in out.iter_mut().zip(codes1).zip(codes2) {
+        *o = q1[c1 as usize].wrapping_add(q2[c2 as usize]);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn lut16(q: &[u8]) -> [u8; 16] {
+    let mut lut = [0u8; 16];
+    lut[..q.len()].copy_from_slice(q);
+    lut
+}
+
+/// SSSE3 gather kernel: `pshufb` against the 16-entry LUTs, 16 classes per
+/// iteration. Codes are < K ≤ 16, so every shuffle index selects a real
+/// LUT byte (high bit clear).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "ssse3")]
+unsafe fn gather_codes_ssse3(q1: &[u8], q2: &[u8], codes1: &[u8], codes2: &[u8], out: &mut [u8]) {
+    use std::arch::x86_64::*;
+    let l1 = _mm_loadu_si128(lut16(q1).as_ptr() as *const __m128i);
+    let l2 = _mm_loadu_si128(lut16(q2).as_ptr() as *const __m128i);
+    let n = out.len();
+    let mut i = 0;
+    while i + 16 <= n {
+        let c1 = _mm_loadu_si128(codes1.as_ptr().add(i) as *const __m128i);
+        let c2 = _mm_loadu_si128(codes2.as_ptr().add(i) as *const __m128i);
+        let g = _mm_add_epi8(_mm_shuffle_epi8(l1, c1), _mm_shuffle_epi8(l2, c2));
+        _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, g);
+        i += 16;
+    }
+    gather_codes_scalar(q1, q2, &codes1[i..], &codes2[i..], &mut out[i..]);
+}
+
+/// AVX2 gather kernel: the LUTs broadcast to both 128-bit lanes (vpshufb
+/// shuffles per-lane), 32 classes per iteration.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gather_codes_avx2(q1: &[u8], q2: &[u8], codes1: &[u8], codes2: &[u8], out: &mut [u8]) {
+    use std::arch::x86_64::*;
+    let l1 = _mm256_broadcastsi128_si256(_mm_loadu_si128(lut16(q1).as_ptr() as *const __m128i));
+    let l2 = _mm256_broadcastsi128_si256(_mm_loadu_si128(lut16(q2).as_ptr() as *const __m128i));
+    let n = out.len();
+    let mut i = 0;
+    while i + 32 <= n {
+        let c1 = _mm256_loadu_si256(codes1.as_ptr().add(i) as *const __m256i);
+        let c2 = _mm256_loadu_si256(codes2.as_ptr().add(i) as *const __m256i);
+        let g = _mm256_add_epi8(_mm256_shuffle_epi8(l1, c1), _mm256_shuffle_epi8(l2, c2));
+        _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, g);
+        i += 32;
+    }
+    gather_codes_scalar(q1, q2, &codes1[i..], &codes2[i..], &mut out[i..]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn scores(rng: &mut Rng, k: usize, scale: f32) -> Vec<f32> {
+        (0..k).map(|_| rng.normal_f32(scale)).collect()
+    }
+
+    #[test]
+    fn quantization_error_is_within_one_step() {
+        let mut rng = Rng::new(42);
+        for &k in &[3usize, 16, 32, 64] {
+            let (s1, s2) = (scores(&mut rng, k, 5.0), scores(&mut rng, k, 2.0));
+            let mut lut = AdcLut::default();
+            lut.quantize(&s1, &s2);
+            let mut grid = vec![0u8; k * k];
+            scan_grid(&lut.q1, &lut.q2, &mut grid);
+            for i in 0..k {
+                for j in 0..k {
+                    let exact = s1[i] + s2[j];
+                    let approx = lut.dequant(grid[i * k + j]);
+                    assert!(
+                        (exact - approx).abs() <= lut.step * 1.0001,
+                        "k={k} bucket ({i},{j}): |{exact} - {approx}| > step {}",
+                        lut.step
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_constant_scores_quantize_to_zero() {
+        let mut lut = AdcLut::default();
+        lut.quantize(&[1.5, 1.5], &[-0.5, -0.5]);
+        assert!(lut.q1.iter().chain(&lut.q2).all(|&q| q == 0));
+        assert_eq!(lut.dequant(0), 1.0);
+    }
+
+    #[test]
+    fn scan_grid_matches_scalar_on_every_tier_shape() {
+        let mut rng = Rng::new(7);
+        for &(k1, k2) in &[(4usize, 4usize), (16, 16), (32, 32), (33, 17), (64, 64)] {
+            let (s1, s2) = (scores(&mut rng, k1, 3.0), scores(&mut rng, k2, 3.0));
+            let mut lut = AdcLut::default();
+            lut.quantize(&s1, &s2);
+            let mut simd = vec![0u8; k1 * k2];
+            let mut scalar = vec![0u8; k1 * k2];
+            scan_grid(&lut.q1, &lut.q2, &mut simd);
+            scan_grid_scalar(&lut.q1, &lut.q2, &mut scalar);
+            assert_eq!(simd, scalar, "scan_grid diverges at {k1}x{k2}");
+        }
+    }
+
+    #[test]
+    fn gather_codes_matches_scalar_including_shuffle_path() {
+        let mut rng = Rng::new(9);
+        // k ≤ 16 exercises the pshufb path, k > 16 the scalar fallback;
+        // n values straddle the 16/32-lane chunking and remainders
+        for &(k, n) in &[(9usize, 50usize), (16, 64), (16, 7), (16, 33), (40, 100)] {
+            let (s1, s2) = (scores(&mut rng, k, 4.0), scores(&mut rng, k, 1.0));
+            let mut lut = AdcLut::default();
+            lut.quantize(&s1, &s2);
+            let codes1: Vec<u8> = (0..n).map(|_| rng.below(k) as u8).collect();
+            let codes2: Vec<u8> = (0..n).map(|_| rng.below(k) as u8).collect();
+            let mut simd = vec![0u8; n];
+            let mut scalar = vec![0u8; n];
+            gather_codes(&lut.q1, &lut.q2, &codes1, &codes2, &mut simd);
+            gather_codes_scalar(&lut.q1, &lut.q2, &codes1, &codes2, &mut scalar);
+            assert_eq!(simd, scalar, "gather_codes diverges at k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn exp_table_matches_the_shifted_softmax_weights() {
+        let mut lut = AdcLut::default();
+        lut.quantize(&[0.0, 2.0, 4.0], &[-1.0, 1.0]);
+        lut.fill_exp();
+        assert_eq!(lut.exp.len(), 256);
+        assert_eq!(lut.exp[GRID_MAX as usize], 1.0, "grid max maps to exp(0)");
+        for q in 0..=GRID_MAX as usize {
+            let want = ((q as f32 - GRID_MAX as f32) * lut.step).exp();
+            assert_eq!(lut.exp[q].to_bits(), want.to_bits());
+            if q > 0 {
+                assert!(lut.exp[q] >= lut.exp[q - 1], "exp table must be monotone");
+            }
+        }
+    }
+}

@@ -180,8 +180,8 @@ mod tests {
         let pq = ProductQuantizer::build(&table, n, d, k, 20, &mut rng);
         let fixed = FixedQuantizer::from_codebooks(
             QuantKind::Product,
-            pq.c1.clone(),
-            pq.c2.clone(),
+            pq.c1.to_vec(),
+            pq.c2.to_vec(),
             &table,
             n,
             d,

@@ -7,6 +7,7 @@
 //!    on the residuals; reconstruction is addition. Lower distortion,
 //!    and per Theorems 5/9 a tighter bias bound (MIDX-rq beats MIDX-pq).
 
+pub mod adc;
 pub mod fixed;
 pub mod kmeans;
 pub mod pq;

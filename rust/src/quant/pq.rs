@@ -4,9 +4,13 @@
 use super::kmeans::kmeans;
 use super::{pq_assign_row, pq_refine, Quantizer};
 use crate::util::math::dot;
-use crate::util::Rng;
+use crate::util::{Rng, Storage};
 
 /// Two-codebook product quantizer over a class-embedding table.
+///
+/// Array state lives in [`Storage`]: owned vectors when trained in
+/// process, zero-copy mapped sections when reassembled from an mmap-loaded
+/// snapshot (mutation copy-on-writes).
 #[derive(Clone, Debug)]
 pub struct ProductQuantizer {
     /// codewords per codebook
@@ -16,13 +20,13 @@ pub struct ProductQuantizer {
     /// first-half dimension (d/2, remainder goes to the second half)
     pub d1: usize,
     /// [k, d1] codebook over the first subspace
-    pub c1: Vec<f32>,
+    pub c1: Storage<f32>,
     /// [k, d2] codebook over the second subspace
-    pub c2: Vec<f32>,
+    pub c2: Storage<f32>,
     /// stage-1 code per class
-    pub assign1: Vec<u32>,
+    pub assign1: Storage<u32>,
     /// stage-2 code per class
-    pub assign2: Vec<u32>,
+    pub assign2: Storage<u32>,
     /// total squared reconstruction error at build time
     pub distortion: f64,
 }
@@ -31,17 +35,20 @@ impl ProductQuantizer {
     /// Reassemble a quantizer from serialized parts (the `serve::snapshot`
     /// load path): codebooks, assignments and the build-time distortion are
     /// taken as given — no k-means runs, so the result is bit-identical to
-    /// the quantizer the parts were captured from.
+    /// the quantizer the parts were captured from. Parts arrive as plain
+    /// `Vec`s (eager load) or mapped [`Storage`] sections (zero-copy load).
     pub fn from_parts(
         k: usize,
         d: usize,
         d1: usize,
-        c1: Vec<f32>,
-        c2: Vec<f32>,
-        assign1: Vec<u32>,
-        assign2: Vec<u32>,
+        c1: impl Into<Storage<f32>>,
+        c2: impl Into<Storage<f32>>,
+        assign1: impl Into<Storage<u32>>,
+        assign2: impl Into<Storage<u32>>,
         distortion: f64,
     ) -> Self {
+        let (c1, c2) = (c1.into(), c2.into());
+        let (assign1, assign2) = (assign1.into(), assign2.into());
         assert_eq!(c1.len(), k * d1, "stage-1 codebook must be [k, d1]");
         assert_eq!(c2.len(), k * (d - d1), "stage-2 codebook must be [k, d-d1]");
         assert_eq!(assign1.len(), assign2.len(), "code arrays must match");
@@ -70,10 +77,10 @@ impl ProductQuantizer {
             k: km1.k.max(km2.k),
             d,
             d1,
-            c1: km1.centroids,
-            c2: km2.centroids,
-            assign1: km1.assign,
-            assign2: km2.assign,
+            c1: km1.centroids.into(),
+            c2: km2.centroids.into(),
+            assign1: km1.assign.into(),
+            assign2: km2.assign.into(),
             distortion,
         }
     }

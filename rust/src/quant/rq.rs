@@ -9,9 +9,13 @@
 use super::kmeans::kmeans;
 use super::{rq_assign_row, rq_refine, Quantizer};
 use crate::util::math::dot;
-use crate::util::Rng;
+use crate::util::{Rng, Storage};
 
 /// Two-level residual quantizer over a class-embedding table.
+///
+/// Array state lives in [`Storage`]: owned vectors when trained in
+/// process, zero-copy mapped sections when reassembled from an mmap-loaded
+/// snapshot (mutation copy-on-writes).
 #[derive(Clone, Debug)]
 pub struct ResidualQuantizer {
     /// codewords per level
@@ -19,13 +23,13 @@ pub struct ResidualQuantizer {
     /// embedding dimension (both levels see the full space)
     pub d: usize,
     /// [k, d] level-1 codebook
-    pub c1: Vec<f32>,
+    pub c1: Storage<f32>,
     /// [k, d] level-2 codebook (over residuals)
-    pub c2: Vec<f32>,
+    pub c2: Storage<f32>,
     /// level-1 code per class
-    pub assign1: Vec<u32>,
+    pub assign1: Storage<u32>,
     /// level-2 code per class
-    pub assign2: Vec<u32>,
+    pub assign2: Storage<u32>,
     /// total squared reconstruction error at build time (after BOTH levels)
     pub distortion: f64,
 }
@@ -34,16 +38,19 @@ impl ResidualQuantizer {
     /// Reassemble a quantizer from serialized parts (the `serve::snapshot`
     /// load path): codebooks, assignments and the build-time distortion are
     /// taken as given — no k-means runs, so the result is bit-identical to
-    /// the quantizer the parts were captured from.
+    /// the quantizer the parts were captured from. Parts arrive as plain
+    /// `Vec`s (eager load) or mapped [`Storage`] sections (zero-copy load).
     pub fn from_parts(
         k: usize,
         d: usize,
-        c1: Vec<f32>,
-        c2: Vec<f32>,
-        assign1: Vec<u32>,
-        assign2: Vec<u32>,
+        c1: impl Into<Storage<f32>>,
+        c2: impl Into<Storage<f32>>,
+        assign1: impl Into<Storage<u32>>,
+        assign2: impl Into<Storage<u32>>,
         distortion: f64,
     ) -> Self {
+        let (c1, c2) = (c1.into(), c2.into());
+        let (assign1, assign2) = (assign1.into(), assign2.into());
         assert_eq!(c1.len(), k * d, "level-1 codebook must be [k, d]");
         assert_eq!(c2.len(), k * d, "level-2 codebook must be [k, d]");
         assert_eq!(assign1.len(), assign2.len(), "code arrays must match");
@@ -67,10 +74,10 @@ impl ResidualQuantizer {
         ResidualQuantizer {
             k: km1.k.max(km2.k),
             d,
-            c1: km1.centroids,
-            c2: km2.centroids,
-            assign1: km1.assign,
-            assign2: km2.assign,
+            c1: km1.centroids.into(),
+            c2: km2.centroids.into(),
+            assign1: km1.assign.into(),
+            assign2: km2.assign.into(),
             distortion: km2.inertia, // residual after BOTH levels
         }
     }

@@ -19,6 +19,7 @@
 use super::{cdf, CostEwma, Sampler, SamplerCore, Scratch, MAX_REJECT};
 use crate::index::drift::{AUTO_MAX_IMBALANCE, AUTO_MAX_MOVED_FRAC, AUTO_REFINE_ITERS};
 use crate::index::{DriftTracker, InvertedMultiIndex, RefreshOutcome, RefreshPolicy};
+use crate::quant::adc::{gather_codes, scan_grid};
 use crate::quant::{self, QuantKind, Quantizer};
 use crate::util::math::{log_sum_exp, softmax_inplace};
 use crate::util::Rng;
@@ -30,13 +31,19 @@ pub struct MidxCore {
     quant: Box<dyn Quantizer + Send + Sync>,
     index: InvertedMultiIndex,
     cost: CostEwma,
+    /// opt-in u8 ADC fast path ([`MidxCore::set_fast_scan`]); default off
+    /// so draws stay bit-identical to the historical f32 pipeline
+    fast_scan: bool,
+    /// per-class codes packed to u8 for the `pshufb` gather (built when
+    /// fast-scan is enabled; the codes are static between refreshes)
+    codes8: Option<(Vec<u8>, Vec<u8>)>,
 }
 
 impl MidxCore {
     /// Build the inverted multi-index over `quant`'s codes for `n` classes.
     pub fn new(name: &'static str, quant: Box<dyn Quantizer + Send + Sync>, n: usize) -> Self {
         let index = InvertedMultiIndex::build(quant.as_ref(), n);
-        MidxCore { n, name, quant, index, cost: CostEwma::new() }
+        MidxCore { n, name, quant, index, cost: CostEwma::new(), fast_scan: false, codes8: None }
     }
 
     /// Reassemble a core from snapshot parts: a quantizer plus the CSR
@@ -48,7 +55,33 @@ impl MidxCore {
         index: InvertedMultiIndex,
     ) -> Self {
         let n = index.n_classes();
-        MidxCore { n, name, quant, index, cost: CostEwma::new() }
+        MidxCore { n, name, quant, index, cost: CostEwma::new(), fast_scan: false, codes8: None }
+    }
+
+    /// Toggle the u8 ADC fast path for the joint proposal and per-class
+    /// proposal density. Off (the default) keeps every draw bit-identical
+    /// to the exact f32 pipeline; on trades ≤ one quantization step of
+    /// score error (≈ 0.4% of the per-query score range, χ²-gated in the
+    /// test suite) for integer-SIMD bucket scans. Requires K ≤ 256 so
+    /// class codes pack into u8 — larger K silently stays on the exact
+    /// path. Returns the effective setting.
+    pub fn set_fast_scan(&mut self, on: bool) -> bool {
+        self.fast_scan = on && self.quant.k() <= 256;
+        if self.fast_scan && self.codes8.is_none() {
+            let (a1, a2) = self.quant.codes();
+            self.codes8 = Some((
+                a1.iter().map(|&c| c as u8).collect(),
+                a2.iter().map(|&c| c as u8).collect(),
+            ));
+        } else if !self.fast_scan {
+            self.codes8 = None;
+        }
+        self.fast_scan
+    }
+
+    /// Whether the u8 ADC fast path is active.
+    pub fn fast_scan(&self) -> bool {
+        self.fast_scan
     }
 
     /// The inverted multi-index this core draws buckets from.
@@ -73,16 +106,83 @@ impl MidxCore {
 
         let nb = k * k;
         scratch.joint.resize(nb, 0.0);
-        for k1 in 0..k {
-            let base = scratch.s1[k1];
-            for k2 in 0..k {
-                scratch.joint[k1 * k + k2] =
-                    base + scratch.s2[k2] + self.index.log_sizes[k1 * k + k2];
+        if !(self.fast_scan && self.fast_joint(scratch, nb)) {
+            for k1 in 0..k {
+                let base = scratch.s1[k1];
+                for k2 in 0..k {
+                    scratch.joint[k1 * k + k2] =
+                        base + scratch.s2[k2] + self.index.log_sizes[k1 * k + k2];
+                }
             }
+            softmax_inplace(&mut scratch.joint);
         }
-        softmax_inplace(&mut scratch.joint);
         cdf::build_cdf_into(&scratch.joint, &mut scratch.cdf);
         nb
+    }
+
+    /// u8 ADC fast path for the joint: quantize the stage tables once,
+    /// scan the K² grid with wide integer adds, and weight buckets through
+    /// the 256-entry exp table — `w[b] = exp[grid[b]] · |Ω_b|`, so empty
+    /// buckets zero out exactly as in the f32 path. Returns false (leaving
+    /// `joint` to the exact path) if every weight underflows to zero.
+    fn fast_joint(&self, scratch: &mut Scratch, nb: usize) -> bool {
+        let Scratch { s1, s2, joint, adc, .. } = scratch;
+        adc.quantize(s1, s2);
+        adc.fill_exp();
+        adc.grid.resize(nb, 0);
+        scan_grid(&adc.q1, &adc.q2, &mut adc.grid);
+        let sizes = &self.index.sizes;
+        let mut total = 0.0f64;
+        for b in 0..nb {
+            let w = adc.exp[adc.grid[b] as usize] * sizes[b];
+            joint[b] = w;
+            total += w as f64;
+        }
+        if total <= 0.0 {
+            return false;
+        }
+        let inv = (1.0 / total) as f32;
+        for w in joint.iter_mut() {
+            *w *= inv;
+        }
+        true
+    }
+
+    /// u8 ADC fast path for the per-class proposal density: gather every
+    /// class's quantized bucket score with the `pshufb` kernel (K ≤ 16) or
+    /// scalar gathers, then weight through the exp table. Because all
+    /// members of a bucket share its grid score, `Q(i|z) = exp[g_i] / Σ_j
+    /// exp[g_j]` — the same distribution [`MidxCore::fast_joint`] samples.
+    fn fast_proposal(
+        &self,
+        z: &[f32],
+        codes1: &[u8],
+        codes2: &[u8],
+        scratch: &mut Scratch,
+        out: &mut [f32],
+    ) -> bool {
+        let k = self.quant.k();
+        scratch.s1.resize(k, 0.0);
+        scratch.s2.resize(k, 0.0);
+        self.quant.stage1_scores(z, &mut scratch.s1);
+        self.quant.stage2_scores(z, &mut scratch.s2);
+        let Scratch { s1, s2, adc, .. } = scratch;
+        adc.quantize(s1, s2);
+        adc.fill_exp();
+        adc.class_q.resize(self.n, 0);
+        gather_codes(&adc.q1, &adc.q2, codes1, codes2, &mut adc.class_q);
+        let mut total = 0.0f64;
+        for &g in adc.class_q.iter() {
+            total += adc.exp[g as usize] as f64;
+        }
+        if total <= 0.0 {
+            return false;
+        }
+        let inv = (1.0 / total) as f32;
+        for (o, &g) in out[..self.n].iter_mut().zip(adc.class_q.iter()) {
+            *o = adc.exp[g as usize] * inv;
+        }
+        true
     }
 }
 
@@ -133,6 +233,13 @@ impl SamplerCore for MidxCore {
     }
 
     fn proposal_dist(&self, z: &[f32], scratch: &mut Scratch, out: &mut [f32]) {
+        if self.fast_scan {
+            if let Some((c1, c2)) = &self.codes8 {
+                if self.fast_proposal(z, c1, c2, scratch, out) {
+                    return;
+                }
+            }
+        }
         self.compute_joint(z, scratch);
         let index = &self.index;
         out[..self.n].fill(0.0);
@@ -295,6 +402,13 @@ impl MidxSampler {
     pub fn quantizer(&self) -> Option<&(dyn Quantizer + Send + Sync)> {
         self.core.as_ref().map(|c| c.quantizer())
     }
+
+    /// Toggle the core's u8 ADC fast path ([`MidxCore::set_fast_scan`]).
+    /// Returns the effective setting (false before `rebuild` or if K
+    /// exceeds the u8 code range).
+    pub fn set_fast_scan(&mut self, on: bool) -> bool {
+        self.core.as_mut().map(|c| c.set_fast_scan(on)).unwrap_or(false)
+    }
 }
 
 impl Sampler for MidxSampler {
@@ -405,7 +519,7 @@ pub struct ExactMidxCore {
     d: usize,
     quant: Box<dyn Quantizer + Send + Sync>,
     index: InvertedMultiIndex,
-    table: Vec<f32>,
+    table: crate::util::Storage<f32>,
     cost: CostEwma,
 }
 
@@ -413,19 +527,22 @@ impl ExactMidxCore {
     /// Build the index over `quant`'s codes and snapshot the live `table`.
     pub fn new(quant: Box<dyn Quantizer + Send + Sync>, table: &[f32], n: usize, d: usize) -> Self {
         let index = InvertedMultiIndex::build(quant.as_ref(), n);
-        ExactMidxCore { n, d, quant, index, table: table.to_vec(), cost: CostEwma::new() }
+        ExactMidxCore { n, d, quant, index, table: table.to_vec().into(), cost: CostEwma::new() }
     }
 
     /// Reassemble a core from snapshot parts (the `serve::snapshot` load
     /// path): the quantizer, the CSR index over its codes, and the class
     /// table the residual stage scores against — no k-means, no rebuild.
+    /// The table arrives as a plain `Vec` (eager load) or a mapped
+    /// [`crate::util::Storage`] section (zero-copy load).
     pub fn from_parts(
         quant: Box<dyn Quantizer + Send + Sync>,
         index: InvertedMultiIndex,
-        table: Vec<f32>,
+        table: impl Into<crate::util::Storage<f32>>,
         d: usize,
     ) -> Self {
         let n = index.n_classes();
+        let table = table.into();
         assert_eq!(table.len(), n * d, "table must be [n, d]");
         ExactMidxCore { n, d, quant, index, table, cost: CostEwma::new() }
     }

@@ -92,6 +92,8 @@ pub struct Scratch {
     pub total: f64,
     /// log partition function (exact MIDX)
     pub log_z: f32,
+    /// u8 ADC lookup tables for the SIMD fast-scan path (MIDX)
+    pub adc: crate::quant::adc::AdcLut,
 }
 
 impl Scratch {

@@ -6,11 +6,16 @@
 //!
 //! * [`snapshot`] — a versioned, checksummed binary format that persists a
 //!   trained MIDX core losslessly: a loaded core is draw-for-draw
-//!   bit-identical to the in-memory one.
-//! * [`query`] — the [`query::QueryEngine`] (exact-reranked beam top-k +
-//!   the training-time proposal draws, both batched over the persistent
-//!   [`crate::coordinator::WorkerPool`]) and the [`query::MicroBatcher`]
-//!   that coalesces concurrent callers into single pool dispatches.
+//!   bit-identical to the in-memory one. Version 2 64-byte-aligns every
+//!   array section, so [`snapshot::Snapshot::read_mmap`] can serve a
+//!   snapshot **zero-copy** straight out of an `mmap(2)`-ed file
+//!   ([`snapshot::LoadMode`]) — load time is O(header) instead of
+//!   O(file), and draws/top-k stay bit-identical to an eager load.
+//! * [`query`] — the [`query::QueryEngine`] (u8-fast-scanned, exact-
+//!   reranked beam top-k + the training-time proposal draws, both batched
+//!   over the persistent [`crate::coordinator::WorkerPool`]) and the
+//!   [`query::MicroBatcher`] that coalesces concurrent callers into
+//!   single pool dispatches.
 //! * [`server`] — a line-delimited JSON frontend (stdin or TCP, no new
 //!   dependencies) with per-request latency accounting and a p50/p95/p99 +
 //!   QPS report.
@@ -42,4 +47,4 @@ pub use query::{MicroBatcher, QueryEngine, Reply, Request};
 #[cfg(unix)]
 pub use reactor::{serve_reactor, Reactor, ReactorConfig, ReactorCounters, ReactorHandle};
 pub use server::{handle_line, serve_stdin, serve_tcp, LatencyRecorder};
-pub use snapshot::{AliasParts, Snapshot, SnapshotKind};
+pub use snapshot::{AliasParts, LoadMode, Snapshot, SnapshotKind};

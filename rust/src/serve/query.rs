@@ -1,15 +1,22 @@
 //! Query engine over a loaded snapshot: batched top-k retrieval, proposal
 //! draws, and dynamic micro-batching for concurrent callers.
 //!
-//! * **`top_k`** — beam search over the codeword-pair grid: buckets are
-//!   ranked by their stage score `s1[k1] + s2[k2]` (the MIDX approximation
-//!   of every member's score), members of the best buckets are gathered
-//!   into a shortlist of `beam_factor · k` candidates, and the shortlist is
-//!   re-ranked by the **exact** inner product against the stored class
-//!   table. With `beam_factor` large enough to cover all classes this
-//!   equals brute force (pinned by `rust/tests/serve.rs`); at the default
-//!   it trades a bounded amount of recall for O(K² log K² + beam·D) per
-//!   query instead of O(N·D).
+//! * **`top_k`** — beam search over the codeword-pair grid: the per-query
+//!   stage score tables are quantized to u8 once ([`crate::quant::adc`]),
+//!   all K² bucket scores `s1[k1] + s2[k2]` are materialized with wide
+//!   integer SIMD ([`scan_grid`]), buckets are ranked by a 256-bin
+//!   counting sort (quantized score descending, bucket id ascending — no
+//!   float comparator in the hot loop), members of the best buckets are
+//!   gathered into a shortlist of `beam_factor · k` candidates, and the
+//!   shortlist is re-ranked by the **exact** f32 inner product against the
+//!   stored class table — so the ≤ one-step quantization error can only
+//!   perturb which *candidates* enter the beam, never their final scores
+//!   or order. Integer adds are exact at every SIMD tier, so top-k answers
+//!   are bit-identical between AVX2, SSE and pure-scalar machines (pinned
+//!   by `rust/tests/serve.rs`). With `beam_factor` large enough to cover
+//!   all classes this equals brute force; at the default it trades a
+//!   bounded amount of recall for O(K² + beam·D) per query instead of
+//!   O(N·D).
 //! * **`sample`** — the training-time proposal draws, verbatim: the loaded
 //!   core goes through [`crate::sampler::sample_batch_with`], so served
 //!   draws are bit-identical to the in-memory sampler for any thread count.
@@ -33,24 +40,30 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::WorkerPool;
 use crate::index::InvertedMultiIndex;
+use crate::quant::adc::{scan_grid, AdcLut};
 use crate::quant::Quantizer;
 use crate::sampler::batch::auto_threads;
 use crate::sampler::midx::{ExactMidxCore, MidxCore};
 use crate::sampler::{sample_batch_with, SamplerCore, Scratch};
-use crate::serve::snapshot::{Snapshot, SnapshotKind};
+use crate::serve::snapshot::{LoadMode, Snapshot, SnapshotKind};
 use crate::util::math::dot;
-use crate::util::Rng;
+use crate::util::{Rng, Storage};
 
 /// Default shortlist size as a multiple of k: the beam gathers
 /// `beam_factor · k` candidates before the exact re-rank.
 pub const DEFAULT_BEAM_FACTOR: usize = 4;
 
-/// Reusable per-thread buffers for the top-k path (bucket ranking and the
-/// candidate shortlist), so batched queries do not reallocate per row.
+/// Reusable per-thread buffers for the top-k path (the u8 fast-scan state,
+/// bucket ranking and the candidate shortlist), so batched queries do not
+/// reallocate per row.
 #[derive(Clone, Debug, Default)]
 pub struct TopKScratch {
-    /// (stage score, bucket id) for every occupied bucket
-    buckets: Vec<(f32, u32)>,
+    /// per-query u8 LUT state: quantized stage tables + the scanned grid
+    lut: AdcLut,
+    /// 256-bin histogram / running starts for the counting sort
+    hist: Vec<usize>,
+    /// occupied bucket ids, best quantized score first (ties: lower id)
+    order: Vec<u32>,
     /// (exact score, class id) shortlist being re-ranked
     cand: Vec<(f32, u32)>,
 }
@@ -96,13 +109,18 @@ pub struct QueryEngine {
     kind: SnapshotKind,
     served: ServedCore,
     /// exact re-rank table for the fast-MIDX kinds (moved, not copied,
-    /// out of the snapshot); empty for exact-midx, whose core owns the
-    /// table itself (see `rerank_table`)
-    table: Vec<f32>,
+    /// out of the snapshot — still a zero-copy mmap view if that is how
+    /// the snapshot was loaded); empty for exact-midx, whose core owns
+    /// the table itself (see `rerank_table`)
+    table: Storage<f32>,
     n: usize,
     d: usize,
     pool: Option<WorkerPool>,
     beam_factor: usize,
+    /// how the backing snapshot was materialized (reported by `info`)
+    load_mode: LoadMode,
+    /// wall-clock milliseconds the snapshot load took (0 = not recorded)
+    load_millis: f64,
     /// optional cheap static proposal served alongside the primary (the
     /// standby distribution a deployment can answer from while the MIDX
     /// core is refreshing)
@@ -134,7 +152,7 @@ impl QueryEngine {
             }
             SnapshotKind::ExactMidx => (
                 ServedCore::Exact(ExactMidxCore::from_parts(quant, index, snap.table, d)),
-                Vec::new(),
+                Storage::default(),
             ),
             _ => unreachable!("static kinds rejected above"),
         };
@@ -148,8 +166,48 @@ impl QueryEngine {
             d,
             pool,
             beam_factor: DEFAULT_BEAM_FACTOR,
+            load_mode: LoadMode::Eager,
+            load_millis: 0.0,
             fallback: None,
         })
+    }
+
+    /// Record how the backing snapshot was materialized (load mode + wall
+    /// time) so the serving frontends can report it (`info` op, startup
+    /// log). An engine that is never told assumes an eager load.
+    pub fn set_load_info(&mut self, mode: LoadMode, millis: f64) {
+        self.load_mode = mode;
+        self.load_millis = millis;
+    }
+
+    /// How the backing snapshot was materialized.
+    pub fn load_mode(&self) -> LoadMode {
+        self.load_mode
+    }
+
+    /// Wall-clock milliseconds the snapshot load took (0 = not recorded).
+    pub fn load_millis(&self) -> f64 {
+        self.load_millis
+    }
+
+    /// Opt the *sampling* path into the u8 ADC fast proposal
+    /// ([`MidxCore::set_fast_scan`]); top-k is unaffected — it always
+    /// fast-scans its beam and re-ranks exactly. Returns the effective
+    /// setting: false for exact-midx (its decomposition has no bucket
+    /// grid to scan) and for K > 256.
+    pub fn set_fast_sample(&mut self, on: bool) -> bool {
+        match &mut self.served {
+            ServedCore::Midx(c) => c.set_fast_scan(on),
+            ServedCore::Exact(_) => false,
+        }
+    }
+
+    /// Whether the sampling path is on the u8 ADC fast proposal.
+    pub fn fast_sample(&self) -> bool {
+        match &self.served {
+            ServedCore::Midx(c) => c.fast_scan(),
+            ServedCore::Exact(_) => false,
+        }
     }
 
     /// Attach a static snapshot (uniform, unigram) as the engine's cheap
@@ -247,21 +305,44 @@ impl QueryEngine {
         quant.stage1_scores(z, &mut scratch.s1);
         quant.stage2_scores(z, &mut scratch.s2);
 
-        tk.buckets.clear();
-        for k1 in 0..kq {
-            let base = scratch.s1[k1];
-            for k2 in 0..kq {
-                let b = k1 * kq + k2;
-                if index.sizes[b] > 0.0 {
-                    tk.buckets.push((base + scratch.s2[k2], b as u32));
-                }
+        // u8 fast-scan: quantize the stage tables once, materialize all K²
+        // bucket scores with wide integer adds (byte-identical at every
+        // SIMD tier), then rank occupied buckets by (quantized score desc,
+        // bucket id asc) with a counting sort — no float comparator, no
+        // O(K² log K²) sort
+        let nb = kq * kq;
+        tk.lut.quantize(&scratch.s1, &scratch.s2);
+        tk.lut.grid.resize(nb, 0);
+        scan_grid(&tk.lut.q1, &tk.lut.q2, &mut tk.lut.grid);
+
+        tk.hist.clear();
+        tk.hist.resize(256, 0);
+        let mut occupied = 0;
+        for b in 0..nb {
+            if index.sizes[b] > 0.0 {
+                tk.hist[tk.lut.grid[b] as usize] += 1;
+                occupied += 1;
             }
         }
-        tk.buckets.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        // descending scores: bin q starts after every bin above it
+        let mut start = 0usize;
+        for q in (0..256).rev() {
+            let count = tk.hist[q];
+            tk.hist[q] = start;
+            start += count;
+        }
+        tk.order.resize(occupied, 0);
+        for b in 0..nb {
+            if index.sizes[b] > 0.0 {
+                let slot = &mut tk.hist[tk.lut.grid[b] as usize];
+                tk.order[*slot] = b as u32;
+                *slot += 1;
+            }
+        }
 
         let target = self.beam_factor.saturating_mul(k).max(k).min(self.n);
         tk.cand.clear();
-        for &(_, b) in tk.buckets.iter() {
+        for &b in tk.order.iter() {
             for &c in index.bucket_flat(b as usize) {
                 let i = c as usize;
                 tk.cand.push((dot(z, &table[i * self.d..(i + 1) * self.d]), c));

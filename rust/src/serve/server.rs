@@ -266,6 +266,9 @@ pub fn info_json(engine: &QueryEngine) -> Json {
     m.insert("n".into(), Json::Num(engine.n_classes() as f64));
     m.insert("d".into(), Json::Num(engine.dim() as f64));
     m.insert("workers".into(), Json::Num(engine.workers() as f64));
+    m.insert("load_mode".into(), Json::Str(engine.load_mode().name().to_string()));
+    m.insert("load_ms".into(), Json::Num(engine.load_millis()));
+    m.insert("fast_sample".into(), Json::Bool(engine.fast_sample()));
     match engine.fallback_kind() {
         Some(kind) => m.insert("fallback".into(), Json::Str(kind.name().to_string())),
         None => m.insert("fallback".into(), Json::Null),

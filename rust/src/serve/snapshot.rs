@@ -19,7 +19,7 @@
 //! ```text
 //! offset  size  field
 //! 0       8     magic  "MIDXSNAP"
-//! 8       4     format version (this build reads 1)
+//! 8       4     format version (this build writes 2, reads 1 and 2)
 //! 12      1     sampler kind   (0 midx-pq, 1 midx-rq, 2 exact-midx,
 //!                               3 uniform, 4 unigram)
 //! 13      1     quantizer family (0 product, 1 residual; must be 0 for
@@ -31,7 +31,7 @@
 //! 40      8     D1 (stage-1 codeword dimension; D for residual; 0 for
 //!                   static kinds)
 //! 48      8     payload length in bytes
-//! 56      8     FNV-1a64 checksum of the payload
+//! 56      8     FNV-1a64 checksum of the payload (padding included)
 //! 64      …     payload, by kind:
 //!               MIDX   : c1 · c2 · assign1 · assign2 · offsets · members
 //!                        · table · distortion (f64) · meta len (u32) · meta
@@ -40,12 +40,28 @@
 //!                        · meta len (u32) · meta JSON
 //! ```
 //!
-//! Every section length is derivable from the header, so truncation,
-//! header corruption, and version skew are all rejected with a specific
-//! error before any structural parsing happens; the checksum catches
-//! payload corruption, and a final structural pass (codes in range, CSR a
-//! partition consistent with the codes; alias targets in range, p a
-//! distribution) catches a well-formed file that lies about its contents.
+//! **Version 2** (current) zero-pads every *array* section to a
+//! [`SECTION_ALIGN`]-byte boundary relative to the payload start. Since the
+//! payload begins at file offset [`HEADER_LEN`] (itself a multiple of the
+//! alignment), every array lands on an aligned file offset — which is what
+//! lets [`Snapshot::read_mmap`] hand out `&[f32]`/`&[u32]` views borrowed
+//! straight from an `mmap(2)`-ed file with no copying and no realignment.
+//! The trailing scalar fields (distortion, meta) stay packed; they are
+//! parsed eagerly in both modes. **Version 1** (legacy) packed all sections
+//! back to back; this build still reads it eagerly and can still write it
+//! ([`Snapshot::to_bytes_with`]) for consumers pinned to the old layout,
+//! but the zero-copy loader requires version 2.
+//!
+//! Every section offset is derivable from the header through one shared
+//! layout cursor (writer, eager parser, and mmap borrower all use it, so
+//! they cannot disagree), and truncation, header corruption, and version
+//! skew are all rejected with a specific error before any structural
+//! parsing happens. The checksum catches payload corruption on the eager
+//! path; the mmap path skips it by design (checksumming would touch every
+//! page, forfeiting the point of lazy loading) and relies on the header +
+//! structural validation (codes in range, CSR a partition consistent with
+//! the codes; alias targets in range, p a distribution), which also
+//! catches a well-formed file that lies about its contents.
 
 use std::path::Path;
 
@@ -57,16 +73,57 @@ use crate::sampler::midx::{ExactMidxCore, MidxCore};
 use crate::sampler::uniform::UniformCore;
 use crate::sampler::unigram::UnigramCore;
 use crate::sampler::{AliasTable, SamplerCore};
-use crate::util::Json;
+use crate::util::{Json, Storage};
 
 /// File magic: the first 8 bytes of every snapshot.
 pub const MAGIC: [u8; 8] = *b"MIDXSNAP";
 
-/// Snapshot format version this build writes and reads.
-pub const VERSION: u32 = 1;
+/// Snapshot format version this build writes ([`Snapshot::from_bytes`]
+/// also reads version 1, the legacy packed layout).
+pub const VERSION: u32 = 2;
 
 /// Fixed header size in bytes (payload starts here).
 pub const HEADER_LEN: usize = 64;
+
+/// Byte alignment of every array section in a version-2 payload, relative
+/// to the payload start. [`HEADER_LEN`] is a multiple of it, so aligned
+/// payload offsets are aligned file offsets too — the invariant the
+/// zero-copy loader's `&[f32]`/`&[u32]` borrows rest on.
+pub const SECTION_ALIGN: usize = 64;
+
+/// How [`Snapshot::read_with`] materializes payload sections.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LoadMode {
+    /// Read the whole file, verify the payload checksum, and copy every
+    /// section into owned vectors. Works for every version and target.
+    #[default]
+    Eager,
+    /// `mmap(2)` the file and borrow the array sections zero-copy
+    /// (version ≥ 2 on little-endian unix; static kinds and other targets
+    /// quietly fall back to eager parsing). Skips the payload checksum —
+    /// verifying it would fault in every page, forfeiting lazy loading —
+    /// but keeps all header, truncation and structural validation.
+    Mmap,
+}
+
+impl LoadMode {
+    /// CLI / reporting name ("eager" | "mmap").
+    pub fn name(self) -> &'static str {
+        match self {
+            LoadMode::Eager => "eager",
+            LoadMode::Mmap => "mmap",
+        }
+    }
+
+    /// Parse a CLI argument ("eager" | "mmap").
+    pub fn parse(s: &str) -> Option<LoadMode> {
+        match s {
+            "eager" => Some(LoadMode::Eager),
+            "mmap" => Some(LoadMode::Mmap),
+            _ => None,
+        }
+    }
+}
 
 /// Which sampler a snapshot serves (decides the core reassembled on load).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -149,10 +206,175 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
+/// Sequential payload-layout cursor shared by the writer, the eager
+/// parser's size pre-check, [`Snapshot::size_bytes`] and the mmap
+/// borrower, so no two of them can disagree about where a section lives.
+/// Version 1 packs sections back to back; version ≥ 2 pads every array
+/// section to [`SECTION_ALIGN`]. Offsets accumulate in u128 so a
+/// corrupted header's dims cannot overflow the arithmetic.
+struct Layout {
+    version: u32,
+    at: u128,
+}
+
+impl Layout {
+    fn new(version: u32) -> Layout {
+        Layout { version, at: 0 }
+    }
+
+    /// Offset of the next array section holding `bytes` payload bytes.
+    fn section(&mut self, bytes: u128) -> u128 {
+        if self.version >= 2 {
+            self.at = self.at.next_multiple_of(SECTION_ALIGN as u128);
+        }
+        let off = self.at;
+        self.at += bytes;
+        off
+    }
+
+    /// Offset of a raw scalar/meta field — never padded in any version.
+    fn raw(&mut self, bytes: u128) -> u128 {
+        let off = self.at;
+        self.at += bytes;
+        off
+    }
+}
+
+/// Offsets of the seven MIDX array sections and trailing scalars under
+/// `version`'s packing (payload-relative).
+struct MidxLayout {
+    c1: u128,
+    c2: u128,
+    assign1: u128,
+    assign2: u128,
+    offsets: u128,
+    members: u128,
+    table: u128,
+    distortion: u128,
+    meta_len: u128,
+    /// fixed payload length: everything up to and including the 4-byte
+    /// meta length word (the minimum a plausible payload must hold)
+    fixed: u128,
+}
+
+fn midx_layout(version: u32, n: u128, d: u128, k: u128, d1: u128, dc2: u128) -> MidxLayout {
+    let mut l = Layout::new(version);
+    let c1 = l.section(4 * k * d1);
+    let c2 = l.section(4 * k * dc2);
+    let assign1 = l.section(4 * n);
+    let assign2 = l.section(4 * n);
+    let offsets = l.section(4 * (k * k + 1));
+    let members = l.section(4 * n);
+    let table = l.section(4 * n * d);
+    let distortion = l.raw(8);
+    let meta_len = l.raw(4);
+    let fixed = l.at;
+    MidxLayout { c1, c2, assign1, assign2, offsets, members, table, distortion, meta_len, fixed }
+}
+
+/// Fixed payload length of the static kinds under `version`'s packing.
+fn static_fixed(version: u32, kind: SnapshotKind, n: u128) -> u128 {
+    let mut l = Layout::new(version);
+    if kind == SnapshotKind::Unigram {
+        l.section(4 * n); // prob
+        l.section(4 * n); // alias
+        l.section(4 * n); // p
+    }
+    l.raw(4); // meta length
+    l.at
+}
+
+/// Parsed and plausibility-checked snapshot header: magic, version range,
+/// kind/family tags, dims, and the payload/truncation accounting — all the
+/// checks that are shared between the eager and mmap loaders.
+struct Header {
+    version: u32,
+    kind: SnapshotKind,
+    family: QuantKind,
+    n: usize,
+    d: usize,
+    k: usize,
+    d1: usize,
+    payload_len: usize,
+    checksum: u64,
+}
+
+impl Header {
+    /// Stage-2 codeword dimension under this header's family.
+    fn dc2(&self) -> usize {
+        match self.family {
+            QuantKind::Product => self.d.saturating_sub(self.d1),
+            QuantKind::Residual => self.d,
+        }
+    }
+}
+
+fn parse_header(bytes: &[u8]) -> Result<Header> {
+    if bytes.len() < HEADER_LEN {
+        bail!(
+            "snapshot truncated: {} bytes is smaller than the {HEADER_LEN}-byte header",
+            bytes.len()
+        );
+    }
+    if bytes[..8] != MAGIC {
+        bail!("not a MIDX snapshot (bad magic)");
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if !(1..=VERSION).contains(&version) {
+        bail!("snapshot version {version} unsupported (this build reads versions 1..={VERSION})");
+    }
+    let kind = SnapshotKind::from_tag(bytes[12])?;
+    let family = match bytes[13] {
+        0 => QuantKind::Product,
+        1 => QuantKind::Residual,
+        t => bail!("unknown quantizer family tag {t} (corrupted header?)"),
+    };
+    let header_u64 = |at: usize| u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap());
+    let n = header_u64(16) as usize;
+    let d = header_u64(24) as usize;
+    let k = header_u64(32) as usize;
+    let d1 = header_u64(40) as usize;
+    let payload_len = header_u64(48) as usize;
+    let checksum = header_u64(56);
+    if kind.is_static() {
+        if n == 0 || d == 0 || k != 0 || d1 != 0 {
+            bail!(
+                "implausible static-snapshot header dims n={n} d={d} k={k} d1={d1} \
+                 (corrupted header?)"
+            );
+        }
+        if bytes[13] != 0 {
+            bail!("static snapshot carries a quantizer family tag (corrupted header?)");
+        }
+    } else if n == 0 || d < 2 || k == 0 || d1 == 0 || d1 > d {
+        bail!("implausible header dims n={n} d={d} k={k} d1={d1} (corrupted header?)");
+    }
+    let h = Header { version, kind, family, n, d, k, d1, payload_len, checksum };
+    // fixed payload size up to the variable-length meta blob, computed in
+    // u128 so a corrupted header cannot overflow (or allocate) here
+    let fixed = if kind.is_static() {
+        static_fixed(version, kind, n as u128)
+    } else {
+        midx_layout(version, n as u128, d as u128, k as u128, d1 as u128, h.dc2() as u128).fixed
+    };
+    if (payload_len as u128) < fixed {
+        bail!(
+            "snapshot payload length {payload_len} is smaller than the {fixed} bytes its \
+             header dims require (corrupted header?)"
+        );
+    }
+    let actual = bytes.len() - HEADER_LEN;
+    if actual != payload_len {
+        bail!("snapshot truncated: header wants {payload_len} payload bytes, file has {actual}");
+    }
+    Ok(h)
+}
+
 /// A deserialized (or to-be-serialized) sampler snapshot: the full state a
-/// query-time process needs, as plain vectors. Use [`Snapshot::capture`] to
-/// take one from a live core, [`Snapshot::build_core`] to reassemble a
-/// servable [`SamplerCore`] from it.
+/// query-time process needs. Array sections live in [`Storage`] — owned
+/// vectors from [`Snapshot::capture`] or an eager load, zero-copy views
+/// from [`Snapshot::read_mmap`]. Use [`Snapshot::build_core`] to
+/// reassemble a servable [`SamplerCore`] from it.
 #[derive(Clone, Debug)]
 pub struct Snapshot {
     /// which sampler this snapshot serves
@@ -168,19 +390,19 @@ pub struct Snapshot {
     /// stage-1 codeword dimension (D/2 for product, D for residual)
     pub d1: usize,
     /// stage-1 codebook, [K, D1] row-major
-    pub c1: Vec<f32>,
+    pub c1: Storage<f32>,
     /// stage-2 codebook, [K, D−D1] (product) or [K, D] (residual)
-    pub c2: Vec<f32>,
+    pub c2: Storage<f32>,
     /// stage-1 code per class, [N]
-    pub assign1: Vec<u32>,
+    pub assign1: Storage<u32>,
     /// stage-2 code per class, [N]
-    pub assign2: Vec<u32>,
+    pub assign2: Storage<u32>,
     /// CSR bucket offsets, [K²+1]
-    pub offsets: Vec<u32>,
+    pub offsets: Storage<u32>,
     /// CSR bucket members (class ids grouped by bucket), [N]
-    pub members: Vec<u32>,
+    pub members: Storage<u32>,
     /// class-embedding table, [N, D] row-major (exact re-rank scores)
-    pub table: Vec<f32>,
+    pub table: Storage<f32>,
     /// quantizer distortion at capture time (diagnostic)
     pub distortion: f64,
     /// persisted alias table (`Some` iff `kind` is [`SnapshotKind::Unigram`])
@@ -223,13 +445,13 @@ impl Snapshot {
             d,
             k,
             d1,
-            c1,
-            c2,
-            assign1: a1.to_vec(),
-            assign2: a2.to_vec(),
+            c1: c1.into(),
+            c2: c2.into(),
+            assign1: a1.to_vec().into(),
+            assign2: a2.to_vec().into(),
             offsets: index.offsets.clone(),
             members: index.members.clone(),
-            table: table.to_vec(),
+            table: table.to_vec().into(),
             distortion: quant.distortion(),
             alias: None,
             meta: meta_for(kind),
@@ -249,13 +471,13 @@ impl Snapshot {
             d,
             k: 0,
             d1: 0,
-            c1: Vec::new(),
-            c2: Vec::new(),
-            assign1: Vec::new(),
-            assign2: Vec::new(),
-            offsets: Vec::new(),
-            members: Vec::new(),
-            table: Vec::new(),
+            c1: Storage::default(),
+            c2: Storage::default(),
+            assign1: Storage::default(),
+            assign2: Storage::default(),
+            offsets: Storage::default(),
+            members: Storage::default(),
+            table: Storage::default(),
             distortion: 0.0,
             alias: None,
             meta: meta_for(SnapshotKind::Uniform),
@@ -274,13 +496,13 @@ impl Snapshot {
             d,
             k: 0,
             d1: 0,
-            c1: Vec::new(),
-            c2: Vec::new(),
-            assign1: Vec::new(),
-            assign2: Vec::new(),
-            offsets: Vec::new(),
-            members: Vec::new(),
-            table: Vec::new(),
+            c1: Storage::default(),
+            c2: Storage::default(),
+            assign1: Storage::default(),
+            assign2: Storage::default(),
+            offsets: Storage::default(),
+            members: Storage::default(),
+            table: Storage::default(),
             distortion: 0.0,
             alias: Some(AliasParts {
                 prob: prob.to_vec(),
@@ -299,25 +521,54 @@ impl Snapshot {
         }
     }
 
-    /// Serialize to the versioned binary format (header + checksummed
+    /// Serialize to the current format version (header + checksummed
     /// payload; see the module docs for the kind-dependent layout).
     pub fn to_bytes(&self) -> Vec<u8> {
+        self.to_bytes_with(VERSION)
+    }
+
+    /// Serialize at a specific format version: 2 is the current aligned
+    /// layout, 1 the legacy packed layout (kept writable so operators can
+    /// export snapshots readable by older builds; the zero-copy loader
+    /// needs version 2).
+    pub fn to_bytes_with(&self, version: u32) -> Vec<u8> {
+        assert!(
+            (1..=VERSION).contains(&version),
+            "snapshot version {version} out of the writable range 1..={VERSION}"
+        );
+        // zero-pad to the next section boundary (v2+); the padding is part
+        // of the payload, so the checksum covers it
+        let align = |p: &mut Vec<u8>| {
+            if version >= 2 {
+                p.resize(p.len().next_multiple_of(SECTION_ALIGN), 0);
+            }
+        };
         let mut payload = Vec::new();
         match self.kind {
             SnapshotKind::Uniform => {}
             SnapshotKind::Unigram => {
                 let a = self.alias.as_ref().expect("unigram snapshot carries an alias table");
+                align(&mut payload);
                 put_f32s(&mut payload, &a.prob);
+                align(&mut payload);
                 put_u32s(&mut payload, &a.alias);
+                align(&mut payload);
                 put_f32s(&mut payload, &a.p);
             }
             _ => {
+                align(&mut payload);
                 put_f32s(&mut payload, &self.c1);
+                align(&mut payload);
                 put_f32s(&mut payload, &self.c2);
+                align(&mut payload);
                 put_u32s(&mut payload, &self.assign1);
+                align(&mut payload);
                 put_u32s(&mut payload, &self.assign2);
+                align(&mut payload);
                 put_u32s(&mut payload, &self.offsets);
+                align(&mut payload);
                 put_u32s(&mut payload, &self.members);
+                align(&mut payload);
                 put_f32s(&mut payload, &self.table);
                 payload.extend_from_slice(&self.distortion.to_le_bytes());
             }
@@ -328,7 +579,7 @@ impl Snapshot {
 
         let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
         out.extend_from_slice(&MAGIC);
-        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&version.to_le_bytes());
         out.push(self.kind.tag());
         out.push(match self.family {
             QuantKind::Product => 0u8,
@@ -346,88 +597,25 @@ impl Snapshot {
         out
     }
 
-    /// Parse and fully validate a snapshot: magic, version, section sizes,
-    /// checksum, then structure (codes in range, CSR a partition of the
-    /// classes consistent with the codes). Every rejection names what is
-    /// wrong with the file.
+    /// Parse and fully validate a snapshot (any readable version): magic,
+    /// version, section sizes, checksum, then structure (codes in range,
+    /// CSR a partition of the classes consistent with the codes). Every
+    /// rejection names what is wrong with the file.
     pub fn from_bytes(bytes: &[u8]) -> Result<Snapshot> {
-        if bytes.len() < HEADER_LEN {
-            bail!(
-                "snapshot truncated: {} bytes is smaller than the {HEADER_LEN}-byte header",
-                bytes.len()
-            );
-        }
-        if bytes[..8] != MAGIC {
-            bail!("not a MIDX snapshot (bad magic)");
-        }
-        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
-        if version != VERSION {
-            bail!("snapshot version {version} unsupported (this build reads version {VERSION})");
-        }
-        let kind = SnapshotKind::from_tag(bytes[12])?;
-        let family = match bytes[13] {
-            0 => QuantKind::Product,
-            1 => QuantKind::Residual,
-            t => bail!("unknown quantizer family tag {t} (corrupted header?)"),
-        };
-        let header_u64 = |at: usize| u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap());
-        let n = header_u64(16) as usize;
-        let d = header_u64(24) as usize;
-        let k = header_u64(32) as usize;
-        let d1 = header_u64(40) as usize;
-        let payload_len = header_u64(48) as usize;
-        let checksum = header_u64(56);
-        if kind.is_static() {
-            if n == 0 || d == 0 || k != 0 || d1 != 0 {
-                bail!(
-                    "implausible static-snapshot header dims n={n} d={d} k={k} d1={d1} \
-                     (corrupted header?)"
-                );
-            }
-            if bytes[13] != 0 {
-                bail!("static snapshot carries a quantizer family tag (corrupted header?)");
-            }
-        } else if n == 0 || d < 2 || k == 0 || d1 == 0 || d1 > d {
-            bail!("implausible header dims n={n} d={d} k={k} d1={d1} (corrupted header?)");
-        }
-        let dc2 = match family {
-            QuantKind::Product => d.saturating_sub(d1),
-            QuantKind::Residual => d,
-        };
-        // fixed payload size up to the variable-length meta blob, computed
-        // in u128 so a corrupted header cannot overflow (or allocate) here
-        let fixed: u128 = match kind {
-            SnapshotKind::Uniform => 4,
-            SnapshotKind::Unigram => 4 * 3 * n as u128 + 4,
-            _ => {
-                4 * (k as u128) * (d1 as u128 + dc2 as u128)
-                    + 4 * 3 * n as u128
-                    + 4 * ((k as u128) * (k as u128) + 1)
-                    + 4 * (n as u128) * (d as u128)
-                    + 8
-                    + 4
-            }
-        };
-        if (payload_len as u128) < fixed {
-            bail!(
-                "snapshot payload length {payload_len} is smaller than the {fixed} bytes its \
-                 header dims require (corrupted header?)"
-            );
-        }
-        let actual = bytes.len() - HEADER_LEN;
-        if actual != payload_len {
-            bail!("snapshot truncated: header wants {payload_len} payload bytes, file has {actual}");
-        }
+        let h = parse_header(bytes)?;
+        let (kind, family) = (h.kind, h.family);
+        let (n, d, k, d1, dc2) = (h.n, h.d, h.k, h.d1, h.dc2());
         let payload = &bytes[HEADER_LEN..];
         let computed = fnv1a64(payload);
-        if computed != checksum {
+        if computed != h.checksum {
+            let checksum = h.checksum;
             bail!(
                 "snapshot checksum mismatch (corrupted payload): stored {checksum:#018x}, \
                  computed {computed:#018x}"
             );
         }
 
-        let mut r = Reader { b: payload, i: 0 };
+        let mut r = Reader { b: payload, i: 0, version: h.version };
         let (mut c1, mut c2) = (Vec::new(), Vec::new());
         let (mut assign1, mut assign2) = (Vec::new(), Vec::new());
         let (mut offsets, mut members, mut table) = (Vec::new(), Vec::new(), Vec::new());
@@ -468,13 +656,13 @@ impl Snapshot {
             d,
             k,
             d1,
-            c1,
-            c2,
-            assign1,
-            assign2,
-            offsets,
-            members,
-            table,
+            c1: c1.into(),
+            c2: c2.into(),
+            assign1: assign1.into(),
+            assign2: assign2.into(),
+            offsets: offsets.into(),
+            members: members.into(),
+            table: table.into(),
             distortion,
             alias,
             meta,
@@ -623,7 +811,8 @@ impl Snapshot {
             .with_context(|| format!("writing snapshot to {}", path.display()))
     }
 
-    /// Read and validate a snapshot from `path`.
+    /// Read and validate a snapshot from `path` (eager: full read, full
+    /// checksum, owned sections).
     pub fn read(path: &Path) -> Result<Snapshot> {
         let bytes = std::fs::read(path)
             .with_context(|| format!("reading snapshot from {}", path.display()))?;
@@ -631,25 +820,146 @@ impl Snapshot {
             .with_context(|| format!("loading snapshot {}", path.display()))
     }
 
-    /// Serialized size in bytes (header + payload).
+    /// Read a snapshot in the requested [`LoadMode`].
+    pub fn read_with(path: &Path, mode: LoadMode) -> Result<Snapshot> {
+        match mode {
+            LoadMode::Eager => Snapshot::read(path),
+            LoadMode::Mmap => Snapshot::read_mmap(path),
+        }
+    }
+
+    /// Zero-copy load: `mmap(2)` the file and borrow every array section
+    /// straight out of the mapping (version ≥ 2 only — the aligned layout
+    /// is what makes the borrows legal). Header, truncation and structural
+    /// validation all still run; the payload checksum is skipped (see
+    /// [`LoadMode::Mmap`]). Static kinds are parsed eagerly from the
+    /// mapping (their payloads are tiny); non-unix or big-endian targets
+    /// fall back to [`Snapshot::read`] entirely.
+    pub fn read_mmap(path: &Path) -> Result<Snapshot> {
+        #[cfg(all(unix, target_endian = "little"))]
+        {
+            Snapshot::read_mmap_impl(path)
+                .with_context(|| format!("loading snapshot {} (mmap)", path.display()))
+        }
+        #[cfg(not(all(unix, target_endian = "little")))]
+        {
+            Snapshot::read(path)
+        }
+    }
+
+    #[cfg(all(unix, target_endian = "little"))]
+    fn read_mmap_impl(path: &Path) -> Result<Snapshot> {
+        use crate::util::storage::MmapRegion;
+        use std::sync::Arc;
+
+        let region = Arc::new(MmapRegion::map(path)?);
+        let bytes = region.as_bytes();
+        let h = parse_header(bytes)?;
+        if h.version < 2 {
+            bail!(
+                "snapshot version {} predates the aligned layout the zero-copy loader needs: \
+                 re-export it with this build, or load it eagerly",
+                h.version
+            );
+        }
+        if h.kind.is_static() {
+            // static payloads are a few bytes of meta (plus a small alias
+            // table) — nothing to win by borrowing
+            return Snapshot::from_bytes(bytes);
+        }
+        let (n, d, k, d1, dc2) = (h.n, h.d, h.k, h.d1, h.dc2());
+        let lay = midx_layout(h.version, n as u128, d as u128, k as u128, d1 as u128, dc2 as u128);
+        // parse_header checked payload_len ≥ lay.fixed and the exact file
+        // length, so every fixed offset below is in range (usize-safe)
+        let at = |off: u128| HEADER_LEN + off as usize;
+        let c1 = Storage::mapped(Arc::clone(&region), at(lay.c1), k * d1)?;
+        let c2 = Storage::mapped(Arc::clone(&region), at(lay.c2), k * dc2)?;
+        let assign1 = Storage::mapped(Arc::clone(&region), at(lay.assign1), n)?;
+        let assign2 = Storage::mapped(Arc::clone(&region), at(lay.assign2), n)?;
+        let offsets = Storage::mapped(Arc::clone(&region), at(lay.offsets), k * k + 1)?;
+        let members = Storage::mapped(Arc::clone(&region), at(lay.members), n)?;
+        let table = Storage::mapped(Arc::clone(&region), at(lay.table), n * d)?;
+        let distortion = f64::from_le_bytes(
+            bytes[at(lay.distortion)..at(lay.distortion) + 8].try_into().unwrap(),
+        );
+        let meta_len = u32::from_le_bytes(
+            bytes[at(lay.meta_len)..at(lay.meta_len) + 4].try_into().unwrap(),
+        ) as usize;
+        let meta_at = at(lay.fixed);
+        let have = bytes.len() - meta_at;
+        if meta_len > have {
+            bail!("snapshot truncated inside meta blob: need {meta_len} bytes, have {have}");
+        }
+        if meta_len < have {
+            bail!("snapshot has {} trailing payload bytes", have - meta_len);
+        }
+        let meta_str = std::str::from_utf8(&bytes[meta_at..meta_at + meta_len])
+            .context("snapshot meta is not UTF-8")?;
+        let meta = Json::parse(meta_str)
+            .map_err(|e| anyhow!("snapshot meta is not valid JSON: {e}"))?;
+
+        let snap = Snapshot {
+            kind: h.kind,
+            family: h.family,
+            n,
+            d,
+            k,
+            d1,
+            c1,
+            c2,
+            assign1,
+            assign2,
+            offsets,
+            members,
+            table,
+            distortion,
+            alias: None,
+            meta,
+        };
+        snap.validate()?;
+        Ok(snap)
+    }
+
+    /// True when any array section still borrows from a mapped file — the
+    /// observable difference between the two load modes (an eager load, a
+    /// capture, or a fully copy-on-written snapshot all report false).
+    pub fn is_mapped(&self) -> bool {
+        self.c1.is_mapped()
+            || self.c2.is_mapped()
+            || self.assign1.is_mapped()
+            || self.assign2.is_mapped()
+            || self.offsets.is_mapped()
+            || self.members.is_mapped()
+            || self.table.is_mapped()
+    }
+
+    /// Serialized size in bytes (header + payload) at the current format
+    /// version, matching `to_bytes().len()` exactly.
     pub fn size_bytes(&self) -> usize {
-        // meta is re-rendered, matching to_bytes exactly
-        let body = match self.kind {
-            SnapshotKind::Uniform => 0,
+        let mut l = Layout::new(VERSION);
+        match self.kind {
+            SnapshotKind::Uniform => {}
             SnapshotKind::Unigram => {
                 let a = self.alias.as_ref().expect("unigram snapshot carries an alias table");
-                4 * (a.prob.len() + a.alias.len() + a.p.len())
+                l.section(4 * a.prob.len() as u128);
+                l.section(4 * a.alias.len() as u128);
+                l.section(4 * a.p.len() as u128);
             }
             _ => {
-                let floats = self.c1.len() + self.c2.len() + self.table.len();
-                let ints = self.assign1.len()
-                    + self.assign2.len()
-                    + self.offsets.len()
-                    + self.members.len();
-                4 * (floats + ints) + 8
+                l.section(4 * self.c1.len() as u128);
+                l.section(4 * self.c2.len() as u128);
+                l.section(4 * self.assign1.len() as u128);
+                l.section(4 * self.assign2.len() as u128);
+                l.section(4 * self.offsets.len() as u128);
+                l.section(4 * self.members.len() as u128);
+                l.section(4 * self.table.len() as u128);
+                l.raw(8);
             }
-        };
-        HEADER_LEN + body + 4 + self.meta.to_string().len()
+        }
+        l.raw(4);
+        // meta is re-rendered, matching to_bytes exactly
+        l.raw(self.meta.to_string().len() as u128);
+        HEADER_LEN + l.at as usize
     }
 }
 
@@ -673,10 +983,13 @@ fn put_u32s(out: &mut Vec<u8>, xs: &[u32]) {
 }
 
 /// Bounds-checked sequential payload reader: every over-read names the
-/// section it died in instead of panicking.
+/// section it died in instead of panicking. Array reads (`f32s`/`u32s`)
+/// skip to the next [`SECTION_ALIGN`] boundary first under version ≥ 2,
+/// mirroring the writer's padding; raw reads (`take`) never do.
 struct Reader<'a> {
     b: &'a [u8],
     i: usize,
+    version: u32,
 }
 
 impl<'a> Reader<'a> {
@@ -690,12 +1003,22 @@ impl<'a> Reader<'a> {
         Ok(s)
     }
 
+    fn align(&mut self, what: &str) -> Result<()> {
+        if self.version >= 2 {
+            let pad = self.i.next_multiple_of(SECTION_ALIGN) - self.i;
+            self.take(pad, what)?;
+        }
+        Ok(())
+    }
+
     fn f32s(&mut self, count: usize, what: &str) -> Result<Vec<f32>> {
+        self.align(what)?;
         let raw = self.take(count * 4, what)?;
         Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
     fn u32s(&mut self, count: usize, what: &str) -> Result<Vec<u32>> {
+        self.align(what)?;
         let raw = self.take(count * 4, what)?;
         Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
     }
@@ -755,9 +1078,9 @@ mod tests {
 
         // version skew
         let mut b = good.clone();
-        b[8] = 2;
+        b[8] = 3;
         let e = Snapshot::from_bytes(&b).unwrap_err().to_string();
-        assert!(e.contains("version 2 unsupported"), "{e}");
+        assert!(e.contains("version 3 unsupported"), "{e}");
 
         // truncated mid-payload
         let b = &good[..good.len() - 10];
@@ -774,6 +1097,158 @@ mod tests {
         b[at] ^= 0x40;
         let e = Snapshot::from_bytes(&b).unwrap_err().to_string();
         assert!(e.contains("checksum mismatch"), "{e}");
+    }
+
+    #[test]
+    fn legacy_v1_writes_packed_and_round_trips() {
+        let snap = small_snapshot(SamplerKind::MidxPq, 7);
+        let v1 = snap.to_bytes_with(1);
+        let v2 = snap.to_bytes();
+        assert!(v1.len() < v2.len(), "v1 is packed, v2 carries alignment padding");
+        let back = Snapshot::from_bytes(&v1).expect("v1 parse");
+        assert_eq!(back.c1, snap.c1);
+        assert_eq!(back.assign2, snap.assign2);
+        assert_eq!(back.offsets, snap.offsets);
+        assert_eq!(back.members, snap.members);
+        assert_eq!(back.table, snap.table);
+        assert_eq!(back.distortion.to_bits(), snap.distortion.to_bits());
+        // and the unigram alias sections survive v1 packing too
+        let alias = AliasTable::new(&[0.5, 1.5, 2.0]);
+        let usnap = Snapshot::capture_unigram(&alias, 4);
+        let uback = Snapshot::from_bytes(&usnap.to_bytes_with(1)).expect("v1 unigram parse");
+        let (a, b) = (usnap.alias.unwrap(), uback.alias.unwrap());
+        assert_eq!(a.prob, b.prob);
+        assert_eq!(a.alias, b.alias);
+        assert_eq!(a.p, b.p);
+    }
+
+    #[test]
+    fn v2_layout_aligns_every_array_section() {
+        let snap = small_snapshot(SamplerKind::MidxRq, 6);
+        let lay = midx_layout(
+            VERSION,
+            snap.n as u128,
+            snap.d as u128,
+            snap.k as u128,
+            snap.d1 as u128,
+            snap.dc2() as u128,
+        );
+        let a = SECTION_ALIGN as u128;
+        for (name, off) in [
+            ("c1", lay.c1),
+            ("c2", lay.c2),
+            ("assign1", lay.assign1),
+            ("assign2", lay.assign2),
+            ("offsets", lay.offsets),
+            ("members", lay.members),
+            ("table", lay.table),
+        ] {
+            assert_eq!(off % a, 0, "{name} section off {off} not {a}-byte aligned");
+        }
+        // HEADER_LEN itself must be a multiple of the alignment, or aligned
+        // payload offsets would not be aligned file offsets
+        assert_eq!(HEADER_LEN % SECTION_ALIGN, 0);
+        // the writer agrees with the layout cursor byte for byte
+        let bytes = snap.to_bytes();
+        assert_eq!(bytes.len(), snap.size_bytes());
+        let got = &bytes[HEADER_LEN + lay.table as usize..][..4];
+        assert_eq!(got, &snap.table[0].to_le_bytes());
+    }
+
+    #[cfg(unix)]
+    fn temp_snapshot_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("midx_snapshot_test_{}_{tag}.bin", std::process::id()))
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mmap_load_borrows_sections_and_matches_eager() {
+        for (kind, seed) in
+            [(SamplerKind::MidxPq, 31u64), (SamplerKind::MidxRq, 32), (SamplerKind::ExactMidx, 33)]
+        {
+            let snap = small_snapshot(kind, seed);
+            let path = temp_snapshot_path(&format!("map_{}", snap.kind.name()));
+            snap.write(&path).unwrap();
+            let eager = Snapshot::read_with(&path, LoadMode::Eager).unwrap();
+            let mapped = Snapshot::read_with(&path, LoadMode::Mmap).unwrap();
+            assert!(!eager.is_mapped());
+            assert!(mapped.is_mapped(), "midx sections should borrow from the mapping");
+            assert_eq!(mapped.c1, eager.c1);
+            assert_eq!(mapped.c2, eager.c2);
+            assert_eq!(mapped.assign1, eager.assign1);
+            assert_eq!(mapped.assign2, eager.assign2);
+            assert_eq!(mapped.offsets, eager.offsets);
+            assert_eq!(mapped.members, eager.members);
+            assert_eq!(mapped.table, eager.table);
+            assert_eq!(mapped.distortion.to_bits(), eager.distortion.to_bits());
+            assert_eq!(mapped.meta, eager.meta);
+            std::fs::remove_file(&path).ok();
+            // MAP_PRIVATE: the view outlives the unlinked file
+            assert_eq!(mapped.table[0].to_bits(), eager.table[0].to_bits());
+        }
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mmap_load_rejects_v1_and_truncation_with_path_context() {
+        let snap = small_snapshot(SamplerKind::MidxRq, 41);
+
+        let path = temp_snapshot_path("v1");
+        std::fs::write(&path, snap.to_bytes_with(1)).unwrap();
+        let e = format!("{:#}", Snapshot::read_mmap(&path).unwrap_err());
+        assert!(e.contains("predates"), "{e}");
+        assert!(e.contains("midx_snapshot_test"), "error should name the file: {e}");
+        assert!(e.contains("(mmap)"), "{e}");
+        // the eager loader still accepts the very same v1 file
+        Snapshot::read(&path).expect("eager v1 load");
+        std::fs::remove_file(&path).ok();
+
+        let path = temp_snapshot_path("trunc");
+        let bytes = snap.to_bytes();
+        std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+        let e = format!("{:#}", Snapshot::read_mmap(&path).unwrap_err());
+        assert!(e.contains("truncated"), "{e}");
+        assert!(e.contains("midx_snapshot_test"), "error should name the file: {e}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mmap_static_snapshots_fall_back_to_eager_parsing() {
+        let alias = AliasTable::new(&[1.0, 2.0, 3.0]);
+        let snap = Snapshot::capture_unigram(&alias, 4);
+        let path = temp_snapshot_path("static");
+        snap.write(&path).unwrap();
+        let back = Snapshot::read_with(&path, LoadMode::Mmap).unwrap();
+        assert!(!back.is_mapped(), "static kinds parse eagerly even under mmap");
+        assert_eq!(back.alias.unwrap().p, snap.alias.unwrap().p);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mapped_core_draws_bit_identically_to_eager() {
+        let snap = small_snapshot(SamplerKind::MidxPq, 51);
+        let path = temp_snapshot_path("draws");
+        snap.write(&path).unwrap();
+        let eager = Snapshot::read_with(&path, LoadMode::Eager).unwrap();
+        let mapped = Snapshot::read_with(&path, LoadMode::Mmap).unwrap();
+        let a = eager.build_core();
+        let b = mapped.build_core();
+        let mut rng_a = Rng::new(77);
+        let mut rng_b = Rng::new(77);
+        let mut rng = Rng::new(5);
+        let z = rand_matrix(&mut rng, 1, snap.d, 0.5);
+        let mut scratch_a = crate::sampler::Scratch::default();
+        let mut scratch_b = crate::sampler::Scratch::default();
+        let (mut out_a, mut out_b) = (vec![0u32; 16], vec![0u32; 16]);
+        let (mut lq_a, mut lq_b) = (vec![0f32; 16], vec![0f32; 16]);
+        a.sample_into(&z, 0, &mut rng_a, &mut scratch_a, &mut out_a, &mut lq_a);
+        b.sample_into(&z, 0, &mut rng_b, &mut scratch_b, &mut out_b, &mut lq_b);
+        assert_eq!(out_a, out_b, "mapped core must draw bit-identically");
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&lq_a), bits(&lq_b), "log-q must match bit for bit too");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

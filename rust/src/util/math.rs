@@ -1,11 +1,112 @@
-//! Small numeric helpers shared across samplers, metrics and stats.
+//! Small numeric helpers shared across samplers, metrics and stats, plus
+//! the runtime SIMD dispatch policy ([`simd_level`]) used by the serving
+//! hot path (`dot` here, the u8 ADC kernels in `crate::quant::adc`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Instruction-set tier the SIMD kernels run at, picked once per process
+/// by [`simd_level`] (or forced via [`set_simd_level`] / `MIDX_NO_SIMD`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// AVX2: 32-byte integer lanes + 8-float vectors.
+    Avx2,
+    /// SSSE3: 16-byte lanes (`pshufb` available).
+    Ssse3,
+    /// Portable scalar fallbacks only.
+    Scalar,
+}
+
+impl SimdLevel {
+    /// Short name for logs (`avx2` / `ssse3` / `scalar`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Ssse3 => "ssse3",
+            SimdLevel::Scalar => "scalar",
+        }
+    }
+}
+
+/// 255 = not yet detected; otherwise the `SimdLevel` discriminant + 1.
+static SIMD_LEVEL: AtomicU8 = AtomicU8::new(255);
+
+fn level_code(level: SimdLevel) -> u8 {
+    match level {
+        SimdLevel::Avx2 => 1,
+        SimdLevel::Ssse3 => 2,
+        SimdLevel::Scalar => 3,
+    }
+}
+
+/// Detect the best supported tier, honoring the `MIDX_NO_SIMD` env var
+/// (any non-empty value other than `0` forces scalar — the CI fallback
+/// leg and `midx --no-simd` use this).
+pub fn detect_simd_level() -> SimdLevel {
+    if std::env::var("MIDX_NO_SIMD").is_ok_and(|v| !v.is_empty() && v != "0") {
+        return SimdLevel::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return SimdLevel::Avx2;
+        }
+        if is_x86_feature_detected!("ssse3") {
+            return SimdLevel::Ssse3;
+        }
+    }
+    SimdLevel::Scalar
+}
+
+/// The process-wide SIMD tier (detected once, then cached). Every
+/// dispatched kernel produces bit-identical results at every tier, so
+/// this only ever changes speed, never answers.
+pub fn simd_level() -> SimdLevel {
+    match SIMD_LEVEL.load(Ordering::Relaxed) {
+        1 => SimdLevel::Avx2,
+        2 => SimdLevel::Ssse3,
+        3 => SimdLevel::Scalar,
+        _ => {
+            let level = detect_simd_level();
+            SIMD_LEVEL.store(level_code(level), Ordering::Relaxed);
+            level
+        }
+    }
+}
+
+/// Force the SIMD tier (CLI `--no-simd`, scalar-vs-SIMD equality tests).
+/// Forcing a tier the CPU lacks is safe only for `Scalar`; tests restore
+/// the detected level afterwards.
+pub fn set_simd_level(level: SimdLevel) {
+    SIMD_LEVEL.store(level_code(level), Ordering::Relaxed);
+}
 
 /// Dot product of two equal-length slices.
+///
+/// Dispatched over [`simd_level`]: the vector path packs the 4 accumulator
+/// lanes of the long-standing 4-way unrolled scalar loop into one SSE
+/// register (multiply and add unfused, lanes reduced left to right in the
+/// scalar order), so **every tier returns identical bits** — the same
+/// bits this crate has produced since the seed. The serve layer's exact
+/// re-rank and the golden draw pins both depend on that: answers must not
+/// change with the machine the snapshot is served on.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulation: measurably faster than a naive fold on
-    // the scalar CPU backend and keeps error growth modest.
+    #[cfg(target_arch = "x86_64")]
+    if a.len() >= 16 && simd_level() != SimdLevel::Scalar {
+        // SAFETY: SSE2 is baseline on x86_64; both non-scalar tiers imply
+        // it. Below 16 elements the call overhead beats the lane win.
+        return unsafe { dot_sse2(a, b) };
+    }
+    dot_scalar(a, b)
+}
+
+/// The 4-way unrolled accumulation this crate has always used, kept
+/// bit-for-bit: four independent lanes over chunks of 4, lanes summed left
+/// to right, then a sequential remainder. The SSE kernel mirrors this
+/// exactly. Public so equality tests can pin `dot == dot_scalar` without
+/// touching the global dispatch level.
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
     let n = a.len();
     let chunks = n / 4;
     let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
@@ -19,6 +120,31 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     let mut s = s0 + s1 + s2 + s3;
     for j in chunks * 4..n {
         s += a[j] * b[j];
+    }
+    s
+}
+
+/// SSE2 dot kernel: the scalar loop's four accumulator lanes in one
+/// register. Separate multiply + add (no FMA) and a lane-order reduction
+/// keep every intermediate rounding identical to [`dot_scalar`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn dot_sse2(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc = _mm_setzero_ps();
+    for i in 0..chunks {
+        let va = _mm_loadu_ps(a.as_ptr().add(i * 4));
+        let vb = _mm_loadu_ps(b.as_ptr().add(i * 4));
+        acc = _mm_add_ps(acc, _mm_mul_ps(va, vb));
+    }
+    let mut lanes = [0.0f32; 4];
+    _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+    // left-to-right, exactly like the scalar mirror's s0 + s1 + s2 + s3
+    let mut s = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+    for j in chunks * 4..n {
+        s += *a.get_unchecked(j) * *b.get_unchecked(j);
     }
     s
 }
@@ -143,10 +269,45 @@ mod tests {
     fn dot_basic() {
         assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
         assert_eq!(dot(&[], &[]), 0.0);
-        // length > 4 exercises the unrolled path + remainder
+        // length > 8 exercises the unrolled path + remainder
         let a: Vec<f32> = (0..11).map(|i| i as f32).collect();
         let b = vec![2.0f32; 11];
         assert_eq!(dot(&a, &b), 110.0);
+    }
+
+    #[test]
+    fn dot_simd_is_bit_identical_to_scalar() {
+        // awkward magnitudes so any reassociation or FMA contraction would
+        // actually change the rounding — lengths straddle the dispatch
+        // threshold, the 8-lane chunks and every remainder size
+        let mut state = 0x9E3779B97F4A7C15u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as f32 / (1u64 << 31) as f32 - 0.5) * 1e3
+        };
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 31, 32, 64, 100] {
+            let a: Vec<f32> = (0..n).map(|_| next()).collect();
+            let b: Vec<f32> = (0..n).map(|_| next()).collect();
+            assert_eq!(
+                dot(&a, &b).to_bits(),
+                dot_scalar(&a, &b).to_bits(),
+                "dispatched dot diverges from its scalar mirror at n={n} (level {:?})",
+                simd_level()
+            );
+        }
+    }
+
+    #[test]
+    fn simd_level_detects_and_forces() {
+        let detected = simd_level();
+        assert!(!detected.name().is_empty());
+        set_simd_level(SimdLevel::Scalar);
+        assert_eq!(simd_level(), SimdLevel::Scalar);
+        // forcing never changes answers, only speed
+        let a: Vec<f32> = (0..40).map(|i| (i as f32).sin()).collect();
+        let scalar_bits = dot(&a, &a).to_bits();
+        set_simd_level(detected);
+        assert_eq!(dot(&a, &a).to_bits(), scalar_bits);
     }
 
     #[test]

@@ -5,6 +5,8 @@ pub mod check;
 pub mod json;
 pub mod math;
 pub mod rng;
+pub mod storage;
 
 pub use json::Json;
 pub use rng::Rng;
+pub use storage::Storage;

@@ -1,0 +1,308 @@
+//! Cow-like array storage: an owned `Vec<T>` or a zero-copy view into a
+//! memory-mapped snapshot file.
+//!
+//! The serve layer's zero-copy load path (`Snapshot::read_mmap`) borrows
+//! f32/u32 payload sections straight out of an `mmap(2)`-ed file instead
+//! of copying them into fresh `Vec`s. [`Storage`] is the Cow-like type
+//! that threads through `ProductQuantizer` / `ResidualQuantizer`,
+//! `InvertedMultiIndex` and the sampler cores so the same structs serve
+//! both modes:
+//!
+//! * **Owned** — a plain `Vec<T>` (training, eager loads). `From<Vec<T>>`
+//!   keeps every pre-existing construction site compiling unchanged.
+//! * **Mapped** — an (`Arc<MmapRegion>`, byte offset, length) view. Reads
+//!   are zero-copy through `Deref<Target = [T]>`; the first mutation
+//!   (`DerefMut` / [`Storage::to_mut`]) promotes the section to an owned
+//!   copy, copy-on-write style, so incremental index refresh keeps working
+//!   against a mapped core at the cost of one copy of the touched section.
+//!
+//! The mapping itself is raw `mmap(2)` / `munmap(2)` FFI — no new
+//! dependencies, the same pattern as the `poll(2)` reactor in
+//! `serve::reactor` — and unix-only; on other targets the serve layer
+//! falls back to eager loading.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+/// Marker for plain-old-data element types that may be reinterpreted from
+/// raw mapped bytes: every bit pattern must be a valid value, and the type
+/// must carry no pointers or padding. Sealed — exactly the element types
+/// snapshot payload sections contain.
+pub trait Pod: Copy + 'static + sealed::Sealed {}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for u32 {}
+}
+
+impl Pod for f32 {}
+impl Pod for u32 {}
+
+#[cfg(unix)]
+mod ffi {
+    use std::ffi::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// A read-only `mmap(2)` mapping of a whole file, unmapped on drop. All
+/// [`Storage`] views into one file share a single region through an `Arc`,
+/// so the mapping lives exactly as long as the last section borrowed from
+/// it.
+pub struct MmapRegion {
+    ptr: *mut std::ffi::c_void,
+    len: usize,
+}
+
+// SAFETY: the region is mapped PROT_READ/MAP_PRIVATE and never written
+// through; `munmap` runs only in Drop, which Arc guarantees is unique.
+unsafe impl Send for MmapRegion {}
+unsafe impl Sync for MmapRegion {}
+
+impl std::fmt::Debug for MmapRegion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MmapRegion").field("len", &self.len).finish()
+    }
+}
+
+impl MmapRegion {
+    /// Map `path` read-only in its entirety. Unix-only — callers on other
+    /// targets must take the eager path instead.
+    #[cfg(unix)]
+    pub fn map(path: &std::path::Path) -> Result<MmapRegion> {
+        use std::os::unix::io::AsRawFd;
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        if len == 0 {
+            bail!("cannot mmap an empty file");
+        }
+        let len = usize::try_from(len).map_err(|_| anyhow::anyhow!("file too large to map"))?;
+        // SAFETY: fd is a freshly opened file, len its exact size; the
+        // kernel picks the address. MAP_FAILED (-1) is checked below.
+        let ptr = unsafe {
+            let (prot, flags) = (ffi::PROT_READ, ffi::MAP_PRIVATE);
+            ffi::mmap(std::ptr::null_mut(), len, prot, flags, file.as_raw_fd(), 0)
+        };
+        if ptr as isize == -1 {
+            bail!("mmap failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(MmapRegion { ptr, len })
+    }
+
+    /// The mapped file contents.
+    pub fn as_bytes(&self) -> &[u8] {
+        // SAFETY: ptr/len describe a live PROT_READ mapping held until Drop.
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+}
+
+impl Drop for MmapRegion {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        // SAFETY: ptr/len came from a successful mmap and are unmapped once.
+        unsafe {
+            ffi::munmap(self.ptr, self.len);
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Inner<T> {
+    Owned(Vec<T>),
+    Mapped { region: Arc<MmapRegion>, byte_off: usize, len: usize },
+}
+
+/// Cow-like array storage: owned `Vec<T>` or a borrowed section of a
+/// memory-mapped snapshot (see the module docs). Reads go through
+/// `Deref<Target = [T]>`; mutation copy-on-writes via [`Storage::to_mut`]
+/// (or implicitly through `DerefMut`).
+#[derive(Clone, Debug)]
+pub struct Storage<T>(Inner<T>);
+
+impl<T: Pod> Storage<T> {
+    /// Borrow `len` elements starting `byte_off` bytes into `region`.
+    /// Rejects out-of-range and misaligned sections — by construction the
+    /// v2 snapshot layout 64-byte-aligns every section, so a rejection
+    /// here means the file (or the layout math) is wrong.
+    pub(crate) fn mapped(
+        region: Arc<MmapRegion>,
+        byte_off: usize,
+        len: usize,
+    ) -> Result<Storage<T>> {
+        let size = std::mem::size_of::<T>();
+        let bytes = len.checked_mul(size).and_then(|b| b.checked_add(byte_off));
+        match bytes {
+            Some(end) if end <= region.as_bytes().len() => {}
+            _ => bail!(
+                "mapped section out of range: {len} elements at byte offset {byte_off} exceed \
+                 the {}-byte region",
+                region.as_bytes().len()
+            ),
+        }
+        if (region.ptr as usize + byte_off) % std::mem::align_of::<T>() != 0 {
+            bail!(
+                "mapped section at byte offset {byte_off} is misaligned for {size}-byte elements"
+            );
+        }
+        Ok(Storage(Inner::Mapped { region, byte_off, len }))
+    }
+
+    /// True when this storage still borrows from a mapped region (i.e. no
+    /// mutation has promoted it to an owned copy).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.0, Inner::Mapped { .. })
+    }
+
+    /// The elements as a slice (same as `Deref`, handy where method-call
+    /// syntax reads better than reborrowing).
+    pub fn as_slice(&self) -> &[T] {
+        self
+    }
+
+    /// Mutable access, promoting a mapped section to an owned copy first
+    /// (copy-on-write). Owned storage mutates in place at no cost.
+    pub fn to_mut(&mut self) -> &mut [T] {
+        if self.is_mapped() {
+            let copy = self.as_slice().to_vec();
+            self.0 = Inner::Owned(copy);
+        }
+        match &mut self.0 {
+            Inner::Owned(v) => v,
+            Inner::Mapped { .. } => unreachable!("promoted above"),
+        }
+    }
+}
+
+impl<T: Pod> Deref for Storage<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        match &self.0 {
+            Inner::Owned(v) => v,
+            Inner::Mapped { region, byte_off, len } => {
+                // SAFETY: `mapped` bounds- and alignment-checked this view
+                // against the region, which the Arc keeps alive; T is Pod,
+                // so any mapped bytes are valid values.
+                unsafe {
+                    std::slice::from_raw_parts(
+                        region.as_bytes().as_ptr().add(*byte_off) as *const T,
+                        *len,
+                    )
+                }
+            }
+        }
+    }
+}
+
+impl<T: Pod> DerefMut for Storage<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        self.to_mut()
+    }
+}
+
+impl<T> From<Vec<T>> for Storage<T> {
+    fn from(v: Vec<T>) -> Storage<T> {
+        Storage(Inner::Owned(v))
+    }
+}
+
+impl<T> Default for Storage<T> {
+    fn default() -> Storage<T> {
+        Storage(Inner::Owned(Vec::new()))
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq for Storage<T> {
+    fn eq(&self, other: &Storage<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owned_storage_reads_and_mutates_in_place() {
+        let mut s: Storage<u32> = vec![1u32, 2, 3].into();
+        assert!(!s.is_mapped());
+        assert_eq!(&s[..], &[1, 2, 3]);
+        s[1] = 9;
+        assert_eq!(s.as_slice(), &[1, 9, 3]);
+        assert_eq!(s, Storage::from(vec![1u32, 9, 3]));
+        assert_eq!(Storage::<f32>::default().len(), 0);
+    }
+
+    #[cfg(unix)]
+    fn temp_region(words: &[u32]) -> (std::path::PathBuf, Arc<MmapRegion>) {
+        let path = std::env::temp_dir()
+            .join(format!("midx_storage_test_{}_{}.bin", std::process::id(), words.len()));
+        let bytes: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        let region = Arc::new(MmapRegion::map(&path).unwrap());
+        (path, region)
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mapped_storage_is_zero_copy_until_written() {
+        let words: Vec<u32> = (0..32u32).collect();
+        let (path, region) = temp_region(&words);
+
+        // two disjoint views share one region
+        let a: Storage<u32> = Storage::mapped(Arc::clone(&region), 0, 16).unwrap();
+        let mut b: Storage<u32> = Storage::mapped(Arc::clone(&region), 64, 16).unwrap();
+        assert!(a.is_mapped() && b.is_mapped());
+        assert_eq!(&a[..], &words[..16]);
+        assert_eq!(&b[..], &words[16..]);
+
+        // CoW: writing promotes b to an owned copy, a stays mapped
+        b[0] = 777;
+        assert!(!b.is_mapped() && a.is_mapped());
+        assert_eq!(b[0], 777);
+        assert_eq!(a[0], 0, "sibling view unaffected by the promoted copy");
+
+        // views outlive the file (MAP_PRIVATE) and the path
+        std::fs::remove_file(&path).ok();
+        drop(region);
+        assert_eq!(a[15], 15);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mapped_storage_rejects_out_of_range_and_misaligned_sections() {
+        let (path, region) = temp_region(&[1, 2, 3, 4]);
+        let err = Storage::<u32>::mapped(Arc::clone(&region), 0, 5).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        let err = Storage::<u32>::mapped(Arc::clone(&region), 2, 2).unwrap_err().to_string();
+        assert!(err.contains("misaligned"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mapping_missing_or_empty_files_fails() {
+        assert!(MmapRegion::map(std::path::Path::new("/nonexistent/nope.bin")).is_err());
+        let path = std::env::temp_dir()
+            .join(format!("midx_storage_test_empty_{}.bin", std::process::id()));
+        std::fs::write(&path, b"").unwrap();
+        let err = MmapRegion::map(&path).unwrap_err().to_string();
+        assert!(err.contains("empty"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -78,6 +78,64 @@ fn empirical_distribution_matches_reported_proposal() {
 }
 
 #[test]
+fn fast_scan_u8_proposal_draws_match_its_reported_distribution() {
+    // The opt-in u8 ADC fast path (MidxCore::set_fast_scan) draws from a
+    // quantized LUT, so it is a *different* proposal than the exact f32
+    // one — it gets the same gate as every sampler: ~50k draws through the
+    // pooled engine must pass the χ² GOF against the fast path's own
+    // reported proposal_dist, and that u8 proposal must stay within KL
+    // slack of the exact f32 proposal it approximates.
+    use midx::quant::QuantKind;
+    use midx::sampler::{MidxSampler, Sampler};
+
+    let (n, d) = (64usize, 8usize);
+    let (b, m, calls) = (256usize, 16usize, 13usize); // 256 * 16 * 13 ≈ 53k draws
+    let pool = WorkerPool::new(pool_threads());
+
+    for (tag, family) in [("midx-pq", QuantKind::Product), ("midx-rq", QuantKind::Residual)] {
+        let mut s = MidxSampler::new(n, family, 4, 8);
+        let mut rng = Rng::new(0xFA57 ^ family as u64);
+        let table = rand_matrix(&mut rng, n, d, 0.5);
+        s.rebuild(&table, n, d, &mut rng);
+
+        let z = rand_matrix(&mut Rng::new(0xACE ^ family as u64), 1, d, 0.5);
+        let mut exact_q = vec![0.0f32; n];
+        s.proposal_dist(&z, &mut exact_q);
+        assert!(s.set_fast_scan(true), "{tag}: fast path refused (K > 256?)");
+        let mut q = vec![0.0f32; n];
+        s.proposal_dist(&z, &mut q);
+
+        let core = s.core();
+        let zs: Vec<f32> = (0..b).flat_map(|_| z.iter().copied()).collect();
+        let positives = vec![u32::MAX; b];
+        let mut ids = vec![0u32; b * m];
+        let mut lq = vec![0.0f32; b * m];
+        let mut counts = vec![0u64; n];
+        for call in 0..calls {
+            let seed = 0xFA570000u64 ^ ((family as u64) << 8) ^ call as u64;
+            sample_batch_pooled(&pool, core, &zs, d, &positives, m, seed, 0, &mut ids, &mut lq);
+            for &id in &ids {
+                counts[id as usize] += 1;
+            }
+        }
+        let draws = (b * m * calls) as u64;
+
+        let (stat, df) = chi_square_gof(&counts, &q, draws);
+        let crit = chi_square_critical(df, 4.5);
+        assert!(
+            stat < crit,
+            "{tag} fast-scan: χ²={stat:.1} ≥ crit={crit:.1} (df={df}) — u8-LUT draws \
+             diverge from the fast path's reported proposal"
+        );
+
+        // the u8 grid only perturbs the proposal slightly: KL against the
+        // exact f32 proposal bounds the quantization error end to end
+        let kl = empirical_kl(&q, &exact_q);
+        assert!(kl < 0.02, "{tag}: KL(u8 ‖ exact) = {kl}");
+    }
+}
+
+#[test]
 fn reported_log_q_is_consistent_with_proposal_dist() {
     // cheap cross-check reused from the conformance family: per-draw log q
     // must be ln q[i] of the reported distribution (the quantity the L1

@@ -14,9 +14,9 @@ use std::time::Duration;
 use midx::coordinator::WorkerPool;
 use midx::sampler::fixtures::small_params;
 use midx::sampler::{build, sample_batch, sample_batch_pooled, Sampler, SamplerKind};
-use midx::serve::{MicroBatcher, QueryEngine, Request, Snapshot};
+use midx::serve::{LoadMode, MicroBatcher, QueryEngine, Request, Snapshot};
 use midx::util::check::rand_matrix;
-use midx::util::math::dot;
+use midx::util::math::{dot, set_simd_level, simd_level, SimdLevel};
 use midx::util::Rng;
 
 const MIDX_KINDS: &[SamplerKind] =
@@ -295,6 +295,117 @@ fn static_sampler_snapshots_are_draw_for_draw_bit_identical() {
                 );
             }
         }
+    }
+}
+
+// --------------------------------------------------------------------------
+// Zero-copy (mmap) snapshot loads: the served answers must be bit-identical
+// to an eager load — top-k and draws, at T ∈ {1, 8} — and structural damage
+// to the file must be rejected with the operator's path in the error chain.
+
+#[test]
+#[cfg(unix)]
+fn mmap_loaded_engine_matches_eager_bit_for_bit() {
+    let (n, d, b, m, k, seed) = (80usize, 8usize, 11usize, 6usize, 7usize, 0xACEDu64);
+    for &kind in MIDX_KINDS {
+        let (s, table) = trained(kind, n, d, 1300 + kind as u64);
+        let snap = s.snapshot(&table, n, d).unwrap();
+        let path = temp_path(&format!("mmap_{}", snap.kind.name()));
+        snap.write(&path).unwrap();
+
+        let eager = Snapshot::read_with(&path, LoadMode::Eager).unwrap();
+        let mapped = Snapshot::read_with(&path, LoadMode::Mmap).unwrap();
+        assert!(mapped.is_mapped(), "{}: mmap load did not borrow", snap.kind.name());
+        std::fs::remove_file(&path).ok();
+
+        let queries = rand_matrix(&mut Rng::new(41), b, d, 0.5);
+        let positives: Vec<u32> = (0..b).map(|i| (i % n) as u32).collect();
+        let draws = |snapshot: Snapshot, threads: usize| {
+            let core = snapshot.build_core();
+            let mut ids = vec![0u32; b * m];
+            let mut lq = vec![0.0f32; b * m];
+            sample_batch(
+                core.as_ref(), &queries, d, &positives, m, seed, threads, &mut ids, &mut lq,
+            );
+            let bits: Vec<u32> = lq.iter().map(|x| x.to_bits()).collect();
+            (ids, bits)
+        };
+        for threads in [1usize, 8] {
+            let want = draws(eager.clone(), threads);
+            let got = draws(mapped.clone(), threads);
+            assert_eq!(got, want, "{} T={threads}: mmap draws diverge", snap.kind.name());
+        }
+
+        // and through the engine the serving frontend actually uses
+        let want_engine = QueryEngine::new(eager, 2).unwrap();
+        let got_engine = QueryEngine::new(mapped, 2).unwrap();
+        let (want_ids, want_scores) = want_engine.top_k_batch(&queries, k);
+        let (got_ids, got_scores) = got_engine.top_k_batch(&queries, k);
+        assert_eq!(got_ids, want_ids, "{}: mmap top-k ids diverge", snap.kind.name());
+        assert_eq!(
+            got_scores.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want_scores.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "{}: mmap top-k scores diverge",
+            snap.kind.name()
+        );
+    }
+}
+
+#[test]
+#[cfg(unix)]
+fn mmap_load_rejects_v1_and_damage_with_path_context() {
+    let (s, table) = trained(SamplerKind::MidxRq, 50, 8, 7);
+    let snap = s.snapshot(&table, 50, 8).unwrap();
+
+    // a v1 (packed, unaligned) snapshot cannot be borrowed zero-copy: the
+    // loader must say so, name the file, and the eager path must still work
+    let v1 = temp_path("mmap_v1");
+    std::fs::write(&v1, snap.to_bytes_with(1)).unwrap();
+    let err = format!("{:#}", Snapshot::read_with(&v1, LoadMode::Mmap).unwrap_err());
+    assert!(err.contains("predates"), "want version hint in: {err}");
+    assert!(err.contains("midx_serve_test"), "no file context in: {err}");
+    assert!(err.contains("(mmap)"), "no load-mode context in: {err}");
+    Snapshot::read_with(&v1, LoadMode::Eager).expect("v1 stays eager-readable");
+    std::fs::remove_file(&v1).ok();
+
+    // truncation inside an array section is caught before any borrow
+    let good = snap.to_bytes();
+    let cut = temp_path("mmap_cut");
+    std::fs::write(&cut, &good[..good.len() / 2]).unwrap();
+    let err = format!("{:#}", Snapshot::read_with(&cut, LoadMode::Mmap).unwrap_err());
+    assert!(err.contains("truncated"), "want truncation in: {err}");
+    assert!(err.contains("midx_serve_test"), "no file context in: {err}");
+    std::fs::remove_file(&cut).ok();
+}
+
+#[test]
+fn top_k_is_bit_identical_with_simd_forced_off() {
+    // The fast-scan pipeline quantizes stage scores to u8 for candidate
+    // *selection* only; final scores come from exact f32 dots whose SIMD
+    // kernel reduces in the same order as the scalar one. So forcing the
+    // scalar tier must not move a single bit — ids or scores — on any
+    // snapshot kind. (The SIMD level is a process-global; because outputs
+    // are tier-independent, flipping it here cannot perturb other tests.)
+    let (n, d, b, k) = (90usize, 16usize, 9usize, 8usize);
+    let detected = simd_level();
+    for &kind in MIDX_KINDS {
+        let (s, table) = trained(kind, n, d, 2100 + kind as u64);
+        let snap = s.snapshot(&table, n, d).unwrap();
+        let engine = QueryEngine::new(snap, 2).unwrap();
+        let queries = rand_matrix(&mut Rng::new(77), b, d, 0.7);
+
+        set_simd_level(detected);
+        let (fast_ids, fast_scores) = engine.top_k_batch(&queries, k);
+        set_simd_level(SimdLevel::Scalar);
+        let (slow_ids, slow_scores) = engine.top_k_batch(&queries, k);
+        set_simd_level(detected);
+
+        assert_eq!(slow_ids, fast_ids, "{kind:?}: scalar top-k ids diverge from SIMD");
+        assert_eq!(
+            slow_scores.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            fast_scores.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "{kind:?}: scalar top-k scores diverge from SIMD"
+        );
     }
 }
 
