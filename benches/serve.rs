@@ -1,7 +1,7 @@
 //! `cargo bench --bench serve` — serve-layer cost: snapshot export/load,
 //! batched top-k latency percentiles, and reactor connection scaling.
 //!
-//! Seven sections, all artifact-free:
+//! Eight sections, all artifact-free:
 //!
 //! 1. **Snapshot cost.** Serialize (`to_bytes`) and parse+validate
 //!    (`from_bytes`) throughput at two model sizes, plus one-shot
@@ -26,6 +26,11 @@
 //!    closed-loop TCP connections — the table that shows one poll thread
 //!    multiplexing hundreds of sockets without per-connection threads on
 //!    the server side.
+//! 8. **Live updates.** Closed-loop query latency through the
+//!    `MicroBatcher` with and without a concurrent delta-update stream
+//!    (shadow refresh + atomic engine swap), plus the swap pause itself
+//!    (quiesce-to-resume) — the cost a client actually sees when the
+//!    model changes under it.
 
 use std::time::Instant;
 
@@ -314,6 +319,111 @@ fn reactor_section() {
     println!("\nreactor connection scaling: skipped (non-unix target, no poll(2) reactor)");
 }
 
+/// Query latency through the batcher with and without a concurrent
+/// live-update stream, plus the swap pause (quiesce-to-resume) itself.
+/// B closed-loop submitters × T worker threads; the updater thread loops
+/// the full shadow-refresh + rebuild + atomic-swap pipeline.
+fn update_section() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use midx::serve::{Delta, MicroBatcher, Request, UpdateConfig, UpdateHub, UpdateMode};
+
+    let (n, d, k_codewords, k) = (20_000usize, 32usize, 32usize, 10usize);
+    let snap = snapshot_for(n, d, k_codewords, 43);
+    let mut rng = Rng::new(47);
+
+    println!("\nquery latency with/without a concurrent update stream (N={n}, D={d}, 400-row deltas)");
+    for &threads in &[1usize, 4] {
+        let engine = Arc::new(QueryEngine::new(snap.clone(), threads).unwrap());
+        let batcher = Arc::new(MicroBatcher::with_queue_cap(
+            Arc::clone(&engine),
+            Duration::from_micros(100),
+            256,
+            16_384,
+        ));
+        let hub = UpdateHub::new(Arc::clone(&batcher), UpdateConfig::default());
+
+        let rows: Vec<u32> = (0..400u32).map(|i| i * 50).collect();
+        let values = rand_matrix(&mut rng, rows.len(), d, 0.5);
+        let payload = Delta { d, rows, values }.to_bytes();
+
+        for quiet in [true, false] {
+            let stop = Arc::new(AtomicBool::new(false));
+            let updater = if quiet {
+                None
+            } else {
+                let hub = Arc::clone(&hub);
+                let stop = Arc::clone(&stop);
+                let payload = payload.clone();
+                Some(std::thread::spawn(move || {
+                    let mut pauses: Vec<u64> = Vec::new();
+                    while !stop.load(Ordering::Relaxed) {
+                        let a = hub.apply(UpdateMode::Delta, &payload).expect("delta applies");
+                        pauses.push(a.swap.as_micros() as u64);
+                    }
+                    pauses
+                }))
+            };
+
+            let label = if quiet { "quiet" } else { "live " };
+            for &b in &[1usize, 64] {
+                let iters = (2048 / b).max(32);
+                let t_all = Instant::now();
+                let clients: Vec<_> = (0..b)
+                    .map(|c| {
+                        let batcher = Arc::clone(&batcher);
+                        std::thread::spawn(move || {
+                            let q: Vec<f32> = (0..d)
+                                .map(|j| ((c * 13 + j) % 89) as f32 / 89.0 - 0.5)
+                                .collect();
+                            let mut us = Vec::with_capacity(iters);
+                            for _ in 0..iters {
+                                let t = Instant::now();
+                                std::hint::black_box(
+                                    batcher.submit(Request::TopK { q: q.clone(), k }),
+                                );
+                                us.push(t.elapsed().as_micros() as u64);
+                            }
+                            us
+                        })
+                    })
+                    .collect();
+                let mut us: Vec<u64> = Vec::new();
+                for w in clients {
+                    us.extend(w.join().unwrap());
+                }
+                let wall = t_all.elapsed().as_secs_f64();
+                us.sort_unstable();
+                let pct = |p: f64| {
+                    us[((p / 100.0 * (us.len() - 1) as f64).round() as usize).min(us.len() - 1)]
+                };
+                println!(
+                    "bench serve/update/{label}/b{b:<3}/t{threads} p50={}µs p95={}µs qps={:.0}",
+                    pct(50.0),
+                    pct(95.0),
+                    us.len() as f64 / wall,
+                );
+            }
+
+            stop.store(true, Ordering::Relaxed);
+            if let Some(h) = updater {
+                let mut pauses = h.join().unwrap();
+                pauses.sort_unstable();
+                if !pauses.is_empty() {
+                    println!(
+                        "bench serve/update/swap_pause/t{threads} swaps={} p50={}µs max={}µs",
+                        pauses.len(),
+                        pauses[pauses.len() / 2],
+                        pauses[pauses.len() - 1],
+                    );
+                }
+            }
+        }
+    }
+}
+
 fn main() {
     snapshot_section();
     load_mode_section();
@@ -322,4 +432,5 @@ fn main() {
     beam_sweep_section();
     sample_section();
     reactor_section();
+    update_section();
 }

@@ -8,24 +8,32 @@
 //! midx export --synthetic --out snap.midx   # artifact-free snapshot
 //! midx query --snapshot snap.midx --topk 5  # one-shot batched answers
 //! midx serve --snapshot snap.midx [--tcp 127.0.0.1:7070]
+//! midx push-update --addr 127.0.0.1:7070 --next new.midx [--base old.midx]
 //! ```
 //!
 //! (Arg parsing is hand-rolled — the offline build environment carries no
 //! clap; see DESIGN.md §2.)
 
 use std::collections::{BTreeMap, HashMap};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use midx::bench_tables::{run_bench, Budget};
 use midx::coordinator::{fmt, run_experiment, ExperimentSpec, Table};
 use midx::index::RefreshPolicy;
 use midx::runtime::{list_models, load_model};
 use midx::sampler::{self, SamplerKind, SamplerParams};
-use midx::serve::{serve_stdin, LatencyRecorder, LoadMode, MicroBatcher, QueryEngine, Snapshot};
+use midx::serve::snapshot::fnv1a64;
+use midx::serve::update::b64_encode;
+use midx::serve::{
+    serve_stdin, Delta, LatencyRecorder, LoadMode, MicroBatcher, QueryEngine, Snapshot,
+    UpdateConfig, UpdateMode,
+};
 use midx::train::TrainConfig;
 use midx::util::check::rand_matrix;
 use midx::util::json::{from_f32s, from_u32s};
@@ -116,7 +124,8 @@ const USAGE: &str = "usage:
              [--load eager|mmap] [--fast-sample] [--no-simd]
              [--window-us N] [--max-batch N]
              [--max-conns N] [--queue-cap N] [--idle-ms N]
-                             (line-delimited JSON frontend: op topk|sample|info|stats;
+             [--update-tol F] [--update-iters N] [--update-max-bytes N]
+                             (line-delimited JSON frontend: op topk|sample|info|stats|update;
                               stdin/stdout by default. --tcp serves through the
                               event-driven reactor: one thread multiplexing up to
                               --max-conns connections, admission bounded at
@@ -124,7 +133,18 @@ const USAGE: &str = "usage:
                               {\"ok\":false,\"busy\":true} instead of queueing, idle
                               connections close after --idle-ms. --fallback loads a
                               static uniform/unigram snapshot served via
-                              {\"op\":\"sample\",\"fallback\":true})";
+                              {\"op\":\"sample\",\"fallback\":true}. Live updates:
+                              {\"op\":\"update\"} pushes a new snapshot or an embedding
+                              delta without a restart — --update-tol/--update-iters
+                              tune the drift refresh applied to pushed deltas,
+                              --update-max-bytes caps the accepted payload size)
+  midx push-update --addr HOST:PORT --next FILE [--base FILE] [--chunk-bytes N]
+                             (push a live model update into a running `midx serve`:
+                              with --base, sends only the embedding rows that differ
+                              between the two snapshots (the server drift-refreshes
+                              them incrementally); without it, streams FILE as a whole
+                              replacement snapshot. Prints the server's commit reply —
+                              generation, swap pause — on stdout)";
 
 fn cmd_list() -> Result<()> {
     let mut t = Table::new("models (artifacts/)", &["model", "arch", "N", "D", "Bq", "M", "params"]);
@@ -423,11 +443,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let window = Duration::from_micros(args.u64_or("window-us", 200));
     let max_batch = args.usize_or("max-batch", 64);
     let queue_cap = args.usize_or("queue-cap", 4096);
-    let batcher = MicroBatcher::with_queue_cap(engine, window, max_batch, queue_cap);
+    let batcher = Arc::new(MicroBatcher::with_queue_cap(engine, window, max_batch, queue_cap));
     let rec = LatencyRecorder::new();
     match args.get("tcp") {
-        Some(addr) => serve_over_tcp(args, addr, Arc::new(batcher), Arc::new(rec)),
-        None => serve_stdin(&batcher, &rec),
+        Some(addr) => serve_over_tcp(args, addr, batcher, Arc::new(rec)),
+        None => serve_stdin(&batcher, &rec, update_config(args)),
+    }
+}
+
+/// The `--update-*` knobs shared by both frontends: how pushed deltas are
+/// drift-refreshed and how large a pushed payload may be.
+fn update_config(args: &Args) -> UpdateConfig {
+    let default = UpdateConfig::default();
+    UpdateConfig {
+        tolerance: args.f32_or("update-tol", default.tolerance),
+        refine_iters: args.usize_or("update-iters", default.refine_iters),
+        max_bytes: args.usize_or("update-max-bytes", default.max_bytes),
     }
 }
 
@@ -443,6 +474,7 @@ fn serve_over_tcp(
     let cfg = midx::serve::ReactorConfig {
         max_conns: args.usize_or("max-conns", 1024),
         idle_timeout: Duration::from_millis(args.u64_or("idle-ms", 60_000)),
+        update: update_config(args),
         ..Default::default()
     };
     midx::serve::serve_reactor(batcher, rec, addr, cfg)
@@ -458,7 +490,9 @@ fn serve_over_tcp(
     batcher: Arc<MicroBatcher>,
     rec: Arc<LatencyRecorder>,
 ) -> Result<()> {
-    for flag in ["max-conns", "queue-cap", "idle-ms"] {
+    for flag in
+        ["max-conns", "queue-cap", "idle-ms", "update-tol", "update-iters", "update-max-bytes"]
+    {
         if args.has(flag) {
             eprintln!(
                 "warning: --{flag} has no effect on this platform — the poll(2) reactor is \
@@ -468,6 +502,92 @@ fn serve_over_tcp(
         }
     }
     midx::serve::serve_tcp(batcher, rec, addr)
+}
+
+/// `midx push-update` — the client half of a zero-downtime model update:
+/// connect to a running `midx serve --tcp`, stream the payload as chunked
+/// base64 `{"op":"update"}` frames, and print the server's commit reply
+/// (generation + swap pause) on stdout. Exits non-zero if the server
+/// refuses any frame, so scripts can gate on a clean apply.
+fn cmd_push_update(args: &Args) -> Result<()> {
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow!("--addr HOST:PORT required (a running `midx serve --tcp`)"))?;
+    let next = args
+        .get("next")
+        .ok_or_else(|| anyhow!("--next FILE required (the snapshot to push)"))?;
+    let (mode, payload) = match args.get("base") {
+        Some(base) => {
+            // delta path: push only the rows that changed between the two
+            // snapshots — the server drift-refreshes them incrementally
+            let old = Snapshot::read(Path::new(base))?;
+            let new = Snapshot::read(Path::new(next))?;
+            let delta = Delta::diff(&old, &new)?;
+            eprintln!(
+                "delta: {} of {} embedding rows changed ({} B payload)",
+                delta.rows.len(),
+                old.n,
+                delta.to_bytes().len()
+            );
+            (UpdateMode::Delta, delta.to_bytes())
+        }
+        None => {
+            // whole-snapshot path: validate locally before shipping so a
+            // corrupt file fails here, not inside the serving process
+            Snapshot::read(Path::new(next))?;
+            let bytes =
+                std::fs::read(next).with_context(|| format!("reading snapshot {next}"))?;
+            (UpdateMode::Snapshot, bytes)
+        }
+    };
+    let chunk_bytes = args.usize_or("chunk-bytes", 48 * 1024).max(1);
+    let chunks = payload.len().div_ceil(chunk_bytes).max(1);
+
+    let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone().context("cloning the update stream")?;
+    let mut reader = BufReader::new(stream);
+
+    let mut frame = |line: String| -> Result<Json> {
+        writeln!(writer, "{line}").context("writing update frame")?;
+        let mut reply = String::new();
+        reader.read_line(&mut reply).context("reading update reply")?;
+        if reply.is_empty() {
+            bail!("server closed the connection mid-update");
+        }
+        let j = Json::parse(reply.trim())
+            .map_err(|e| anyhow!("unparseable server reply ({e}): {}", reply.trim()))?;
+        if !matches!(j.get("ok"), Some(Json::Bool(true))) {
+            bail!("server refused the update: {}", reply.trim());
+        }
+        Ok(j)
+    };
+
+    frame(format!(
+        r#"{{"op":"update","action":"begin","mode":"{}","bytes":{},"chunks":{}}}"#,
+        mode.name(),
+        payload.len(),
+        chunks
+    ))?;
+    for (seq, chunk) in payload.chunks(chunk_bytes).enumerate() {
+        frame(format!(
+            r#"{{"op":"update","action":"chunk","seq":{seq},"data":"{}"}}"#,
+            b64_encode(chunk)
+        ))?;
+    }
+    let commit = frame(format!(
+        r#"{{"op":"update","action":"commit","fnv":"{:016x}"}}"#,
+        fnv1a64(&payload)
+    ))?;
+    // the commit reply (generation, swap_us, drift counters) is the
+    // machine-readable receipt — print it verbatim for scripts to grep
+    println!("{commit}");
+    eprintln!(
+        "pushed {} update: {} B in {chunks} chunk(s) to {addr}",
+        mode.name(),
+        payload.len()
+    );
+    Ok(())
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
@@ -506,6 +626,7 @@ fn main() -> Result<()> {
         Some("export") => cmd_export(&args),
         Some("query") => cmd_query(&args),
         Some("serve") => cmd_serve(&args),
+        Some("push-update") => cmd_push_update(&args),
         Some(other) => {
             // unknown subcommand: full usage listing on stderr (stdout
             // stays machine-readable) and a non-zero exit

@@ -264,7 +264,11 @@ impl SamplerCore for MidxCore {
 /// mass update when any bucket actually changed. Never touches the RNG and
 /// never re-runs k-means; with zero drift the core is left bit-identical
 /// (the tolerance = 0 equivalence the tests pin).
-fn refresh_core(
+///
+/// Crate-visible so the serve layer's live-update path
+/// (`serve::update`) can run the very same refresh against a shadow copy
+/// of a served core — one refresh algorithm, training and serving alike.
+pub(crate) fn refresh_core(
     quant: &mut Box<dyn Quantizer + Send + Sync>,
     index: &mut InvertedMultiIndex,
     maint: &mut DriftTracker,

@@ -24,6 +24,14 @@
 //!   `poll(2)`, with per-connection framing buffers, in-order replies, a
 //!   bounded admission queue with explicit `busy` backpressure, idle
 //!   timeouts, and graceful drain (DESIGN.md §7).
+//! * [`update`] — zero-downtime **live model updates**: `{"op":"update"}`
+//!   streams a whole snapshot or an embedding delta over the same JSON
+//!   protocol (chunked base64 frames); the [`update::UpdateHub`] runs the
+//!   PR 3 drift refresh against a shadow copy on a dedicated updater
+//!   thread and swaps the rebuilt engine in atomically at the
+//!   [`query::MicroBatcher`] quiesce seam — in-flight queries drain
+//!   against the old core, post-swap answers are bit-identical to a cold
+//!   load of the new state (DESIGN.md §9).
 //!
 //! Snapshots cover the static samplers too (uniform, unigram — the alias
 //! table persists verbatim), so a served engine can attach one as a cheap
@@ -42,9 +50,11 @@ pub mod query;
 pub mod reactor;
 pub mod server;
 pub mod snapshot;
+pub mod update;
 
 pub use query::{MicroBatcher, QueryEngine, Reply, Request};
 #[cfg(unix)]
 pub use reactor::{serve_reactor, Reactor, ReactorConfig, ReactorCounters, ReactorHandle};
-pub use server::{handle_line, serve_stdin, serve_tcp, LatencyRecorder};
+pub use server::{handle_line, serve_stdin, serve_tcp, LatencyRecorder, UpdateSession};
 pub use snapshot::{AliasParts, LoadMode, Snapshot, SnapshotKind};
+pub use update::{Delta, UpdateConfig, UpdateHub, UpdateMode};

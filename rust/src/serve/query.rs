@@ -125,6 +125,13 @@ pub struct QueryEngine {
     /// standby distribution a deployment can answer from while the MIDX
     /// core is refreshing)
     fallback: Option<(SnapshotKind, Box<dyn SamplerCore>)>,
+    /// the attached fallback's snapshot, retained so a live-update rebuild
+    /// ([`QueryEngine::rebuilt`]) can re-attach the same standby proposal
+    /// to the replacement engine
+    fallback_snap: Option<Snapshot>,
+    /// monotone core version: 0 for a fresh load, +1 per applied live
+    /// update (reported by the `info` op, pinned by the update harness)
+    generation: u64,
 }
 
 impl QueryEngine {
@@ -169,7 +176,49 @@ impl QueryEngine {
             load_mode: LoadMode::Eager,
             load_millis: 0.0,
             fallback: None,
+            fallback_snap: None,
+            generation: 0,
         })
+    }
+
+    /// Monotone core version: 0 for a fresh load, advanced by one each
+    /// time a live update swaps a rebuilt engine in.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Capture the served core as a [`Snapshot`] (pure reads — serving
+    /// continues concurrently). This is the shadow copy a live delta
+    /// update refreshes off the reactor thread before building the
+    /// replacement engine.
+    pub fn capture_snapshot(&self) -> Snapshot {
+        Snapshot::capture(
+            self.kind,
+            self.served.quantizer(),
+            self.served.index(),
+            self.rerank_table(),
+            self.n,
+            self.d,
+        )
+    }
+
+    /// Build the replacement engine a live update swaps in: a cold
+    /// [`QueryEngine::new`] over `snap` — so the post-swap serving state is
+    /// bit-identical to a cold load of the pushed state *by construction* —
+    /// with this engine's serving configuration re-applied (worker count,
+    /// beam factor, fast-sample opt-in, attached fallback proposal) and the
+    /// generation counter advanced.
+    pub fn rebuilt(&self, snap: Snapshot) -> Result<QueryEngine> {
+        let mut eng = QueryEngine::new(snap, self.workers())?;
+        eng.beam_factor = self.beam_factor;
+        if self.fast_sample() {
+            eng.set_fast_sample(true);
+        }
+        if let Some(fb) = &self.fallback_snap {
+            eng.attach_fallback(fb.clone())?;
+        }
+        eng.generation = self.generation + 1;
+        Ok(eng)
     }
 
     /// Record how the backing snapshot was materialized (load mode + wall
@@ -229,6 +278,7 @@ impl QueryEngine {
             );
         }
         self.fallback = Some((snap.kind, snap.build_core()));
+        self.fallback_snap = Some(snap);
         Ok(())
     }
 
@@ -642,11 +692,19 @@ struct BatcherQueue {
     /// tests and operators build deterministic overload, and lets a
     /// deployment park the queue during a planned core swap)
     paused: bool,
+    /// set (under the queue lock) while the dispatcher is executing a
+    /// drained batch; [`MicroBatcher::swap_engine`] waits on it so an
+    /// in-flight batch always finishes against the engine it started on
+    dispatching: bool,
 }
 
 struct BatcherShared {
     q: Mutex<BatcherQueue>,
     cv: Condvar,
+    /// the engine the dispatcher executes batches on. Behind a mutex so a
+    /// live update can atomically replace it ([`MicroBatcher::swap_engine`]);
+    /// the dispatcher re-reads it once per batch, never mid-batch.
+    engine: Mutex<Arc<QueryEngine>>,
     /// total requests accepted (diagnostics)
     requests: AtomicU64,
     /// pool dispatches performed — `requests / dispatches` is the realized
@@ -665,10 +723,14 @@ fn lock_queue(m: &Mutex<BatcherQueue>) -> MutexGuard<'_, BatcherQueue> {
 /// block in [`MicroBatcher::submit`] while a dispatcher thread coalesces
 /// everything that arrived within a short window into one pool dispatch.
 ///
+/// The served engine is **swappable**: [`MicroBatcher::swap_engine`]
+/// quiesces the dispatcher (pause → drain the in-flight batch → install
+/// the replacement → resume), which is how live model updates reach the
+/// serve path without dropping, duplicating, or reordering a single reply.
+///
 /// Shutdown is automatic: dropping the batcher stops the dispatcher after
 /// it drains any queued requests.
 pub struct MicroBatcher {
-    engine: Arc<QueryEngine>,
     shared: Arc<BatcherShared>,
     queue_cap: usize,
     handle: Option<std::thread::JoinHandle<()>>,
@@ -699,27 +761,59 @@ impl MicroBatcher {
         queue_cap: usize,
     ) -> MicroBatcher {
         let shared = Arc::new(BatcherShared {
-            q: Mutex::new(BatcherQueue { pending: Vec::new(), shutdown: false, paused: false }),
+            q: Mutex::new(BatcherQueue {
+                pending: Vec::new(),
+                shutdown: false,
+                paused: false,
+                dispatching: false,
+            }),
             cv: Condvar::new(),
+            engine: Mutex::new(engine),
             requests: AtomicU64::new(0),
             dispatches: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
         });
         let max_batch = max_batch.max(1);
         let handle = {
-            let engine = Arc::clone(&engine);
             let shared = Arc::clone(&shared);
             std::thread::Builder::new()
                 .name("midx-serve-batcher".into())
-                .spawn(move || dispatcher_loop(&engine, &shared, window, max_batch))
+                .spawn(move || dispatcher_loop(&shared, window, max_batch))
                 .expect("spawn micro-batch dispatcher")
         };
-        MicroBatcher { engine, shared, queue_cap, handle: Some(handle) }
+        MicroBatcher { shared, queue_cap, handle: Some(handle) }
     }
 
-    /// The engine this batcher serves.
-    pub fn engine(&self) -> &QueryEngine {
-        &self.engine
+    /// The engine this batcher currently serves (a clone of the shared
+    /// handle — the caller's view stays coherent even if a live update
+    /// swaps the served engine while the caller is still using it).
+    pub fn engine(&self) -> Arc<QueryEngine> {
+        Arc::clone(&self.shared.engine.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+
+    /// Atomically replace the served engine: pause the dispatcher, wait for
+    /// the in-flight batch (if any) to finish against the old engine,
+    /// install `new`, resume. Queued and newly arriving requests are held —
+    /// never dropped — for the duration, so no reply is lost, duplicated,
+    /// or reordered by a swap, and every request executes entirely on one
+    /// engine or the other. Returns the quiesce-to-resume wall time (the
+    /// swap's serving pause). The old engine (and its worker pool) is
+    /// released when the last outstanding [`MicroBatcher::engine`] clone
+    /// drops — usually right here, on the updater's thread.
+    pub fn swap_engine(&self, new: Arc<QueryEngine>) -> Duration {
+        let t0 = Instant::now();
+        self.pause();
+        {
+            let mut g = lock_queue(&self.shared.q);
+            while g.dispatching {
+                g = self.shared.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
+            // queue lock held and the dispatcher is parked (paused, not
+            // dispatching): nothing can observe a half-installed engine
+            *self.shared.engine.lock().unwrap_or_else(|e| e.into_inner()) = new;
+        }
+        self.resume();
+        t0.elapsed()
     }
 
     /// The admission-queue bound `try_submit_with` enforces
@@ -808,12 +902,7 @@ impl Drop for MicroBatcher {
     }
 }
 
-fn dispatcher_loop(
-    engine: &QueryEngine,
-    shared: &BatcherShared,
-    window: Duration,
-    max_batch: usize,
-) {
+fn dispatcher_loop(shared: &BatcherShared, window: Duration, max_batch: usize) {
     loop {
         let batch = {
             let mut g = lock_queue(&shared.q);
@@ -848,17 +937,31 @@ fn dispatcher_loop(
                 }
             }
             let take = g.pending.len().min(max_batch);
-            g.pending.drain(..take).collect::<Vec<_>>()
+            let batch = g.pending.drain(..take).collect::<Vec<_>>();
+            if !batch.is_empty() {
+                // mark the batch in flight before dropping the queue lock:
+                // swap_engine waits for this flag, so a swap can never
+                // land between "batch drained" and "engine fetched" below
+                g.dispatching = true;
+            }
+            batch
         };
         if batch.is_empty() {
             continue;
         }
         shared.dispatches.fetch_add(1, Ordering::Relaxed);
+        // the engine is re-read once per batch (never mid-batch): every
+        // request in this batch executes on exactly one engine
+        let engine = Arc::clone(&*shared.engine.lock().unwrap_or_else(|e| e.into_inner()));
         let (reqs, responders): (Vec<Request>, Vec<Responder>) = batch.into_iter().unzip();
         let replies = engine.run_requests(&reqs);
         for (responder, reply) in responders.into_iter().zip(replies) {
             responder.respond(reply);
         }
+        let mut g = lock_queue(&shared.q);
+        g.dispatching = false;
+        // wake a swap_engine waiting for this batch to drain
+        shared.cv.notify_all();
     }
 }
 

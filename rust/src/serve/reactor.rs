@@ -50,6 +50,9 @@ use anyhow::{Context, Result};
 use crate::serve::query::MicroBatcher;
 use crate::serve::server::{busy_json, err_json, info_json, parse_op, render_reply, stats_json};
 use crate::serve::server::{LatencyRecorder, ParsedOp};
+use crate::serve::update::{
+    begin_ack, chunk_ack, commit_ack, UpdateAssembly, UpdateConfig, UpdateFrame, UpdateHub,
+};
 use crate::util::Json;
 
 // ---------------------------------------------------------------------------
@@ -106,6 +109,9 @@ pub struct ReactorConfig {
     /// How long a graceful drain waits for in-flight requests and
     /// unflushed replies before giving up and closing everything.
     pub drain_timeout: Duration,
+    /// Live-update knobs (`{"op":"update"}` pushes): drift-refresh
+    /// tolerance/iterations for deltas and the payload size ceiling.
+    pub update: UpdateConfig,
 }
 
 impl Default for ReactorConfig {
@@ -115,6 +121,7 @@ impl Default for ReactorConfig {
             idle_timeout: Duration::from_secs(60),
             max_line: 1 << 20,
             drain_timeout: Duration::from_secs(5),
+            update: UpdateConfig::default(),
         }
     }
 }
@@ -215,6 +222,10 @@ struct Conn {
     /// requests submitted to the batcher whose completions are still due
     inflight: usize,
     last_activity: Instant,
+    /// in-progress live-update payload assembly (between an `update`
+    /// begin and its commit); dropped with the connection, so a mid-update
+    /// disconnect discards the partial payload and touches nothing
+    update: Option<UpdateAssembly>,
     /// stop reading; close once everything in flight has flushed
     closing: bool,
     /// unrecoverable socket error — close immediately, drop buffers
@@ -233,6 +244,7 @@ impl Conn {
             flush_seq: 0,
             inflight: 0,
             last_activity: Instant::now(),
+            update: None,
             closing: false,
             dead: false,
         }
@@ -347,6 +359,7 @@ pub struct Reactor {
     rec: Arc<LatencyRecorder>,
     cfg: ReactorConfig,
     shared: Arc<ReactorShared>,
+    hub: Arc<UpdateHub>,
     wake_rx: TcpStream,
     comp_tx: mpsc::Sender<Completion>,
     comp_rx: mpsc::Receiver<Completion>,
@@ -398,7 +411,8 @@ impl Reactor {
             idle_closed: AtomicU64::new(0),
         });
         let (comp_tx, comp_rx) = mpsc::channel();
-        Ok(Reactor { listener, batcher, rec, cfg, shared, wake_rx, comp_tx, comp_rx })
+        let hub = UpdateHub::new(Arc::clone(&batcher), cfg.update);
+        Ok(Reactor { listener, batcher, rec, cfg, shared, hub, wake_rx, comp_tx, comp_rx })
     }
 
     /// The address the reactor is listening on (resolves `:0` binds).
@@ -414,7 +428,8 @@ impl Reactor {
     /// Run the event loop until a graceful drain completes. Prints the
     /// latency report to stderr on exit, like the stdin frontend.
     pub fn run(self) -> Result<()> {
-        let Reactor { listener, batcher, rec, cfg, shared, wake_rx, comp_tx, comp_rx } = self;
+        let Reactor { listener, batcher, rec, cfg, shared, hub, wake_rx, comp_tx, comp_rx } =
+            self;
         let mut wake_rx = wake_rx;
         let mut conns: BTreeMap<u64, Conn> = BTreeMap::new();
         let mut next_id: u64 = 0;
@@ -535,7 +550,7 @@ impl Reactor {
                 // conn whose peer died still surfaces the error through its
                 // failing writes.
                 if revents & (POLLIN | POLLHUP | POLLERR) != 0 && c.want_read(draining) {
-                    read_conn(c, id, &cfg, &batcher, &rec, &comp_tx, &shared);
+                    read_conn(c, id, &cfg, &batcher, &rec, &comp_tx, &shared, &hub);
                 }
                 if revents & POLLOUT != 0 {
                     c.try_write();
@@ -612,6 +627,7 @@ fn poll_timeout_ms(
 /// each line: protocol errors and info/stats answer inline at their
 /// sequence slot; queries enter the batcher's bounded queue or turn into
 /// `busy` replies.
+#[allow(clippy::too_many_arguments)]
 fn read_conn(
     c: &mut Conn,
     id: u64,
@@ -620,6 +636,7 @@ fn read_conn(
     rec: &Arc<LatencyRecorder>,
     comp_tx: &mpsc::Sender<Completion>,
     shared: &Arc<ReactorShared>,
+    hub: &Arc<UpdateHub>,
 ) {
     let mut chunk = [0u8; 4096];
     loop {
@@ -636,7 +653,7 @@ fn read_conn(
                     if line.trim().is_empty() {
                         continue;
                     }
-                    process_line(c, id, &line, batcher, rec, comp_tx, shared);
+                    process_line(c, id, &line, batcher, rec, comp_tx, shared, hub);
                 }
                 if oversize {
                     let seq = c.next_seq;
@@ -669,6 +686,11 @@ fn read_conn(
 
 /// Dispatch one framed request line (reactor side of
 /// [`crate::serve::server::handle_line`], minus the blocking submit).
+/// Update frames drive the connection's assembly inline; a verified commit
+/// hands the payload to the [`UpdateHub`]'s dedicated updater thread and
+/// the reply arrives through the completion channel like any async query —
+/// the event loop never blocks on a rebuild.
+#[allow(clippy::too_many_arguments)]
 fn process_line(
     c: &mut Conn,
     id: u64,
@@ -677,12 +699,13 @@ fn process_line(
     rec: &Arc<LatencyRecorder>,
     comp_tx: &mpsc::Sender<Completion>,
     shared: &Arc<ReactorShared>,
+    hub: &Arc<UpdateHub>,
 ) {
     let seq = c.next_seq;
     c.next_seq += 1;
-    match parse_op(batcher.engine(), line) {
+    match parse_op(&batcher.engine(), line) {
         ParsedOp::Reply(j) => c.complete(seq, j.to_string()),
-        ParsedOp::Info => c.complete(seq, info_json(batcher.engine()).to_string()),
+        ParsedOp::Info => c.complete(seq, info_json(&batcher.engine()).to_string()),
         ParsedOp::Stats => {
             let mut j = stats_json(batcher, rec);
             if let Json::Obj(ref mut m) = j {
@@ -690,9 +713,69 @@ fn process_line(
                 m.insert("conns".into(), Json::Num(counters.open as f64));
                 m.insert("accepted".into(), Json::Num(counters.accepted as f64));
                 m.insert("busy".into(), Json::Num(counters.busy as f64));
+                let u = hub.stats();
+                m.insert("updates_applied".into(), Json::Num(u.applied as f64));
+                m.insert("updates_rejected".into(), Json::Num(u.rejected as f64));
+                m.insert("last_swap_us".into(), Json::Num(u.last_swap_us as f64));
             }
             c.complete(seq, j.to_string());
         }
+        ParsedOp::Update(frame) => match frame {
+            UpdateFrame::Begin { mode, bytes, chunks } => {
+                if c.update.is_some() {
+                    c.update = None;
+                    let e = err_json("update already in progress on this connection (discarded)");
+                    c.complete(seq, e.to_string());
+                } else {
+                    match UpdateAssembly::begin(mode, bytes, chunks, hub.config().max_bytes) {
+                        Ok(a) => {
+                            c.update = Some(a);
+                            c.complete(seq, begin_ack(mode).to_string());
+                        }
+                        Err(e) => c.complete(seq, err_json(&e).to_string()),
+                    }
+                }
+            }
+            UpdateFrame::Chunk { seq: chunk_seq, data } => match c.update.as_mut() {
+                None => c.complete(seq, err_json("update chunk without a begin").to_string()),
+                Some(a) => match a.chunk(chunk_seq, &data) {
+                    Ok(()) => c.complete(seq, chunk_ack(chunk_seq).to_string()),
+                    Err(e) => {
+                        c.update = None;
+                        c.complete(seq, err_json(&e).to_string());
+                    }
+                },
+            },
+            UpdateFrame::Commit { fnv } => match c.update.take() {
+                None => c.complete(seq, err_json("update commit without a begin").to_string()),
+                Some(a) => match a.commit(&fnv) {
+                    Err(e) => c.complete(seq, err_json(&e).to_string()),
+                    Ok((mode, payload)) => {
+                        // apply off the reactor thread; the commit reply
+                        // travels the async completion path at this seq
+                        // slot, so in-order delivery holds and the idle
+                        // reaper spares the connection (inflight > 0)
+                        c.inflight += 1;
+                        let tx = comp_tx.clone();
+                        let wake = Arc::clone(shared);
+                        hub.apply_async(
+                            mode,
+                            payload,
+                            Box::new(move |res| {
+                                let line = match res {
+                                    Ok(a) => commit_ack(&a).to_string(),
+                                    Err(e) => {
+                                        err_json(&format!("update rejected: {e}")).to_string()
+                                    }
+                                };
+                                let _ = tx.send(Completion { conn: id, seq, line });
+                                wake.wake();
+                            }),
+                        );
+                    }
+                },
+            },
+        },
         ParsedOp::Query { req, sample } => {
             let t0 = Instant::now();
             let tx = comp_tx.clone();
@@ -725,7 +808,7 @@ pub fn serve_reactor(
 ) -> Result<()> {
     let reactor = Reactor::bind(addr, batcher, rec, cfg)?;
     eprintln!(
-        "serving on {} (reactor: line-delimited JSON; op topk|sample|info|stats; \
+        "serving on {} (reactor: line-delimited JSON; op topk|sample|info|stats|update; \
          max-conns={} idle={}s)",
         reactor.local_addr()?,
         reactor.cfg.max_conns,

@@ -28,7 +28,11 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::serve::query::{MicroBatcher, Reply, Request};
+use crate::serve::query::{MicroBatcher, QueryEngine, Reply, Request};
+use crate::serve::update::{
+    begin_ack, chunk_ack, commit_ack, parse_update_frame, UpdateAssembly, UpdateConfig,
+    UpdateFrame, UpdateHub,
+};
 use crate::util::json::{from_f32s, from_u32s};
 use crate::util::Json;
 
@@ -194,6 +198,11 @@ pub enum ParsedOp {
         /// `scores`)
         sample: bool,
     },
+    /// `{"op":"update", …}` — one frame of a live model update. Stateful:
+    /// frontends route it through an [`UpdateSession`] (blocking paths) or
+    /// the reactor's per-connection assembly; the stateless
+    /// [`handle_line`] answers it with an error.
+    Update(UpdateFrame),
 }
 
 /// Parse + validate one request line against `engine`'s dimensions.
@@ -208,7 +217,7 @@ pub fn parse_op(engine: &QueryEngine, line: &str) -> ParsedOp {
         Some(op) => op.to_string(),
         None => {
             return ParsedOp::Reply(err_json(
-                "missing field 'op' (\"topk\" | \"sample\" | \"info\" | \"stats\")",
+                "missing field 'op' (\"topk\" | \"sample\" | \"info\" | \"stats\" | \"update\")",
             ))
         }
     };
@@ -253,8 +262,12 @@ pub fn parse_op(engine: &QueryEngine, line: &str) -> ParsedOp {
             }
             ParsedOp::Query { req: Request::Sample { q, m, seed, fallback }, sample: true }
         }
+        "update" => match parse_update_frame(&req) {
+            Ok(frame) => ParsedOp::Update(frame),
+            Err(e) => ParsedOp::Reply(err_json(&e)),
+        },
         other => ParsedOp::Reply(err_json(&format!(
-            "unknown op '{other}' (\"topk\" | \"sample\" | \"info\" | \"stats\")"
+            "unknown op '{other}' (\"topk\" | \"sample\" | \"info\" | \"stats\" | \"update\")"
         ))),
     }
 }
@@ -269,6 +282,7 @@ pub fn info_json(engine: &QueryEngine) -> Json {
     m.insert("load_mode".into(), Json::Str(engine.load_mode().name().to_string()));
     m.insert("load_ms".into(), Json::Num(engine.load_millis()));
     m.insert("fast_sample".into(), Json::Bool(engine.fast_sample()));
+    m.insert("generation".into(), Json::Num(engine.generation() as f64));
     match engine.fallback_kind() {
         Some(kind) => m.insert("fallback".into(), Json::Str(kind.name().to_string())),
         None => m.insert("fallback".into(), Json::Null),
@@ -292,9 +306,17 @@ pub fn stats_json(batcher: &MicroBatcher, rec: &LatencyRecorder) -> Json {
 /// that also lands in `rec`). Never panics on malformed input — errors
 /// render as `{"ok":false,"error":…}`.
 pub fn handle_line(batcher: &MicroBatcher, rec: &LatencyRecorder, line: &str) -> String {
-    let out = match parse_op(batcher.engine(), line) {
+    let parsed = parse_op(&batcher.engine(), line);
+    dispatch_parsed(batcher, rec, parsed).to_string()
+}
+
+/// Execute an already-parsed op against the batcher (blocking). Update
+/// frames answer with an error here — they carry per-connection state, so
+/// only the stateful paths ([`UpdateSession`], the reactor) accept them.
+fn dispatch_parsed(batcher: &MicroBatcher, rec: &LatencyRecorder, parsed: ParsedOp) -> Json {
+    match parsed {
         ParsedOp::Reply(j) => j,
-        ParsedOp::Info => info_json(batcher.engine()),
+        ParsedOp::Info => info_json(&batcher.engine()),
         ParsedOp::Stats => stats_json(batcher, rec),
         ParsedOp::Query { req, sample } => {
             let t0 = Instant::now();
@@ -303,8 +325,96 @@ pub fn handle_line(batcher: &MicroBatcher, rec: &LatencyRecorder, line: &str) ->
             rec.record(us);
             render_reply(&reply, if sample { "log_q" } else { "scores" }, us)
         }
-    };
-    out.to_string()
+        ParsedOp::Update(_) => {
+            err_json("this frontend path is stateless — updates need a connection session")
+        }
+    }
+}
+
+/// Per-connection protocol state for the blocking frontends (stdin, the
+/// thread-per-connection TCP fallback): everything [`handle_line`] does,
+/// plus the stateful `{"op":"update"}` begin/chunk/commit sequence. The
+/// commit applies **synchronously on the calling thread** — acceptable
+/// here because each blocking connection owns a thread; the reactor uses
+/// its own async path so its event loop never blocks on a rebuild.
+///
+/// Dropping the session mid-update (client disconnect) discards the
+/// partial payload and leaves the served engine untouched.
+pub struct UpdateSession {
+    hub: Arc<UpdateHub>,
+    pending: Option<UpdateAssembly>,
+}
+
+impl UpdateSession {
+    /// A fresh session applying updates through `hub`.
+    pub fn new(hub: Arc<UpdateHub>) -> UpdateSession {
+        UpdateSession { hub, pending: None }
+    }
+
+    /// Handle one request line end to end (the stateful superset of
+    /// [`handle_line`]): update frames drive this session's assembly,
+    /// everything else dispatches through the batcher, and `stats` grows
+    /// the hub's applied/rejected/swap counters.
+    pub fn handle(&mut self, rec: &LatencyRecorder, line: &str) -> String {
+        let batcher = Arc::clone(self.hub.batcher());
+        let out = match parse_op(&batcher.engine(), line) {
+            ParsedOp::Update(frame) => self.update_frame(frame),
+            ParsedOp::Stats => {
+                let mut j = stats_json(&batcher, rec);
+                if let Json::Obj(ref mut m) = j {
+                    let u = self.hub.stats();
+                    m.insert("updates_applied".into(), Json::Num(u.applied as f64));
+                    m.insert("updates_rejected".into(), Json::Num(u.rejected as f64));
+                    m.insert("last_swap_us".into(), Json::Num(u.last_swap_us as f64));
+                }
+                j
+            }
+            other => dispatch_parsed(&batcher, rec, other),
+        };
+        out.to_string()
+    }
+
+    /// Advance the begin → chunk* → commit state machine by one frame.
+    /// Every rejection clears the in-progress assembly, so the connection
+    /// can immediately start a fresh update; the served engine is never
+    /// touched before a fully verified commit.
+    fn update_frame(&mut self, frame: UpdateFrame) -> Json {
+        match frame {
+            UpdateFrame::Begin { mode, bytes, chunks } => {
+                if self.pending.is_some() {
+                    self.pending = None;
+                    return err_json("update already in progress on this connection (discarded)");
+                }
+                match UpdateAssembly::begin(mode, bytes, chunks, self.hub.config().max_bytes) {
+                    Ok(a) => {
+                        self.pending = Some(a);
+                        begin_ack(mode)
+                    }
+                    Err(e) => err_json(&e),
+                }
+            }
+            UpdateFrame::Chunk { seq, data } => match self.pending.as_mut() {
+                None => err_json("update chunk without a begin"),
+                Some(a) => match a.chunk(seq, &data) {
+                    Ok(()) => chunk_ack(seq),
+                    Err(e) => {
+                        self.pending = None;
+                        err_json(&e)
+                    }
+                },
+            },
+            UpdateFrame::Commit { fnv } => match self.pending.take() {
+                None => err_json("update commit without a begin"),
+                Some(a) => match a.commit(&fnv) {
+                    Err(e) => err_json(&e),
+                    Ok((mode, payload)) => match self.hub.apply(mode, &payload) {
+                        Ok(applied) => commit_ack(&applied),
+                        Err(e) => err_json(&format!("update rejected: {e}")),
+                    },
+                },
+            },
+        }
+    }
 }
 
 pub(crate) fn render_reply(reply: &Reply, score_field: &str, us: u64) -> Json {
@@ -316,8 +426,17 @@ pub(crate) fn render_reply(reply: &Reply, score_field: &str, us: u64) -> Json {
 }
 
 /// Serve line-delimited JSON requests from stdin, replies to stdout, until
-/// EOF; the latency report prints to stderr on exit.
-pub fn serve_stdin(batcher: &MicroBatcher, rec: &LatencyRecorder) -> Result<()> {
+/// EOF; the latency report prints to stderr on exit. stdin is a single
+/// stateful session, so the full protocol — including live
+/// `{"op":"update"}` pushes — is available; `update` configures how
+/// pushed deltas are refreshed.
+pub fn serve_stdin(
+    batcher: &Arc<MicroBatcher>,
+    rec: &LatencyRecorder,
+    update: UpdateConfig,
+) -> Result<()> {
+    let hub = UpdateHub::new(Arc::clone(batcher), update);
+    let mut sess = UpdateSession::new(hub);
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     let mut out = stdout.lock();
@@ -326,7 +445,7 @@ pub fn serve_stdin(batcher: &MicroBatcher, rec: &LatencyRecorder) -> Result<()> 
         if line.trim().is_empty() {
             continue;
         }
-        let reply = handle_line(batcher, rec, &line);
+        let reply = sess.handle(rec, &line);
         writeln!(out, "{reply}").context("writing stdout")?;
         out.flush().context("flushing stdout")?;
     }
@@ -335,10 +454,11 @@ pub fn serve_stdin(batcher: &MicroBatcher, rec: &LatencyRecorder) -> Result<()> 
 }
 
 fn serve_conn(
-    batcher: &MicroBatcher,
+    hub: &Arc<UpdateHub>,
     rec: &LatencyRecorder,
     stream: TcpStream,
 ) -> std::io::Result<()> {
+    let mut sess = UpdateSession::new(Arc::clone(hub));
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -346,7 +466,7 @@ fn serve_conn(
         if line.trim().is_empty() {
             continue;
         }
-        let reply = handle_line(batcher, rec, &line);
+        let reply = sess.handle(rec, &line);
         writer.write_all(reply.as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
@@ -358,7 +478,8 @@ fn serve_conn(
 /// connections funneling into the shared [`MicroBatcher`] (which is what
 /// coalesces concurrent callers into single batched dispatches). Runs
 /// until the process is killed; per-request latency is queryable live via
-/// `{"op":"stats"}`.
+/// `{"op":"stats"}`. All connections share one [`UpdateHub`], so
+/// concurrent `{"op":"update"}` pushes serialize and apply one at a time.
 ///
 /// This is the **legacy** frontend (and the non-unix fallback): it spends
 /// a thread per socket. Production serving goes through the event-driven
@@ -370,13 +491,14 @@ pub fn serve_tcp(
     addr: &str,
 ) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    eprintln!("serving on {addr} (line-delimited JSON; op topk|sample|info|stats)");
+    eprintln!("serving on {addr} (line-delimited JSON; op topk|sample|info|stats|update)");
+    let hub = UpdateHub::new(batcher, UpdateConfig::default());
     for stream in listener.incoming() {
         let stream = stream.context("accepting connection")?;
-        let batcher = Arc::clone(&batcher);
+        let hub = Arc::clone(&hub);
         let rec = Arc::clone(&rec);
         std::thread::spawn(move || {
-            if let Err(e) = serve_conn(&batcher, &rec, stream) {
+            if let Err(e) = serve_conn(&hub, &rec, stream) {
                 eprintln!("connection error: {e}");
             }
         });

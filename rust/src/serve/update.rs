@@ -1,0 +1,772 @@
+//! Zero-downtime live model updates for the serve path.
+//!
+//! Training and serving used to be connected only by a snapshot file at
+//! export time: a deployed sampler went stale the moment training
+//! continued. This module closes that loop. A client pushes either a
+//! whole v2 snapshot or a compact *embedding delta* over the existing
+//! line-delimited JSON protocol, the server rebuilds a fresh
+//! [`QueryEngine`] against a **shadow copy** of the live state on a
+//! dedicated updater thread (never the reactor thread), and the
+//! [`MicroBatcher`] swaps the engine in atomically at a quiesced seam —
+//! in-flight queries drain against the old core, post-swap queries are
+//! bit-identical to a cold load of the new state.
+//!
+//! # Wire protocol
+//!
+//! An update is a `begin` / `chunk`* / `commit` frame sequence on one
+//! connection, each frame a normal request line answered in order:
+//!
+//! ```text
+//! → {"op":"update","action":"begin","mode":"delta","bytes":812,"chunks":1}
+//! ← {"ok":true,"update":"begin","mode":"delta"}
+//! → {"op":"update","action":"chunk","seq":0,"data":"TUlEWERFTFQ…"}
+//! ← {"ok":true,"update":"chunk","seq":0}
+//! → {"op":"update","action":"commit","fnv":"…16 hex digits…"}
+//! ← {"ok":true,"update":"commit","generation":1,"swap_us":184,…}
+//! ```
+//!
+//! Chunks carry standard base64 (so payload bytes survive the
+//! line-delimited framing) and must arrive in order; `commit` names the
+//! [`fnv1a64`] checksum of the assembled payload. Any mismatch — length,
+//! sequence, checksum, or payload validation — rejects the update and
+//! leaves the old core serving: rejection can never corrupt live state
+//! because the refresh runs against a shadow copy, not the served core.
+//!
+//! # Delta format
+//!
+//! A delta payload is the binary block built by [`Delta::to_bytes`]:
+//! magic `MIDXDELT`, the embedding dimension, a row count, then
+//! `(row_id, d × f32)` records for every changed class embedding. The
+//! server applies rows to a shadow copy of its table and runs the PR 3
+//! [`crate::index::drift`] incremental refresh
+//! ([`crate::sampler::midx::refresh_core`] — the *same* code path the
+//! trainer uses), so a pushed delta reproduces exactly what a trainer-side
+//! refresh + export + cold load would have produced.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::index::{DriftTracker, RefreshOutcome};
+use crate::serve::query::MicroBatcher;
+use crate::serve::snapshot::{fnv1a64, Snapshot};
+use crate::util::Json;
+
+/// Delta payload magic: the first 8 bytes of every [`Delta::to_bytes`]
+/// block (deliberately distinct from the snapshot magic `MIDXSNAP`).
+pub const DELTA_MAGIC: [u8; 8] = *b"MIDXDELT";
+
+/// Hard ceiling on a single update payload a server will assemble when no
+/// explicit [`UpdateConfig::max_bytes`] is configured (256 MiB).
+pub const DEFAULT_MAX_UPDATE_BYTES: usize = 1 << 28;
+
+// ---------------------------------------------------------------------------
+// base64 (standard alphabet, RFC 4648 with padding) — hand-rolled so update
+// payloads can ride the line-delimited JSON protocol without new deps.
+// ---------------------------------------------------------------------------
+
+const B64_ALPHABET: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Encode bytes as standard base64 (RFC 4648 alphabet, `=` padding).
+pub fn b64_encode(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len().div_ceil(3) * 4);
+    for chunk in bytes.chunks(3) {
+        let b0 = chunk[0] as u32;
+        let b1 = *chunk.get(1).unwrap_or(&0) as u32;
+        let b2 = *chunk.get(2).unwrap_or(&0) as u32;
+        let v = (b0 << 16) | (b1 << 8) | b2;
+        out.push(B64_ALPHABET[(v >> 18) as usize & 63] as char);
+        out.push(B64_ALPHABET[(v >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 { B64_ALPHABET[(v >> 6) as usize & 63] as char } else { '=' });
+        out.push(if chunk.len() > 2 { B64_ALPHABET[v as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+/// Decode standard base64 (strict: rejects bad characters, bad length,
+/// and data after padding). Returns the error as a plain string so
+/// frontends can hand it straight to their error-reply path.
+pub fn b64_decode(s: &str) -> std::result::Result<Vec<u8>, String> {
+    let bytes = s.as_bytes();
+    if bytes.len() % 4 != 0 {
+        return Err(format!("base64 length {} is not a multiple of 4", bytes.len()));
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4 * 3);
+    for (g, quad) in bytes.chunks(4).enumerate() {
+        let last = g + 1 == bytes.len() / 4;
+        let mut vals = [0u32; 4];
+        let mut pad = 0usize;
+        for (i, &b) in quad.iter().enumerate() {
+            if b == b'=' {
+                // '=' is only legal as the last one or two characters.
+                if !last || i < 2 || quad[i..].iter().any(|&c| c != b'=') {
+                    return Err("base64 padding in the middle of the data".into());
+                }
+                pad = 4 - i;
+                break;
+            }
+            vals[i] = match b {
+                b'A'..=b'Z' => (b - b'A') as u32,
+                b'a'..=b'z' => (b - b'a' + 26) as u32,
+                b'0'..=b'9' => (b - b'0' + 52) as u32,
+                b'+' => 62,
+                b'/' => 63,
+                _ => return Err(format!("invalid base64 character {:?}", b as char)),
+            };
+        }
+        let v = (vals[0] << 18) | (vals[1] << 12) | (vals[2] << 6) | vals[3];
+        out.push((v >> 16) as u8);
+        if pad < 2 {
+            out.push((v >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(v as u8);
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Config + wire frames
+// ---------------------------------------------------------------------------
+
+/// Server-side knobs for applying a pushed update.
+#[derive(Clone, Copy, Debug)]
+pub struct UpdateConfig {
+    /// ℓ2 movement below which a delta'd row keeps its bucket (passed to
+    /// the drift scan; 0 re-assesses every changed row — the default, and
+    /// the setting under which a pushed delta is bit-identical to a
+    /// trainer-side refresh at tolerance 0).
+    pub tolerance: f32,
+    /// mini-batch k-means refine passes over the drifted rows per update.
+    pub refine_iters: usize,
+    /// Largest payload (in raw bytes, pre-base64) a `begin` frame may
+    /// declare; larger declarations are rejected before any buffering.
+    pub max_bytes: usize,
+}
+
+impl Default for UpdateConfig {
+    fn default() -> Self {
+        UpdateConfig { tolerance: 0.0, refine_iters: 1, max_bytes: DEFAULT_MAX_UPDATE_BYTES }
+    }
+}
+
+/// What a pushed payload contains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateMode {
+    /// A complete serialized [`Snapshot`] (format v1 or v2) that replaces
+    /// the serving state wholesale.
+    Snapshot,
+    /// A [`Delta`] block of changed embedding rows, applied via the
+    /// incremental drift refresh against a shadow copy of the live state.
+    Delta,
+}
+
+impl UpdateMode {
+    /// Parse the `mode` field of a `begin` frame (`"snapshot"` | `"delta"`).
+    pub fn parse(s: &str) -> Option<UpdateMode> {
+        match s {
+            "snapshot" => Some(UpdateMode::Snapshot),
+            "delta" => Some(UpdateMode::Delta),
+            _ => None,
+        }
+    }
+
+    /// Wire / reporting name.
+    pub fn name(self) -> &'static str {
+        match self {
+            UpdateMode::Snapshot => "snapshot",
+            UpdateMode::Delta => "delta",
+        }
+    }
+}
+
+/// One parsed `{"op":"update", …}` request line.
+#[derive(Clone, Debug)]
+pub enum UpdateFrame {
+    /// Start an update: declares the payload mode, total raw byte length,
+    /// and how many `chunk` frames will follow.
+    Begin {
+        /// payload interpretation at commit time
+        mode: UpdateMode,
+        /// total raw payload bytes (pre-base64)
+        bytes: usize,
+        /// number of `chunk` frames that will follow
+        chunks: usize,
+    },
+    /// One in-order slice of the base64'd payload.
+    Chunk {
+        /// 0-based chunk index; must arrive in order
+        seq: usize,
+        /// standard base64 of this slice's raw bytes
+        data: String,
+    },
+    /// Finish the update: names the expected [`fnv1a64`] of the assembled
+    /// payload as 16 lowercase hex digits.
+    Commit {
+        /// expected payload checksum, `format!("{:016x}", fnv1a64(payload))`
+        fnv: String,
+    },
+}
+
+/// Parse an `{"op":"update", …}` request into an [`UpdateFrame`].
+/// The error string is ready for the `{"ok":false,"error":…}` reply.
+pub fn parse_update_frame(req: &Json) -> std::result::Result<UpdateFrame, String> {
+    let action = req
+        .get("action")
+        .and_then(|a| a.as_str())
+        .ok_or_else(|| "update needs field 'action' (\"begin\" | \"chunk\" | \"commit\")".to_string())?;
+    match action {
+        "begin" => {
+            let mode = match req.get("mode").and_then(|m| m.as_str()) {
+                None => UpdateMode::Snapshot,
+                Some(m) => UpdateMode::parse(m)
+                    .ok_or_else(|| format!("unknown update mode '{m}' (\"snapshot\" | \"delta\")"))?,
+            };
+            let bytes = req
+                .get("bytes")
+                .and_then(|b| b.as_usize())
+                .ok_or_else(|| "update begin needs integer field 'bytes'".to_string())?;
+            let chunks = req
+                .get("chunks")
+                .and_then(|c| c.as_usize())
+                .ok_or_else(|| "update begin needs integer field 'chunks'".to_string())?;
+            Ok(UpdateFrame::Begin { mode, bytes, chunks })
+        }
+        "chunk" => {
+            let seq = req
+                .get("seq")
+                .and_then(|s| s.as_usize())
+                .ok_or_else(|| "update chunk needs integer field 'seq'".to_string())?;
+            let data = req
+                .get("data")
+                .and_then(|d| d.as_str())
+                .ok_or_else(|| "update chunk needs string field 'data'".to_string())?;
+            Ok(UpdateFrame::Chunk { seq, data: data.to_string() })
+        }
+        "commit" => {
+            let fnv = req
+                .get("fnv")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| "update commit needs string field 'fnv' (16 hex digits)".to_string())?;
+            Ok(UpdateFrame::Commit { fnv: fnv.to_string() })
+        }
+        other => Err(format!("unknown update action '{other}' (\"begin\" | \"chunk\" | \"commit\")")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Delta payload
+// ---------------------------------------------------------------------------
+
+/// A compact block of changed class embeddings: the trainer-to-server
+/// currency of a live delta update.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Delta {
+    /// embedding dimension (must match the serving engine)
+    pub d: usize,
+    /// changed row ids, one per record
+    pub rows: Vec<u32>,
+    /// new row values, `[rows.len(), d]` row-major
+    pub values: Vec<f32>,
+}
+
+impl Delta {
+    /// Serialize: `MIDXDELT`, u32 `d`, u64 count, then per record a
+    /// u32 row id and `d` little-endian f32 values.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        assert_eq!(self.values.len(), self.rows.len() * self.d, "values must be [rows, d]");
+        let mut out = Vec::with_capacity(8 + 4 + 8 + self.rows.len() * (4 + self.d * 4));
+        out.extend_from_slice(&DELTA_MAGIC);
+        out.extend_from_slice(&(self.d as u32).to_le_bytes());
+        out.extend_from_slice(&(self.rows.len() as u64).to_le_bytes());
+        for (i, &row) in self.rows.iter().enumerate() {
+            out.extend_from_slice(&row.to_le_bytes());
+            for &v in &self.values[i * self.d..(i + 1) * self.d] {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Deserialize a [`Delta::to_bytes`] block, rejecting bad magic,
+    /// truncation, and trailing garbage with a plain-string error.
+    pub fn from_bytes(bytes: &[u8]) -> std::result::Result<Delta, String> {
+        if bytes.len() < 20 {
+            return Err(format!("delta truncated: {} bytes < 20-byte header", bytes.len()));
+        }
+        if bytes[..8] != DELTA_MAGIC {
+            return Err("bad delta magic (want MIDXDELT)".into());
+        }
+        let d = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let count = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+        if d == 0 {
+            return Err("delta dimension is zero".into());
+        }
+        let rec = 4 + d * 4;
+        let want = 20 + count.checked_mul(rec).ok_or("delta record count overflows")?;
+        if bytes.len() != want {
+            return Err(format!("delta length {} != expected {want} ({count} records × {rec} B)", bytes.len()));
+        }
+        let mut rows = Vec::with_capacity(count);
+        let mut values = Vec::with_capacity(count * d);
+        let mut at = 20;
+        for _ in 0..count {
+            rows.push(u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()));
+            at += 4;
+            for _ in 0..d {
+                values.push(f32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()));
+                at += 4;
+            }
+        }
+        Ok(Delta { d, rows, values })
+    }
+
+    /// Diff two snapshots of the same shape: every row whose embedding
+    /// bits differ becomes one delta record carrying the `new` values.
+    /// This is what `midx push-update --base OLD --next NEW` sends.
+    pub fn diff(old: &Snapshot, new: &Snapshot) -> Result<Delta> {
+        if old.n != new.n || old.d != new.d {
+            bail!(
+                "snapshot shapes differ: base is [{}, {}], next is [{}, {}]",
+                old.n, old.d, new.n, new.d
+            );
+        }
+        let d = old.d;
+        let (ot, nt) = (&old.table[..], &new.table[..]);
+        let mut rows = Vec::new();
+        let mut values = Vec::new();
+        for r in 0..old.n {
+            let (a, b) = (&ot[r * d..(r + 1) * d], &nt[r * d..(r + 1) * d]);
+            if a.iter().zip(b).any(|(x, y)| x.to_bits() != y.to_bits()) {
+                rows.push(r as u32);
+                values.extend_from_slice(b);
+            }
+        }
+        Ok(Delta { d, rows, values })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Payload assembly (per-connection state between begin and commit)
+// ---------------------------------------------------------------------------
+
+/// In-progress payload assembly for one connection: created by `begin`,
+/// fed by in-order `chunk` frames, consumed by `commit`. Dropping it
+/// (client disconnect mid-update) discards the buffer — the served core
+/// is untouched until a fully verified commit.
+#[derive(Debug)]
+pub struct UpdateAssembly {
+    mode: UpdateMode,
+    expect_bytes: usize,
+    expect_chunks: usize,
+    next_seq: usize,
+    buf: Vec<u8>,
+}
+
+impl UpdateAssembly {
+    /// Validate a `begin` declaration and allocate the assembly buffer.
+    pub fn begin(
+        mode: UpdateMode,
+        bytes: usize,
+        chunks: usize,
+        max_bytes: usize,
+    ) -> std::result::Result<UpdateAssembly, String> {
+        if bytes == 0 {
+            return Err("update declares zero payload bytes".into());
+        }
+        if bytes > max_bytes {
+            return Err(format!("update declares {bytes} B > server limit {max_bytes} B"));
+        }
+        if chunks == 0 {
+            return Err("update declares zero chunks".into());
+        }
+        Ok(UpdateAssembly { mode, expect_bytes: bytes, expect_chunks: chunks, next_seq: 0, buf: Vec::with_capacity(bytes) })
+    }
+
+    /// The payload mode declared at `begin`.
+    pub fn mode(&self) -> UpdateMode {
+        self.mode
+    }
+
+    /// Append one chunk. Chunks must arrive in declared order and may not
+    /// overrun the declared byte length.
+    pub fn chunk(&mut self, seq: usize, data: &str) -> std::result::Result<(), String> {
+        if seq != self.next_seq {
+            return Err(format!("update chunk out of order: got seq {seq}, want {}", self.next_seq));
+        }
+        if seq >= self.expect_chunks {
+            return Err(format!("update chunk seq {seq} ≥ declared chunk count {}", self.expect_chunks));
+        }
+        let raw = b64_decode(data)?;
+        if self.buf.len() + raw.len() > self.expect_bytes {
+            return Err(format!(
+                "update overruns declared length: {} + {} B > {} B",
+                self.buf.len(),
+                raw.len(),
+                self.expect_bytes
+            ));
+        }
+        self.buf.extend_from_slice(&raw);
+        self.next_seq += 1;
+        Ok(())
+    }
+
+    /// Verify completeness + checksum and hand back the assembled payload.
+    /// Consumes the assembly either way — a failed commit discards it.
+    pub fn commit(self, fnv_hex: &str) -> std::result::Result<(UpdateMode, Vec<u8>), String> {
+        if self.next_seq != self.expect_chunks {
+            return Err(format!(
+                "update commit before all chunks arrived: {} of {}",
+                self.next_seq, self.expect_chunks
+            ));
+        }
+        if self.buf.len() != self.expect_bytes {
+            return Err(format!(
+                "update payload truncated: assembled {} B, declared {} B",
+                self.buf.len(),
+                self.expect_bytes
+            ));
+        }
+        let got = format!("{:016x}", fnv1a64(&self.buf));
+        if !fnv_hex.eq_ignore_ascii_case(&got) {
+            return Err(format!("update checksum mismatch: payload hashes to {got}, commit names {fnv_hex}"));
+        }
+        Ok((self.mode, self.buf))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shadow refresh + atomic swap
+// ---------------------------------------------------------------------------
+
+/// Apply a delta payload to a **copy** of `base` and return the refreshed
+/// snapshot plus what the refresh did. Pure function of its inputs (the
+/// drift refresh has no RNG), so a server applying a delta and a client
+/// applying the same delta locally produce bit-identical snapshots — the
+/// determinism seam `rust/tests/serve_update.rs` pins.
+pub fn apply_to_snapshot(
+    base: &Snapshot,
+    payload: &[u8],
+    cfg: &UpdateConfig,
+) -> Result<(Snapshot, RefreshOutcome)> {
+    let delta = Delta::from_bytes(payload).map_err(|e| anyhow!("bad delta payload: {e}"))?;
+    if base.kind.is_static() {
+        bail!("cannot delta-update a static '{}' snapshot", base.kind.name());
+    }
+    if delta.d != base.d {
+        bail!("delta dimension {} != snapshot dimension {}", delta.d, base.d);
+    }
+    let (n, d) = (base.n, base.d);
+    let mut quant = base.build_quantizer();
+    let mut index = base.build_index();
+    let mut table = base.table.to_vec();
+    // Tracker over the PRE-delta table: its row snapshots are "position at
+    // last assignment", so the drift scan sees exactly the pushed rows.
+    let mut maint = DriftTracker::new(&table, n, d, quant.as_ref());
+    for (i, &row) in delta.rows.iter().enumerate() {
+        let r = row as usize;
+        if r >= n {
+            bail!("delta row {row} out of range (n = {n})");
+        }
+        table[r * d..(r + 1) * d].copy_from_slice(&delta.values[i * d..(i + 1) * d]);
+    }
+    let outcome = crate::sampler::midx::refresh_core(
+        &mut quant,
+        &mut index,
+        &mut maint,
+        &table,
+        d,
+        cfg.tolerance,
+        cfg.refine_iters,
+    );
+    let snap = Snapshot::capture(base.kind, quant.as_ref(), &index, &table, n, d);
+    Ok((snap, outcome))
+}
+
+/// What a successfully applied update did.
+#[derive(Clone, Copy, Debug)]
+pub struct Applied {
+    /// generation of the engine now serving (monotonic, starts at 0 for a
+    /// cold load, +1 per swap)
+    pub generation: u64,
+    /// swap pause: quiesce-to-resume wall time the batcher was paused
+    pub swap: Duration,
+    /// drift-refresh counters for delta updates; `None` for whole-snapshot
+    /// pushes (nothing incremental ran)
+    pub outcome: Option<RefreshOutcome>,
+}
+
+/// Live counters for `{"op":"stats"}` reporting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UpdateStats {
+    /// updates applied and swapped in
+    pub applied: u64,
+    /// updates rejected (assembly, validation, or rebuild failure)
+    pub rejected: u64,
+    /// pause duration of the most recent swap, in µs
+    pub last_swap_us: u64,
+}
+
+/// The update applier shared by every frontend: owns the serialize-apply
+/// lock, runs the shadow refresh, and performs the atomic engine swap.
+///
+/// `apply` is synchronous and safe to call from any thread *except* the
+/// reactor thread (it blocks for the whole rebuild); the reactor uses
+/// [`UpdateHub::apply_async`], which runs `apply` on a dedicated
+/// `midx-serve-updater` thread and delivers the reply via callback.
+pub struct UpdateHub {
+    batcher: Arc<MicroBatcher>,
+    cfg: UpdateConfig,
+    /// serializes whole updates: concurrent commits apply one at a time,
+    /// each against the engine the previous one installed
+    apply_lock: Mutex<()>,
+    applied: AtomicU64,
+    rejected: AtomicU64,
+    last_swap_us: AtomicU64,
+}
+
+impl UpdateHub {
+    /// Create a hub applying updates into `batcher` under `cfg`.
+    pub fn new(batcher: Arc<MicroBatcher>, cfg: UpdateConfig) -> Arc<UpdateHub> {
+        Arc::new(UpdateHub {
+            batcher,
+            cfg,
+            apply_lock: Mutex::new(()),
+            applied: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            last_swap_us: AtomicU64::new(0),
+        })
+    }
+
+    /// The server-side update knobs this hub applies with.
+    pub fn config(&self) -> UpdateConfig {
+        self.cfg
+    }
+
+    /// The batcher whose engine this hub swaps.
+    pub fn batcher(&self) -> &Arc<MicroBatcher> {
+        &self.batcher
+    }
+
+    /// Apply one verified payload: shadow-refresh (delta) or parse+validate
+    /// (snapshot), rebuild a fresh engine carried over from the old one's
+    /// settings, and swap it in at the batcher's quiesce seam. On any
+    /// error the old engine keeps serving, untouched.
+    pub fn apply(&self, mode: UpdateMode, payload: &[u8]) -> Result<Applied> {
+        let _serialize = self.apply_lock.lock().unwrap_or_else(|e| e.into_inner());
+        let old = self.batcher.engine();
+        let res = (|| {
+            let (snap, outcome) = match mode {
+                UpdateMode::Snapshot => (Snapshot::from_bytes(payload)?, None),
+                UpdateMode::Delta => {
+                    let base = old.capture_snapshot();
+                    let (s, o) = apply_to_snapshot(&base, payload, &self.cfg)?;
+                    (s, Some(o))
+                }
+            };
+            if snap.kind.is_static() {
+                bail!("update snapshot kind '{}' is static — cannot serve as primary", snap.kind.name());
+            }
+            if snap.d != old.dim() {
+                bail!("update dimension {} != serving dimension {}", snap.d, old.dim());
+            }
+            let eng = Arc::new(old.rebuilt(snap)?);
+            let generation = eng.generation();
+            let swap = self.batcher.swap_engine(eng);
+            Ok(Applied { generation, swap, outcome })
+        })();
+        match &res {
+            Ok(a) => {
+                self.applied.fetch_add(1, Ordering::Relaxed);
+                self.last_swap_us.store(a.swap.as_micros() as u64, Ordering::Relaxed);
+            }
+            Err(_) => {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        res
+    }
+
+    /// Run [`UpdateHub::apply`] on a dedicated `midx-serve-updater` thread
+    /// and hand the result to `done`. This is the reactor's path: the
+    /// event loop never blocks on a rebuild; the commit reply arrives
+    /// through the same completion channel as async query replies.
+    pub fn apply_async(
+        self: &Arc<Self>,
+        mode: UpdateMode,
+        payload: Vec<u8>,
+        done: Box<dyn FnOnce(Result<Applied>) + Send + 'static>,
+    ) {
+        let hub = Arc::clone(self);
+        std::thread::Builder::new()
+            .name("midx-serve-updater".into())
+            .spawn(move || done(hub.apply(mode, &payload)))
+            .expect("spawn midx-serve-updater");
+    }
+
+    /// Live applied/rejected/pause counters.
+    pub fn stats(&self) -> UpdateStats {
+        UpdateStats {
+            applied: self.applied.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            last_swap_us: self.last_swap_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reply rendering (shared by the blocking frontends and the reactor)
+// ---------------------------------------------------------------------------
+
+fn ack_obj(stage: &str) -> std::collections::BTreeMap<String, Json> {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("ok".into(), Json::Bool(true));
+    m.insert("update".into(), Json::Str(stage.into()));
+    m
+}
+
+/// `{"ok":true,"update":"begin","mode":…}` — the `begin` acknowledgement.
+pub fn begin_ack(mode: UpdateMode) -> Json {
+    let mut m = ack_obj("begin");
+    m.insert("mode".into(), Json::Str(mode.name().into()));
+    Json::Obj(m)
+}
+
+/// `{"ok":true,"update":"chunk","seq":…}` — one chunk acknowledgement.
+pub fn chunk_ack(seq: usize) -> Json {
+    let mut m = ack_obj("chunk");
+    m.insert("seq".into(), Json::Num(seq as f64));
+    Json::Obj(m)
+}
+
+/// `{"ok":true,"update":"commit","generation":…,"swap_us":…}` plus the
+/// drift-refresh counters when a delta ran — the final commit reply.
+pub fn commit_ack(a: &Applied) -> Json {
+    let mut m = ack_obj("commit");
+    m.insert("generation".into(), Json::Num(a.generation as f64));
+    m.insert("swap_us".into(), Json::Num(a.swap.as_micros() as f64));
+    if let Some(o) = &a.outcome {
+        m.insert("full".into(), Json::Bool(o.full));
+        m.insert("drifted".into(), Json::Num(o.drifted as f64));
+        m.insert("reassigned".into(), Json::Num(o.reassigned as f64));
+    }
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base64_round_trips() {
+        // Known RFC 4648 vectors, then every tail length.
+        assert_eq!(b64_encode(b""), "");
+        assert_eq!(b64_encode(b"f"), "Zg==");
+        assert_eq!(b64_encode(b"fo"), "Zm8=");
+        assert_eq!(b64_encode(b"foo"), "Zm9v");
+        assert_eq!(b64_encode(b"Man"), "TWFu");
+        for len in 0..64usize {
+            let data: Vec<u8> = (0..len).map(|i| (i * 37 + 11) as u8).collect();
+            let enc = b64_encode(&data);
+            assert_eq!(b64_decode(&enc).unwrap(), data, "len {len}");
+        }
+    }
+
+    #[test]
+    fn base64_rejects_garbage() {
+        assert!(b64_decode("abc").is_err(), "bad length");
+        assert!(b64_decode("ab!=").is_err(), "bad character");
+        assert!(b64_decode("a=bc").is_err(), "padding mid-quad");
+        assert!(b64_decode("====").is_err(), "padding first");
+    }
+
+    #[test]
+    fn delta_round_trips() {
+        let d = Delta {
+            d: 3,
+            rows: vec![0, 5, 9],
+            values: vec![1.0, -2.5, 3.25, 0.0, 7.5, -0.125, 9.0, 10.0, 11.0],
+        };
+        let bytes = d.to_bytes();
+        assert_eq!(Delta::from_bytes(&bytes).unwrap(), d);
+        // truncation, magic, and trailing-garbage rejections
+        assert!(Delta::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Delta::from_bytes(&bad).is_err());
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(Delta::from_bytes(&long).is_err());
+        assert!(Delta::from_bytes(&bytes[..10]).is_err());
+    }
+
+    #[test]
+    fn assembly_happy_path_and_rejections() {
+        let payload: Vec<u8> = (0..200u32).map(|i| (i % 251) as u8).collect();
+        let fnv = format!("{:016x}", fnv1a64(&payload));
+        // happy path in two chunks
+        let mut a = UpdateAssembly::begin(UpdateMode::Delta, payload.len(), 2, 1 << 20).unwrap();
+        a.chunk(0, &b64_encode(&payload[..100])).unwrap();
+        a.chunk(1, &b64_encode(&payload[100..])).unwrap();
+        let (mode, got) = a.commit(&fnv).unwrap();
+        assert_eq!(mode, UpdateMode::Delta);
+        assert_eq!(got, payload);
+        // out-of-order chunk
+        let mut a = UpdateAssembly::begin(UpdateMode::Delta, payload.len(), 2, 1 << 20).unwrap();
+        assert!(a.chunk(1, &b64_encode(&payload[..100])).is_err());
+        // commit before all chunks
+        let mut a = UpdateAssembly::begin(UpdateMode::Delta, payload.len(), 2, 1 << 20).unwrap();
+        a.chunk(0, &b64_encode(&payload[..100])).unwrap();
+        assert!(a.commit(&fnv).is_err());
+        // checksum mismatch
+        let mut a = UpdateAssembly::begin(UpdateMode::Delta, payload.len(), 1, 1 << 20).unwrap();
+        a.chunk(0, &b64_encode(&payload)).unwrap();
+        assert!(a.commit("0000000000000000").is_err());
+        // declared-size ceiling and zero declarations
+        assert!(UpdateAssembly::begin(UpdateMode::Delta, 1 << 21, 1, 1 << 20).is_err());
+        assert!(UpdateAssembly::begin(UpdateMode::Delta, 0, 1, 1 << 20).is_err());
+        assert!(UpdateAssembly::begin(UpdateMode::Delta, 8, 0, 1 << 20).is_err());
+        // overrun of declared bytes
+        let mut a = UpdateAssembly::begin(UpdateMode::Delta, 10, 2, 1 << 20).unwrap();
+        a.chunk(0, &b64_encode(&payload[..8])).unwrap();
+        assert!(a.chunk(1, &b64_encode(&payload[..8])).is_err());
+    }
+
+    #[test]
+    fn frame_parsing() {
+        let line = r#"{"op":"update","action":"begin","mode":"delta","bytes":12,"chunks":1}"#;
+        match parse_update_frame(&Json::parse(line).unwrap()).unwrap() {
+            UpdateFrame::Begin { mode, bytes, chunks } => {
+                assert_eq!(mode, UpdateMode::Delta);
+                assert_eq!((bytes, chunks), (12, 1));
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        let line = r#"{"op":"update","action":"chunk","seq":3,"data":"TWFu"}"#;
+        match parse_update_frame(&Json::parse(line).unwrap()).unwrap() {
+            UpdateFrame::Chunk { seq, data } => {
+                assert_eq!(seq, 3);
+                assert_eq!(data, "TWFu");
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        let line = r#"{"op":"update","action":"commit","fnv":"00ff00ff00ff00ff"}"#;
+        match parse_update_frame(&Json::parse(line).unwrap()).unwrap() {
+            UpdateFrame::Commit { fnv } => assert_eq!(fnv, "00ff00ff00ff00ff"),
+            other => panic!("wrong frame: {other:?}"),
+        }
+        for bad in [
+            r#"{"op":"update"}"#,
+            r#"{"op":"update","action":"zap"}"#,
+            r#"{"op":"update","action":"begin","mode":"tar","bytes":1,"chunks":1}"#,
+            r#"{"op":"update","action":"begin","chunks":1}"#,
+            r#"{"op":"update","action":"chunk","data":"TWFu"}"#,
+            r#"{"op":"update","action":"commit"}"#,
+        ] {
+            assert!(parse_update_frame(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+}

@@ -1,0 +1,688 @@
+//! Update-under-load correctness harness for zero-downtime live model
+//! updates (`serve::update`).
+//!
+//! What it proves (ISSUE 7 acceptance):
+//!
+//! * **Updates never drop a query**: N multiplexed connections pipeline
+//!   topk/sample bursts while K delta updates stream in on another
+//!   connection — every request is answered exactly once, every update
+//!   frame is acknowledged in order, and the commit replies report
+//!   monotonically increasing generations.
+//! * **Post-swap state is bit-identical to a cold load**: after the last
+//!   swap, served replies are byte-identical (modulo the `us` field) to a
+//!   freshly constructed engine over the locally folded snapshot — the
+//!   same pure [`apply_to_snapshot`] the server ran against its shadow
+//!   copy — at both T = 1 and T = 8 worker threads.
+//! * **Statistics survive the swap**: draws taken entirely after the last
+//!   swap pass a Pearson χ² goodness-of-fit test against the updated
+//!   core's own proposal distribution.
+//! * **The swap seam is atomic**: `swap_engine` under concurrent
+//!   submitters never loses, duplicates, or corrupts a reply — every
+//!   reply is bit-identical to one of the two engine states.
+//! * **Rejection is safe**: truncated/corrupt payloads, checksum
+//!   mismatches, out-of-order chunks, oversize declarations, and
+//!   mid-update client disconnects all leave the old core serving,
+//!   bit-identical to before, at generation 0.
+//!
+//! The reactor is unix-only (raw `poll(2)`), so this whole suite is too.
+#![cfg(unix)]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use midx::sampler::fixtures::built_sampler;
+use midx::sampler::{SamplerKind, Scratch};
+use midx::serve::snapshot::fnv1a64;
+use midx::serve::update::{apply_to_snapshot, b64_encode};
+use midx::serve::{
+    handle_line, Delta, LatencyRecorder, MicroBatcher, QueryEngine, Reactor, ReactorConfig,
+    ReactorHandle, Snapshot, UpdateConfig, UpdateHub, UpdateSession,
+};
+use midx::stats::divergence::{chi_square_critical, chi_square_gof};
+use midx::util::{Json, Rng};
+
+// -- scaffolding -----------------------------------------------------------
+
+/// Build a served engine over a fresh synthetic midx-rq snapshot.
+fn engine(n: usize, d: usize, seed: u64, threads: usize) -> Arc<QueryEngine> {
+    let mut rng = Rng::new(seed);
+    let table = midx::util::check::rand_matrix(&mut rng, n, d, 0.5);
+    let s = built_sampler(SamplerKind::MidxRq, n, d, seed);
+    let snap = s.snapshot(&table, n, d).expect("midx-rq snapshots");
+    Arc::new(QueryEngine::new(snap, threads).unwrap())
+}
+
+struct Served {
+    addr: SocketAddr,
+    handle: ReactorHandle,
+    thread: JoinHandle<anyhow::Result<()>>,
+    batcher: Arc<MicroBatcher>,
+}
+
+impl Served {
+    /// Graceful drain; panics if the reactor errored.
+    fn stop(self) {
+        self.handle.shutdown();
+        self.thread.join().expect("reactor thread").expect("reactor run");
+    }
+}
+
+/// Spin a reactor over `batcher` on an ephemeral port.
+fn serve(batcher: Arc<MicroBatcher>, cfg: ReactorConfig) -> Served {
+    let rec = Arc::new(LatencyRecorder::new());
+    let reactor =
+        Reactor::bind("127.0.0.1:0", Arc::clone(&batcher), Arc::clone(&rec), cfg).unwrap();
+    let addr = reactor.local_addr().unwrap();
+    let handle = reactor.handle();
+    let thread = std::thread::spawn(move || reactor.run());
+    Served { addr, handle, thread, batcher }
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).expect("connect to reactor");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.set_nodelay(true).ok();
+    s
+}
+
+/// Read exactly `count` reply lines (panics on EOF or timeout — a stalled
+/// or dropped reply is exactly what this harness exists to catch).
+fn read_replies(reader: &mut BufReader<TcpStream>, count: usize, who: &str) -> Vec<String> {
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).unwrap_or_else(|e| {
+            panic!("{who}: read of reply {i}/{count} failed: {e}");
+        });
+        assert!(n > 0, "{who}: connection closed after {i}/{count} replies");
+        out.push(line.trim_end().to_string());
+    }
+    out
+}
+
+/// One write-half + read-half pair for strictly request/reply traffic.
+struct Conn {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Conn {
+    fn open(addr: SocketAddr) -> Conn {
+        let w = connect(addr);
+        let r = BufReader::new(w.try_clone().unwrap());
+        Conn { w, r }
+    }
+
+    /// Send one line, read exactly one reply.
+    fn send(&mut self, line: &str) -> String {
+        self.w.write_all(line.as_bytes()).unwrap();
+        self.w.write_all(b"\n").unwrap();
+        self.w.flush().unwrap();
+        read_replies(&mut self.r, 1, "conn").pop().unwrap()
+    }
+}
+
+/// Drop the non-deterministic `us` latency field before byte comparison.
+fn strip_us(s: &str) -> String {
+    s.split(",\"us\":").next().unwrap().to_string()
+}
+
+/// Deterministic query-vector JSON for (client, request).
+fn q_json(client: usize, req: usize, d: usize) -> String {
+    let vals: Vec<String> =
+        (0..d).map(|j| format!("{}", ((client * 31 + req * 7 + j) % 97) as f64 / 97.0)).collect();
+    format!("[{}]", vals.join(","))
+}
+
+/// The request line client `c` sends as its `j`-th request (alternating
+/// topk / sample, unique seeds per request).
+fn request_line(c: usize, j: usize, d: usize) -> String {
+    let q = q_json(c, j, d);
+    if (c + j) % 2 == 0 {
+        format!(r#"{{"op":"topk","q":{q},"k":5}}"#)
+    } else {
+        format!(r#"{{"op":"sample","q":{q},"m":6,"seed":{}}}"#, 10_000 + c * 100 + j)
+    }
+}
+
+/// A deterministic delta moving every 5th row (phase `which`) of `base`
+/// to fresh random values.
+fn delta_for(base: &Snapshot, which: u64) -> Delta {
+    let d = base.d;
+    let rows: Vec<u32> = (0..base.n as u32).filter(|r| (*r as u64 + which) % 5 == 0).collect();
+    let mut rng = Rng::new(0xDE17A + which);
+    let values = midx::util::check::rand_matrix(&mut rng, rows.len(), d, 0.5);
+    Delta { d, rows, values }
+}
+
+/// The full begin / chunk* / commit line sequence pushing `payload`.
+fn update_lines(mode: &str, payload: &[u8], chunk_bytes: usize) -> Vec<String> {
+    let chunks: Vec<&[u8]> = payload.chunks(chunk_bytes).collect();
+    let mut lines = vec![format!(
+        r#"{{"op":"update","action":"begin","mode":"{mode}","bytes":{},"chunks":{}}}"#,
+        payload.len(),
+        chunks.len()
+    )];
+    for (i, c) in chunks.iter().enumerate() {
+        lines.push(format!(
+            r#"{{"op":"update","action":"chunk","seq":{i},"data":"{}"}}"#,
+            b64_encode(c)
+        ));
+    }
+    lines
+        .push(format!(r#"{{"op":"update","action":"commit","fnv":"{:016x}"}}"#, fnv1a64(payload)));
+    lines
+}
+
+/// Push `payload` over `conn`, asserting every ack, and return the commit
+/// reply.
+fn push_update(conn: &mut Conn, mode: &str, payload: &[u8], chunk_bytes: usize) -> String {
+    let lines = update_lines(mode, payload, chunk_bytes);
+    let last = lines.len() - 1;
+    let mut commit = String::new();
+    for (i, line) in lines.iter().enumerate() {
+        let reply = conn.send(line);
+        assert!(reply.contains(r#""ok":true"#), "update frame {i} refused: {reply}");
+        if i == last {
+            assert!(reply.contains(r#""update":"commit""#), "{reply}");
+            commit = reply;
+        }
+    }
+    commit
+}
+
+// -- the update-under-load soak --------------------------------------------
+
+#[test]
+fn live_updates_under_load_swap_to_bit_identical_state() {
+    const CLIENTS: usize = 8;
+    const WAVES: usize = 4;
+    const PER_WAVE: usize = 10;
+    const UPDATES: usize = 3;
+    let (n, d) = (60usize, 8usize);
+    let eng = engine(n, d, 0x0DDA7E, 2);
+    let base = eng.capture_snapshot();
+    let cfg = UpdateConfig::default();
+
+    // K deltas, and the expected final snapshot folded locally with the
+    // very same pure apply the server runs against its shadow copy
+    let deltas: Vec<Delta> = (0..UPDATES as u64).map(|k| delta_for(&base, k)).collect();
+    let mut expect = base;
+    for delta in &deltas {
+        let (next, outcome) = apply_to_snapshot(&expect, &delta.to_bytes(), &cfg).unwrap();
+        assert!(outcome.drifted > 0, "a delta must actually move rows");
+        expect = next;
+    }
+
+    let batcher = Arc::new(MicroBatcher::with_queue_cap(
+        Arc::clone(&eng),
+        Duration::from_micros(200),
+        64,
+        8192,
+    ));
+    let served = serve(
+        Arc::clone(&batcher),
+        ReactorConfig {
+            max_conns: CLIENTS + 8,
+            idle_timeout: Duration::ZERO,
+            ..Default::default()
+        },
+    );
+    let addr = served.addr;
+
+    // load clients: pipeline in waves so queries are in flight across swaps
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut stream = connect(addr);
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut got = 0usize;
+                for w in 0..WAVES {
+                    let burst: String = (0..PER_WAVE)
+                        .map(|i| request_line(c, w * PER_WAVE + i, d) + "\n")
+                        .collect();
+                    stream.write_all(burst.as_bytes()).unwrap();
+                    stream.flush().unwrap();
+                    let who = format!("load client {c} wave {w}");
+                    for r in read_replies(&mut reader, PER_WAVE, &who) {
+                        assert!(r.contains(r#""ok":true"#), "client {c}: {r}");
+                        got += 1;
+                    }
+                }
+                got
+            })
+        })
+        .collect();
+
+    // updater: stream the K deltas in while the load runs
+    let payloads: Vec<Vec<u8>> = deltas.iter().map(Delta::to_bytes).collect();
+    let updater = std::thread::spawn(move || {
+        let mut conn = Conn::open(addr);
+        for (k, payload) in payloads.iter().enumerate() {
+            std::thread::sleep(Duration::from_millis(15));
+            let commit = push_update(&mut conn, "delta", payload, 96);
+            assert!(
+                commit.contains(&format!(r#""generation":{}"#, k + 1)),
+                "update {k}: {commit}"
+            );
+            assert!(commit.contains(r#""swap_us":"#), "{commit}");
+        }
+    });
+
+    updater.join().expect("updater thread");
+    let mut answered = 0usize;
+    for h in clients {
+        answered += h.join().expect("load client");
+    }
+    assert_eq!(answered, CLIENTS * WAVES * PER_WAVE, "exactly one reply per request");
+    let (accepted, _) = served.batcher.stats();
+    assert_eq!(accepted, (CLIENTS * WAVES * PER_WAVE) as u64, "updates ride past the batcher");
+    assert_eq!(served.batcher.rejected(), 0);
+
+    // post-swap: served replies are bit-identical to a cold load of the
+    // locally folded snapshot, at both a serial and a parallel engine
+    for &threads in &[1usize, 8] {
+        let cold = Arc::new(QueryEngine::new(expect.clone(), threads).unwrap());
+        let solo = MicroBatcher::new(cold, Duration::ZERO, 1);
+        let solo_rec = LatencyRecorder::new();
+        let mut conn = Conn::open(addr);
+        for c in 0..4 {
+            for j in 0..12 {
+                let line = request_line(100 + c, j, d);
+                let want = strip_us(&handle_line(&solo, &solo_rec, &line));
+                let got = strip_us(&conn.send(&line));
+                assert_eq!(
+                    got, want,
+                    "post-swap reply diverges from cold load (T={threads}, c={c}, j={j})"
+                );
+            }
+        }
+    }
+
+    // the served engine owns up to its lineage
+    let mut conn = Conn::open(addr);
+    let info = conn.send(r#"{"op":"info"}"#);
+    assert!(info.contains(&format!(r#""generation":{UPDATES}"#)), "{info}");
+    let stats = conn.send(r#"{"op":"stats"}"#);
+    assert!(stats.contains(r#""updates_applied":3"#), "{stats}");
+    assert!(stats.contains(r#""updates_rejected":0"#), "{stats}");
+    served.stop();
+}
+
+#[test]
+fn post_swap_draw_statistics_match_the_updated_core() {
+    const CLIENTS: usize = 2;
+    const REQS: usize = 24;
+    const M: usize = 500; // 2 × 24 × 500 = 24k draws, all after the swap
+    let (n, d) = (48usize, 8usize);
+    let eng = engine(n, d, 0xC4A9, 2);
+    let base = eng.capture_snapshot();
+    let cfg = UpdateConfig::default();
+    let delta = delta_for(&base, 9);
+    let (expect, _) = apply_to_snapshot(&base, &delta.to_bytes(), &cfg).unwrap();
+
+    // one fixed query; its JSON text round-trips to the exact f32s below
+    let z: Vec<f32> = {
+        let mut rng = Rng::new(0x22);
+        midx::util::check::rand_matrix(&mut rng, 1, d, 0.5)
+    };
+    let z_json =
+        format!("[{}]", z.iter().map(|x| format!("{x}")).collect::<Vec<_>>().join(","));
+
+    // the UPDATED core's own claim about Q(·|z)
+    let cold = QueryEngine::new(expect, 1).unwrap();
+    let mut q = vec![0.0f32; n];
+    cold.core().proposal_dist(&z, &mut Scratch::new(), &mut q);
+
+    let batcher = Arc::new(MicroBatcher::with_queue_cap(
+        Arc::clone(&eng),
+        Duration::from_micros(200),
+        64,
+        4096,
+    ));
+    let served = serve(
+        Arc::clone(&batcher),
+        ReactorConfig { idle_timeout: Duration::ZERO, ..Default::default() },
+    );
+    let addr = served.addr;
+
+    // swap first, draw after: every draw below reflects the new state
+    let mut upd = Conn::open(addr);
+    let commit = push_update(&mut upd, "delta", &delta.to_bytes(), 128);
+    assert!(commit.contains(r#""generation":1"#), "{commit}");
+
+    let workers: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let z_json = z_json.clone();
+            std::thread::spawn(move || {
+                let mut stream = connect(addr);
+                let burst: String = (0..REQS)
+                    .map(|j| {
+                        format!(
+                            r#"{{"op":"sample","q":{z_json},"m":{M},"seed":{}}}"#,
+                            88_000 + c * 1000 + j
+                        ) + "\n"
+                    })
+                    .collect();
+                stream.write_all(burst.as_bytes()).unwrap();
+                let mut reader = BufReader::new(stream);
+                let mut counts = vec![0u64; n];
+                for reply in read_replies(&mut reader, REQS, &format!("χ² client {c}")) {
+                    let j = Json::parse(&reply).expect("reply is JSON");
+                    assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{reply}");
+                    for id in j.get("ids").and_then(|v| v.as_arr()).expect("ids array") {
+                        counts[id.as_usize().unwrap()] += 1;
+                    }
+                }
+                counts
+            })
+        })
+        .collect();
+
+    let mut counts = vec![0u64; n];
+    for h in workers {
+        for (i, c) in h.join().expect("χ² client").into_iter().enumerate() {
+            counts[i] += c;
+        }
+    }
+    let draws = (CLIENTS * REQS * M) as u64;
+    assert_eq!(counts.iter().sum::<u64>(), draws, "every draw accounted for");
+
+    let (stat, df) = chi_square_gof(&counts, &q, draws);
+    let crit = chi_square_critical(df, 4.5);
+    assert!(
+        stat < crit,
+        "χ²={stat:.1} ≥ crit={crit:.1} (df={df}): post-swap draws diverge from the updated \
+         core's proposal distribution"
+    );
+    served.stop();
+}
+
+// -- the swap seam in isolation --------------------------------------------
+
+#[test]
+fn engine_swap_under_concurrent_submitters_never_loses_or_duplicates_replies() {
+    const SUBMITTERS: usize = 6;
+    const REQS: usize = 60;
+    const SWAPS: usize = 8;
+    let (n, d) = (50usize, 6usize);
+    let eng_a = engine(n, d, 0x5EA0, 2);
+    let base = eng_a.capture_snapshot();
+    let (snap_b, _) =
+        apply_to_snapshot(&base, &delta_for(&base, 1).to_bytes(), &UpdateConfig::default())
+            .unwrap();
+    let eng_b = Arc::new(eng_a.rebuilt(snap_b).unwrap());
+    assert_eq!(eng_b.generation(), 1);
+
+    // every reply must be bit-identical to one of the two engine states
+    let rec0 = LatencyRecorder::new();
+    let solo_a = MicroBatcher::new(Arc::clone(&eng_a), Duration::ZERO, 1);
+    let solo_b = MicroBatcher::new(Arc::clone(&eng_b), Duration::ZERO, 1);
+    let mut base_a: Vec<Vec<String>> = Vec::with_capacity(SUBMITTERS);
+    let mut base_b: Vec<Vec<String>> = Vec::with_capacity(SUBMITTERS);
+    for c in 0..SUBMITTERS {
+        base_a.push(
+            (0..REQS).map(|j| strip_us(&handle_line(&solo_a, &rec0, &request_line(c, j, d)))).collect(),
+        );
+        base_b.push(
+            (0..REQS).map(|j| strip_us(&handle_line(&solo_b, &rec0, &request_line(c, j, d)))).collect(),
+        );
+    }
+
+    let live = Arc::new(MicroBatcher::new(Arc::clone(&eng_a), Duration::from_micros(100), 32));
+    let submitters: Vec<_> = (0..SUBMITTERS)
+        .map(|c| {
+            let live = Arc::clone(&live);
+            let a = base_a[c].clone();
+            let b = base_b[c].clone();
+            std::thread::spawn(move || {
+                let rec = LatencyRecorder::new();
+                for j in 0..REQS {
+                    let got = strip_us(&handle_line(&live, &rec, &request_line(c, j, d)));
+                    assert!(
+                        got == a[j] || got == b[j],
+                        "submitter {c} req {j}: reply matches neither engine state: {got}"
+                    );
+                }
+            })
+        })
+        .collect();
+
+    // swap back and forth while the submitters hammer the batcher
+    let swapper = {
+        let live = Arc::clone(&live);
+        let (eng_a, eng_b) = (Arc::clone(&eng_a), Arc::clone(&eng_b));
+        std::thread::spawn(move || {
+            let mut pauses = Vec::with_capacity(SWAPS);
+            for s in 0..SWAPS {
+                std::thread::sleep(Duration::from_millis(3));
+                let next =
+                    if s % 2 == 0 { Arc::clone(&eng_b) } else { Arc::clone(&eng_a) };
+                pauses.push(live.swap_engine(next));
+            }
+            pauses
+        })
+    };
+
+    for h in submitters {
+        h.join().expect("submitter thread");
+    }
+    let pauses = swapper.join().expect("swapper thread");
+    assert_eq!(pauses.len(), SWAPS);
+    for (s, p) in pauses.iter().enumerate() {
+        assert!(*p < Duration::from_secs(5), "swap {s} paused for {p:?}");
+    }
+    let (accepted, _) = live.stats();
+    assert_eq!(accepted, (SUBMITTERS * REQS) as u64, "every submission admitted exactly once");
+    assert_eq!(live.rejected(), 0);
+}
+
+// -- rejection / negative paths --------------------------------------------
+
+#[test]
+fn rejected_updates_and_disconnects_leave_the_old_core_serving() {
+    let (n, d) = (50usize, 6usize);
+    let eng = engine(n, d, 0xBAD2, 1);
+    let base = eng.capture_snapshot();
+    let batcher = Arc::new(MicroBatcher::new(Arc::clone(&eng), Duration::ZERO, 16));
+    let served = serve(
+        Arc::clone(&batcher),
+        ReactorConfig {
+            idle_timeout: Duration::ZERO,
+            update: UpdateConfig { max_bytes: 1 << 16, ..Default::default() },
+            ..Default::default()
+        },
+    );
+
+    // pre-chaos baseline straight off the same engine
+    let solo = MicroBatcher::new(Arc::clone(&eng), Duration::ZERO, 1);
+    let solo_rec = LatencyRecorder::new();
+    let probes: Vec<String> = (0..6).map(|j| request_line(3, j, d)).collect();
+    let baseline: Vec<String> =
+        probes.iter().map(|l| strip_us(&handle_line(&solo, &solo_rec, l))).collect();
+
+    let good = delta_for(&base, 2).to_bytes();
+    let begin_for = |payload: &[u8], chunks: usize| {
+        format!(
+            r#"{{"op":"update","action":"begin","mode":"delta","bytes":{},"chunks":{chunks}}}"#,
+            payload.len()
+        )
+    };
+    let chunk_for = |seq: usize, raw: &[u8]| {
+        format!(r#"{{"op":"update","action":"chunk","seq":{seq},"data":"{}"}}"#, b64_encode(raw))
+    };
+    let commit_for =
+        |payload: &[u8]| format!(r#"{{"op":"update","action":"commit","fnv":"{:016x}"}}"#, fnv1a64(payload));
+
+    let mut c = Conn::open(served.addr);
+
+    // frames without a begin
+    let r = c.send(r#"{"op":"update","action":"chunk","seq":0,"data":"TWFu"}"#);
+    assert!(r.contains("chunk without a begin"), "{r}");
+    let r = c.send(r#"{"op":"update","action":"commit","fnv":"0000000000000000"}"#);
+    assert!(r.contains("commit without a begin"), "{r}");
+
+    // an out-of-order chunk clears the assembly
+    assert!(c.send(&begin_for(&good, 2)).contains(r#""update":"begin""#));
+    let r = c.send(&chunk_for(1, &good));
+    assert!(r.contains("out of order"), "{r}");
+    let r = c.send(&commit_for(&good));
+    assert!(r.contains("commit without a begin"), "{r}");
+
+    // declaring more than the server's 64 KiB cap is refused up front
+    let r = c.send(&format!(
+        r#"{{"op":"update","action":"begin","mode":"delta","bytes":{},"chunks":1}}"#,
+        1 << 20
+    ));
+    assert!(r.contains("server limit"), "{r}");
+
+    // checksum mismatch discards the assembled payload
+    assert!(c.send(&begin_for(&good, 1)).contains(r#""update":"begin""#));
+    assert!(c.send(&chunk_for(0, &good)).contains(r#""update":"chunk""#));
+    let r = c.send(r#"{"op":"update","action":"commit","fnv":"0000000000000000"}"#);
+    assert!(r.contains("checksum mismatch"), "{r}");
+
+    // truncated payload: fewer bytes assembled than declared
+    let r = c.send(&format!(
+        r#"{{"op":"update","action":"begin","mode":"delta","bytes":{},"chunks":1}}"#,
+        good.len() + 4
+    ));
+    assert!(r.contains(r#""update":"begin""#), "{r}");
+    assert!(c.send(&chunk_for(0, &good)).contains(r#""update":"chunk""#));
+    let r = c.send(&commit_for(&good));
+    assert!(r.contains("truncated"), "{r}");
+
+    // corrupt payload with a CORRECT checksum survives assembly but is
+    // rejected at apply time — the shadow refresh never touches live state
+    let garbage = vec![0xA5u8; 64];
+    assert!(c.send(&begin_for(&garbage, 1)).contains(r#""update":"begin""#));
+    assert!(c.send(&chunk_for(0, &garbage)).contains(r#""update":"chunk""#));
+    let r = c.send(&commit_for(&garbage));
+    assert!(r.contains("update rejected") && r.contains("bad delta payload"), "{r}");
+
+    // dimension mismatch
+    let wrong_d = Delta { d: d + 1, rows: vec![0], values: vec![0.5; d + 1] }.to_bytes();
+    assert!(c.send(&begin_for(&wrong_d, 1)).contains(r#""update":"begin""#));
+    assert!(c.send(&chunk_for(0, &wrong_d)).contains(r#""update":"chunk""#));
+    let r = c.send(&commit_for(&wrong_d));
+    assert!(r.contains("update rejected") && r.contains("dimension"), "{r}");
+
+    // out-of-range row id
+    let oob = Delta { d, rows: vec![n as u32], values: vec![0.25; d] }.to_bytes();
+    assert!(c.send(&begin_for(&oob, 1)).contains(r#""update":"begin""#));
+    assert!(c.send(&chunk_for(0, &oob)).contains(r#""update":"chunk""#));
+    let r = c.send(&commit_for(&oob));
+    assert!(r.contains("update rejected") && r.contains("out of range"), "{r}");
+
+    // mid-update disconnect: the half-assembled payload dies with the conn
+    {
+        let mut dying = Conn::open(served.addr);
+        assert!(dying.send(&begin_for(&good, 2)).contains(r#""update":"begin""#));
+        assert!(dying.send(&chunk_for(0, &good[..32])).contains(r#""update":"chunk""#));
+        // vanish with the assembly open
+    }
+
+    // through all of it the old core kept serving, bit-identical, at gen 0
+    let info = c.send(r#"{"op":"info"}"#);
+    assert!(info.contains(r#""generation":0"#), "{info}");
+    for (l, want) in probes.iter().zip(&baseline) {
+        assert_eq!(strip_us(&c.send(l)), *want, "old core must serve unchanged");
+    }
+    let stats = c.send(r#"{"op":"stats"}"#);
+    assert!(stats.contains(r#""updates_applied":0"#), "{stats}");
+    assert!(stats.contains(r#""updates_rejected":3"#), "{stats}");
+
+    // and the connection is still healthy enough to push a VALID update
+    let commit = push_update(&mut c, "delta", &good, 48);
+    assert!(commit.contains(r#""generation":1"#), "{commit}");
+    let (expect, _) =
+        apply_to_snapshot(&base, &good, &UpdateConfig::default()).unwrap();
+    let cold = MicroBatcher::new(Arc::new(QueryEngine::new(expect, 1).unwrap()), Duration::ZERO, 1);
+    for l in &probes {
+        assert_eq!(
+            strip_us(&c.send(l)),
+            strip_us(&handle_line(&cold, &solo_rec, l)),
+            "post-recovery replies must match a cold load of the pushed state"
+        );
+    }
+    served.stop();
+}
+
+// -- the blocking frontends ------------------------------------------------
+
+#[test]
+fn blocking_update_session_round_trips_delta_and_snapshot_pushes() {
+    let (n, d) = (40usize, 6usize);
+    let eng = engine(n, d, 0x5E55, 1);
+    let base = eng.capture_snapshot();
+    let cfg = UpdateConfig::default();
+    let batcher = Arc::new(MicroBatcher::new(Arc::clone(&eng), Duration::ZERO, 8));
+    let hub = UpdateHub::new(Arc::clone(&batcher), cfg);
+    let mut sess = UpdateSession::new(hub);
+    let rec = LatencyRecorder::new();
+
+    // plain queries pass through the session unchanged
+    let line = request_line(0, 0, d);
+    assert_eq!(
+        strip_us(&sess.handle(&rec, &line)),
+        strip_us(&handle_line(&batcher, &rec, &line))
+    );
+
+    // delta push → generation 1
+    let delta = delta_for(&base, 4).to_bytes();
+    let (snap1, _) = apply_to_snapshot(&base, &delta, &cfg).unwrap();
+    let mut last = String::new();
+    for l in update_lines("delta", &delta, 64) {
+        last = sess.handle(&rec, &l);
+        assert!(last.contains(r#""ok":true"#), "{last}");
+    }
+    assert!(last.contains(r#""generation":1"#), "{last}");
+
+    // a second begin discards the first; the follow-up chunk has no home
+    let begin = format!(
+        r#"{{"op":"update","action":"begin","mode":"delta","bytes":{},"chunks":1}}"#,
+        delta.len()
+    );
+    assert!(sess.handle(&rec, &begin).contains(r#""update":"begin""#));
+    assert!(sess.handle(&rec, &begin).contains("already in progress"));
+    let chunk = format!(r#"{{"op":"update","action":"chunk","seq":0,"data":"{}"}}"#, b64_encode(&delta));
+    assert!(sess.handle(&rec, &chunk).contains("chunk without a begin"));
+
+    // replies now bit-identical to a cold load of the locally applied state
+    let cold1 =
+        MicroBatcher::new(Arc::new(QueryEngine::new(snap1.clone(), 1).unwrap()), Duration::ZERO, 1);
+    for j in 0..8 {
+        let l = request_line(2, j, d);
+        assert_eq!(
+            strip_us(&sess.handle(&rec, &l)),
+            strip_us(&handle_line(&cold1, &rec, &l)),
+            "post-delta reply diverges from cold load (j={j})"
+        );
+    }
+
+    // whole-snapshot push → generation 2, bit-identical to its cold load
+    let (snap2, _) = apply_to_snapshot(&snap1, &delta_for(&snap1, 5).to_bytes(), &cfg).unwrap();
+    for l in update_lines("snapshot", &snap2.to_bytes(), 4096) {
+        last = sess.handle(&rec, &l);
+        assert!(last.contains(r#""ok":true"#), "{last}");
+    }
+    assert!(last.contains(r#""generation":2"#), "{last}");
+    let cold2 =
+        MicroBatcher::new(Arc::new(QueryEngine::new(snap2, 1).unwrap()), Duration::ZERO, 1);
+    for j in 0..8 {
+        let l = request_line(7, j, d);
+        assert_eq!(
+            strip_us(&sess.handle(&rec, &l)),
+            strip_us(&handle_line(&cold2, &rec, &l)),
+            "post-snapshot reply diverges from cold load (j={j})"
+        );
+    }
+
+    // the session's stats op carries the hub counters
+    let stats = sess.handle(&rec, r#"{"op":"stats"}"#);
+    assert!(stats.contains(r#""updates_applied":2"#), "{stats}");
+    assert!(stats.contains(r#""updates_rejected":0"#), "{stats}");
+}
