@@ -1,7 +1,7 @@
 //! `cargo bench --bench serve` — serve-layer cost: snapshot export/load,
 //! batched top-k latency percentiles, and reactor connection scaling.
 //!
-//! Eight sections, all artifact-free:
+//! Nine sections, all artifact-free:
 //!
 //! 1. **Snapshot cost.** Serialize (`to_bytes`) and parse+validate
 //!    (`from_bytes`) throughput at two model sizes, plus one-shot
@@ -31,6 +31,11 @@
 //!    (shadow refresh + atomic engine swap), plus the swap pause itself
 //!    (quiesce-to-resume) — the cost a client actually sees when the
 //!    model changes under it.
+//! 9. **Shard scatter-gather.** Top-k latency percentiles and proposal-draw
+//!    QPS through a `ShardRouter` at S∈{1,2,4,8} shards against the
+//!    monolithic engine over the same snapshot — the merge overhead the
+//!    sharded tier pays for per-shard fan-out, score-exact top-k fusion,
+//!    and two-stage (shard-then-class) sampling.
 
 use std::time::Instant;
 
@@ -424,6 +429,43 @@ fn update_section() {
     }
 }
 
+/// Scatter-gather overhead: the same snapshot served monolithically and
+/// through a `ShardRouter` at S∈{1,2,4,8}. Top-k goes to every shard and
+/// merges by exact global score; sampling first picks a shard from exact
+/// per-shard partition masses, then draws within it — so the delta over
+/// the monolithic rows is pure fan-out + merge cost.
+fn shard_section() {
+    use midx::serve::ShardRouter;
+
+    let (n, d, k_codewords, k, m) = (20_000usize, 32usize, 32usize, 10usize, 16usize);
+    let snap = snapshot_for(n, d, k_codewords, 53);
+    let mut rng = Rng::new(59);
+    let queries = rand_matrix(&mut rng, 64, d, 0.5);
+
+    println!("\nshard scatter-gather vs monolithic (N={n}, D={d}, top-{k}, M={m}, B=64)");
+    let mono = QueryEngine::new(snap.clone(), 1).unwrap();
+    percentiles("serve/shard/mono/topk", 64, 60, || {
+        std::hint::black_box(mono.top_k_batch(&queries, k));
+    });
+    let mut seed = 0u64;
+    percentiles("serve/shard/mono/sample", 64, 60, || {
+        seed = seed.wrapping_add(1);
+        std::hint::black_box(mono.sample(&queries, m, seed));
+    });
+
+    for &shards in &[1usize, 2, 4, 8] {
+        let router = ShardRouter::split(&snap, shards, 1).unwrap();
+        percentiles(&format!("serve/shard/s{shards}/topk"), 64, 60, || {
+            std::hint::black_box(router.top_k_batch(&queries, k));
+        });
+        let mut seed = 0u64;
+        percentiles(&format!("serve/shard/s{shards}/sample"), 64, 60, || {
+            seed = seed.wrapping_add(1);
+            std::hint::black_box(router.sample(&queries, m, seed));
+        });
+    }
+}
+
 fn main() {
     snapshot_section();
     load_mode_section();
@@ -433,4 +475,5 @@ fn main() {
     sample_section();
     reactor_section();
     update_section();
+    shard_section();
 }

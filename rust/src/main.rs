@@ -28,11 +28,12 @@ use midx::coordinator::{fmt, run_experiment, ExperimentSpec, Table};
 use midx::index::RefreshPolicy;
 use midx::runtime::{list_models, load_model};
 use midx::sampler::{self, SamplerKind, SamplerParams};
+use midx::serve::shard::load_router;
 use midx::serve::snapshot::fnv1a64;
 use midx::serve::update::b64_encode;
 use midx::serve::{
-    serve_stdin, Delta, LatencyRecorder, LoadMode, MicroBatcher, QueryEngine, Snapshot,
-    UpdateConfig, UpdateMode,
+    export_shards, serve_stdin, Backend, Delta, LatencyRecorder, LoadMode, MicroBatcher,
+    QueryEngine, ShardRouter, Snapshot, UpdateConfig, UpdateMode,
 };
 use midx::train::TrainConfig;
 use midx::util::check::rand_matrix;
@@ -106,12 +107,16 @@ const USAGE: &str = "usage:
   midx export --out FILE ( --model NAME [train flags above]
                          | --synthetic [--n N] [--d D] [--k K]
                            [--sampler midx-pq|midx-rq|exact-midx|uniform|unigram]
-                           [--seed N] [--kmeans-iters N] )
+                           [--seed N] [--kmeans-iters N] [--shards S] )
                              (persist a trained sampler core: quantizer codebooks + codes,
                               CSR inverted index, class embeddings — loadable by serve/query;
-                              uniform/unigram export static fallback snapshots)
+                              uniform/unigram export static fallback snapshots;
+                              --shards S splits the class space into S contiguous shard
+                              snapshots plus a manifest at --out, servable by
+                              `midx serve --shards` / `midx query --shards`)
   midx query --snapshot FILE [--topk K | --sample M [--fallback FILE]] [--threads N]
              [--beam F] [--load eager|mmap] [--fast-sample] [--no-simd]
+             [--shards [--allow-missing-shards]]
              [--q \"f,f,...\"] | [--queries B --seed N]
                              (one-shot batched answers against a snapshot; one JSON line
                               per query on stdout, timing summary on stderr; --fallback
@@ -119,9 +124,15 @@ const USAGE: &str = "usage:
                               --load mmap borrows the snapshot zero-copy from the page
                               cache instead of reading it eagerly — same answers, near-
                               instant load; --fast-sample opts draws into the u8 ADC
-                              fast proposal; --no-simd forces the scalar kernels)
+                              fast proposal; --no-simd forces the scalar kernels;
+                              --shards treats FILE as a shard manifest and answers through
+                              the scatter-gather router — top-k matches the unsharded
+                              engine bit-for-bit at full --beam; with
+                              --allow-missing-shards, absent shard files serve degraded
+                              partial answers flagged \"partial\":true instead of failing)
   midx serve --snapshot FILE [--fallback FILE] [--tcp ADDR] [--threads N] [--beam F]
              [--load eager|mmap] [--fast-sample] [--no-simd]
+             [--shards [--allow-missing-shards]]
              [--window-us N] [--max-batch N]
              [--max-conns N] [--queue-cap N] [--idle-ms N]
              [--update-tol F] [--update-iters N] [--update-max-bytes N]
@@ -137,7 +148,10 @@ const USAGE: &str = "usage:
                               {\"op\":\"update\"} pushes a new snapshot or an embedding
                               delta without a restart — --update-tol/--update-iters
                               tune the drift refresh applied to pushed deltas,
-                              --update-max-bytes caps the accepted payload size)
+                              --update-max-bytes caps the accepted payload size.
+                              --shards serves a shard manifest through the in-process
+                              scatter-gather router behind the same frontends — live
+                              updates, --fallback and --fast-sample are monolithic-only)
   midx push-update --addr HOST:PORT --next FILE [--base FILE] [--chunk-bytes N]
                              (push a live model update into a running `midx serve`:
                               with --base, sends only the embedding rows that differ
@@ -285,6 +299,12 @@ fn cmd_export(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("--out FILE required (where to write the snapshot)"))?
         .to_string();
     if !args.has("synthetic") {
+        if args.has("shards") {
+            bail!(
+                "--shards applies to --synthetic exports; to shard a trained model, export \
+                 the snapshot first, then re-export it sharded from the file"
+            );
+        }
         // train → snapshot: exactly `midx train --export OUT`
         return run_training(args, Some(out));
     }
@@ -315,6 +335,21 @@ fn cmd_export(args: &Args) -> Result<()> {
     let snap = s
         .snapshot(&table, n, d)
         .ok_or_else(|| anyhow!("sampler '{}' produced no snapshot", kind.name()))?;
+    if args.has("shards") {
+        // sharded export: S shard snapshots next to the manifest at --out
+        let shards = args.usize_or("shards", 0);
+        if shards == 0 {
+            bail!("--shards needs a positive shard count");
+        }
+        let manifest = export_shards(&snap, shards, Path::new(&out))?;
+        println!(
+            "exported synthetic {} snapshot as {shards} shards: N={n} D={d} K={k} seed={seed} \
+             -> {out} (+ {} shard files)",
+            kind.name(),
+            manifest.shards.len()
+        );
+        return Ok(());
+    }
     snap.write(Path::new(&out))?;
     println!(
         "exported synthetic {} snapshot: N={n} D={d} K={k} seed={seed} -> {out} ({} bytes)",
@@ -358,23 +393,60 @@ fn load_engine(args: &Args, default_threads: usize) -> Result<QueryEngine> {
     Ok(engine)
 }
 
-fn cmd_query(args: &Args) -> Result<()> {
-    let engine = load_engine(args, 1)?;
-    let d = engine.dim();
-    let queries: Vec<f32> = match args.get("q") {
+/// Build the `midx query` query block from `--q` / `--queries --seed`
+/// (shared by the monolithic and sharded paths).
+fn parse_queries(args: &Args, d: usize) -> Result<Vec<f32>> {
+    match args.get("q") {
         Some(csv) => {
             let v: Result<Vec<f32>, _> = csv.split(',').map(|t| t.trim().parse()).collect();
             let v = v.map_err(|e| anyhow!("bad --q float list: {e}"))?;
             if v.is_empty() || v.len() % d != 0 {
                 bail!("--q carries {} floats; the model dimension is {d}", v.len());
             }
-            v
+            Ok(v)
         }
         None => {
             let b = args.usize_or("queries", 1);
-            rand_matrix(&mut Rng::new(args.u64_or("seed", 1)), b, d, 0.5)
+            Ok(rand_matrix(&mut Rng::new(args.u64_or("seed", 1)), b, d, 0.5))
         }
+    }
+}
+
+/// Load a [`ShardRouter`] from the shared serve flags, with `--snapshot`
+/// naming a shard manifest (the sharded mirror of [`load_engine`]).
+fn load_shard_router(args: &Args, default_threads: usize) -> Result<ShardRouter> {
+    let path = args.get("snapshot").ok_or_else(|| {
+        anyhow!("--snapshot FILE required (a shard manifest from `midx export --shards`)")
+    })?;
+    let mode = match args.get("load") {
+        None => LoadMode::Eager,
+        Some(s) => LoadMode::parse(s)
+            .ok_or_else(|| anyhow!("--load must be 'eager' or 'mmap', got '{s}'"))?,
     };
+    for flag in ["fallback", "fast-sample"] {
+        if args.has(flag) {
+            bail!("--{flag} is monolithic-only; the sharded router serves neither");
+        }
+    }
+    let mut router = load_router(
+        Path::new(path),
+        mode,
+        args.usize_or("threads", default_threads),
+        args.has("allow-missing-shards"),
+    )?;
+    if args.has("beam") {
+        router.set_beam_factor(args.usize_or("beam", midx::serve::query::DEFAULT_BEAM_FACTOR));
+    }
+    Ok(router)
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    if args.has("shards") {
+        return cmd_query_sharded(args);
+    }
+    let engine = load_engine(args, 1)?;
+    let d = engine.dim();
+    let queries = parse_queries(args, d)?;
     let b = queries.len() / d;
     let t0 = Instant::now();
     if args.has("sample") {
@@ -388,7 +460,7 @@ fn cmd_query(args: &Args) -> Result<()> {
         };
         for row in 0..b {
             let (lo, hi) = (row * m, (row + 1) * m);
-            print_row(row, &ids[lo..hi], "log_q", &log_q[lo..hi]);
+            print_row(row, &ids[lo..hi], "log_q", &log_q[lo..hi], false);
         }
         eprintln!(
             "sampled {m} draws for {b} queries in {:.2?}{}",
@@ -403,7 +475,7 @@ fn cmd_query(args: &Args) -> Result<()> {
         let (ids, scores) = engine.top_k_batch(&queries, k);
         for row in 0..b {
             let (lo, hi) = (row * k, (row + 1) * k);
-            print_row(row, &ids[lo..hi], "scores", &scores[lo..hi]);
+            print_row(row, &ids[lo..hi], "scores", &scores[lo..hi], false);
         }
         eprintln!(
             "answered top-{k} for {b} queries in {:.2?} ({} worker threads)",
@@ -414,36 +486,109 @@ fn cmd_query(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// One `midx query` result line: `{"ids":[…],"query":i,"scores":[…]}`.
-fn print_row(row: usize, ids: &[u32], score_field: &str, scores: &[f32]) {
+/// `midx query --shards`: the same one-shot answers through the
+/// scatter-gather router. Output lines stay byte-identical to the
+/// unsharded path on a healthy tier (the `"partial":true` key only
+/// appears once a shard is down), so CI can diff the two directly.
+fn cmd_query_sharded(args: &Args) -> Result<()> {
+    let router = load_shard_router(args, 1)?;
+    let (live, total) = router.shard_info();
+    eprintln!(
+        "loaded {} shard manifest: N={} D={} in {:.2}ms ({} load, {live}/{total} shards live)",
+        Backend::kind_name(&router),
+        router.n_classes(),
+        router.dim(),
+        Backend::load_millis(&router),
+        Backend::load_mode(&router).name(),
+    );
+    let d = router.dim();
+    let queries = parse_queries(args, d)?;
+    let b = queries.len() / d;
+    let t0 = Instant::now();
+    if args.has("sample") {
+        let m = args.usize_or("sample", 16);
+        let seed = args.u64_or("seed", 1);
+        let (ids, log_q, partial) = router.sample(&queries, m, seed);
+        if ids.is_empty() && b * m > 0 {
+            bail!("every shard is down — no draws to serve");
+        }
+        for row in 0..b {
+            let (lo, hi) = (row * m, (row + 1) * m);
+            print_row(row, &ids[lo..hi], "log_q", &log_q[lo..hi], partial);
+        }
+        eprintln!("sampled {m} merged draws for {b} queries in {:.2?}", t0.elapsed());
+    } else {
+        let k = args.usize_or("topk", 10).min(router.n_classes());
+        let (ids, scores, partial) = router.top_k_batch(&queries, k);
+        let k = if b == 0 { k } else { ids.len() / b };
+        for row in 0..b {
+            let (lo, hi) = (row * k, (row + 1) * k);
+            print_row(row, &ids[lo..hi], "scores", &scores[lo..hi], partial);
+        }
+        eprintln!(
+            "answered merged top-{k} for {b} queries in {:.2?} ({} worker threads)",
+            t0.elapsed(),
+            Backend::workers(&router)
+        );
+    }
+    Ok(())
+}
+
+/// One `midx query` result line: `{"ids":[…],"query":i,"scores":[…]}`,
+/// plus `"partial":true` when a sharded answer is missing a down shard's
+/// classes (absent on healthy replies, mirroring the serve protocol).
+fn print_row(row: usize, ids: &[u32], score_field: &str, scores: &[f32], partial: bool) {
     let mut m = BTreeMap::new();
     m.insert("query".to_string(), Json::Num(row as f64));
     m.insert("ids".to_string(), from_u32s(ids));
     m.insert(score_field.to_string(), from_f32s(scores));
+    if partial {
+        m.insert("partial".to_string(), Json::Bool(true));
+    }
     println!("{}", Json::Obj(m));
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let engine = Arc::new(load_engine(args, 0)?);
-    eprintln!(
-        "loaded {} snapshot: N={} D={} in {:.2}ms ({} load, {} worker threads, simd {}{}{})",
-        engine.kind().name(),
-        engine.n_classes(),
-        engine.dim(),
-        engine.load_millis(),
-        engine.load_mode().name(),
-        engine.workers(),
-        midx::util::math::simd_level().name(),
-        if engine.fast_sample() { ", fast-sample" } else { "" },
-        match engine.fallback_kind() {
-            Some(kind) => format!(", {} fallback", kind.name()),
-            None => String::new(),
-        }
-    );
+    let backend: Arc<dyn Backend> = if args.has("shards") {
+        // sharded backend: S in-process engines behind the scatter-gather
+        // router, served through the same MicroBatcher + frontends
+        let router = load_shard_router(args, 0)?;
+        let (live, total) = router.shard_info();
+        eprintln!(
+            "loaded {} shard manifest: N={} D={} in {:.2}ms ({} load, {live}/{total} shards \
+             live, {} worker threads, simd {})",
+            Backend::kind_name(&router),
+            router.n_classes(),
+            router.dim(),
+            Backend::load_millis(&router),
+            Backend::load_mode(&router).name(),
+            Backend::workers(&router),
+            midx::util::math::simd_level().name(),
+        );
+        Arc::new(router)
+    } else {
+        let engine = Arc::new(load_engine(args, 0)?);
+        eprintln!(
+            "loaded {} snapshot: N={} D={} in {:.2}ms ({} load, {} worker threads, simd {}{}{})",
+            engine.kind().name(),
+            engine.n_classes(),
+            engine.dim(),
+            engine.load_millis(),
+            engine.load_mode().name(),
+            engine.workers(),
+            midx::util::math::simd_level().name(),
+            if engine.fast_sample() { ", fast-sample" } else { "" },
+            match engine.fallback_kind() {
+                Some(kind) => format!(", {} fallback", kind.name()),
+                None => String::new(),
+            }
+        );
+        engine
+    };
     let window = Duration::from_micros(args.u64_or("window-us", 200));
     let max_batch = args.usize_or("max-batch", 64);
     let queue_cap = args.usize_or("queue-cap", 4096);
-    let batcher = Arc::new(MicroBatcher::with_queue_cap(engine, window, max_batch, queue_cap));
+    let batcher = Arc::new(MicroBatcher::with_queue_cap(backend, window, max_batch, queue_cap));
     let rec = LatencyRecorder::new();
     match args.get("tcp") {
         Some(addr) => serve_over_tcp(args, addr, batcher, Arc::new(rec)),

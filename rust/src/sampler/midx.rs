@@ -94,6 +94,35 @@ impl MidxCore {
         self.quant.as_ref()
     }
 
+    /// Natural log of the proposal's **unnormalized partition mass**
+    /// `Z(z) = Σ_b exp(s1[k1] + s2[k2]) · |Ω_b|` over this core's buckets,
+    /// always through the exact f32 stage scores (never the u8 fast path).
+    ///
+    /// This is the scatter weight of the sharded serving tier
+    /// (`serve::shard`): shards share the stage codebooks, so their stage
+    /// scores for a query are identical and their masses compose exactly —
+    /// `Z_total = Σ_s Z_s`. Drawing a shard ∝ `Z_s` and then delegating
+    /// the within-shard draw therefore reproduces the monolithic proposal
+    /// distribution (DESIGN.md §10). Uses `scratch.{s1, s2, joint}` as
+    /// workspace without normalizing them.
+    pub fn log_partition_mass(&self, z: &[f32], scratch: &mut Scratch) -> f32 {
+        let k = self.quant.k();
+        scratch.s1.resize(k, 0.0);
+        scratch.s2.resize(k, 0.0);
+        self.quant.stage1_scores(z, &mut scratch.s1);
+        self.quant.stage2_scores(z, &mut scratch.s2);
+        let nb = k * k;
+        scratch.joint.resize(nb, 0.0);
+        for k1 in 0..k {
+            let base = scratch.s1[k1];
+            for k2 in 0..k {
+                scratch.joint[k1 * k + k2] =
+                    base + scratch.s2[k2] + self.index.log_sizes[k1 * k + k2];
+            }
+        }
+        log_sum_exp(&scratch.joint)
+    }
+
     /// Compute the normalized joint proposal over the K² buckets for `z`
     /// into `scratch.joint`, with the running CDF in `scratch.cdf`.
     /// Returns the number of buckets (K²).
@@ -566,6 +595,18 @@ impl ExactMidxCore {
         &self.table
     }
 
+    /// Exact log partition mass `log Z = log Σ_i exp(z·q_i)` over this
+    /// core's classes — the exact decomposition's log Z (Theorem 1).
+    ///
+    /// Used by the sharded tier (DESIGN.md §10): because the decomposition
+    /// is exact, per-shard masses compose exactly (`Z_total = Σ_s Z_s`),
+    /// so a router can pick a shard from the exact partition masses and
+    /// delegate the within-shard draw without any distribution skew.
+    pub fn log_partition_mass(&self, z: &[f32], scratch: &mut Scratch) -> f32 {
+        self.compute(z, scratch);
+        scratch.log_z
+    }
+
     /// O(N·D) per query: residual scores õ_i for every class, per-bucket
     /// log ω (log-sum-exp of residual scores), joint bucket distribution.
     /// Fills scratch.{s1,s2,resid,joint,cdf,log_z}.
@@ -946,5 +987,60 @@ mod tests {
         }
         let frac = aligned as f64 / total as f64;
         assert!(frac > 0.5, "aligned fraction {frac} (uniform would be 0.1)");
+    }
+
+    #[test]
+    fn prop_fast_mass_is_lse_over_reconstructed_scores() {
+        // MidxCore's partition mass must equal ln Σ_i exp(z·q̃_i) computed
+        // naively from the reconstructed embeddings — the quantity the
+        // sharded tier composes across shards (DESIGN.md §10).
+        for_all("fast mass == naive LSE", |rng, case| {
+            let n = 20 + rng.below(60);
+            let d = 4 + 2 * rng.below(4);
+            let kind = if case % 2 == 0 { QuantKind::Product } else { QuantKind::Residual };
+            let table = rand_matrix(rng, n, d, 0.8);
+            let z = rand_matrix(rng, 1, d, 0.8);
+            let mut s = MidxSampler::new(n, kind, 4, 8);
+            let mut r2 = Rng::new(31);
+            s.rebuild(&table, n, d, &mut r2);
+            let core = s.core.as_ref().unwrap();
+            let mut scratch = Scratch::new();
+            let mass = core.log_partition_mass(&z, &mut scratch);
+
+            let quant = core.quantizer();
+            let mut rec = vec![0.0f32; d];
+            let scores: Vec<f32> = (0..n)
+                .map(|i| {
+                    quant.reconstruct(i, &mut rec);
+                    crate::util::math::dot(&z, &rec)
+                })
+                .collect();
+            let naive = log_sum_exp(&scores);
+            crate::util::check::close(mass as f64, naive as f64, 1e-4, "fast log mass")
+        });
+    }
+
+    #[test]
+    fn prop_exact_mass_is_softmax_log_z() {
+        // ExactMidxCore's partition mass is the true softmax log Z
+        // (Theorem 1's exact decomposition), independent of the quantizer.
+        for_all("exact mass == softmax log Z", |rng, _| {
+            let n = 20 + rng.below(60);
+            let d = 4 + rng.below(8);
+            let table = rand_matrix(rng, n, d, 0.8);
+            let z = rand_matrix(rng, 1, d, 0.8);
+            let mut s = ExactMidxSampler::new(n, QuantKind::Product, 3, 8);
+            let mut r2 = Rng::new(19);
+            s.rebuild(&table, n, d, &mut r2);
+            let core = s.core.as_ref().unwrap();
+            let mut scratch = Scratch::new();
+            let mass = core.log_partition_mass(&z, &mut scratch);
+
+            let scores: Vec<f32> = (0..n)
+                .map(|i| crate::util::math::dot(&z, &table[i * d..(i + 1) * d]))
+                .collect();
+            let naive = log_sum_exp(&scores);
+            crate::util::check::close(mass as f64, naive as f64, 1e-4, "exact log mass")
+        });
     }
 }

@@ -32,6 +32,14 @@
 //!   [`query::MicroBatcher`] quiesce seam — in-flight queries drain
 //!   against the old core, post-swap answers are bit-identical to a cold
 //!   load of the new state (DESIGN.md §9).
+//! * [`shard`] — the **sharded scatter-gather tier**: the class space
+//!   split into S contiguous shards (each its own snapshot slice +
+//!   [`query::QueryEngine`] + pool), merged by a [`shard::ShardRouter`]
+//!   behind the same [`query::Backend`] seam the frontends already serve —
+//!   merged top-k bit-identical to the monolithic engine at full beam,
+//!   merged draws distributed identically (per-shard partition masses
+//!   compose exactly), down shards degrade to explicitly-flagged partial
+//!   answers (DESIGN.md §10).
 //!
 //! Snapshots cover the static samplers too (uniform, unigram — the alias
 //! table persists verbatim), so a served engine can attach one as a cheap
@@ -49,12 +57,14 @@ pub mod query;
 #[cfg(unix)]
 pub mod reactor;
 pub mod server;
+pub mod shard;
 pub mod snapshot;
 pub mod update;
 
-pub use query::{MicroBatcher, QueryEngine, Reply, Request};
+pub use query::{Backend, MicroBatcher, QueryEngine, Reply, Request};
 #[cfg(unix)]
 pub use reactor::{serve_reactor, Reactor, ReactorConfig, ReactorCounters, ReactorHandle};
 pub use server::{handle_line, serve_stdin, serve_tcp, LatencyRecorder, UpdateSession};
+pub use shard::{export_shards, shard_ranges, slice_snapshot, ShardManifest, ShardRouter};
 pub use snapshot::{AliasParts, LoadMode, Snapshot, SnapshotKind};
 pub use update::{Delta, UpdateConfig, UpdateHub, UpdateMode};

@@ -326,6 +326,20 @@ impl QueryEngine {
         self.served.core()
     }
 
+    /// Natural log of the served core's **unnormalized partition mass**
+    /// `Z(z)` for one query, always via the exact f32 stage scores (the
+    /// `--fast-sample` u8 path never touches it). This is the scatter
+    /// weight of the sharded serving tier ([`crate::serve::shard`]): shards
+    /// share stage codebooks, so per-shard masses compose exactly —
+    /// `Z_total = Σ_s Z_s` — and drawing a shard ∝ `Z_s` before delegating
+    /// the within-shard draw reproduces the monolithic proposal.
+    pub fn log_partition_mass(&self, z: &[f32], scratch: &mut Scratch) -> f32 {
+        match &self.served {
+            ServedCore::Midx(c) => c.log_partition_mass(z, scratch),
+            ServedCore::Exact(c) => c.log_partition_mass(z, scratch),
+        }
+    }
+
     /// Override the shortlist width: the beam gathers `factor · k`
     /// candidates before the exact re-rank. `usize::MAX` (or any factor
     /// with `factor · k ≥ N`) makes top-k exactly brute force.
@@ -549,7 +563,7 @@ impl QueryEngine {
                 let mut ids = vec![0u32; k];
                 let mut scores = vec![0.0f32; k];
                 self.top_k_into(q, k, scratch, tk, &mut ids, &mut scores);
-                Reply { ids, scores }
+                Reply { ids, scores, partial: false }
             }
             Request::Sample { q, m, seed, fallback } => {
                 let core = if *fallback {
@@ -560,7 +574,9 @@ impl QueryEngine {
                         // that skips that guard gets an empty reply — a
                         // panic here would kill the shared dispatcher
                         // thread and wedge every other caller
-                        None => return Reply { ids: Vec::new(), scores: Vec::new() },
+                        None => {
+                            return Reply { ids: Vec::new(), scores: Vec::new(), partial: false }
+                        }
                     }
                 } else {
                     self.served.core()
@@ -573,7 +589,7 @@ impl QueryEngine {
                     let mut rng = Rng::stream(*seed, 0);
                     core.sample_into(q, u32::MAX, &mut rng, scratch, &mut ids, &mut log_q);
                 }
-                Reply { ids, scores: log_q }
+                Reply { ids, scores: log_q, partial: false }
             }
         }
     }
@@ -613,6 +629,93 @@ impl QueryEngine {
                 reqs.iter().map(|r| self.execute(r, &mut scratch, &mut tk)).collect()
             }
         }
+    }
+}
+
+/// The serving seam between the [`MicroBatcher`]'s dispatcher and whatever
+/// executes batches: the monolithic [`QueryEngine`] or the scatter-gather
+/// `serve::shard::ShardRouter`. Everything the protocol layer
+/// (`serve::server`, `serve::reactor`) needs to validate, execute and
+/// describe requests lives here, so a sharded deployment is served through
+/// the exact same batcher / reactor / stdin machinery as a single engine.
+pub trait Backend: Send + Sync {
+    /// Run a slice of independent requests; reply `j` answers request `j`.
+    fn run_requests(&self, reqs: &[Request]) -> Vec<Reply>;
+    /// Number of classes served (global, across every shard).
+    fn n_classes(&self) -> usize;
+    /// Embedding dimension queries must carry.
+    fn dim(&self) -> usize;
+    /// Snapshot-kind name reported by the `info` op.
+    fn kind_name(&self) -> &'static str;
+    /// Worker threads across the whole backend (1 = everything inline).
+    fn workers(&self) -> usize;
+    /// Monotone core version: 0 for a cold load, +1 per applied live update.
+    fn generation(&self) -> u64;
+    /// How the backing snapshot(s) were materialized.
+    fn load_mode(&self) -> LoadMode;
+    /// Wall-clock milliseconds the load took (0 = not recorded).
+    fn load_millis(&self) -> f64;
+    /// Whether the sampling path is on the u8 ADC fast proposal.
+    fn fast_sample(&self) -> bool;
+    /// Which static fallback proposal is attached, if any.
+    fn fallback_kind(&self) -> Option<SnapshotKind>;
+    /// `(live, total)` shard counts — `(1, 1)` for a monolithic engine. A
+    /// backend with `live < total` answers with the partial-result flag set.
+    fn shard_info(&self) -> (usize, usize);
+    /// The concrete [`QueryEngine`] when this backend is one. The live
+    /// update path ([`crate::serve::update::UpdateHub`]) requires it;
+    /// sharded backends return `None` and update pushes are rejected with
+    /// an explicit error instead of a silent partial apply.
+    fn as_engine(&self) -> Option<&QueryEngine>;
+}
+
+impl Backend for QueryEngine {
+    fn run_requests(&self, reqs: &[Request]) -> Vec<Reply> {
+        QueryEngine::run_requests(self, reqs)
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn kind_name(&self) -> &'static str {
+        self.kind.name()
+    }
+
+    fn workers(&self) -> usize {
+        QueryEngine::workers(self)
+    }
+
+    fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    fn load_mode(&self) -> LoadMode {
+        self.load_mode
+    }
+
+    fn load_millis(&self) -> f64 {
+        self.load_millis
+    }
+
+    fn fast_sample(&self) -> bool {
+        QueryEngine::fast_sample(self)
+    }
+
+    fn fallback_kind(&self) -> Option<SnapshotKind> {
+        QueryEngine::fallback_kind(self)
+    }
+
+    fn shard_info(&self) -> (usize, usize) {
+        (1, 1)
+    }
+
+    fn as_engine(&self) -> Option<&QueryEngine> {
+        Some(self)
     }
 }
 
@@ -663,6 +766,12 @@ pub struct Reply {
     pub ids: Vec<u32>,
     /// exact scores (top-k) or log q (sample), aligned with `ids`
     pub scores: Vec<f32>,
+    /// set when the answer covers only part of the class space (a sharded
+    /// backend with one or more shards down — see `serve::shard`): the
+    /// reply is correct over the live shards but classes on down shards
+    /// could not be considered. Never silently wrong: degraded answers are
+    /// always flagged, and the frontends surface `"partial":true`.
+    pub partial: bool,
 }
 
 /// How a queued request's reply gets back to its caller: a channel for
@@ -701,10 +810,12 @@ struct BatcherQueue {
 struct BatcherShared {
     q: Mutex<BatcherQueue>,
     cv: Condvar,
-    /// the engine the dispatcher executes batches on. Behind a mutex so a
-    /// live update can atomically replace it ([`MicroBatcher::swap_engine`]);
-    /// the dispatcher re-reads it once per batch, never mid-batch.
-    engine: Mutex<Arc<QueryEngine>>,
+    /// the backend the dispatcher executes batches on — a monolithic
+    /// [`QueryEngine`] or a sharded router, behind the [`Backend`] seam.
+    /// Behind a mutex so a live update can atomically replace it
+    /// ([`MicroBatcher::swap_engine`]); the dispatcher re-reads it once per
+    /// batch, never mid-batch.
+    engine: Mutex<Arc<dyn Backend>>,
     /// total requests accepted (diagnostics)
     requests: AtomicU64,
     /// pool dispatches performed — `requests / dispatches` is the realized
@@ -719,8 +830,9 @@ fn lock_queue(m: &Mutex<BatcherQueue>) -> MutexGuard<'_, BatcherQueue> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
-/// Dynamic micro-batching front of a [`QueryEngine`]: concurrent callers
-/// block in [`MicroBatcher::submit`] while a dispatcher thread coalesces
+/// Dynamic micro-batching front of a serving [`Backend`] (a monolithic
+/// [`QueryEngine`] or a sharded router): concurrent callers block in
+/// [`MicroBatcher::submit`] while a dispatcher thread coalesces
 /// everything that arrived within a short window into one pool dispatch.
 ///
 /// The served engine is **swappable**: [`MicroBatcher::swap_engine`]
@@ -742,7 +854,7 @@ impl MicroBatcher {
     /// immediately); `max_batch` caps requests per dispatch. The admission
     /// queue is unbounded — serve frontends that need backpressure use
     /// [`MicroBatcher::with_queue_cap`].
-    pub fn new(engine: Arc<QueryEngine>, window: Duration, max_batch: usize) -> MicroBatcher {
+    pub fn new(engine: Arc<dyn Backend>, window: Duration, max_batch: usize) -> MicroBatcher {
         MicroBatcher::with_queue_cap(engine, window, max_batch, usize::MAX)
     }
 
@@ -755,7 +867,7 @@ impl MicroBatcher {
     /// are exempt from the cap: they carry their own backpressure by
     /// occupying their calling thread.
     pub fn with_queue_cap(
-        engine: Arc<QueryEngine>,
+        engine: Arc<dyn Backend>,
         window: Duration,
         max_batch: usize,
         queue_cap: usize,
@@ -784,10 +896,10 @@ impl MicroBatcher {
         MicroBatcher { shared, queue_cap, handle: Some(handle) }
     }
 
-    /// The engine this batcher currently serves (a clone of the shared
+    /// The backend this batcher currently serves (a clone of the shared
     /// handle — the caller's view stays coherent even if a live update
     /// swaps the served engine while the caller is still using it).
-    pub fn engine(&self) -> Arc<QueryEngine> {
+    pub fn engine(&self) -> Arc<dyn Backend> {
         Arc::clone(&self.shared.engine.lock().unwrap_or_else(|e| e.into_inner()))
     }
 
@@ -800,7 +912,7 @@ impl MicroBatcher {
     /// swap's serving pause). The old engine (and its worker pool) is
     /// released when the last outstanding [`MicroBatcher::engine`] clone
     /// drops — usually right here, on the updater's thread.
-    pub fn swap_engine(&self, new: Arc<QueryEngine>) -> Duration {
+    pub fn swap_engine(&self, new: Arc<dyn Backend>) -> Duration {
         let t0 = Instant::now();
         self.pause();
         {
@@ -1060,10 +1172,10 @@ mod tests {
             let (i, reply) = h.join().unwrap();
             let want = if i % 2 == 0 {
                 let (ids, scores) = eng.top_k_batch(&queries[i], 4);
-                Reply { ids, scores }
+                Reply { ids, scores, partial: false }
             } else {
                 let (ids, log_q) = eng.sample(&queries[i], 6, 1000 + i as u64);
-                Reply { ids, scores: log_q }
+                Reply { ids, scores: log_q, partial: false }
             };
             assert_eq!(reply, want, "request {i} diverged under coalescing");
         }

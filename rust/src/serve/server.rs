@@ -28,7 +28,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::serve::query::{MicroBatcher, QueryEngine, Reply, Request};
+use crate::serve::query::{Backend, MicroBatcher, Reply, Request};
 use crate::serve::update::{
     begin_ack, chunk_ack, commit_ack, parse_update_frame, UpdateAssembly, UpdateConfig,
     UpdateFrame, UpdateHub,
@@ -205,10 +205,11 @@ pub enum ParsedOp {
     Update(UpdateFrame),
 }
 
-/// Parse + validate one request line against `engine`'s dimensions.
-/// Infallible in the sense that every malformed input becomes
+/// Parse + validate one request line against the serving backend's
+/// dimensions (a monolithic engine or a shard router — the protocol is
+/// identical). Infallible in the sense that every malformed input becomes
 /// [`ParsedOp::Reply`] with a descriptive `{"ok":false}` body.
-pub fn parse_op(engine: &QueryEngine, line: &str) -> ParsedOp {
+pub fn parse_op(engine: &dyn Backend, line: &str) -> ParsedOp {
     let req = match Json::parse(line.trim()) {
         Err(e) => return ParsedOp::Reply(err_json(&format!("bad JSON: {e}"))),
         Ok(req) => req,
@@ -272,10 +273,12 @@ pub fn parse_op(engine: &QueryEngine, line: &str) -> ParsedOp {
     }
 }
 
-/// The `{"op":"info"}` reply body for `engine`.
-pub fn info_json(engine: &QueryEngine) -> Json {
+/// The `{"op":"info"}` reply body for a serving backend. Sharded backends
+/// additionally report `shards` (total) and `shards_live`; a monolithic
+/// engine reports both as 1.
+pub fn info_json(engine: &dyn Backend) -> Json {
     let mut m = ok_obj();
-    m.insert("kind".into(), Json::Str(engine.kind().name().to_string()));
+    m.insert("kind".into(), Json::Str(engine.kind_name().to_string()));
     m.insert("n".into(), Json::Num(engine.n_classes() as f64));
     m.insert("d".into(), Json::Num(engine.dim() as f64));
     m.insert("workers".into(), Json::Num(engine.workers() as f64));
@@ -283,6 +286,9 @@ pub fn info_json(engine: &QueryEngine) -> Json {
     m.insert("load_ms".into(), Json::Num(engine.load_millis()));
     m.insert("fast_sample".into(), Json::Bool(engine.fast_sample()));
     m.insert("generation".into(), Json::Num(engine.generation() as f64));
+    let (live, total) = engine.shard_info();
+    m.insert("shards".into(), Json::Num(total as f64));
+    m.insert("shards_live".into(), Json::Num(live as f64));
     match engine.fallback_kind() {
         Some(kind) => m.insert("fallback".into(), Json::Str(kind.name().to_string())),
         None => m.insert("fallback".into(), Json::Null),
@@ -422,6 +428,11 @@ pub(crate) fn render_reply(reply: &Reply, score_field: &str, us: u64) -> Json {
     m.insert("ids".into(), from_u32s(&reply.ids));
     m.insert(score_field.into(), from_f32s(&reply.scores));
     m.insert("us".into(), Json::Num(us as f64));
+    // only present when degraded (a sharded backend with a shard down), so
+    // healthy replies — and everything diffing them — are unchanged
+    if reply.partial {
+        m.insert("partial".into(), Json::Bool(true));
+    }
     Json::Obj(m)
 }
 

@@ -1,0 +1,863 @@
+//! Sharded scatter-gather serving tier: the class space split across S
+//! shards, each its own [`Snapshot`] slice + [`QueryEngine`] (+ worker
+//! pool), behind a [`ShardRouter`] that answers exactly like the
+//! monolithic engine.
+//!
+//! The merge math is the paper's own decomposition, one level up. Every
+//! shard keeps the **same stage codebooks** (sliced snapshots share
+//! `c1`/`c2` verbatim), so for a query `z` the stage score tables
+//! `s1`/`s2` are identical across shards and the per-shard proposal mass
+//! `Z_s(z) = Σ_b exp(s1[k1] + s2[k2]) · |Ω_b ∩ shard_s|` composes
+//! exactly: the buckets partition the classes and the shards partition
+//! each bucket, so `Z(z) = Σ_s Z_s(z)`. That gives the two merge rules
+//! (DESIGN.md §10):
+//!
+//! * **top-k** — scatter to every shard, gather each shard's exact-reranked
+//!   local top-k, remap local ids back to global (`+ lo_s`), merge-sort by
+//!   (exact score desc, global id asc) and truncate. At full beam this is
+//!   **bit-identical** to the unsharded engine: scores are exact f32 dots
+//!   against byte-identical table rows and the comparator is the same.
+//! * **sample** — draw the shard first from the exact per-shard masses
+//!   (`P(s) = Z_s / Σ_t Z_t`), then delegate the draw to the shard's own
+//!   core and correct the log proposal by `ln(Z_s / Z)`; the merged draws
+//!   are distributed identically to the monolithic sampler
+//!   (χ²-pinned by `rust/tests/serve_shard.rs`).
+//!
+//! Failure semantics: a shard can be **down** (engine dropped at runtime,
+//! or its manifest entry missing at load under `allow_missing`). The
+//! router keeps answering over the live shards and sets the explicit
+//! [`Reply::partial`] flag on every affected reply — degraded service is
+//! always flagged, never a silent wrong answer. An *empty* shard (zero
+//! classes, a degenerate split) is not a failure: it carries zero mass and
+//! no flag.
+//!
+//! On-disk layout: `midx export --shards S` writes S sliced snapshot files
+//! next to a JSON [`ShardManifest`] (class ranges + fnv1a64 checksums);
+//! `midx serve --shards` / `midx query --shards` load the manifest into an
+//! in-process router behind the same `MicroBatcher` / reactor frontends.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::sampler::Scratch;
+use crate::serve::query::{Backend, QueryEngine, Reply, Request};
+use crate::serve::snapshot::{fnv1a64, LoadMode, Snapshot, SnapshotKind};
+use crate::util::{Json, Rng};
+
+/// Salt folded into the per-(row, shard) RNG stream for the delegated
+/// within-shard draws, so the shard-choice stream (`Rng::stream(seed, row)`)
+/// and the draw streams never collide.
+const SHARD_DRAW_SALT: u64 = 0xA076_1D64_78BD_642F;
+
+/// Contiguous even split of `n` classes into `shards` ranges `[lo, hi)`:
+/// the first `n % shards` shards get one extra class. Errors when `shards`
+/// is zero or exceeds `n` (an exported shard file cannot be empty).
+pub fn shard_ranges(n: usize, shards: usize) -> Result<Vec<(usize, usize)>> {
+    if shards == 0 {
+        bail!("shard count must be at least 1");
+    }
+    if shards > n {
+        bail!("cannot split {n} classes into {shards} non-empty shards");
+    }
+    let base = n / shards;
+    let extra = n % shards;
+    let mut ranges = Vec::with_capacity(shards);
+    let mut lo = 0usize;
+    for i in 0..shards {
+        let hi = lo + base + usize::from(i < extra);
+        ranges.push((lo, hi));
+        lo = hi;
+    }
+    Ok(ranges)
+}
+
+/// Check that `ranges` is a contiguous cover of `0..n` (sorted, no
+/// overlap, no gap). `allow_empty` permits `lo == hi` ranges (in-memory
+/// degenerate splits); manifests never contain them.
+fn validate_cover(ranges: &[(usize, usize)], n: usize, allow_empty: bool) -> Result<()> {
+    if ranges.is_empty() {
+        bail!("no shard ranges given");
+    }
+    let mut expect = 0usize;
+    for (i, &(lo, hi)) in ranges.iter().enumerate() {
+        if lo > hi || (!allow_empty && lo == hi) {
+            bail!("shard {i}: bad class range [{lo},{hi})");
+        }
+        if lo < expect {
+            bail!("shard {i}: class range [{lo},{hi}) overlaps shard {}", i - 1);
+        }
+        if lo > expect {
+            bail!("shard {i}: gap in class coverage — classes {expect}..{lo} belong to no shard");
+        }
+        expect = hi;
+    }
+    if expect != n {
+        bail!("shards cover classes 0..{expect} but the snapshot has {n}");
+    }
+    Ok(())
+}
+
+/// Slice a MIDX-family snapshot down to the classes `[lo, hi)`, re-idded
+/// to local `0..hi-lo`. The stage codebooks are shared verbatim (that is
+/// what makes per-shard masses compose exactly); per-class arrays and the
+/// CSR are restricted to the range, keeping global bucket order so local
+/// ids stay ascending within each bucket. The slice is a fully valid
+/// standalone snapshot: it round-trips through the on-disk format and
+/// serves through an ordinary [`QueryEngine`].
+pub fn slice_snapshot(snap: &Snapshot, lo: usize, hi: usize) -> Result<Snapshot> {
+    if snap.kind.is_static() {
+        bail!("cannot shard a static '{}' snapshot (no index to slice)", snap.kind.name());
+    }
+    if lo >= hi || hi > snap.n {
+        bail!("bad shard range [{lo},{hi}) for a {}-class snapshot", snap.n);
+    }
+    let ns = hi - lo;
+    let d = snap.d;
+    let nb = snap.k * snap.k;
+    let mut offsets = vec![0u32; nb + 1];
+    let mut members = Vec::with_capacity(ns);
+    for b in 0..nb {
+        offsets[b] = members.len() as u32;
+        let (s, e) = (snap.offsets[b] as usize, snap.offsets[b + 1] as usize);
+        for &c in &snap.members[s..e] {
+            let c = c as usize;
+            if (lo..hi).contains(&c) {
+                members.push((c - lo) as u32);
+            }
+        }
+    }
+    offsets[nb] = members.len() as u32;
+    let mut meta = match &snap.meta {
+        Json::Obj(m) => m.clone(),
+        _ => BTreeMap::new(),
+    };
+    meta.insert("shard_lo".into(), Json::Num(lo as f64));
+    meta.insert("shard_classes".into(), Json::Num(ns as f64));
+    Ok(Snapshot {
+        kind: snap.kind,
+        family: snap.family,
+        n: ns,
+        d,
+        k: snap.k,
+        d1: snap.d1,
+        c1: snap.c1.clone(),
+        c2: snap.c2.clone(),
+        assign1: snap.assign1[lo..hi].to_vec().into(),
+        assign2: snap.assign2[lo..hi].to_vec().into(),
+        offsets: offsets.into(),
+        members: members.into(),
+        table: snap.table[lo * d..hi * d].to_vec().into(),
+        distortion: snap.distortion,
+        alias: None,
+        meta: Json::Obj(meta),
+    })
+}
+
+/// One shard's entry in a [`ShardManifest`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardEntry {
+    /// snapshot filename, relative to the manifest's directory
+    pub file: String,
+    /// first global class id this shard serves
+    pub lo: usize,
+    /// one past the last global class id this shard serves
+    pub hi: usize,
+    /// fnv1a64 checksum of the shard snapshot file's bytes
+    pub fnv: u64,
+}
+
+/// The JSON manifest `midx export --shards` writes next to the shard
+/// snapshot files: which file serves which contiguous class range, with a
+/// checksum per file. [`ShardRouter::load`] validates the cover (no
+/// overlap, no gap, ends at `n`) and every checksum before serving.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardManifest {
+    /// snapshot-kind name (informational; the shard files are authoritative)
+    pub kind: String,
+    /// total classes across all shards
+    pub n: usize,
+    /// embedding dimension
+    pub d: usize,
+    /// per-shard entries, in class order
+    pub shards: Vec<ShardEntry>,
+}
+
+impl ShardManifest {
+    /// Serialize to the on-disk JSON form.
+    pub fn to_json(&self) -> Json {
+        let shards = self
+            .shards
+            .iter()
+            .map(|e| {
+                let mut m = BTreeMap::new();
+                m.insert("file".to_string(), Json::Str(e.file.clone()));
+                m.insert("lo".to_string(), Json::Num(e.lo as f64));
+                m.insert("hi".to_string(), Json::Num(e.hi as f64));
+                m.insert("fnv".to_string(), Json::Str(format!("{:016x}", e.fnv)));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("midx_shard_manifest".to_string(), Json::Num(1.0));
+        m.insert("kind".to_string(), Json::Str(self.kind.clone()));
+        m.insert("n".to_string(), Json::Num(self.n as f64));
+        m.insert("d".to_string(), Json::Num(self.d as f64));
+        m.insert("count".to_string(), Json::Num(self.shards.len() as f64));
+        m.insert("shards".to_string(), Json::Arr(shards));
+        Json::Obj(m)
+    }
+
+    /// Parse and structurally validate a manifest: marker, declared count
+    /// vs listed shards, per-shard ranges forming a contiguous non-empty
+    /// cover of `0..n`, well-formed checksums. Every error names the
+    /// offending shard index; [`ShardManifest::read`] prefixes the path.
+    pub fn from_json(j: &Json) -> Result<ShardManifest> {
+        if j.get("midx_shard_manifest").and_then(Json::as_f64) != Some(1.0) {
+            bail!("not a midx shard manifest (missing \"midx_shard_manifest\":1 marker)");
+        }
+        let kind = j
+            .req("kind")
+            .map_err(|e| anyhow!(e))?
+            .as_str()
+            .ok_or_else(|| anyhow!("'kind' must be a string"))?
+            .to_string();
+        let n = j.req("n").map_err(|e| anyhow!(e))?.as_usize().ok_or_else(|| anyhow!("'n' must be a number"))?;
+        let d = j.req("d").map_err(|e| anyhow!(e))?.as_usize().ok_or_else(|| anyhow!("'d' must be a number"))?;
+        let count = j
+            .req("count")
+            .map_err(|e| anyhow!(e))?
+            .as_usize()
+            .ok_or_else(|| anyhow!("'count' must be a number"))?;
+        let arr = j
+            .req("shards")
+            .map_err(|e| anyhow!(e))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("'shards' must be an array"))?;
+        if arr.len() != count {
+            bail!("shard count mismatch: manifest declares count={count} but lists {} shards", arr.len());
+        }
+        let mut shards = Vec::with_capacity(arr.len());
+        for (i, e) in arr.iter().enumerate() {
+            let field = |key: &str| e.req(key).map_err(|err| anyhow!("shard {i}: {err}"));
+            let file = field("file")?
+                .as_str()
+                .ok_or_else(|| anyhow!("shard {i}: 'file' must be a string"))?
+                .to_string();
+            let lo = field("lo")?.as_usize().ok_or_else(|| anyhow!("shard {i}: 'lo' must be a number"))?;
+            let hi = field("hi")?.as_usize().ok_or_else(|| anyhow!("shard {i}: 'hi' must be a number"))?;
+            let fnv_s = field("fnv")?
+                .as_str()
+                .ok_or_else(|| anyhow!("shard {i}: 'fnv' must be a hex string"))?;
+            let fnv = u64::from_str_radix(fnv_s, 16)
+                .map_err(|_| anyhow!("shard {i}: bad fnv checksum '{fnv_s}'"))?;
+            shards.push(ShardEntry { file, lo, hi, fnv });
+        }
+        let ranges: Vec<(usize, usize)> = shards.iter().map(|e| (e.lo, e.hi)).collect();
+        validate_cover(&ranges, n, false)?;
+        Ok(ShardManifest { kind, n, d, shards })
+    }
+
+    /// Write the manifest as pretty-free compact JSON.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing shard manifest to {}", path.display()))
+    }
+
+    /// Read + validate a manifest file. Errors carry the manifest path and
+    /// (where applicable) the offending shard index.
+    pub fn read(path: &Path) -> Result<ShardManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading shard manifest {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("{}: not valid JSON: {e}", path.display()))?;
+        ShardManifest::from_json(&j).map_err(|e| anyhow!("{}: {e}", path.display()))
+    }
+}
+
+/// Slice `snap` into `shards` contiguous pieces and write them next to
+/// `manifest_path` as `<manifest-file-name>.shard<i>`, plus the manifest
+/// itself at `manifest_path`. Returns the written manifest.
+pub fn export_shards(snap: &Snapshot, shards: usize, manifest_path: &Path) -> Result<ShardManifest> {
+    let ranges = shard_ranges(snap.n, shards)?;
+    let dir = match manifest_path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => Path::new(".").to_path_buf(),
+    };
+    let base = manifest_path
+        .file_name()
+        .ok_or_else(|| anyhow!("shard manifest path {} has no file name", manifest_path.display()))?
+        .to_string_lossy()
+        .into_owned();
+    let mut entries = Vec::with_capacity(shards);
+    for (i, &(lo, hi)) in ranges.iter().enumerate() {
+        let mut slice = slice_snapshot(snap, lo, hi)?;
+        if let Json::Obj(m) = &mut slice.meta {
+            m.insert("shard_index".to_string(), Json::Num(i as f64));
+            m.insert("shard_count".to_string(), Json::Num(shards as f64));
+        }
+        let file = format!("{base}.shard{i}");
+        let bytes = slice.to_bytes();
+        std::fs::write(dir.join(&file), &bytes)
+            .with_context(|| format!("writing shard {i} snapshot to {}", dir.join(&file).display()))?;
+        entries.push(ShardEntry { file, lo, hi, fnv: fnv1a64(&bytes) });
+    }
+    let manifest = ShardManifest {
+        kind: snap.kind.name().to_string(),
+        n: snap.n,
+        d: snap.d,
+        shards: entries,
+    };
+    manifest.write(manifest_path)?;
+    Ok(manifest)
+}
+
+/// One shard slot: its global class range and (when live) its engine.
+/// `lo == hi` is an *empty* shard — zero mass, not a failure. `lo < hi`
+/// with no engine is a *down* shard: answers become partial.
+struct ShardSlot {
+    lo: usize,
+    hi: usize,
+    engine: Option<QueryEngine>,
+}
+
+impl ShardSlot {
+    fn down(&self) -> bool {
+        self.lo < self.hi && self.engine.is_none()
+    }
+}
+
+/// Scatter-gather router over S in-process shard engines; implements
+/// [`Backend`], so it serves behind the same [`crate::serve::MicroBatcher`]
+/// / reactor / stdin frontends as a monolithic [`QueryEngine`]. See the
+/// module docs for the merge rules and failure semantics.
+pub struct ShardRouter {
+    slots: Vec<ShardSlot>,
+    kind: SnapshotKind,
+    n: usize,
+    d: usize,
+    load_mode: LoadMode,
+    load_millis: f64,
+}
+
+impl ShardRouter {
+    /// Build a router by slicing `snap` at the given contiguous class
+    /// ranges (a cover of `0..n`; empty ranges allowed — they become
+    /// zero-mass shards). `threads` sizes **each** shard's worker pool
+    /// (1 = everything inline).
+    pub fn from_snapshot(snap: &Snapshot, ranges: &[(usize, usize)], threads: usize) -> Result<ShardRouter> {
+        validate_cover(ranges, snap.n, true)?;
+        let mut slots = Vec::with_capacity(ranges.len());
+        for (i, &(lo, hi)) in ranges.iter().enumerate() {
+            let engine = if lo == hi {
+                None
+            } else {
+                let slice = slice_snapshot(snap, lo, hi).with_context(|| format!("slicing shard {i}"))?;
+                Some(QueryEngine::new(slice, threads).with_context(|| format!("building shard {i} engine"))?)
+            };
+            slots.push(ShardSlot { lo, hi, engine });
+        }
+        Ok(ShardRouter {
+            slots,
+            kind: snap.kind,
+            n: snap.n,
+            d: snap.d,
+            load_mode: LoadMode::Eager,
+            load_millis: 0.0,
+        })
+    }
+
+    /// [`ShardRouter::from_snapshot`] over the even [`shard_ranges`] split.
+    pub fn split(snap: &Snapshot, shards: usize, threads: usize) -> Result<ShardRouter> {
+        let ranges = shard_ranges(snap.n, shards)?;
+        ShardRouter::from_snapshot(snap, &ranges, threads)
+    }
+
+    /// Load a router from a [`ShardManifest`] written by `midx export
+    /// --shards`. Shard files resolve relative to the manifest's directory.
+    /// Under [`LoadMode::Eager`] every file's fnv1a64 checksum is verified
+    /// against the manifest (mmap loads rely on the snapshot's own header
+    /// validation instead — checksumming would read the whole file and
+    /// defeat the zero-copy load). With `allow_missing`, an unreadable
+    /// shard file becomes a **down** shard (partial answers) instead of a
+    /// load error; at least one shard must load either way.
+    pub fn load(path: &Path, mode: LoadMode, threads: usize, allow_missing: bool) -> Result<ShardRouter> {
+        let manifest = ShardManifest::read(path)?;
+        let dir = match path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+            _ => Path::new(".").to_path_buf(),
+        };
+        let mut slots = Vec::with_capacity(manifest.shards.len());
+        let mut kind: Option<SnapshotKind> = None;
+        for (i, e) in manifest.shards.iter().enumerate() {
+            let file = dir.join(&e.file);
+            let loaded: Result<Snapshot> = (|| match mode {
+                LoadMode::Eager => {
+                    let bytes = std::fs::read(&file)
+                        .with_context(|| format!("{}: shard {i}: reading {}", path.display(), file.display()))?;
+                    let got = fnv1a64(&bytes);
+                    if got != e.fnv {
+                        bail!(
+                            "{}: shard {i} checksum mismatch: {} hashes to {:016x}, manifest says {:016x}",
+                            path.display(),
+                            file.display(),
+                            got,
+                            e.fnv
+                        );
+                    }
+                    Snapshot::from_bytes(&bytes)
+                        .with_context(|| format!("{}: shard {i}: loading {}", path.display(), file.display()))
+                }
+                LoadMode::Mmap => Snapshot::read_with(&file, mode)
+                    .with_context(|| format!("{}: shard {i}: loading {}", path.display(), file.display())),
+            })();
+            let snap = match loaded {
+                Ok(s) => s,
+                // a checksum mismatch is corruption, never skippable: only
+                // a shard that cannot be read at all may degrade to down
+                Err(_) if allow_missing && !file.exists() => {
+                    slots.push(ShardSlot { lo: e.lo, hi: e.hi, engine: None });
+                    continue;
+                }
+                Err(err) => return Err(err),
+            };
+            if snap.n != e.hi - e.lo {
+                bail!(
+                    "{}: shard {i}: {} holds {} classes but the manifest range [{},{}) expects {}",
+                    path.display(),
+                    file.display(),
+                    snap.n,
+                    e.lo,
+                    e.hi,
+                    e.hi - e.lo
+                );
+            }
+            if snap.d != manifest.d {
+                bail!("{}: shard {i}: dimension {} != manifest dimension {}", path.display(), snap.d, manifest.d);
+            }
+            match kind {
+                None => kind = Some(snap.kind),
+                Some(k) if k != snap.kind => {
+                    bail!("{}: shard {i} kind '{}' differs from shard 0 kind '{}'", path.display(), snap.kind.name(), k.name())
+                }
+                _ => {}
+            }
+            let engine = QueryEngine::new(snap, threads)
+                .with_context(|| format!("{}: building shard {i} engine", path.display()))?;
+            slots.push(ShardSlot { lo: e.lo, hi: e.hi, engine: Some(engine) });
+        }
+        let kind = match kind {
+            Some(k) => k,
+            None => bail!("{}: no shard could be loaded — nothing to serve", path.display()),
+        };
+        Ok(ShardRouter {
+            slots,
+            kind,
+            n: manifest.n,
+            d: manifest.d,
+            load_mode: mode,
+            load_millis: 0.0,
+        })
+    }
+
+    /// Record how the shards were materialized (reported by `info`).
+    pub fn set_load_info(&mut self, mode: LoadMode, millis: f64) {
+        self.load_mode = mode;
+        self.load_millis = millis;
+    }
+
+    /// Drop one shard's engine at runtime (fault injection / forced
+    /// degradation): its classes disappear from answers and every
+    /// subsequent reply carries the partial flag.
+    pub fn drop_shard(&mut self, idx: usize) {
+        self.slots[idx].engine = None;
+    }
+
+    /// Total shards (live + empty + down).
+    pub fn shard_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Shards currently able to answer (not down; empty shards count —
+    /// they hold nothing and lose nothing).
+    pub fn live_shards(&self) -> usize {
+        self.slots.len() - self.slots.iter().filter(|s| s.down()).count()
+    }
+
+    /// Whether any non-empty shard is down — i.e. whether answers are
+    /// partial.
+    pub fn degraded(&self) -> bool {
+        self.slots.iter().any(|s| s.down())
+    }
+
+    /// The global class range `[lo, hi)` of shard `idx`.
+    pub fn shard_range(&self, idx: usize) -> (usize, usize) {
+        (self.slots[idx].lo, self.slots[idx].hi)
+    }
+
+    /// Total classes served globally (including classes on down shards).
+    pub fn n_classes(&self) -> usize {
+        self.n
+    }
+
+    /// Embedding dimension queries must carry.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Classes reachable right now (live shards only).
+    fn live_classes(&self) -> usize {
+        self.slots.iter().filter(|s| !s.down()).map(|s| s.hi - s.lo).sum()
+    }
+
+    /// Fan a beam-factor override to every shard engine
+    /// ([`QueryEngine::set_beam_factor`]). With the factor at `usize::MAX`
+    /// each shard's local top-k is exact, which makes the merged top-k
+    /// bit-identical to the monolithic engine at full beam.
+    pub fn set_beam_factor(&mut self, factor: usize) {
+        for s in &mut self.slots {
+            if let Some(e) = &mut s.engine {
+                e.set_beam_factor(factor);
+            }
+        }
+    }
+
+    /// Scatter-gather top-k for one query: per-shard exact-reranked local
+    /// top-k, ids remapped to global, merged by (score desc, global id
+    /// asc), truncated to `k` (clamped to the classes currently live).
+    /// The bool is the partial flag: true iff a non-empty shard is down.
+    pub fn top_k(&self, z: &[f32], k: usize) -> (Vec<(u32, f32)>, bool) {
+        let k = k.min(self.live_classes());
+        let mut merged: Vec<(f32, u32)> = Vec::new();
+        for s in &self.slots {
+            if let Some(eng) = &s.engine {
+                for (c, sc) in eng.top_k(z, k) {
+                    merged.push((sc, c + s.lo as u32));
+                }
+            }
+        }
+        merged.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        merged.truncate(k);
+        (merged.into_iter().map(|(sc, c)| (c, sc)).collect(), self.degraded())
+    }
+
+    /// Batched scatter-gather top-k over a [B, D] query block: each shard
+    /// answers the whole block through its own (pooled) batch path, then
+    /// rows are merged as in [`ShardRouter::top_k`]. Returns row-major
+    /// ([B, k] ids, [B, k] scores, partial flag) with `k` clamped to the
+    /// classes currently live.
+    pub fn top_k_batch(&self, queries: &[f32], k: usize) -> (Vec<u32>, Vec<f32>, bool) {
+        let d = self.d;
+        assert_eq!(queries.len() % d, 0, "queries must be [B, D={d}]");
+        let b = queries.len() / d;
+        let k = k.min(self.live_classes());
+        let mut ids = vec![0u32; b * k];
+        let mut scores = vec![0.0f32; b * k];
+        if b == 0 || k == 0 {
+            return (ids, scores, self.degraded());
+        }
+        // scatter: (lo, per-shard k, [B, ks] ids, [B, ks] scores)
+        let mut parts: Vec<(u32, usize, Vec<u32>, Vec<f32>)> = Vec::new();
+        for s in &self.slots {
+            if let Some(eng) = &s.engine {
+                let ks = k.min(eng.n_classes());
+                let (pi, ps) = eng.top_k_batch(queries, k);
+                parts.push((s.lo as u32, ks, pi, ps));
+            }
+        }
+        // gather: per-row merge by (exact score desc, global id asc)
+        let mut merged: Vec<(f32, u32)> = Vec::new();
+        for row in 0..b {
+            merged.clear();
+            for (lo, ks, pi, ps) in &parts {
+                for j in 0..*ks {
+                    merged.push((ps[row * ks + j], pi[row * ks + j] + lo));
+                }
+            }
+            merged.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+            for (j, &(sc, c)) in merged.iter().take(k).enumerate() {
+                ids[row * k + j] = c;
+                scores[row * k + j] = sc;
+            }
+        }
+        (ids, scores, self.degraded())
+    }
+
+    /// Merged proposal draws over a [B, D] query block: per row, shards
+    /// are drawn from the exact per-shard partition masses, each picked
+    /// shard answers its share of draws through its own core, ids are
+    /// remapped to global and log proposals corrected by `ln(Z_s / Z)` —
+    /// distributed identically to the monolithic sampler. Row `i` derives
+    /// its streams from `(seed, i)`, so draws are independent across rows
+    /// and deterministic for a fixed seed (they are *not* bit-identical to
+    /// the monolithic engine's stream — only the distribution is pinned).
+    /// Returns row-major ([B, m] ids, [B, m] log q, partial flag); empty
+    /// outputs if every shard is down.
+    pub fn sample(&self, queries: &[f32], m: usize, seed: u64) -> (Vec<u32>, Vec<f32>, bool) {
+        let d = self.d;
+        assert_eq!(queries.len() % d, 0, "queries must be [B, D={d}]");
+        let b = queries.len() / d;
+        if self.slots.iter().all(|s| s.engine.is_none()) {
+            return (Vec::new(), Vec::new(), self.degraded());
+        }
+        let mut ids = vec![0u32; b * m];
+        let mut log_q = vec![0.0f32; b * m];
+        let mut scratch = Scratch::new();
+        for row in 0..b {
+            self.sample_row(
+                &queries[row * d..(row + 1) * d],
+                m,
+                seed,
+                row,
+                &mut ids[row * m..(row + 1) * m],
+                &mut log_q[row * m..(row + 1) * m],
+                &mut scratch,
+            );
+        }
+        (ids, log_q, self.degraded())
+    }
+
+    /// One row of [`ShardRouter::sample`]: draw `m` shard choices from the
+    /// per-shard masses, then delegate each shard's share as **one**
+    /// `sample_into` call (the shard's joint is computed once per row, not
+    /// once per draw), and scatter the results back in draw order.
+    fn sample_row(
+        &self,
+        z: &[f32],
+        m: usize,
+        seed: u64,
+        row: usize,
+        ids: &mut [u32],
+        log_q: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        if m == 0 {
+            return;
+        }
+        let sc = self.slots.len();
+        let mut log_mass = vec![f32::NEG_INFINITY; sc];
+        for (si, s) in self.slots.iter().enumerate() {
+            if let Some(eng) = &s.engine {
+                log_mass[si] = eng.log_partition_mass(z, scratch);
+            }
+        }
+        let lmax = log_mass.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert!(lmax.is_finite(), "sample_row with no live shard (callers guard this)");
+        let weights: Vec<f64> = log_mass.iter().map(|&l| ((l - lmax) as f64).exp()).collect();
+        let total: f64 = weights.iter().sum();
+        // ln Σ_s Z_s, via the same max-shifted LSE the cores use
+        let log_total = lmax + total.ln() as f32;
+
+        let mut pick_rng = Rng::stream(seed, row as u64);
+        let mut picks = vec![0usize; m];
+        let mut counts = vec![0usize; sc];
+        for p in picks.iter_mut() {
+            let si = pick_weighted(&mut pick_rng, &weights, total);
+            *p = si;
+            counts[si] += 1;
+        }
+
+        let mut bufs: Vec<(Vec<u32>, Vec<f32>)> = vec![(Vec::new(), Vec::new()); sc];
+        for (si, s) in self.slots.iter().enumerate() {
+            let c = counts[si];
+            if c == 0 {
+                continue;
+            }
+            let eng = s.engine.as_ref().expect("picked shard has positive mass, hence an engine");
+            let mut sid = vec![0u32; c];
+            let mut slq = vec![0.0f32; c];
+            let mut rng = Rng::stream(seed ^ SHARD_DRAW_SALT, (row * sc + si) as u64);
+            eng.core().sample_into(z, u32::MAX, &mut rng, scratch, &mut sid, &mut slq);
+            let corr = log_mass[si] - log_total;
+            for t in 0..c {
+                sid[t] += s.lo as u32;
+                slq[t] += corr;
+            }
+            bufs[si] = (sid, slq);
+        }
+
+        let mut cursor = vec![0usize; sc];
+        for j in 0..m {
+            let si = picks[j];
+            let t = cursor[si];
+            cursor[si] += 1;
+            ids[j] = bufs[si].0[t];
+            log_q[j] = bufs[si].1[t];
+        }
+    }
+
+    /// Execute one protocol request (the unit the dispatcher batches).
+    fn execute(&self, req: &Request, scratch: &mut Scratch) -> Reply {
+        let partial = self.degraded();
+        match req {
+            Request::TopK { q, k } => {
+                let (pairs, _) = self.top_k(q, *k);
+                let (ids, scores) = pairs.into_iter().unzip();
+                Reply { ids, scores, partial }
+            }
+            Request::Sample { q, m, seed, fallback } => {
+                // the frontends reject fallback draws for sharded backends
+                // (fallback_kind() is None); a direct caller degrades to an
+                // empty reply, same as the engine's unattached-fallback path
+                if *fallback || self.slots.iter().all(|s| s.engine.is_none()) {
+                    return Reply { ids: Vec::new(), scores: Vec::new(), partial };
+                }
+                let mut ids = vec![0u32; *m];
+                let mut log_q = vec![0.0f32; *m];
+                self.sample_row(q, *m, *seed, 0, &mut ids, &mut log_q, scratch);
+                Reply { ids, scores: log_q, partial }
+            }
+        }
+    }
+}
+
+/// Linear-scan categorical pick over unnormalized f64 weights that never
+/// lands on a zero weight (a down/empty shard must never be chosen, even
+/// at the `u == 0` boundary the generic `Rng::categorical` can hit).
+fn pick_weighted(rng: &mut Rng, weights: &[f64], total: f64) -> usize {
+    debug_assert!(total > 0.0);
+    let mut u = rng.next_f64() * total;
+    let mut last = usize::MAX;
+    for (i, &w) in weights.iter().enumerate() {
+        if w <= 0.0 {
+            continue;
+        }
+        last = i;
+        u -= w;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    last
+}
+
+impl Backend for ShardRouter {
+    fn run_requests(&self, reqs: &[Request]) -> Vec<Reply> {
+        // requests run sequentially here; each shard's own worker pool
+        // still parallelizes within a shard, and the per-request work is
+        // the shard fan-out itself
+        let mut scratch = Scratch::new();
+        reqs.iter().map(|r| self.execute(r, &mut scratch)).collect()
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn kind_name(&self) -> &'static str {
+        self.kind.name()
+    }
+
+    fn workers(&self) -> usize {
+        self.slots.iter().filter_map(|s| s.engine.as_ref()).map(|e| e.workers()).sum::<usize>().max(1)
+    }
+
+    fn generation(&self) -> u64 {
+        0
+    }
+
+    fn load_mode(&self) -> LoadMode {
+        self.load_mode
+    }
+
+    fn load_millis(&self) -> f64 {
+        self.load_millis
+    }
+
+    fn fast_sample(&self) -> bool {
+        false
+    }
+
+    fn fallback_kind(&self) -> Option<SnapshotKind> {
+        None
+    }
+
+    fn shard_info(&self) -> (usize, usize) {
+        (self.live_shards(), self.slots.len())
+    }
+
+    fn as_engine(&self) -> Option<&QueryEngine> {
+        None
+    }
+}
+
+/// Convenience: load a router from a manifest and record the load time,
+/// the sharded analogue of the monolithic engine-load path in `main`.
+pub fn load_router(
+    path: &Path,
+    mode: LoadMode,
+    threads: usize,
+    allow_missing: bool,
+) -> Result<ShardRouter> {
+    let t0 = Instant::now();
+    let mut router = ShardRouter::load(path, mode, threads, allow_missing)?;
+    router.set_load_info(mode, t0.elapsed().as_secs_f64() * 1e3);
+    Ok(router)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_even_split() {
+        assert_eq!(shard_ranges(10, 1).unwrap(), vec![(0, 10)]);
+        assert_eq!(shard_ranges(10, 3).unwrap(), vec![(0, 4), (4, 7), (7, 10)]);
+        assert_eq!(shard_ranges(4, 4).unwrap(), vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
+        assert!(shard_ranges(3, 4).is_err());
+        assert!(shard_ranges(3, 0).is_err());
+        // ranges always cover 0..n contiguously
+        for n in 1..40usize {
+            for s in 1..=n.min(9) {
+                let r = shard_ranges(n, s).unwrap();
+                validate_cover(&r, n, false).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn manifest_round_trip() {
+        let m = ShardManifest {
+            kind: "midx-rq".to_string(),
+            n: 10,
+            d: 4,
+            shards: vec![
+                ShardEntry { file: "a.shard0".into(), lo: 0, hi: 6, fnv: 0xDEAD_BEEF },
+                ShardEntry { file: "a.shard1".into(), lo: 6, hi: 10, fnv: 1 },
+            ],
+        };
+        let back = ShardManifest::from_json(&Json::parse(&m.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn manifest_rejects_bad_covers() {
+        let mk = |ranges: &[(usize, usize)]| ShardManifest {
+            kind: "midx-rq".to_string(),
+            n: 10,
+            d: 4,
+            shards: ranges
+                .iter()
+                .enumerate()
+                .map(|(i, &(lo, hi))| ShardEntry { file: format!("f{i}"), lo, hi, fnv: 0 })
+                .collect(),
+        };
+        for (ranges, what) in [
+            (vec![(0usize, 5usize), (4, 10)], "overlap"),
+            (vec![(0, 4), (5, 10)], "gap"),
+            (vec![(1, 10)], "gap"),
+            (vec![(0, 9)], "cover"),
+            (vec![(0, 5), (5, 5), (5, 10)], "bad class range"),
+        ] {
+            let j = Json::parse(&mk(&ranges).to_json().to_string()).unwrap();
+            let e = ShardManifest::from_json(&j).unwrap_err().to_string();
+            assert!(!e.is_empty(), "{what}: {ranges:?}");
+        }
+    }
+}

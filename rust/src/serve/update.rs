@@ -557,8 +557,18 @@ impl UpdateHub {
     /// error the old engine keeps serving, untouched.
     pub fn apply(&self, mode: UpdateMode, payload: &[u8]) -> Result<Applied> {
         let _serialize = self.apply_lock.lock().unwrap_or_else(|e| e.into_inner());
-        let old = self.batcher.engine();
+        let backend = self.batcher.engine();
         let res = (|| {
+            // the rebuild/swap path needs the concrete engine (shadow
+            // capture, settings carry-over). A sharded router has no single
+            // engine to rebuild — reject explicitly rather than apply a
+            // partial update to one shard silently.
+            let old = backend.as_engine().ok_or_else(|| {
+                anyhow!(
+                    "live updates need a monolithic engine — this server is sharded; \
+                     re-export the shards and restart (or serve unsharded) to update"
+                )
+            })?;
             let (snap, outcome) = match mode {
                 UpdateMode::Snapshot => (Snapshot::from_bytes(payload)?, None),
                 UpdateMode::Delta => {

@@ -1,0 +1,161 @@
+//! Shared scaffolding for the serving integration harnesses
+//! (`serve_load`, `serve_update`, `serve_shard`): one copy of the engine
+//! fixture, the reactor lifecycle wrapper, the client plumbing, and —
+//! crucially — the deterministic query corpus. The corpus is seeded
+//! arithmetic (no RNG state to drift), so every suite and every baseline
+//! renders byte-identical request lines for the same (client, request)
+//! coordinates.
+#![allow(dead_code)]
+
+use std::sync::Arc;
+
+use midx::sampler::fixtures::built_sampler;
+use midx::sampler::SamplerKind;
+use midx::serve::QueryEngine;
+use midx::util::Rng;
+
+/// Build a served engine over a fresh synthetic midx-rq snapshot.
+pub fn engine(n: usize, d: usize, seed: u64, threads: usize) -> Arc<QueryEngine> {
+    let snap = snapshot(n, d, seed);
+    Arc::new(QueryEngine::new(snap, threads).unwrap())
+}
+
+/// The synthetic midx-rq snapshot behind [`engine`], exposed separately so
+/// the shard suite can slice the same snapshot it serves monolithically.
+pub fn snapshot(n: usize, d: usize, seed: u64) -> midx::serve::Snapshot {
+    snapshot_of(SamplerKind::MidxRq, n, d, seed)
+}
+
+/// A synthetic snapshot of any exportable sampler kind over the
+/// deterministic [`table`].
+pub fn snapshot_of(kind: SamplerKind, n: usize, d: usize, seed: u64) -> midx::serve::Snapshot {
+    let table = table(n, d, seed);
+    let s = built_sampler(kind, n, d, seed);
+    s.snapshot(&table, n, d).unwrap_or_else(|| panic!("{} snapshots", kind.name()))
+}
+
+/// The deterministic embedding table the fixtures are built over.
+pub fn table(n: usize, d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    midx::util::check::rand_matrix(&mut rng, n, d, 0.5)
+}
+
+/// Deterministic query-vector JSON for (client, request) — load clients,
+/// baselines and shard suites all render the exact same text.
+pub fn q_json(client: usize, req: usize, d: usize) -> String {
+    let vals: Vec<String> =
+        (0..d).map(|j| format!("{}", ((client * 31 + req * 7 + j) % 97) as f64 / 97.0)).collect();
+    format!("[{}]", vals.join(","))
+}
+
+/// The float values behind [`q_json`] (for suites that query the engine
+/// directly instead of through the JSON protocol). `q_json`'s text
+/// round-trips to exactly these f32s.
+pub fn q_vec(client: usize, req: usize, d: usize) -> Vec<f32> {
+    (0..d).map(|j| (((client * 31 + req * 7 + j) % 97) as f64 / 97.0) as f32).collect()
+}
+
+/// The request line client `c` sends as its `j`-th request (alternating
+/// topk / sample, unique seeds per request).
+pub fn request_line(c: usize, j: usize, d: usize) -> String {
+    let q = q_json(c, j, d);
+    if (c + j) % 2 == 0 {
+        format!(r#"{{"op":"topk","q":{q},"k":5}}"#)
+    } else {
+        format!(r#"{{"op":"sample","q":{q},"m":6,"seed":{}}}"#, 10_000 + c * 100 + j)
+    }
+}
+
+/// Drop the non-deterministic `us` latency field before byte comparison.
+pub fn strip_us(s: &str) -> String {
+    s.split(",\"us\":").next().unwrap().to_string()
+}
+
+// -- reactor plumbing (unix-only, like the reactor itself) -----------------
+
+#[cfg(unix)]
+pub use reactor_harness::*;
+
+#[cfg(unix)]
+mod reactor_harness {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{SocketAddr, TcpStream};
+    use std::sync::Arc;
+    use std::thread::JoinHandle;
+    use std::time::Duration;
+
+    use midx::serve::{LatencyRecorder, MicroBatcher, Reactor, ReactorConfig, ReactorHandle};
+
+    /// A reactor running on an ephemeral port, plus the handles the tests
+    /// poke at (batcher stats, reactor counters, graceful shutdown).
+    pub struct Served {
+        pub addr: SocketAddr,
+        pub handle: ReactorHandle,
+        pub thread: JoinHandle<anyhow::Result<()>>,
+        pub batcher: Arc<MicroBatcher>,
+        pub rec: Arc<LatencyRecorder>,
+    }
+
+    impl Served {
+        /// Graceful drain; panics if the reactor errored.
+        pub fn stop(self) {
+            self.handle.shutdown();
+            self.thread.join().expect("reactor thread").expect("reactor run");
+        }
+    }
+
+    /// Spin a reactor over `batcher` on an ephemeral port.
+    pub fn serve(batcher: Arc<MicroBatcher>, cfg: ReactorConfig) -> Served {
+        let rec = Arc::new(LatencyRecorder::new());
+        let reactor =
+            Reactor::bind("127.0.0.1:0", Arc::clone(&batcher), Arc::clone(&rec), cfg).unwrap();
+        let addr = reactor.local_addr().unwrap();
+        let handle = reactor.handle();
+        let thread = std::thread::spawn(move || reactor.run());
+        Served { addr, handle, thread, batcher, rec }
+    }
+
+    pub fn connect(addr: SocketAddr) -> TcpStream {
+        let s = TcpStream::connect(addr).expect("connect to reactor");
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        s.set_nodelay(true).ok();
+        s
+    }
+
+    /// Read exactly `count` reply lines (panics on EOF or timeout — a
+    /// stalled or dropped reply is exactly what these harnesses catch).
+    pub fn read_replies(reader: &mut BufReader<TcpStream>, count: usize, who: &str) -> Vec<String> {
+        let mut out = Vec::with_capacity(count);
+        for i in 0..count {
+            let mut line = String::new();
+            let n = reader.read_line(&mut line).unwrap_or_else(|e| {
+                panic!("{who}: read of reply {i}/{count} failed: {e}");
+            });
+            assert!(n > 0, "{who}: connection closed after {i}/{count} replies");
+            out.push(line.trim_end().to_string());
+        }
+        out
+    }
+
+    /// One write-half + read-half pair for strictly request/reply traffic.
+    pub struct Conn {
+        pub w: TcpStream,
+        pub r: BufReader<TcpStream>,
+    }
+
+    impl Conn {
+        pub fn open(addr: SocketAddr) -> Conn {
+            let w = connect(addr);
+            let r = BufReader::new(w.try_clone().unwrap());
+            Conn { w, r }
+        }
+
+        /// Send one line, read exactly one reply.
+        pub fn send(&mut self, line: &str) -> String {
+            self.w.write_all(line.as_bytes()).unwrap();
+            self.w.write_all(b"\n").unwrap();
+            self.w.flush().unwrap();
+            read_replies(&mut self.r, 1, "conn").pop().unwrap()
+        }
+    }
+}

@@ -26,103 +26,16 @@
 #![cfg(unix)]
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpStream};
 use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use midx::sampler::fixtures::built_sampler;
-use midx::sampler::{SamplerKind, Scratch};
-use midx::serve::{
-    handle_line, LatencyRecorder, MicroBatcher, QueryEngine, Reactor, ReactorConfig,
-    ReactorHandle,
-};
+use midx::sampler::Scratch;
+use midx::serve::{handle_line, LatencyRecorder, MicroBatcher, ReactorConfig};
 use midx::stats::divergence::{chi_square_critical, chi_square_gof};
 use midx::util::{Json, Rng};
 
-// -- scaffolding -----------------------------------------------------------
-
-/// Build a served engine over a fresh synthetic midx-rq snapshot.
-fn engine(n: usize, d: usize, seed: u64, threads: usize) -> Arc<QueryEngine> {
-    let mut rng = Rng::new(seed);
-    let table = midx::util::check::rand_matrix(&mut rng, n, d, 0.5);
-    let s = built_sampler(SamplerKind::MidxRq, n, d, seed);
-    let snap = s.snapshot(&table, n, d).expect("midx-rq snapshots");
-    Arc::new(QueryEngine::new(snap, threads).unwrap())
-}
-
-struct Served {
-    addr: SocketAddr,
-    handle: ReactorHandle,
-    thread: JoinHandle<anyhow::Result<()>>,
-    batcher: Arc<MicroBatcher>,
-    rec: Arc<LatencyRecorder>,
-}
-
-impl Served {
-    /// Graceful drain; panics if the reactor errored.
-    fn stop(self) {
-        self.handle.shutdown();
-        self.thread.join().expect("reactor thread").expect("reactor run");
-    }
-}
-
-/// Spin a reactor over `batcher` on an ephemeral port.
-fn serve(batcher: Arc<MicroBatcher>, cfg: ReactorConfig) -> Served {
-    let rec = Arc::new(LatencyRecorder::new());
-    let reactor =
-        Reactor::bind("127.0.0.1:0", Arc::clone(&batcher), Arc::clone(&rec), cfg).unwrap();
-    let addr = reactor.local_addr().unwrap();
-    let handle = reactor.handle();
-    let thread = std::thread::spawn(move || reactor.run());
-    Served { addr, handle, thread, batcher, rec }
-}
-
-fn connect(addr: SocketAddr) -> TcpStream {
-    let s = TcpStream::connect(addr).expect("connect to reactor");
-    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
-    s.set_nodelay(true).ok();
-    s
-}
-
-/// Read exactly `count` reply lines (panics on EOF or timeout — a stalled
-/// or dropped reply is exactly what this harness exists to catch).
-fn read_replies(reader: &mut BufReader<TcpStream>, count: usize, who: &str) -> Vec<String> {
-    let mut out = Vec::with_capacity(count);
-    for i in 0..count {
-        let mut line = String::new();
-        let n = reader.read_line(&mut line).unwrap_or_else(|e| {
-            panic!("{who}: read of reply {i}/{count} failed: {e}");
-        });
-        assert!(n > 0, "{who}: connection closed after {i}/{count} replies");
-        out.push(line.trim_end().to_string());
-    }
-    out
-}
-
-/// Drop the non-deterministic `us` latency field before byte comparison.
-fn strip_us(s: &str) -> String {
-    s.split(",\"us\":").next().unwrap().to_string()
-}
-
-/// Deterministic query-vector JSON for (client, request) — both the load
-/// clients and the baseline render the exact same text.
-fn q_json(client: usize, req: usize, d: usize) -> String {
-    let vals: Vec<String> =
-        (0..d).map(|j| format!("{}", ((client * 31 + req * 7 + j) % 97) as f64 / 97.0)).collect();
-    format!("[{}]", vals.join(","))
-}
-
-/// The request line client `c` sends as its `j`-th request (alternating
-/// topk / sample, unique seeds per request).
-fn request_line(c: usize, j: usize, d: usize) -> String {
-    let q = q_json(c, j, d);
-    if (c + j) % 2 == 0 {
-        format!(r#"{{"op":"topk","q":{q},"k":5}}"#)
-    } else {
-        format!(r#"{{"op":"sample","q":{q},"m":6,"seed":{}}}"#, 10_000 + c * 100 + j)
-    }
-}
+mod common;
+use common::{connect, engine, q_json, read_replies, request_line, serve, strip_us};
 
 // -- the load harness ------------------------------------------------------
 

@@ -1,0 +1,551 @@
+//! Shard-equivalence & fault-injection harness for the scatter-gather
+//! serving tier (`serve::shard`).
+//!
+//! What it proves (ISSUE 8 acceptance):
+//!
+//! * **Merged top-k is bit-identical**: at full beam, the router's merged
+//!   top-k — ids *and* score bits — equals the monolithic engine's for
+//!   S ∈ {1, 2, 4} shards × T ∈ {1, 8} worker threads, and a one-shard
+//!   router matches at the default beam too.
+//! * **Merged draws are distributed identically**: ≥100k draws routed
+//!   through shard-mass selection + per-shard delegation pass a Pearson
+//!   χ² goodness-of-fit test against the exact softmax (exact-midx
+//!   shards) and against the monolithic core's own proposal (fast
+//!   midx-rq shards); merged log proposals match the exact distribution
+//!   pointwise.
+//! * **Degenerate splits merge exactly** (property-tested): empty shards,
+//!   one-class shards and the all-classes-in-one-shard split all
+//!   reproduce the monolithic top-k bit-for-bit, and per-shard partition
+//!   masses compose to the monolithic mass (`Z = Σ_s Z_s`).
+//! * **A down shard is never a silent wrong answer**: dropping a shard
+//!   flags every affected reply partial (engine-level and through the
+//!   served JSON protocol), serves exactly the monolithic answer
+//!   restricted to live classes, and redistributes draws to the live
+//!   shards' renormalized distribution.
+//! * **The on-disk contract holds**: `export_shards` → `load` round-trips
+//!   bit-identically under eager and mmap loads; checksum mismatches,
+//!   missing files and malformed manifests (count mismatch, overlap, gap,
+//!   bad checksum syntax) are rejected with the manifest path and the
+//!   offending shard index in the error; a missing file degrades to a
+//!   flagged partial router only under `allow_missing`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use midx::sampler::{SamplerKind, Scratch};
+use midx::serve::shard::load_router;
+use midx::serve::snapshot::fnv1a64;
+use midx::serve::update::b64_encode;
+use midx::serve::{
+    export_shards, handle_line, shard_ranges, LatencyRecorder, LoadMode, MicroBatcher,
+    QueryEngine, ShardManifest, ShardRouter, UpdateConfig, UpdateHub, UpdateSession,
+};
+use midx::stats::divergence::{chi_square_critical, chi_square_gof, softmax_dist};
+use midx::util::check::for_all;
+
+mod common;
+use common::{q_json, q_vec, snapshot, snapshot_of};
+
+/// Score vectors compared as exact bit patterns (the suite pins
+/// bit-identity, not approximate equality).
+fn bits(scores: &[f32]) -> Vec<u32> {
+    scores.iter().map(|x| x.to_bits()).collect()
+}
+
+/// A [B, D] query block from the shared deterministic corpus.
+fn query_block(b: usize, d: usize) -> Vec<f32> {
+    (0..b).flat_map(|r| q_vec(3, r, d)).collect()
+}
+
+// -- bit-identity ----------------------------------------------------------
+
+#[test]
+fn merged_top_k_is_bit_identical_at_full_beam() {
+    let (n, d, k) = (60usize, 8usize, 10usize);
+    let snap = snapshot(n, d, 0x5AAD);
+    let queries = query_block(16, d);
+    for &s in &[1usize, 2, 4] {
+        for &t in &[1usize, 8] {
+            let mut mono = QueryEngine::new(snap.clone(), t).unwrap();
+            mono.set_beam_factor(usize::MAX);
+            let mut router = ShardRouter::split(&snap, s, t).unwrap();
+            router.set_beam_factor(usize::MAX);
+            let (mi, ms) = mono.top_k_batch(&queries, k);
+            let (ri, rs, partial) = router.top_k_batch(&queries, k);
+            assert!(!partial, "healthy router must not flag partial (S={s} T={t})");
+            assert_eq!(mi, ri, "merged ids diverge (S={s} T={t})");
+            assert_eq!(bits(&ms), bits(&rs), "merged score bits diverge (S={s} T={t})");
+
+            // the single-query path merges identically too
+            let z = q_vec(9, s + t, d);
+            let (pairs, partial) = router.top_k(&z, k);
+            assert!(!partial);
+            assert_eq!(pairs, mono.top_k(&z, k), "single-query merge (S={s} T={t})");
+        }
+    }
+}
+
+#[test]
+fn one_shard_router_matches_monolithic_at_default_beam() {
+    let (n, d, k) = (60usize, 8usize, 7usize);
+    let snap = snapshot(n, d, 0x1B0B);
+    let mono = QueryEngine::new(snap.clone(), 1).unwrap();
+    let router = ShardRouter::split(&snap, 1, 1).unwrap();
+    let queries = query_block(8, d);
+    let (mi, ms) = mono.top_k_batch(&queries, k);
+    let (ri, rs, partial) = router.top_k_batch(&queries, k);
+    assert!(!partial);
+    assert_eq!(mi, ri, "S=1 default-beam ids");
+    assert_eq!(bits(&ms), bits(&rs), "S=1 default-beam score bits");
+}
+
+// -- distribution ----------------------------------------------------------
+
+#[test]
+fn merged_draws_match_the_exact_softmax() {
+    // exact-midx shards: the merged proposal IS the softmax (Theorem 1
+    // per shard + exact mass composition), so ≥100k merged draws must
+    // pass a χ² GOF against softmax(z·Qᵀ) directly.
+    let (n, d) = (48usize, 8usize);
+    let snap = snapshot_of(SamplerKind::ExactMidx, n, d, 0xE5A7);
+    let z = q_vec(7, 1, d);
+    let probs = softmax_dist(&z, &snap.table, n, d);
+    let router = ShardRouter::split(&snap, 3, 1).unwrap();
+
+    const DRAWS: usize = 120_000;
+    let (ids, log_q, partial) = router.sample(&z, DRAWS, 0xFEED);
+    assert!(!partial);
+    assert_eq!(ids.len(), DRAWS, "every draw must be answered");
+
+    let mut counts = vec![0u64; n];
+    for &c in &ids {
+        counts[c as usize] += 1;
+    }
+    let (stat, df) = chi_square_gof(&counts, &probs, DRAWS as u64);
+    let crit = chi_square_critical(df, 4.5);
+    assert!(
+        stat < crit,
+        "χ²={stat:.1} ≥ crit={crit:.1} (df={df}): merged draws diverge from the exact softmax"
+    );
+
+    // the ln(Z_s / Z) correction must hand back the *global* log proposal
+    for (j, (&c, &lq)) in ids.iter().zip(&log_q).enumerate().step_by(997) {
+        let expect = probs[c as usize].ln();
+        assert!(
+            (lq - expect).abs() <= 1e-3 * (1.0 + expect.abs()),
+            "draw {j}: merged log q {lq} vs exact {expect} for class {c}"
+        );
+    }
+}
+
+#[test]
+fn merged_draws_match_the_monolithic_fast_proposal() {
+    // fast midx-rq shards: the merged draws must follow the monolithic
+    // core's own proposal distribution (Theorem 2's quantized softmax).
+    let (n, d) = (48usize, 8usize);
+    let snap = snapshot(n, d, 0xC5A7);
+    let mono = QueryEngine::new(snap.clone(), 1).unwrap();
+    let z = q_vec(5, 2, d);
+    let mut probs = vec![0.0f32; n];
+    mono.core().proposal_dist(&z, &mut Scratch::new(), &mut probs);
+    let router = ShardRouter::split(&snap, 4, 1).unwrap();
+
+    const DRAWS: usize = 120_000;
+    let (ids, _log_q, partial) = router.sample(&z, DRAWS, 0xFA57);
+    assert!(!partial);
+    let mut counts = vec![0u64; n];
+    for &c in &ids {
+        counts[c as usize] += 1;
+    }
+    let (stat, df) = chi_square_gof(&counts, &probs, DRAWS as u64);
+    let crit = chi_square_critical(df, 4.5);
+    assert!(
+        stat < crit,
+        "χ²={stat:.1} ≥ crit={crit:.1} (df={df}): merged draws diverge from the monolithic \
+         proposal"
+    );
+}
+
+// -- degenerate splits (property) ------------------------------------------
+
+#[test]
+fn prop_degenerate_splits_merge_exactly() {
+    for_all("degenerate shard splits merge exactly", |rng, case| {
+        let n = 12 + rng.below(24);
+        let d = 4 + 2 * rng.below(3);
+        let snap = snapshot(n, d, 0xDE6E + case);
+        let mid = 1 + rng.below(n - 1);
+        let ranges: Vec<(usize, usize)> = match case % 5 {
+            0 => vec![(0, 0), (0, n)],                    // empty shard in front
+            1 => vec![(0, mid), (mid, mid), (mid, n)],    // empty shard in the middle
+            2 => vec![(0, n), (n, n)],                    // empty shard at the end
+            3 => vec![(0, 1), (1, n)],                    // one-class shard
+            _ => vec![(0, n)],                            // everything in one shard
+        };
+        let mut router = ShardRouter::from_snapshot(&snap, &ranges, 1)
+            .map_err(|e| format!("building router over {ranges:?}: {e}"))?;
+        router.set_beam_factor(usize::MAX);
+        let mut mono = QueryEngine::new(snap.clone(), 1).map_err(|e| e.to_string())?;
+        mono.set_beam_factor(usize::MAX);
+
+        // merged top-k over the whole class space, bit-for-bit
+        let z = q_vec(1, case as usize, d);
+        let k = n.min(5 + rng.below(8));
+        let (pairs, partial) = router.top_k(&z, k);
+        if partial {
+            return Err("empty shards must not flag partial".into());
+        }
+        let expect = mono.top_k(&z, k);
+        if pairs != expect {
+            return Err(format!("split {ranges:?}: merged {pairs:?} != monolithic {expect:?}"));
+        }
+
+        // per-shard masses compose exactly: ln Σ_s Z_s == ln Z
+        let mut scratch = Scratch::new();
+        let mono_mass = mono.log_partition_mass(&z, &mut scratch) as f64;
+        let mut total = 0.0f64;
+        for &(lo, hi) in &ranges {
+            if lo == hi {
+                continue;
+            }
+            let slice = midx::serve::slice_snapshot(&snap, lo, hi).map_err(|e| e.to_string())?;
+            let eng = QueryEngine::new(slice, 1).map_err(|e| e.to_string())?;
+            total += (eng.log_partition_mass(&z, &mut scratch) as f64).exp();
+        }
+        midx::util::check::close(total.ln(), mono_mass, 1e-3, "mass composition")?;
+
+        // merged draws stay in range and carry finite log proposals
+        let (ids, log_q, partial) = router.sample(&z, 32, 0xD0 + case);
+        if partial {
+            return Err("healthy degenerate split flagged partial".into());
+        }
+        for (&c, &lq) in ids.iter().zip(&log_q) {
+            if c as usize >= n || !lq.is_finite() || lq > 0.0 {
+                return Err(format!("draw ({c}, {lq}) out of range for n={n}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// -- fault injection -------------------------------------------------------
+
+#[test]
+fn down_shard_flags_partial_and_serves_exactly_the_live_classes() {
+    let (n, d, k) = (60usize, 8usize, 8usize);
+    let snap = snapshot(n, d, 0xD0A0);
+    let mut mono = QueryEngine::new(snap.clone(), 1).unwrap();
+    mono.set_beam_factor(usize::MAX);
+    let mut router = ShardRouter::split(&snap, 3, 1).unwrap();
+    router.set_beam_factor(usize::MAX);
+
+    let (lo, hi) = router.shard_range(1);
+    router.drop_shard(1);
+    assert!(router.degraded());
+    assert_eq!(router.live_shards(), 2);
+
+    // top-k: the monolithic ranking with the dead shard's classes removed —
+    // never a silently wrong (re-ranked or missing-flag) answer
+    let z = q_vec(2, 9, d);
+    let (pairs, partial) = router.top_k(&z, k);
+    assert!(partial, "down shard must flag partial");
+    let expect: Vec<(u32, f32)> = mono
+        .top_k(&z, n)
+        .into_iter()
+        .filter(|(c, _)| !(lo..hi).contains(&(*c as usize)))
+        .take(k)
+        .collect();
+    assert_eq!(pairs, expect, "degraded top-k must equal the live-restricted ranking");
+
+    // draws: none from the dead range, distributed as the live-renormalized
+    // proposal (shard-mass composition makes that the exact conditional)
+    let mut probs = vec![0.0f32; n];
+    mono.core().proposal_dist(&z, &mut Scratch::new(), &mut probs);
+    for p in &mut probs[lo..hi] {
+        *p = 0.0;
+    }
+    let total: f32 = probs.iter().sum();
+    for p in &mut probs {
+        *p /= total;
+    }
+    const DRAWS: usize = 40_000;
+    let (ids, _lq, partial) = router.sample(&z, DRAWS, 0xDEAD);
+    assert!(partial);
+    let mut counts = vec![0u64; n];
+    for &c in &ids {
+        assert!(
+            !(lo..hi).contains(&(c as usize)),
+            "draw from down shard's class {c} (range {lo}..{hi})"
+        );
+        counts[c as usize] += 1;
+    }
+    let (stat, df) = chi_square_gof(&counts, &probs, DRAWS as u64);
+    let crit = chi_square_critical(df, 4.5);
+    assert!(
+        stat < crit,
+        "χ²={stat:.1} ≥ crit={crit:.1} (df={df}): degraded draws diverge from the \
+         live-renormalized proposal"
+    );
+}
+
+#[test]
+fn partial_flag_travels_through_the_served_protocol() {
+    let (n, d) = (60usize, 8usize);
+    let snap = snapshot(n, d, 0xF1A6);
+    let rec = LatencyRecorder::new();
+    let line = format!(r#"{{"op":"topk","q":{},"k":5}}"#, q_json(4, 0, d));
+    let sample_line = format!(r#"{{"op":"sample","q":{},"m":6,"seed":77}}"#, q_json(4, 1, d));
+
+    // healthy sharded backend: replies carry no partial key at all (the
+    // wire format stays byte-compatible with the monolithic server)
+    let healthy = ShardRouter::split(&snap, 3, 1).unwrap();
+    let batcher = MicroBatcher::new(Arc::new(healthy), Duration::ZERO, 16);
+    for l in [&line, &sample_line] {
+        let reply = handle_line(&batcher, &rec, l);
+        assert!(reply.contains(r#""ok":true"#), "{reply}");
+        assert!(!reply.contains("partial"), "healthy reply must not mention partial: {reply}");
+    }
+    let info = handle_line(&batcher, &rec, r#"{"op":"info"}"#);
+    assert!(info.contains(r#""shards":3"#), "{info}");
+    assert!(info.contains(r#""shards_live":3"#), "{info}");
+
+    // degraded backend: every affected reply says so explicitly
+    let mut degraded = ShardRouter::split(&snap, 3, 1).unwrap();
+    degraded.drop_shard(2);
+    let batcher = MicroBatcher::new(Arc::new(degraded), Duration::ZERO, 16);
+    for l in [&line, &sample_line] {
+        let reply = handle_line(&batcher, &rec, l);
+        assert!(reply.contains(r#""ok":true"#), "{reply}");
+        assert!(
+            reply.contains(r#""partial":true"#),
+            "degraded reply must flag partial: {reply}"
+        );
+    }
+    let info = handle_line(&batcher, &rec, r#"{"op":"info"}"#);
+    assert!(info.contains(r#""shards":3"#), "{info}");
+    assert!(info.contains(r#""shards_live":2"#), "{info}");
+
+}
+
+#[test]
+fn sharded_backends_refuse_live_updates_explicitly() {
+    // the update seam (PR 7) rebuilds from the live engine's snapshot,
+    // which a sharded backend does not have — the commit must fail with a
+    // descriptive error, not silently corrupt or no-op
+    let (n, d) = (40usize, 6usize);
+    let snap = snapshot(n, d, 0x0BAD);
+    let router = ShardRouter::split(&snap, 2, 1).unwrap();
+    let batcher = Arc::new(MicroBatcher::new(Arc::new(router), Duration::ZERO, 8));
+    let hub = UpdateHub::new(Arc::clone(&batcher), UpdateConfig::default());
+    let mut sess = UpdateSession::new(hub);
+    let rec = LatencyRecorder::new();
+
+    let payload = snap.to_bytes();
+    let begin = format!(
+        r#"{{"op":"update","action":"begin","mode":"snapshot","bytes":{},"chunks":1}}"#,
+        payload.len()
+    );
+    let chunk =
+        format!(r#"{{"op":"update","action":"chunk","seq":0,"data":"{}"}}"#, b64_encode(&payload));
+    let commit = format!(r#"{{"op":"update","action":"commit","fnv":"{:016x}"}}"#, fnv1a64(&payload));
+    assert!(sess.handle(&rec, &begin).contains(r#""ok":true"#));
+    assert!(sess.handle(&rec, &chunk).contains(r#""ok":true"#));
+    let reply = sess.handle(&rec, &commit);
+    assert!(reply.contains(r#""ok":false"#), "{reply}");
+    assert!(reply.contains("monolithic"), "rejection must say why: {reply}");
+
+    // the sharded backend keeps serving, un-degraded, after the refusal
+    let probe = format!(r#"{{"op":"topk","q":{},"k":4}}"#, q_json(6, 3, d));
+    let after = sess.handle(&rec, &probe);
+    assert!(after.contains(r#""ok":true"#), "{after}");
+    assert!(!after.contains("partial"), "{after}");
+}
+
+// -- the on-disk contract --------------------------------------------------
+
+/// A scratch directory unique to this test process; removed on drop.
+struct TempDir(std::path::PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        let p = std::env::temp_dir().join(format!("midx_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        std::fs::create_dir_all(&p).unwrap();
+        TempDir(p)
+    }
+
+    fn path(&self, name: &str) -> std::path::PathBuf {
+        self.0.join(name)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+#[test]
+fn export_load_round_trip_is_bit_identical_and_fault_injectable() {
+    let dir = TempDir::new("shard_roundtrip");
+    let (n, d, k) = (60usize, 8usize, 9usize);
+    let snap = snapshot(n, d, 0x0D15C);
+    let manifest_path = dir.path("snap.midx");
+    let manifest = export_shards(&snap, 3, &manifest_path).unwrap();
+    assert_eq!(manifest.shards.len(), 3);
+    assert_eq!(manifest.n, n);
+    assert_eq!(ShardManifest::read(&manifest_path).unwrap(), manifest, "manifest round-trip");
+
+    let mut mono = QueryEngine::new(snap.clone(), 1).unwrap();
+    mono.set_beam_factor(usize::MAX);
+    let queries = query_block(6, d);
+    let (mi, ms) = mono.top_k_batch(&queries, k);
+
+    // eager and mmap loads both serve the monolithic answer, bit-for-bit
+    for mode in [LoadMode::Eager, LoadMode::Mmap] {
+        let mut router = load_router(&manifest_path, mode, 1, false).unwrap();
+        router.set_beam_factor(usize::MAX);
+        let (ri, rs, partial) = router.top_k_batch(&queries, k);
+        assert!(!partial);
+        assert_eq!(mi, ri, "{} load ids", mode.name());
+        assert_eq!(bits(&ms), bits(&rs), "{} load score bits", mode.name());
+    }
+
+    // corrupt shard 1: the eager load must name the manifest, the shard
+    // index and both checksums — and allow_missing must NOT skip it
+    // (corruption is never "missing")
+    let shard1 = dir.path(&manifest.shards[1].file);
+    let good = std::fs::read(&shard1).unwrap();
+    let mut bad = good.clone();
+    bad.push(0xA5);
+    std::fs::write(&shard1, &bad).unwrap();
+    for allow_missing in [false, true] {
+        let err = load_router(&manifest_path, LoadMode::Eager, 1, allow_missing)
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("shard 1 checksum mismatch"),
+            "allow_missing={allow_missing}: {err}"
+        );
+        assert!(err.contains("snap.midx"), "error must carry the manifest path: {err}");
+    }
+    std::fs::write(&shard1, &good).unwrap();
+
+    // delete shard 2: a hard error without allow_missing (naming the shard
+    // and the path), a flagged degraded router with it
+    let shard2 = dir.path(&manifest.shards[2].file);
+    let (lo2, hi2) = (manifest.shards[2].lo, manifest.shards[2].hi);
+    std::fs::remove_file(&shard2).unwrap();
+    let err = load_router(&manifest_path, LoadMode::Eager, 1, false).unwrap_err().to_string();
+    assert!(err.contains("shard 2"), "{err}");
+    assert!(err.contains("snap.midx"), "{err}");
+
+    let mut degraded = load_router(&manifest_path, LoadMode::Eager, 1, true).unwrap();
+    degraded.set_beam_factor(usize::MAX);
+    assert!(degraded.degraded());
+    assert_eq!(degraded.live_shards(), 2);
+    assert_eq!(degraded.shard_count(), 3);
+    let (ri, _rs, partial) = degraded.top_k_batch(&queries, k);
+    assert!(partial, "a router missing a shard must flag every answer partial");
+    for &c in &ri {
+        assert!(
+            !(lo2..hi2).contains(&(c as usize)),
+            "degraded load answered class {c} from the missing shard"
+        );
+    }
+}
+
+#[test]
+fn malformed_manifests_are_rejected_with_path_and_shard_context() {
+    let dir = TempDir::new("shard_manifest_neg");
+
+    // entries with plausible shapes; checksums are syntactically fine (the
+    // files are never opened — structural validation fails first)
+    let entry = |i: usize, lo: usize, hi: usize| {
+        format!(r#"{{"file":"m.shard{i}","lo":{lo},"hi":{hi},"fnv":"00000000000000aa"}}"#)
+    };
+    let manifest = |count: usize, entries: &[String]| {
+        format!(
+            r#"{{"midx_shard_manifest":1,"kind":"midx-rq","n":60,"d":8,"count":{count},"shards":[{}]}}"#,
+            entries.join(",")
+        )
+    };
+
+    let cases: Vec<(&str, String, &str)> = vec![
+        (
+            "count mismatch",
+            manifest(3, &[entry(0, 0, 30), entry(1, 30, 60)]),
+            "shard count mismatch: manifest declares count=3 but lists 2 shards",
+        ),
+        (
+            "overlap",
+            manifest(2, &[entry(0, 0, 35), entry(1, 30, 60)]),
+            "shard 1: class range [30,60) overlaps shard 0",
+        ),
+        (
+            "gap",
+            manifest(2, &[entry(0, 0, 20), entry(1, 30, 60)]),
+            "shard 1: gap in class coverage — classes 20..30 belong to no shard",
+        ),
+        (
+            "short cover",
+            manifest(2, &[entry(0, 0, 20), entry(1, 20, 50)]),
+            "shards cover classes 0..50 but the snapshot has 60",
+        ),
+        (
+            "empty range",
+            manifest(2, &[entry(0, 0, 0), entry(1, 0, 60)]),
+            "shard 0: bad class range [0,0)",
+        ),
+        (
+            "bad checksum syntax",
+            manifest(
+                1,
+                &[r#"{"file":"m.shard0","lo":0,"hi":60,"fnv":"not-hex"}"#.to_string()],
+            ),
+            "shard 0: bad fnv checksum 'not-hex'",
+        ),
+        (
+            "missing marker",
+            r#"{"kind":"midx-rq","n":60,"d":8,"count":1,"shards":[]}"#.to_string(),
+            "not a midx shard manifest",
+        ),
+    ];
+
+    for (tag, text, want) in cases {
+        let path = dir.path(&format!("{}.midx", tag.replace(' ', "_")));
+        std::fs::write(&path, text).unwrap();
+        let err = ShardManifest::read(&path).unwrap_err().to_string();
+        assert!(err.contains(want), "{tag}: error {err:?} must contain {want:?}");
+        assert!(
+            err.contains(&path.display().to_string()),
+            "{tag}: error must carry the manifest path: {err}"
+        );
+        // the router load path surfaces the same context
+        let err = load_router(&path, LoadMode::Eager, 1, true).unwrap_err().to_string();
+        assert!(err.contains(want), "{tag} via load: {err}");
+    }
+}
+
+// -- export surface --------------------------------------------------------
+
+#[test]
+fn shard_ranges_refuse_nonsense_and_exports_cover_everything() {
+    assert!(shard_ranges(10, 0).is_err());
+    assert!(shard_ranges(3, 4).is_err());
+    let r = shard_ranges(10, 4).unwrap();
+    assert_eq!(r, vec![(0, 3), (3, 6), (6, 8), (8, 10)]);
+
+    // exporting S=1 still writes a valid manifest + one shard file that
+    // serves the whole class space
+    let dir = TempDir::new("shard_single");
+    let (n, d) = (30usize, 6usize);
+    let snap = snapshot(n, d, 0x51E6);
+    let path = dir.path("one.midx");
+    let manifest = export_shards(&snap, 1, &path).unwrap();
+    assert_eq!(manifest.shards.len(), 1);
+    assert_eq!((manifest.shards[0].lo, manifest.shards[0].hi), (0, n));
+    let router = load_router(&path, LoadMode::Eager, 1, false).unwrap();
+    assert_eq!(router.n_classes(), n);
+    assert_eq!(router.live_shards(), 1);
+}

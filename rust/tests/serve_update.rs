@@ -27,126 +27,22 @@
 //! The reactor is unix-only (raw `poll(2)`), so this whole suite is too.
 #![cfg(unix)]
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpStream};
+use std::io::{BufReader, Write};
 use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::Duration;
 
-use midx::sampler::fixtures::built_sampler;
-use midx::sampler::{SamplerKind, Scratch};
+use midx::sampler::Scratch;
 use midx::serve::snapshot::fnv1a64;
 use midx::serve::update::{apply_to_snapshot, b64_encode};
 use midx::serve::{
-    handle_line, Delta, LatencyRecorder, MicroBatcher, QueryEngine, Reactor, ReactorConfig,
-    ReactorHandle, Snapshot, UpdateConfig, UpdateHub, UpdateSession,
+    handle_line, Delta, LatencyRecorder, MicroBatcher, QueryEngine, ReactorConfig, Snapshot,
+    UpdateConfig, UpdateHub, UpdateSession,
 };
 use midx::stats::divergence::{chi_square_critical, chi_square_gof};
 use midx::util::{Json, Rng};
 
-// -- scaffolding -----------------------------------------------------------
-
-/// Build a served engine over a fresh synthetic midx-rq snapshot.
-fn engine(n: usize, d: usize, seed: u64, threads: usize) -> Arc<QueryEngine> {
-    let mut rng = Rng::new(seed);
-    let table = midx::util::check::rand_matrix(&mut rng, n, d, 0.5);
-    let s = built_sampler(SamplerKind::MidxRq, n, d, seed);
-    let snap = s.snapshot(&table, n, d).expect("midx-rq snapshots");
-    Arc::new(QueryEngine::new(snap, threads).unwrap())
-}
-
-struct Served {
-    addr: SocketAddr,
-    handle: ReactorHandle,
-    thread: JoinHandle<anyhow::Result<()>>,
-    batcher: Arc<MicroBatcher>,
-}
-
-impl Served {
-    /// Graceful drain; panics if the reactor errored.
-    fn stop(self) {
-        self.handle.shutdown();
-        self.thread.join().expect("reactor thread").expect("reactor run");
-    }
-}
-
-/// Spin a reactor over `batcher` on an ephemeral port.
-fn serve(batcher: Arc<MicroBatcher>, cfg: ReactorConfig) -> Served {
-    let rec = Arc::new(LatencyRecorder::new());
-    let reactor =
-        Reactor::bind("127.0.0.1:0", Arc::clone(&batcher), Arc::clone(&rec), cfg).unwrap();
-    let addr = reactor.local_addr().unwrap();
-    let handle = reactor.handle();
-    let thread = std::thread::spawn(move || reactor.run());
-    Served { addr, handle, thread, batcher }
-}
-
-fn connect(addr: SocketAddr) -> TcpStream {
-    let s = TcpStream::connect(addr).expect("connect to reactor");
-    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
-    s.set_nodelay(true).ok();
-    s
-}
-
-/// Read exactly `count` reply lines (panics on EOF or timeout — a stalled
-/// or dropped reply is exactly what this harness exists to catch).
-fn read_replies(reader: &mut BufReader<TcpStream>, count: usize, who: &str) -> Vec<String> {
-    let mut out = Vec::with_capacity(count);
-    for i in 0..count {
-        let mut line = String::new();
-        let n = reader.read_line(&mut line).unwrap_or_else(|e| {
-            panic!("{who}: read of reply {i}/{count} failed: {e}");
-        });
-        assert!(n > 0, "{who}: connection closed after {i}/{count} replies");
-        out.push(line.trim_end().to_string());
-    }
-    out
-}
-
-/// One write-half + read-half pair for strictly request/reply traffic.
-struct Conn {
-    w: TcpStream,
-    r: BufReader<TcpStream>,
-}
-
-impl Conn {
-    fn open(addr: SocketAddr) -> Conn {
-        let w = connect(addr);
-        let r = BufReader::new(w.try_clone().unwrap());
-        Conn { w, r }
-    }
-
-    /// Send one line, read exactly one reply.
-    fn send(&mut self, line: &str) -> String {
-        self.w.write_all(line.as_bytes()).unwrap();
-        self.w.write_all(b"\n").unwrap();
-        self.w.flush().unwrap();
-        read_replies(&mut self.r, 1, "conn").pop().unwrap()
-    }
-}
-
-/// Drop the non-deterministic `us` latency field before byte comparison.
-fn strip_us(s: &str) -> String {
-    s.split(",\"us\":").next().unwrap().to_string()
-}
-
-/// Deterministic query-vector JSON for (client, request).
-fn q_json(client: usize, req: usize, d: usize) -> String {
-    let vals: Vec<String> =
-        (0..d).map(|j| format!("{}", ((client * 31 + req * 7 + j) % 97) as f64 / 97.0)).collect();
-    format!("[{}]", vals.join(","))
-}
-
-/// The request line client `c` sends as its `j`-th request (alternating
-/// topk / sample, unique seeds per request).
-fn request_line(c: usize, j: usize, d: usize) -> String {
-    let q = q_json(c, j, d);
-    if (c + j) % 2 == 0 {
-        format!(r#"{{"op":"topk","q":{q},"k":5}}"#)
-    } else {
-        format!(r#"{{"op":"sample","q":{q},"m":6,"seed":{}}}"#, 10_000 + c * 100 + j)
-    }
-}
+mod common;
+use common::{connect, engine, read_replies, request_line, serve, strip_us, Conn};
 
 /// A deterministic delta moving every 5th row (phase `which`) of `base`
 /// to fresh random values.
