@@ -52,6 +52,7 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use crate::obs::metrics::hot;
 use crate::sampler::Scratch;
 
 /// One dispatched batch: a type-erased pointer to the submitter's closure
@@ -147,6 +148,7 @@ impl WorkerPool {
             submit: Mutex::new(()),
         };
         pool.overhead_ns = pool.measure_overhead();
+        hot().pool_workers.set(workers as u64);
         pool
     }
 
@@ -179,6 +181,7 @@ impl WorkerPool {
         let job = Job { data: &f as *const F as *const (), call: shim::<F>, lanes };
 
         let submit = self.submit.lock().unwrap_or_else(|e| e.into_inner());
+        hot().pool_dispatches.inc();
         {
             let mut st = lock(&self.shared.state);
             st.job = Some(job);

@@ -94,6 +94,7 @@
 //! | `train`       | trainer (pipelined hot loop), Adam, params, metrics |
 //! | `coordinator` | experiment driver, prefetch + overlap pipeline, reports |
 //! | `serve`       | sampler snapshots, query engine, micro-batched frontend |
+//! | `obs`         | metrics registry, span tracing, structured logging |
 //! | `stats`       | KL/Rényi divergence, gradient bias vs paper bounds |
 //! | `data`        | synthetic LM / recsys / XMC substrates |
 //! | `bench_tables`| regenerate every paper table/figure |
@@ -113,6 +114,7 @@ pub mod bench_tables;
 pub mod coordinator;
 pub mod data;
 pub mod index;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod sampler;

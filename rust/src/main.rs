@@ -7,8 +7,9 @@
 //! midx bench table4 [--quick]      # regenerate a paper table/figure
 //! midx export --synthetic --out snap.midx   # artifact-free snapshot
 //! midx query --snapshot snap.midx --topk 5  # one-shot batched answers
-//! midx serve --snapshot snap.midx [--tcp 127.0.0.1:7070]
+//! midx serve --snapshot snap.midx [--tcp 127.0.0.1:7070] [--metrics-addr 127.0.0.1:9100]
 //! midx push-update --addr 127.0.0.1:7070 --next new.midx [--base old.midx]
+//! midx metrics --addr 127.0.0.1:7070   # dump a running server's metrics registry
 //! ```
 //!
 //! (Arg parsing is hand-rolled — the offline build environment carries no
@@ -26,6 +27,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use midx::bench_tables::{run_bench, Budget};
 use midx::coordinator::{fmt, run_experiment, ExperimentSpec, Table};
 use midx::index::RefreshPolicy;
+use midx::obs::{log, span, spawn_prometheus_exporter};
 use midx::runtime::{list_models, load_model};
 use midx::sampler::{self, SamplerKind, SamplerParams};
 use midx::serve::shard::load_router;
@@ -136,7 +138,8 @@ const USAGE: &str = "usage:
              [--window-us N] [--max-batch N]
              [--max-conns N] [--queue-cap N] [--idle-ms N]
              [--update-tol F] [--update-iters N] [--update-max-bytes N]
-                             (line-delimited JSON frontend: op topk|sample|info|stats|update;
+             [--metrics-addr ADDR] [--trace-slow-ms N]
+                             (line-delimited JSON frontend: op topk|sample|info|stats|metrics|update;
                               stdin/stdout by default. --tcp serves through the
                               event-driven reactor: one thread multiplexing up to
                               --max-conns connections, admission bounded at
@@ -151,7 +154,18 @@ const USAGE: &str = "usage:
                               --update-max-bytes caps the accepted payload size.
                               --shards serves a shard manifest through the in-process
                               scatter-gather router behind the same frontends — live
-                              updates, --fallback and --fast-sample are monolithic-only)
+                              updates, --fallback and --fast-sample are monolithic-only.
+                              Observability: {\"op\":\"metrics\"} dumps the process-wide
+                              registry (per-phase latency histograms with exact
+                              p50/p95/p99, request/connection counters, gauges);
+                              --metrics-addr additionally serves the same registry as
+                              Prometheus text over HTTP; --trace-slow-ms N logs one
+                              structured line per request slower than N ms (0 = every
+                              request). MIDX_LOG=error|warn|info|debug sets the stderr
+                              log level, MIDX_LOG_FORMAT=json|pretty its shape)
+  midx metrics --addr HOST:PORT
+                             (fetch {\"op\":\"metrics\"} from a running `midx serve --tcp`
+                              and print the JSON reply on stdout)
   midx push-update --addr HOST:PORT --next FILE [--base FILE] [--chunk-bytes N]
                              (push a live model update into a running `midx serve`:
                               with --base, sends only the embedding rows that differ
@@ -380,11 +394,11 @@ fn load_engine(args: &Args, default_threads: usize) -> Result<QueryEngine> {
         engine.set_beam_factor(args.usize_or("beam", midx::serve::query::DEFAULT_BEAM_FACTOR));
     }
     if args.has("fast-sample") && !engine.set_fast_sample(true) {
-        eprintln!(
-            "warning: --fast-sample has no effect on a '{}' snapshot (needs a fast-MIDX \
+        log::warn(&format!(
+            "--fast-sample has no effect on a '{}' snapshot (needs a fast-MIDX \
              core with K <= 256)",
             engine.kind().name()
-        );
+        ));
     }
     if let Some(fb) = args.get("fallback") {
         let fb_snap = Snapshot::read(Path::new(fb))?;
@@ -549,12 +563,21 @@ fn print_row(row: usize, ids: &[u32], score_field: &str, scores: &[f32], partial
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    // arm observability before the backend loads, so load-time series and
+    // early log lines are captured too
+    if args.has("trace-slow-ms") {
+        span::set_slow_threshold_ms(args.u64_or("trace-slow-ms", 0));
+    }
+    if let Some(addr) = args.get("metrics-addr") {
+        let bound = spawn_prometheus_exporter(addr)?;
+        log::info(&format!("metrics exporter on http://{bound}/metrics (Prometheus text)"));
+    }
     let backend: Arc<dyn Backend> = if args.has("shards") {
         // sharded backend: S in-process engines behind the scatter-gather
         // router, served through the same MicroBatcher + frontends
         let router = load_shard_router(args, 0)?;
         let (live, total) = router.shard_info();
-        eprintln!(
+        log::info(&format!(
             "loaded {} shard manifest: N={} D={} in {:.2}ms ({} load, {live}/{total} shards \
              live, {} worker threads, simd {})",
             Backend::kind_name(&router),
@@ -564,11 +587,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Backend::load_mode(&router).name(),
             Backend::workers(&router),
             midx::util::math::simd_level().name(),
-        );
+        ));
         Arc::new(router)
     } else {
         let engine = Arc::new(load_engine(args, 0)?);
-        eprintln!(
+        log::info(&format!(
             "loaded {} snapshot: N={} D={} in {:.2}ms ({} load, {} worker threads, simd {}{}{})",
             engine.kind().name(),
             engine.n_classes(),
@@ -582,7 +605,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 Some(kind) => format!(", {} fallback", kind.name()),
                 None => String::new(),
             }
-        );
+        ));
         engine
     };
     let window = Duration::from_micros(args.u64_or("window-us", 200));
@@ -639,11 +662,11 @@ fn serve_over_tcp(
         ["max-conns", "queue-cap", "idle-ms", "update-tol", "update-iters", "update-max-bytes"]
     {
         if args.has(flag) {
-            eprintln!(
-                "warning: --{flag} has no effect on this platform — the poll(2) reactor is \
+            log::warn(&format!(
+                "--{flag} has no effect on this platform — the poll(2) reactor is \
                  unix-only, falling back to thread-per-connection serving with an unbounded \
                  queue (no busy backpressure)"
-            );
+            ));
         }
     }
     midx::serve::serve_tcp(batcher, rec, addr)
@@ -735,6 +758,33 @@ fn cmd_push_update(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `midx metrics` — fetch `{"op":"metrics"}` from a running
+/// `midx serve --tcp` and print the JSON reply on stdout, so dashboards
+/// and scripts can scrape the registry without speaking the protocol.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow!("--addr HOST:PORT required (a running `midx serve --tcp`)"))?;
+    let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone().context("cloning the metrics stream")?;
+    let mut reader = BufReader::new(stream);
+    writeln!(writer, r#"{{"op":"metrics"}}"#).context("writing the metrics request")?;
+    let mut reply = String::new();
+    reader.read_line(&mut reply).context("reading the metrics reply")?;
+    if reply.trim().is_empty() {
+        bail!("server closed the connection without answering");
+    }
+    // validate before echoing so a garbled reply fails loudly
+    let j = Json::parse(reply.trim())
+        .map_err(|e| anyhow!("unparseable server reply ({e}): {}", reply.trim()))?;
+    if !matches!(j.get("ok"), Some(Json::Bool(true))) {
+        bail!("server refused the metrics request: {}", reply.trim());
+    }
+    println!("{j}");
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> Result<()> {
     let name = args
         .positional
@@ -771,6 +821,7 @@ fn main() -> Result<()> {
         Some("export") => cmd_export(&args),
         Some("query") => cmd_query(&args),
         Some("serve") => cmd_serve(&args),
+        Some("metrics") => cmd_metrics(&args),
         Some("push-update") => cmd_push_update(&args),
         Some(other) => {
             // unknown subcommand: full usage listing on stderr (stdout

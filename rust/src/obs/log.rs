@@ -1,0 +1,217 @@
+//! Leveled structured logging to stderr (`MIDX_LOG=error|warn|info|debug`).
+//!
+//! Replaces the scattered `eprintln!` sites across `serve/`: every line
+//! carries a timestamp and level, renders either human-readable
+//! (`[1754650000.123 info] msg key=val`) or as one JSON object per line
+//! (`MIDX_LOG_FORMAT=json` — machine-parseable, asserted by the CI debug
+//! leg), and is filtered by the process-wide level (default `info`).
+//!
+//! The level and format are read from the environment on first use and
+//! can be overridden programmatically ([`set_level`] / [`set_format`] —
+//! tests and CLI flags). Rendering is pure ([`render`]), so filtering and
+//! schema are testable without capturing stderr.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Json;
+
+/// Log severity, ordered from most to least severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unrecoverable or dropped-work conditions.
+    Error,
+    /// Degraded but continuing (slow queries, rejected updates).
+    Warn,
+    /// Lifecycle events (banners, final reports). The default level.
+    Info,
+    /// Per-epoch / per-connection detail.
+    Debug,
+}
+
+impl Level {
+    /// Lowercase name as it appears in `MIDX_LOG` and rendered lines.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            Level::Error => 0,
+            Level::Warn => 1,
+            Level::Info => 2,
+            Level::Debug => 3,
+        }
+    }
+
+    fn from_code(c: u8) -> Level {
+        match c {
+            0 => Level::Error,
+            1 => Level::Warn,
+            3 => Level::Debug,
+            _ => Level::Info,
+        }
+    }
+}
+
+/// Line rendering shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    /// `[<epoch-secs> <level>] msg key=val …` — the default.
+    Pretty,
+    /// One JSON object per line: `{"lvl":…,"msg":…,"ts":…,…fields}`.
+    Json,
+}
+
+/// 255 = not yet read from `MIDX_LOG`; otherwise a `Level` code.
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+/// 255 = not yet read from `MIDX_LOG_FORMAT`; 0 = pretty, 1 = json.
+static FORMAT: AtomicU8 = AtomicU8::new(255);
+
+/// The active level (reads `MIDX_LOG` on first call; unknown values and
+/// an unset variable mean [`Level::Info`]).
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        255 => {
+            let l = match std::env::var("MIDX_LOG").ok().as_deref() {
+                Some("error") => Level::Error,
+                Some("warn") => Level::Warn,
+                Some("debug") => Level::Debug,
+                _ => Level::Info,
+            };
+            LEVEL.store(l.code(), Ordering::Relaxed);
+            l
+        }
+        c => Level::from_code(c),
+    }
+}
+
+/// Force the active level (CLI flags, tests).
+pub fn set_level(l: Level) {
+    LEVEL.store(l.code(), Ordering::Relaxed);
+}
+
+/// The active format (reads `MIDX_LOG_FORMAT` on first call; `json`
+/// selects [`Format::Json`], anything else is pretty).
+pub fn format() -> Format {
+    match FORMAT.load(Ordering::Relaxed) {
+        255 => {
+            let f = match std::env::var("MIDX_LOG_FORMAT").ok().as_deref() {
+                Some("json") => Format::Json,
+                _ => Format::Pretty,
+            };
+            FORMAT.store(if f == Format::Json { 1 } else { 0 }, Ordering::Relaxed);
+            f
+        }
+        1 => Format::Json,
+        _ => Format::Pretty,
+    }
+}
+
+/// Force the rendering format (tests, future CLI flags).
+pub fn set_format(f: Format) {
+    FORMAT.store(if f == Format::Json { 1 } else { 0 }, Ordering::Relaxed);
+}
+
+/// Whether a line at `l` would currently be emitted.
+pub fn enabled(l: Level) -> bool {
+    l.code() <= level().code()
+}
+
+/// Seconds since the epoch with millisecond precision (the `ts` field).
+fn now_secs() -> f64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+}
+
+/// Render one line at `l`, or `None` if the active level filters it.
+/// This is the pure core of [`log`] — tests assert on it directly.
+pub fn render(l: Level, msg: &str, fields: &[(&str, Json)]) -> Option<String> {
+    if !enabled(l) {
+        return None;
+    }
+    let ts = now_secs();
+    Some(match format() {
+        Format::Json => {
+            let mut obj = BTreeMap::new();
+            obj.insert("ts".to_string(), Json::Num((ts * 1000.0).round() / 1000.0));
+            obj.insert("lvl".to_string(), Json::Str(l.name().to_string()));
+            obj.insert("msg".to_string(), Json::Str(msg.to_string()));
+            for (k, v) in fields {
+                obj.insert((*k).to_string(), v.clone());
+            }
+            Json::Obj(obj).to_string()
+        }
+        Format::Pretty => {
+            let mut line = format!("[{ts:.3} {}] {msg}", l.name());
+            for (k, v) in fields {
+                line.push_str(&format!(" {k}={v}"));
+            }
+            line
+        }
+    })
+}
+
+/// Emit one structured line at `l` to stderr (no-op when filtered).
+pub fn log(l: Level, msg: &str, fields: &[(&str, Json)]) {
+    if let Some(line) = render(l, msg, fields) {
+        eprintln!("{line}");
+    }
+}
+
+/// [`log`] at [`Level::Error`] with no fields.
+pub fn error(msg: &str) {
+    log(Level::Error, msg, &[]);
+}
+
+/// [`log`] at [`Level::Warn`] with no fields.
+pub fn warn(msg: &str) {
+    log(Level::Warn, msg, &[]);
+}
+
+/// [`log`] at [`Level::Info`] with no fields.
+pub fn info(msg: &str) {
+    log(Level::Info, msg, &[]);
+}
+
+/// [`log`] at [`Level::Debug`] with no fields.
+pub fn debug(msg: &str) {
+    log(Level::Debug, msg, &[]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One test fn for everything that mutates the global level/format —
+    // cargo runs tests in this binary concurrently, and these statics are
+    // process-wide.
+    #[test]
+    fn filtering_and_formats() {
+        set_format(Format::Pretty);
+        set_level(Level::Warn);
+        assert!(render(Level::Info, "hidden", &[]).is_none());
+        assert!(render(Level::Debug, "hidden", &[]).is_none());
+        let line = render(Level::Warn, "slow", &[("us", Json::Num(42.0))]).unwrap();
+        assert!(line.contains(" warn] slow us=42"), "{line}");
+        assert!(render(Level::Error, "bad", &[]).is_some());
+
+        set_level(Level::Debug);
+        set_format(Format::Json);
+        let line = render(Level::Debug, "epoch done", &[("epoch", Json::Num(3.0))]).unwrap();
+        let j = Json::parse(&line).expect("json log line parses");
+        assert_eq!(j.get("lvl").unwrap().as_str().unwrap(), "debug");
+        assert_eq!(j.get("msg").unwrap().as_str().unwrap(), "epoch done");
+        assert_eq!(j.get("epoch").unwrap().as_f64().unwrap(), 3.0);
+        assert!(j.get("ts").unwrap().as_f64().unwrap() > 0.0);
+
+        set_format(Format::Pretty);
+        set_level(Level::Info);
+        assert!(enabled(Level::Warn) && !enabled(Level::Debug));
+    }
+}

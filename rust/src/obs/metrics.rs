@@ -1,0 +1,570 @@
+//! Process-wide metrics: named counters, gauges, and log-scaled latency
+//! histograms with exact bucket-derived percentiles.
+//!
+//! The serving and training hot paths record into lock-free atomics; the
+//! only lock in this module guards the registry's name → metric map, taken
+//! once per metric at registration (handles are `Arc`s cached by callers —
+//! see [`hot`]) and once per scrape when rendering.
+//!
+//! ## Histogram bucket scheme
+//!
+//! [`Histogram`] is an HDR-style fixed-bucket log-linear histogram over
+//! `u64` values (we use microseconds everywhere, but the type is unitless):
+//!
+//! * values `0..32` each get their own bucket — **exact**;
+//! * values `>= 32` are bucketed by octave (power of two) with
+//!   `2^SUB_BITS = 16` linear subdivisions per octave, so a bucket spanning
+//!   `[lo, lo + width)` has `width = 2^(octave - 4)`.
+//!
+//! A bucket's representative value is its midpoint `lo + (width - 1) / 2`,
+//! so the worst-case relative error of any percentile read is
+//! `(width / 2) / lo <= 2^(octave-5) / 2^octave = 1/32 ≈ 3.1% < 5%`, while
+//! the whole histogram is a fixed 976 buckets (no allocation on record,
+//! no reservoir bias — every sample lands in a bucket, unlike the
+//! first-N reservoir this replaced).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Linear subdivisions per octave = `2^SUB_BITS`.
+const SUB_BITS: u32 = 4;
+/// Subdivisions per octave (16).
+const SUBS: usize = 1 << SUB_BITS;
+/// Values below this are exact (one bucket per value).
+const EXACT: u64 = 32;
+/// Octaves covered above the exact range (msb index 5 through 63).
+const OCTAVES: usize = 59;
+
+/// Total bucket count of a [`Histogram`] (32 exact + 59 octaves × 16).
+pub const NUM_BUCKETS: usize = EXACT as usize + OCTAVES * SUBS;
+
+/// Bucket index for a recorded value (total function over `u64`).
+fn bucket_index(v: u64) -> usize {
+    if v < EXACT {
+        return v as usize;
+    }
+    let o = 63 - v.leading_zeros(); // >= 5 since v >= 32
+    let sub = ((v >> (o - SUB_BITS)) & (SUBS as u64 - 1)) as usize;
+    EXACT as usize + (o as usize - 5) * SUBS + sub
+}
+
+/// Representative (midpoint) value of a bucket, the value percentile
+/// reads report for samples that landed there.
+fn bucket_value(idx: usize) -> u64 {
+    if idx < EXACT as usize {
+        return idx as u64;
+    }
+    let o = 5 + (idx - EXACT as usize) / SUBS;
+    let sub = ((idx - EXACT as usize) % SUBS) as u64;
+    let width = 1u64 << (o - SUB_BITS as usize);
+    let lo = (1u64 << o) + sub * width;
+    lo + (width - 1) / 2
+}
+
+/// A monotonically increasing event count (lock-free, `Relaxed`).
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// A fresh counter at zero.
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Add one.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins instantaneous value (open connections, live shards).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// A fresh gauge at zero.
+    pub fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    /// Overwrite the value.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Add `n` (e.g. connection opened).
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Subtract `n`, saturating at zero (e.g. connection closed).
+    pub fn sub(&self, n: u64) {
+        let _ = self.0.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(n))
+        });
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket log-linear histogram (see the module docs for the bucket
+/// scheme). Recording is a few `Relaxed` atomic adds; percentile reads
+/// walk a point-in-time snapshot of the bucket counts.
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// A fresh, empty histogram.
+    pub fn new() -> Histogram {
+        let buckets: Vec<AtomicU64> = (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            buckets: buckets.into_boxed_slice(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample (lock-free).
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Number of samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded samples.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Largest sample recorded (exact, not bucketed).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Nearest-rank percentile (`p` in `0..=100`) from the bucket counts:
+    /// the representative value of the bucket holding the
+    /// `ceil(p/100 · count)`-th smallest sample, clamped to the exact
+    /// recorded max (so `percentile(100.0) == max()`). Values below 32 are
+    /// exact; larger values carry at most ~3.1% relative error. Returns 0
+    /// on an empty histogram. Concurrent recording can skew a read by at
+    /// most the samples that raced with it.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = (((p / 100.0) * total as f64).ceil().max(1.0) as u64).min(total);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= rank {
+                return bucket_value(i).min(self.max());
+            }
+        }
+        self.max()
+    }
+}
+
+/// Registry entry: one named metric of a concrete type.
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// A name → metric map with get-or-create registration, renderable as
+/// Prometheus text ([`Registry::render_prometheus`]) or as the
+/// `{"op":"metrics"}` JSON reply body ([`Registry::render_json`]).
+///
+/// Use [`Registry::global`] for the process-wide registry every subsystem
+/// records into; [`Registry::new`] builds an isolated instance for tests.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, (String, Metric)>>,
+}
+
+impl Registry {
+    /// A fresh, empty registry (tests; production code uses [`Registry::global`]).
+    pub fn new() -> Registry {
+        Registry { metrics: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// The process-wide registry.
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::new)
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, (String, Metric)>> {
+        self.metrics.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Get or create the counter `name`. If `name` is already registered
+    /// as a different type, the existing registration wins and a detached
+    /// (unexported) counter is returned.
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        let mut m = self.lock();
+        match m.get(name) {
+            Some((_, Metric::Counter(c))) => Arc::clone(c),
+            Some(_) => Arc::new(Counter::new()),
+            None => {
+                let c = Arc::new(Counter::new());
+                m.insert(name.to_string(), (help.to_string(), Metric::Counter(Arc::clone(&c))));
+                c
+            }
+        }
+    }
+
+    /// Get or create the gauge `name` (same clash rule as [`Registry::counter`]).
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        let mut m = self.lock();
+        match m.get(name) {
+            Some((_, Metric::Gauge(g))) => Arc::clone(g),
+            Some(_) => Arc::new(Gauge::new()),
+            None => {
+                let g = Arc::new(Gauge::new());
+                m.insert(name.to_string(), (help.to_string(), Metric::Gauge(Arc::clone(&g))));
+                g
+            }
+        }
+    }
+
+    /// Get or create the histogram `name` (same clash rule as [`Registry::counter`]).
+    pub fn histogram(&self, name: &str, help: &str) -> Arc<Histogram> {
+        let mut m = self.lock();
+        match m.get(name) {
+            Some((_, Metric::Histogram(h))) => Arc::clone(h),
+            Some(_) => Arc::new(Histogram::new()),
+            None => {
+                let h = Arc::new(Histogram::new());
+                m.insert(name.to_string(), (help.to_string(), Metric::Histogram(Arc::clone(&h))));
+                h
+            }
+        }
+    }
+
+    /// Render every metric in Prometheus text exposition format.
+    /// Histograms render as `summary` series (`{quantile="0.5|0.95|0.99"}`
+    /// plus `_sum`/`_count`) with an extra `<name>_max` gauge.
+    pub fn render_prometheus(&self) -> String {
+        let m = self.lock();
+        let mut out = String::new();
+        for (name, (help, metric)) in m.iter() {
+            out.push_str(&format!("# HELP {name} {help}\n"));
+            match metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+                }
+                Metric::Histogram(h) => {
+                    out.push_str(&format!("# TYPE {name} summary\n"));
+                    for (q, p) in [("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0)] {
+                        out.push_str(&format!("{name}{{quantile=\"{q}\"}} {}\n", h.percentile(p)));
+                    }
+                    out.push_str(&format!("{name}_sum {}\n", h.sum()));
+                    out.push_str(&format!("{name}_count {}\n", h.count()));
+                    out.push_str(&format!("# TYPE {name}_max gauge\n{name}_max {}\n", h.max()));
+                }
+            }
+        }
+        out
+    }
+
+    /// Render every metric as a JSON object: counters and gauges as plain
+    /// numbers, histograms as `{count, max, p50, p95, p99, sum}` objects.
+    /// This is the body of the `{"op":"metrics"}` serve reply.
+    pub fn render_json(&self) -> Json {
+        let m = self.lock();
+        let mut obj = BTreeMap::new();
+        for (name, (_, metric)) in m.iter() {
+            let v = match metric {
+                Metric::Counter(c) => Json::Num(c.get() as f64),
+                Metric::Gauge(g) => Json::Num(g.get() as f64),
+                Metric::Histogram(h) => {
+                    let mut hm = BTreeMap::new();
+                    hm.insert("count".to_string(), Json::Num(h.count() as f64));
+                    hm.insert("sum".to_string(), Json::Num(h.sum() as f64));
+                    hm.insert("max".to_string(), Json::Num(h.max() as f64));
+                    hm.insert("p50".to_string(), Json::Num(h.percentile(50.0) as f64));
+                    hm.insert("p95".to_string(), Json::Num(h.percentile(95.0) as f64));
+                    hm.insert("p99".to_string(), Json::Num(h.percentile(99.0) as f64));
+                    Json::Obj(hm)
+                }
+            };
+            obj.insert(name.clone(), v);
+        }
+        Json::Obj(obj)
+    }
+}
+
+/// Cached `Arc` handles into [`Registry::global`] for every hot-path
+/// series, so recording is pure atomics (no name lookup, no registry
+/// lock). Built once on first use; all subsystems share one instance.
+pub struct Hot {
+    /// `serve_requests_total`: query requests answered (topk + sample).
+    pub requests: Arc<Counter>,
+    /// `serve_request_us`: end-to-end request latency (submit → reply).
+    pub request_us: Arc<Histogram>,
+    /// `serve_busy_total`: requests refused at admission (queue full).
+    pub busy: Arc<Counter>,
+    /// `serve_phase_parse_us`: JSON line parse + validation.
+    pub phase_parse: Arc<Histogram>,
+    /// `serve_phase_batch_us`: time queued in the `MicroBatcher` window.
+    pub phase_batch: Arc<Histogram>,
+    /// `serve_phase_scatter_us`: per-shard fan-out inside `ShardRouter`.
+    pub phase_scatter: Arc<Histogram>,
+    /// `serve_phase_scan_us`: u8 ADC LUT build + fast-scan + bucket rank.
+    pub phase_scan: Arc<Histogram>,
+    /// `serve_phase_rerank_us`: exact f32 re-rank of the candidate set.
+    pub phase_rerank: Arc<Histogram>,
+    /// `serve_phase_merge_us`: global merge of per-shard partial top-k.
+    pub phase_merge: Arc<Histogram>,
+    /// `serve_phase_serialize_us`: reply JSON rendering.
+    pub phase_serialize: Arc<Histogram>,
+    /// `serve_phase_write_us`: reactor socket write flushes.
+    pub phase_write: Arc<Histogram>,
+    /// `batcher_requests_total`: requests accepted into the batcher queue.
+    pub batcher_requests: Arc<Counter>,
+    /// `batcher_dispatches_total`: coalesced batches dispatched to a backend.
+    pub batcher_dispatches: Arc<Counter>,
+    /// `batcher_rejected_total`: requests refused by the bounded queue.
+    pub batcher_rejected: Arc<Counter>,
+    /// `reactor_accepted_total`: connections accepted.
+    pub reactor_accepted: Arc<Counter>,
+    /// `reactor_refused_total`: connections refused at `max_conns`.
+    pub reactor_refused: Arc<Counter>,
+    /// `reactor_idle_closed_total`: connections reaped by the idle timeout.
+    pub reactor_idle_closed: Arc<Counter>,
+    /// `reactor_conns_open`: currently open connections.
+    pub conns_open: Arc<Gauge>,
+    /// `updates_applied_total`: live model updates applied.
+    pub updates_applied: Arc<Counter>,
+    /// `updates_rejected_total`: live model updates rejected.
+    pub updates_rejected: Arc<Counter>,
+    /// `update_swap_us`: engine swap pause per applied update.
+    pub update_swap_us: Arc<Histogram>,
+    /// `engine_generation`: generation of the currently served engine.
+    pub engine_generation: Arc<Gauge>,
+    /// `shards_live`: shards currently answering (sharded backend).
+    pub shards_live: Arc<Gauge>,
+    /// `shards_total`: total shards in the manifest (sharded backend).
+    pub shards_total: Arc<Gauge>,
+    /// `pool_workers`: worker threads in the most recent `WorkerPool`.
+    pub pool_workers: Arc<Gauge>,
+    /// `pool_dispatches_total`: parallel jobs dispatched to a `WorkerPool`.
+    pub pool_dispatches: Arc<Counter>,
+    /// `train_epochs_total`: training epochs completed.
+    pub train_epochs: Arc<Counter>,
+    /// `train_epoch_sample_us`: per-epoch time drawing negatives.
+    pub train_sample_us: Arc<Histogram>,
+    /// `train_epoch_encode_us`: per-epoch time encoding batches.
+    pub train_encode_us: Arc<Histogram>,
+    /// `train_epoch_refresh_us`: per-epoch sampler rebuild/refresh time.
+    pub train_refresh_us: Arc<Histogram>,
+}
+
+/// The shared [`Hot`] handle set (registered on first call).
+pub fn hot() -> &'static Hot {
+    static HOT: OnceLock<Hot> = OnceLock::new();
+    HOT.get_or_init(|| {
+        let r = Registry::global();
+        Hot {
+            requests: r.counter("serve_requests_total", "query requests answered (topk + sample)"),
+            request_us: r.histogram("serve_request_us", "end-to-end request latency in microseconds"),
+            busy: r.counter("serve_busy_total", "requests refused at admission (queue full)"),
+            phase_parse: r.histogram("serve_phase_parse_us", "request line parse + validation"),
+            phase_batch: r.histogram("serve_phase_batch_us", "time queued in the micro-batcher window"),
+            phase_scatter: r.histogram("serve_phase_scatter_us", "per-shard fan-out in the shard router"),
+            phase_scan: r.histogram("serve_phase_scan_us", "ADC LUT build + fast-scan + bucket ranking"),
+            phase_rerank: r.histogram("serve_phase_rerank_us", "exact f32 re-rank of candidates"),
+            phase_merge: r.histogram("serve_phase_merge_us", "global merge of per-shard top-k"),
+            phase_serialize: r.histogram("serve_phase_serialize_us", "reply JSON rendering"),
+            phase_write: r.histogram("serve_phase_write_us", "reactor socket write flushes"),
+            batcher_requests: r.counter("batcher_requests_total", "requests accepted into the batcher queue"),
+            batcher_dispatches: r.counter("batcher_dispatches_total", "coalesced batches dispatched"),
+            batcher_rejected: r.counter("batcher_rejected_total", "requests refused by the bounded queue"),
+            reactor_accepted: r.counter("reactor_accepted_total", "connections accepted"),
+            reactor_refused: r.counter("reactor_refused_total", "connections refused at max-conns"),
+            reactor_idle_closed: r.counter("reactor_idle_closed_total", "connections reaped by the idle timeout"),
+            conns_open: r.gauge("reactor_conns_open", "currently open connections"),
+            updates_applied: r.counter("updates_applied_total", "live model updates applied"),
+            updates_rejected: r.counter("updates_rejected_total", "live model updates rejected"),
+            update_swap_us: r.histogram("update_swap_us", "engine swap pause per applied update"),
+            engine_generation: r.gauge("engine_generation", "generation of the currently served engine"),
+            shards_live: r.gauge("shards_live", "shards currently answering"),
+            shards_total: r.gauge("shards_total", "total shards in the manifest"),
+            pool_workers: r.gauge("pool_workers", "worker threads in the most recent pool"),
+            pool_dispatches: r.counter("pool_dispatches_total", "parallel jobs dispatched to a worker pool"),
+            train_epochs: r.counter("train_epochs_total", "training epochs completed"),
+            train_sample_us: r.histogram("train_epoch_sample_us", "per-epoch time drawing negatives"),
+            train_encode_us: r.histogram("train_epoch_encode_us", "per-epoch time encoding batches"),
+            train_refresh_us: r.histogram("train_epoch_refresh_us", "per-epoch sampler rebuild/refresh time"),
+        }
+    })
+}
+
+/// Serve [`Registry::global`] as Prometheus text over HTTP on `addr`
+/// (`midx serve --metrics-addr`). Binds immediately and answers each
+/// connection with one `HTTP/1.0 200` response on a detached
+/// `midx-metrics` thread; returns the bound address (so `:0` picks an
+/// ephemeral port).
+pub fn spawn_prometheus_exporter(addr: &str) -> anyhow::Result<SocketAddr> {
+    let listener = std::net::TcpListener::bind(addr)
+        .map_err(|e| anyhow::anyhow!("metrics bind {addr}: {e}"))?;
+    let bound = listener.local_addr()?;
+    std::thread::Builder::new()
+        .name("midx-metrics".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(mut s) = stream else { continue };
+                // Best-effort drain of the request head; a client that
+                // sends nothing still gets a response after the timeout.
+                let _ = s.set_read_timeout(Some(Duration::from_secs(2)));
+                let mut head = Vec::new();
+                let mut buf = [0u8; 1024];
+                loop {
+                    match s.read(&mut buf) {
+                        Ok(0) | Err(_) => break,
+                        Ok(n) => {
+                            head.extend_from_slice(&buf[..n]);
+                            if head.windows(4).any(|w| w == b"\r\n\r\n") {
+                                break;
+                            }
+                        }
+                    }
+                }
+                let body = Registry::global().render_prometheus();
+                let resp = format!(
+                    "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                    body.len()
+                );
+                let _ = s.write_all(resp.as_bytes());
+            }
+        })
+        .map_err(|e| anyhow::anyhow!("metrics thread: {e}"))?;
+    Ok(bound)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_exact_below_32_and_within_bound_above() {
+        for v in 0..32u64 {
+            assert_eq!(bucket_value(bucket_index(v)), v);
+        }
+        for &v in &[32u64, 33, 100, 999, 1000, 1 << 20, u64::MAX / 3, u64::MAX] {
+            let rep = bucket_value(bucket_index(v));
+            let err = rep.abs_diff(v) as f64 / v as f64;
+            assert!(err <= 1.0 / 32.0 + 1e-12, "v={v} rep={rep} err={err}");
+        }
+        // Bucket index is monotone non-decreasing in the value.
+        let mut prev = 0usize;
+        for e in 0..63 {
+            for v in [(1u64 << e), (1u64 << e) + 1, (1u64 << e) * 3 / 2] {
+                let i = bucket_index(v);
+                assert!(i >= prev, "index not monotone at v={v}");
+                assert!(i < NUM_BUCKETS);
+                prev = i;
+            }
+        }
+    }
+
+    #[test]
+    fn percentile_walks_bucket_counts() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.max(), 1000);
+        // Nearest rank: p50 → 5th smallest = 50, whose width-2 bucket
+        // [50,52) represents as exactly 50.
+        assert_eq!(h.percentile(50.0), 50);
+        // p100 clamps to the exact max even though 1000's bucket
+        // representative is 1007.
+        assert_eq!(h.percentile(100.0), 1000);
+        assert_eq!(h.percentile(95.0), 1000);
+        assert_eq!(Histogram::new().percentile(99.0), 0);
+    }
+
+    #[test]
+    fn registry_renders_both_formats() {
+        let r = Registry::new();
+        let c = r.counter("reqs_total", "requests");
+        c.add(3);
+        let g = r.gauge("open", "open things");
+        g.set(7);
+        let h = r.histogram("lat_us", "latency");
+        h.record(5);
+        h.record(100);
+
+        let prom = r.render_prometheus();
+        assert!(prom.contains("# TYPE reqs_total counter"));
+        assert!(prom.contains("reqs_total 3"));
+        assert!(prom.contains("open 7"));
+        assert!(prom.contains("# TYPE lat_us summary"));
+        assert!(prom.contains("lat_us{quantile=\"0.5\"}"));
+        assert!(prom.contains("lat_us_count 2"));
+        assert!(prom.contains("lat_us_max 100"));
+
+        let j = r.render_json();
+        assert_eq!(j.get("reqs_total").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(j.get("open").unwrap().as_f64().unwrap(), 7.0);
+        let lat = j.get("lat_us").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(lat.get("max").unwrap().as_f64().unwrap(), 100.0);
+        // Same handle comes back for the same name; a type clash detaches.
+        c.inc();
+        assert_eq!(r.counter("reqs_total", "requests").get(), 4);
+        assert_eq!(r.gauge("reqs_total", "clash").get(), 0);
+        assert!(!r.render_prometheus().contains("# TYPE reqs_total gauge"));
+    }
+
+    #[test]
+    fn gauge_sub_saturates() {
+        let g = Gauge::new();
+        g.add(2);
+        g.sub(5);
+        assert_eq!(g.get(), 0);
+    }
+}

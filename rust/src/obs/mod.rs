@@ -1,0 +1,25 @@
+//! Observability: metrics registry, per-request span tracing, structured
+//! logging.
+//!
+//! Three pieces, all dependency-free and shared by the train and serve
+//! stacks:
+//!
+//! * [`metrics`] — process-global named counters/gauges plus log-scaled
+//!   latency histograms with exact bucket-derived p50/p95/p99, rendered
+//!   as the `{"op":"metrics"}` JSON reply or Prometheus text
+//!   (`midx serve --metrics-addr`). Hot paths record through the cached
+//!   [`metrics::hot`] handles — pure relaxed atomics, no locks.
+//! * [`span`] — a per-request stopwatch the serve frontends thread
+//!   through parse → execute → serialize, backing the opt-in slow-query
+//!   log (`--trace-slow-ms`). Spans only read the monotonic clock, so
+//!   answers stay bit-identical with tracing armed.
+//! * [`log`] — leveled structured logging to stderr
+//!   (`MIDX_LOG=error|warn|info|debug`, `MIDX_LOG_FORMAT=json|pretty`),
+//!   replacing the ad-hoc `eprintln!` sites across `serve/`.
+
+pub mod log;
+pub mod metrics;
+pub mod span;
+
+pub use metrics::{hot, spawn_prometheus_exporter, Counter, Gauge, Histogram, Registry};
+pub use span::Span;

@@ -1,0 +1,167 @@
+//! Per-request span tracing for the serve pipeline.
+//!
+//! A [`Span`] is a monotonic stopwatch that a frontend starts when a
+//! request line arrives and marks at each phase boundary it can see
+//! (parse → execute → serialize; the phases hidden behind the batcher
+//! boundary — batch wait, scatter, scan, rerank, merge, write — are
+//! recorded by their owning layers straight into the
+//! [`crate::obs::metrics::hot`] histograms). Marks partition the span, so
+//! the per-phase durations sum to the elapsed time at the last mark.
+//!
+//! Spans only ever *read* the monotonic clock: they cannot perturb
+//! answered bits, which the traced-vs-untraced diff test pins.
+//!
+//! The opt-in slow-query log (`midx serve --trace-slow-ms`) emits one
+//! structured warn line per request whose total time crosses the
+//! threshold, including the phase breakdown, shard fan-out and engine
+//! generation ([`maybe_log_slow`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::obs::log;
+use crate::util::json::Json;
+
+/// A per-request stopwatch with named phase marks (see the module docs).
+pub struct Span {
+    t0: Instant,
+    last: Instant,
+    phases: Vec<(&'static str, u64)>,
+}
+
+impl Default for Span {
+    fn default() -> Span {
+        Span::start()
+    }
+}
+
+impl Span {
+    /// Start timing now.
+    pub fn start() -> Span {
+        let now = Instant::now();
+        Span { t0: now, last: now, phases: Vec::with_capacity(4) }
+    }
+
+    /// Close the current phase as `name`, returning its duration in
+    /// microseconds. The next phase starts immediately.
+    pub fn mark(&mut self, name: &'static str) -> u64 {
+        let now = Instant::now();
+        let us = now.duration_since(self.last).as_micros() as u64;
+        self.last = now;
+        self.phases.push((name, us));
+        us
+    }
+
+    /// Microseconds since the span started.
+    pub fn total_us(&self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+
+    /// The phases marked so far, in order.
+    pub fn phases(&self) -> &[(&'static str, u64)] {
+        &self.phases
+    }
+}
+
+/// Slow-query threshold in µs; `u64::MAX` = disabled (the default).
+static SLOW_US: AtomicU64 = AtomicU64::new(u64::MAX);
+
+/// Arm the slow-query log: requests taking `>= ms` milliseconds emit one
+/// structured warn line (`--trace-slow-ms`; 0 logs every request).
+pub fn set_slow_threshold_ms(ms: u64) {
+    SLOW_US.store(ms.saturating_mul(1000), Ordering::Relaxed);
+}
+
+/// Disable the slow-query log (the default state).
+pub fn clear_slow_threshold() {
+    SLOW_US.store(u64::MAX, Ordering::Relaxed);
+}
+
+/// The armed threshold in µs, or `None` when disabled.
+pub fn slow_threshold_us() -> Option<u64> {
+    match SLOW_US.load(Ordering::Relaxed) {
+        u64::MAX => None,
+        us => Some(us),
+    }
+}
+
+/// The structured payload of one slow-query line: op, total µs, the
+/// span's phase breakdown, shard fan-out (`shards_live`/`shards`) and the
+/// serving engine generation. Exposed separately so the line schema is
+/// testable without capturing stderr.
+pub fn slow_report(op: &str, span: &Span, live: usize, total: usize, generation: u64) -> Vec<(&'static str, Json)> {
+    let mut phases = std::collections::BTreeMap::new();
+    for (name, us) in span.phases() {
+        phases.insert((*name).to_string(), Json::Num(*us as f64));
+    }
+    vec![
+        ("op", Json::Str(op.to_string())),
+        ("us", Json::Num(span.total_us() as f64)),
+        ("phases", Json::Obj(phases)),
+        ("shards_live", Json::Num(live as f64)),
+        ("shards", Json::Num(total as f64)),
+        ("generation", Json::Num(generation as f64)),
+    ]
+}
+
+/// Emit the slow-query warn line for `span` if the armed threshold is
+/// crossed (no-op when disabled — the hot path pays one relaxed load).
+pub fn maybe_log_slow(op: &str, span: &Span, live: usize, total: usize, generation: u64) {
+    if let Some(t) = slow_threshold_us() {
+        if span.total_us() >= t {
+            log::log(log::Level::Warn, "slow_query", &slow_report(op, span, live, total, generation));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn marks_partition_the_span() {
+        let mut s = Span::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        s.mark("parse");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        s.mark("execute");
+        let sum: u64 = s.phases().iter().map(|(_, us)| us).sum();
+        let total = s.total_us();
+        // Phases partition [t0, last-mark]; total only adds the time
+        // between the last mark and now.
+        assert!(sum <= total, "sum={sum} total={total}");
+        assert!(total - sum < 50_000, "gap too large: sum={sum} total={total}");
+        assert!(s.phases().iter().all(|(_, us)| *us >= 4_000));
+        assert_eq!(s.phases()[0].0, "parse");
+    }
+
+    #[test]
+    fn slow_report_schema() {
+        let mut s = Span::start();
+        s.mark("parse");
+        s.mark("execute");
+        let fields = slow_report("topk", &s, 3, 4, 7);
+        let obj = Json::Obj(fields.iter().map(|(k, v)| ((*k).to_string(), v.clone())).collect());
+        let line = obj.to_string();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("op").unwrap().as_str().unwrap(), "topk");
+        assert_eq!(j.get("shards_live").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("shards").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(j.get("generation").unwrap().as_usize().unwrap(), 7);
+        assert!(j.get("us").unwrap().as_f64().is_some());
+        let phases = j.get("phases").unwrap().as_obj().unwrap();
+        assert!(phases.contains_key("parse") && phases.contains_key("execute"));
+    }
+
+    #[test]
+    fn threshold_arm_disarm() {
+        // Runs in the same process as other tests: restore the disarmed
+        // default before returning.
+        set_slow_threshold_ms(2);
+        assert_eq!(slow_threshold_us(), Some(2000));
+        set_slow_threshold_ms(0);
+        assert_eq!(slow_threshold_us(), Some(0));
+        clear_slow_threshold();
+        assert_eq!(slow_threshold_us(), None);
+    }
+}

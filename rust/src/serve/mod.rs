@@ -18,7 +18,14 @@
 //!   single pool dispatches.
 //! * [`server`] — a line-delimited JSON frontend (stdin or TCP, no new
 //!   dependencies) with per-request latency accounting and a p50/p95/p99 +
-//!   QPS report.
+//!   QPS report. Every frontend also records into the process-wide
+//!   [`crate::obs`] registry: per-phase latency histograms (parse / batch
+//!   wait / scatter / scan / rerank / merge / serialize / write), request
+//!   and connection counters, and gauges — exposed live via the
+//!   `{"op":"metrics"}` reply, the `--metrics-addr` Prometheus endpoint,
+//!   and the opt-in `--trace-slow-ms` slow-query log. Observability only
+//!   reads the monotonic clock, so answered bits are identical with it on
+//!   or off (DESIGN.md §11).
 //! * [`reactor`] (unix) — the production TCP frontend: one event-loop
 //!   thread multiplexing thousands of non-blocking connections over raw
 //!   `poll(2)`, with per-connection framing buffers, in-order replies, a
@@ -64,7 +71,7 @@ pub mod update;
 pub use query::{Backend, MicroBatcher, QueryEngine, Reply, Request};
 #[cfg(unix)]
 pub use reactor::{serve_reactor, Reactor, ReactorConfig, ReactorCounters, ReactorHandle};
-pub use server::{handle_line, serve_stdin, serve_tcp, LatencyRecorder, UpdateSession};
+pub use server::{handle_line, metrics_json, serve_stdin, serve_tcp, LatencyRecorder, UpdateSession};
 pub use shard::{export_shards, shard_ranges, slice_snapshot, ShardManifest, ShardRouter};
 pub use snapshot::{AliasParts, LoadMode, Snapshot, SnapshotKind};
 pub use update::{Delta, UpdateConfig, UpdateHub, UpdateMode};

@@ -39,6 +39,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::coordinator::WorkerPool;
+use crate::obs::metrics::hot;
 use crate::index::InvertedMultiIndex;
 use crate::quant::adc::{scan_grid, AdcLut};
 use crate::quant::Quantizer;
@@ -360,6 +361,9 @@ impl QueryEngine {
         scores: &mut [f32],
     ) {
         debug_assert_eq!(z.len(), self.d);
+        // phase timing (serve_phase_scan_us / serve_phase_rerank_us) only
+        // reads the monotonic clock — it cannot perturb any answered bit
+        let t_scan = Instant::now();
         let quant = self.served.quantizer();
         let index = self.served.index();
         let table = self.rerank_table();
@@ -404,6 +408,9 @@ impl QueryEngine {
             }
         }
 
+        let t_rerank = Instant::now();
+        hot().phase_scan.record(t_rerank.duration_since(t_scan).as_micros() as u64);
+
         let target = self.beam_factor.saturating_mul(k).max(k).min(self.n);
         tk.cand.clear();
         for &b in tk.order.iter() {
@@ -420,6 +427,7 @@ impl QueryEngine {
             ids[j] = c;
             scores[j] = s;
         }
+        hot().phase_rerank.record(t_rerank.elapsed().as_micros() as u64);
     }
 
     /// Top-k for one query: (class id, exact score) pairs, best first.
@@ -795,7 +803,9 @@ impl Responder {
 }
 
 struct BatcherQueue {
-    pending: Vec<(Request, Responder)>,
+    /// queued requests with their enqueue instant (the batch-wait phase —
+    /// `serve_phase_batch_us` — measured when the dispatcher drains them)
+    pending: Vec<(Request, Responder, Instant)>,
     shutdown: bool,
     /// while set, the dispatcher holds off draining (quiesce hook: lets
     /// tests and operators build deterministic overload, and lets a
@@ -872,6 +882,7 @@ impl MicroBatcher {
         max_batch: usize,
         queue_cap: usize,
     ) -> MicroBatcher {
+        hot().engine_generation.set(engine.generation());
         let shared = Arc::new(BatcherShared {
             q: Mutex::new(BatcherQueue {
                 pending: Vec::new(),
@@ -922,6 +933,7 @@ impl MicroBatcher {
             }
             // queue lock held and the dispatcher is parked (paused, not
             // dispatching): nothing can observe a half-installed engine
+            hot().engine_generation.set(new.generation());
             *self.shared.engine.lock().unwrap_or_else(|e| e.into_inner()) = new;
         }
         self.resume();
@@ -941,8 +953,9 @@ impl MicroBatcher {
         let (tx, rx) = mpsc::channel();
         {
             let mut g = lock_queue(&self.shared.q);
-            g.pending.push((req, Responder::Channel(tx)));
+            g.pending.push((req, Responder::Channel(tx), Instant::now()));
             self.shared.requests.fetch_add(1, Ordering::Relaxed);
+            hot().batcher_requests.inc();
             self.shared.cv.notify_all();
         }
         rx.recv().expect("dispatcher alive for the batcher's lifetime")
@@ -961,10 +974,12 @@ impl MicroBatcher {
         let mut g = lock_queue(&self.shared.q);
         if g.pending.len() >= self.queue_cap {
             self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+            hot().batcher_rejected.inc();
             return false;
         }
-        g.pending.push((req, Responder::Callback(Box::new(complete))));
+        g.pending.push((req, Responder::Callback(Box::new(complete)), Instant::now()));
         self.shared.requests.fetch_add(1, Ordering::Relaxed);
+        hot().batcher_requests.inc();
         self.shared.cv.notify_all();
         true
     }
@@ -1062,10 +1077,20 @@ fn dispatcher_loop(shared: &BatcherShared, window: Duration, max_batch: usize) {
             continue;
         }
         shared.dispatches.fetch_add(1, Ordering::Relaxed);
+        hot().batcher_dispatches.inc();
         // the engine is re-read once per batch (never mid-batch): every
         // request in this batch executes on exactly one engine
         let engine = Arc::clone(&*shared.engine.lock().unwrap_or_else(|e| e.into_inner()));
-        let (reqs, responders): (Vec<Request>, Vec<Responder>) = batch.into_iter().unzip();
+        let mut reqs = Vec::with_capacity(batch.len());
+        let mut responders = Vec::with_capacity(batch.len());
+        let drained = Instant::now();
+        for (req, responder, enqueued) in batch {
+            // per-request time spent queued waiting for the coalescing
+            // window — the serve pipeline's batch-wait phase
+            hot().phase_batch.record(drained.duration_since(enqueued).as_micros() as u64);
+            reqs.push(req);
+            responders.push(responder);
+        }
         let replies = engine.run_requests(&reqs);
         for (responder, reply) in responders.into_iter().zip(replies) {
             responder.respond(reply);

@@ -47,8 +47,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::obs::metrics::hot;
+use crate::obs::{log, span, Span};
 use crate::serve::query::MicroBatcher;
-use crate::serve::server::{busy_json, err_json, info_json, parse_op, render_reply, stats_json};
+use crate::serve::server::{
+    busy_json, err_json, info_json, maybe_log_slow, metrics_json, op_names, parse_op,
+    render_reply, stats_json,
+};
 use crate::serve::server::{LatencyRecorder, ParsedOp};
 use crate::serve::update::{
     begin_ack, chunk_ack, commit_ack, UpdateAssembly, UpdateConfig, UpdateFrame, UpdateHub,
@@ -263,8 +268,18 @@ impl Conn {
         }
     }
 
-    /// Push buffered bytes into the socket until it would block.
+    /// Push buffered bytes into the socket until it would block, booking
+    /// the flush under `serve_phase_write_us` when there was work to do.
     fn try_write(&mut self) {
+        if self.wbuf.is_empty() {
+            return;
+        }
+        let t0 = Instant::now();
+        self.flush_wbuf();
+        hot().phase_write.record(t0.elapsed().as_micros() as u64);
+    }
+
+    fn flush_wbuf(&mut self) {
         while !self.wbuf.is_empty() {
             let (head, _) = self.wbuf.as_slices();
             match self.stream.write(head) {
@@ -506,8 +521,10 @@ impl Reactor {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             shared.accepted.fetch_add(1, Ordering::Relaxed);
+                            hot().reactor_accepted.inc();
                             if conns.len() >= cfg.max_conns {
                                 shared.refused.fetch_add(1, Ordering::Relaxed);
+                                hot().reactor_refused.inc();
                                 let refusal = err_json(&format!(
                                     "connection limit reached (max-conns = {})",
                                     cfg.max_conns
@@ -581,12 +598,14 @@ impl Reactor {
                     && now.duration_since(c.last_activity) >= idle
                 {
                     shared.idle_closed.fetch_add(1, Ordering::Relaxed);
+                    hot().reactor_idle_closed.inc();
                     soft_close(&c.stream);
                     return false;
                 }
                 true
             });
             shared.open.store(conns.len() as u64, Ordering::Relaxed);
+            hot().conns_open.set(conns.len() as u64);
         }
 
         // drain complete (or deadline): part with every surviving peer via
@@ -596,7 +615,8 @@ impl Reactor {
                 soft_close(&c.stream);
             }
         }
-        eprintln!("{}", rec.report());
+        hot().conns_open.set(0);
+        log::info(&rec.report());
         Ok(())
     }
 }
@@ -703,9 +723,13 @@ fn process_line(
 ) {
     let seq = c.next_seq;
     c.next_seq += 1;
-    match parse_op(&batcher.engine(), line) {
+    let mut sp = Span::start();
+    let parsed = parse_op(&batcher.engine(), line);
+    sp.mark("parse");
+    match parsed {
         ParsedOp::Reply(j) => c.complete(seq, j.to_string()),
         ParsedOp::Info => c.complete(seq, info_json(&batcher.engine()).to_string()),
+        ParsedOp::Metrics => c.complete(seq, metrics_json().to_string()),
         ParsedOp::Stats => {
             let mut j = stats_json(batcher, rec);
             if let Json::Obj(ref mut m) = j {
@@ -781,17 +805,25 @@ fn process_line(
             let tx = comp_tx.clone();
             let rec = Arc::clone(rec);
             let wake = Arc::clone(shared);
+            let bat = Arc::clone(batcher);
             let admitted = batcher.try_submit_with(req, move |reply| {
                 let us = t0.elapsed().as_micros() as u64;
                 rec.record(us);
+                sp.mark("execute");
                 let line = render_reply(&reply, if sample { "log_q" } else { "scores" }, us);
-                let _ = tx.send(Completion { conn: id, seq, line: line.to_string() });
+                let line = line.to_string();
+                hot().phase_serialize.record(sp.mark("serialize"));
+                if span::slow_threshold_us().is_some() {
+                    maybe_log_slow(if sample { "sample" } else { "topk" }, &sp, &*bat.engine());
+                }
+                let _ = tx.send(Completion { conn: id, seq, line });
                 wake.wake();
             });
             if admitted {
                 c.inflight += 1;
             } else {
                 shared.busy.fetch_add(1, Ordering::Relaxed);
+                hot().busy.inc();
                 c.complete(seq, busy_json().to_string());
             }
         }
@@ -807,13 +839,13 @@ pub fn serve_reactor(
     cfg: ReactorConfig,
 ) -> Result<()> {
     let reactor = Reactor::bind(addr, batcher, rec, cfg)?;
-    eprintln!(
-        "serving on {} (reactor: line-delimited JSON; op topk|sample|info|stats|update; \
-         max-conns={} idle={}s)",
+    log::info(&format!(
+        "serving on {} (reactor: line-delimited JSON; op {}; max-conns={} idle={}s)",
         reactor.local_addr()?,
+        op_names(),
         reactor.cfg.max_conns,
         reactor.cfg.idle_timeout.as_secs(),
-    );
+    ));
     reactor.run()
 }
 

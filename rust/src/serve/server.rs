@@ -18,16 +18,21 @@
 //! `{"ok":false,"error":"…"}` on the same line slot. Requests funnel into
 //! the shared [`MicroBatcher`], so concurrent TCP connections are coalesced
 //! into single pool dispatches; per-request latency lands in a
-//! [`LatencyRecorder`] whose p50/p95/p99 + QPS report prints on shutdown
-//! (stdin EOF) and is queryable live via `{"op":"stats"}`.
+//! [`LatencyRecorder`] — a log-scaled [`Histogram`] whose p50/p95/p99 + QPS
+//! report prints on shutdown (stdin EOF) and is queryable live via
+//! `{"op":"stats"}` — and in the process-wide metrics registry, queryable
+//! via `{"op":"metrics"}` or the Prometheus endpoint
+//! (`midx serve --metrics-addr`).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::obs::metrics::hot;
+use crate::obs::{log, span, Histogram, Span};
 use crate::serve::query::{Backend, MicroBatcher, Reply, Request};
 use crate::serve::update::{
     begin_ack, chunk_ack, commit_ack, parse_update_frame, UpdateAssembly, UpdateConfig,
@@ -36,31 +41,20 @@ use crate::serve::update::{
 use crate::util::json::{from_f32s, from_u32s};
 use crate::util::Json;
 
-/// Latency samples kept by the [`LatencyRecorder`] reservoir: enough for
-/// stable p99s, bounded so a long-running server cannot grow without limit.
-const LATENCY_RESERVOIR: usize = 1 << 16;
-
 /// Per-request draw cap for the `sample` op: one well-formed request line
 /// must never be able to allocate unbounded output buffers ('k' needs no
 /// cap — the engine clamps it to N).
 pub const MAX_DRAWS_PER_REQUEST: usize = 1 << 16;
 
-struct LatencyState {
-    /// total requests observed (reservoir element index)
-    total: u64,
-    /// uniform sample of request latencies, ≤ [`LATENCY_RESERVOIR`] entries
-    us: Vec<u64>,
-    /// running maximum over ALL requests (the tail the reservoir may miss)
-    max_us: u64,
-}
-
 /// Thread-safe per-request latency ledger with a percentile + QPS report.
-/// Memory is bounded: latencies land in a fixed-size uniform reservoir
-/// (Vitter's algorithm R with a deterministic splitmix64 index), so a
-/// server at high QPS keeps O(1) state no matter how long it runs.
+/// Latencies land in a fixed-bucket log-scaled [`Histogram`] (O(1) memory
+/// at any QPS, every sample counted — the first-N-biased reservoir this
+/// replaced under-weighted everything after warmup), and are mirrored into
+/// the process-wide registry (`serve_requests_total` / `serve_request_us`)
+/// for `{"op":"metrics"}` and the Prometheus endpoint.
 pub struct LatencyRecorder {
     start: Instant,
-    state: Mutex<LatencyState>,
+    hist: Histogram,
 }
 
 impl Default for LatencyRecorder {
@@ -69,69 +63,48 @@ impl Default for LatencyRecorder {
     }
 }
 
-/// splitmix64 — the deterministic stand-in for the reservoir's RNG.
-fn mix64(mut x: u64) -> u64 {
-    x = x.wrapping_add(0x9E3779B97F4A7C15);
-    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
-    x ^ (x >> 31)
-}
-
 impl LatencyRecorder {
     /// Empty ledger; the QPS clock starts now.
     pub fn new() -> LatencyRecorder {
-        LatencyRecorder {
-            start: Instant::now(),
-            state: Mutex::new(LatencyState { total: 0, us: Vec::new(), max_us: 0 }),
-        }
+        LatencyRecorder { start: Instant::now(), hist: Histogram::new() }
     }
 
-    /// Record one request's latency in microseconds.
+    /// Record one request's latency in microseconds (also feeds the
+    /// global `serve_requests_total` / `serve_request_us` series).
     pub fn record(&self, us: u64) {
-        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
-        st.total += 1;
-        st.max_us = st.max_us.max(us);
-        if st.us.len() < LATENCY_RESERVOIR {
-            st.us.push(us);
-        } else {
-            // algorithm R: element t replaces a random slot with
-            // probability RESERVOIR/t — uniform over the whole history
-            let slot = mix64(st.total) % st.total;
-            if (slot as usize) < LATENCY_RESERVOIR {
-                st.us[slot as usize] = us;
-            }
-        }
+        self.hist.record(us);
+        let h = hot();
+        h.requests.inc();
+        h.request_us.record(us);
     }
 
-    /// Requests recorded so far (all of them, not just the reservoir).
+    /// Requests recorded so far.
     pub fn count(&self) -> usize {
-        self.state.lock().unwrap_or_else(|e| e.into_inner()).total as usize
+        self.hist.count() as usize
+    }
+
+    /// The underlying histogram (exact max, bucket-derived percentiles).
+    pub fn histogram(&self) -> &Histogram {
+        &self.hist
     }
 
     /// One-line report: request count, wall-clock QPS, and latency
-    /// percentiles (p50/p95/p99/max) in microseconds. Percentiles are
-    /// exact until the reservoir fills, estimates from a uniform sample
-    /// after; max is tracked exactly over every request.
+    /// percentiles (p50/p95/p99/max) in microseconds. Percentiles come
+    /// from the histogram's bucket counts — every request weighted, ≤3.2%
+    /// relative error; max is tracked exactly.
     pub fn report(&self) -> String {
-        let (total, mut us, max_us) = {
-            let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
-            (st.total, st.us.clone(), st.max_us)
-        };
-        if us.is_empty() {
+        let total = self.hist.count();
+        if total == 0 {
             return "serve: 0 requests".to_string();
         }
-        us.sort_unstable();
-        let pct = |p: f64| {
-            let at = (p / 100.0 * (us.len() - 1) as f64).round() as usize;
-            us[at.min(us.len() - 1)]
-        };
         let secs = self.start.elapsed().as_secs_f64().max(1e-9);
         format!(
-            "serve: {total} requests in {secs:.2}s ({:.0} QPS) | latency µs p50={} p95={} p99={} max={max_us}",
+            "serve: {total} requests in {secs:.2}s ({:.0} QPS) | latency µs p50={} p95={} p99={} max={}",
             total as f64 / secs,
-            pct(50.0),
-            pct(95.0),
-            pct(99.0),
+            self.hist.percentile(50.0),
+            self.hist.percentile(95.0),
+            self.hist.percentile(99.0),
+            self.hist.max(),
         )
     }
 }
@@ -163,6 +136,22 @@ fn ok_obj() -> std::collections::BTreeMap<String, Json> {
     m
 }
 
+/// Every protocol op, in listing order. The `missing field 'op'` /
+/// `unknown op` error strings and the serve banners are generated from
+/// this one table, so adding an op (as `metrics` was) cannot drift them
+/// out of sync.
+const OPS: [&str; 6] = ["topk", "sample", "info", "stats", "metrics", "update"];
+
+/// The quoted op list used by both error strings: `"topk" | "sample" | …`.
+fn op_list() -> String {
+    OPS.iter().map(|op| format!("\"{op}\"")).collect::<Vec<_>>().join(" | ")
+}
+
+/// The bare `topk|sample|…` op list for serve banners.
+pub(crate) fn op_names() -> String {
+    OPS.join("|")
+}
+
 /// Parse the query vector field `"q"` and check it against the engine's
 /// dimension.
 fn parse_query(req: &Json, d: usize) -> Result<Vec<f32>, String> {
@@ -190,6 +179,9 @@ pub enum ParsedOp {
     Info,
     /// `{"op":"stats"}` — live latency/coalescing report.
     Stats,
+    /// `{"op":"metrics"}` — every registered series from the process-wide
+    /// metrics registry, rendered by [`metrics_json`].
+    Metrics,
     /// A query to execute through the batcher.
     Query {
         /// the request to enqueue
@@ -208,23 +200,28 @@ pub enum ParsedOp {
 /// Parse + validate one request line against the serving backend's
 /// dimensions (a monolithic engine or a shard router — the protocol is
 /// identical). Infallible in the sense that every malformed input becomes
-/// [`ParsedOp::Reply`] with a descriptive `{"ok":false}` body.
+/// [`ParsedOp::Reply`] with a descriptive `{"ok":false}` body. The time
+/// spent here lands in the `serve_phase_parse_us` histogram.
 pub fn parse_op(engine: &dyn Backend, line: &str) -> ParsedOp {
+    let t0 = Instant::now();
+    let parsed = parse_op_inner(engine, line);
+    hot().phase_parse.record(t0.elapsed().as_micros() as u64);
+    parsed
+}
+
+fn parse_op_inner(engine: &dyn Backend, line: &str) -> ParsedOp {
     let req = match Json::parse(line.trim()) {
         Err(e) => return ParsedOp::Reply(err_json(&format!("bad JSON: {e}"))),
         Ok(req) => req,
     };
     let op = match req.get("op").and_then(|o| o.as_str()) {
         Some(op) => op.to_string(),
-        None => {
-            return ParsedOp::Reply(err_json(
-                "missing field 'op' (\"topk\" | \"sample\" | \"info\" | \"stats\" | \"update\")",
-            ))
-        }
+        None => return ParsedOp::Reply(err_json(&format!("missing field 'op' ({})", op_list()))),
     };
     match op.as_str() {
         "info" => ParsedOp::Info,
         "stats" => ParsedOp::Stats,
+        "metrics" => ParsedOp::Metrics,
         "topk" => {
             let q = match parse_query(&req, engine.dim()) {
                 Ok(q) => q,
@@ -267,9 +264,7 @@ pub fn parse_op(engine: &dyn Backend, line: &str) -> ParsedOp {
             Ok(frame) => ParsedOp::Update(frame),
             Err(e) => ParsedOp::Reply(err_json(&e)),
         },
-        other => ParsedOp::Reply(err_json(&format!(
-            "unknown op '{other}' (\"topk\" | \"sample\" | \"info\" | \"stats\" | \"update\")"
-        ))),
+        other => ParsedOp::Reply(err_json(&format!("unknown op '{other}' ({})", op_list()))),
     }
 }
 
@@ -307,33 +302,71 @@ pub fn stats_json(batcher: &MicroBatcher, rec: &LatencyRecorder) -> Json {
     Json::Obj(m)
 }
 
+/// The `{"op":"metrics"}` reply body: every series in the process-wide
+/// registry — counters/gauges as numbers, histograms as
+/// `{count, max, p50, p95, p99, sum}` — under the `metrics` key.
+pub fn metrics_json() -> Json {
+    let mut m = ok_obj();
+    m.insert("metrics".into(), crate::obs::Registry::global().render_json());
+    Json::Obj(m)
+}
+
+/// Emit the slow-query line for a finished request if `--trace-slow-ms`
+/// is armed, attaching the backend's shard fan-out and generation.
+pub(crate) fn maybe_log_slow(op: &'static str, sp: &Span, engine: &dyn Backend) {
+    if span::slow_threshold_us().is_some() {
+        let (live, total) = engine.shard_info();
+        span::maybe_log_slow(op, sp, live, total, engine.generation());
+    }
+}
+
 /// Handle one request line end to end: parse, dispatch through the
 /// batcher (blocking), render the reply (including the `us` latency field
 /// that also lands in `rec`). Never panics on malformed input — errors
 /// render as `{"ok":false,"error":…}`.
 pub fn handle_line(batcher: &MicroBatcher, rec: &LatencyRecorder, line: &str) -> String {
+    let mut sp = Span::start();
     let parsed = parse_op(&batcher.engine(), line);
-    dispatch_parsed(batcher, rec, parsed).to_string()
+    sp.mark("parse");
+    let (out, slow_op) = dispatch_parsed(batcher, rec, parsed, &mut sp);
+    let text = out.to_string();
+    hot().phase_serialize.record(sp.mark("serialize"));
+    if let Some(op) = slow_op {
+        maybe_log_slow(op, &sp, &*batcher.engine());
+    }
+    text
 }
 
-/// Execute an already-parsed op against the batcher (blocking). Update
-/// frames answer with an error here — they carry per-connection state, so
-/// only the stateful paths ([`UpdateSession`], the reactor) accept them.
-fn dispatch_parsed(batcher: &MicroBatcher, rec: &LatencyRecorder, parsed: ParsedOp) -> Json {
+/// Execute an already-parsed op against the batcher (blocking), marking
+/// the query's `execute` phase on `sp`. Returns the reply plus the op
+/// name when the line was a query (the ops the slow-query log covers).
+/// Update frames answer with an error here — they carry per-connection
+/// state, so only the stateful paths ([`UpdateSession`], the reactor)
+/// accept them.
+fn dispatch_parsed(
+    batcher: &MicroBatcher,
+    rec: &LatencyRecorder,
+    parsed: ParsedOp,
+    sp: &mut Span,
+) -> (Json, Option<&'static str>) {
     match parsed {
-        ParsedOp::Reply(j) => j,
-        ParsedOp::Info => info_json(&batcher.engine()),
-        ParsedOp::Stats => stats_json(batcher, rec),
+        ParsedOp::Reply(j) => (j, None),
+        ParsedOp::Info => (info_json(&batcher.engine()), None),
+        ParsedOp::Stats => (stats_json(batcher, rec), None),
+        ParsedOp::Metrics => (metrics_json(), None),
         ParsedOp::Query { req, sample } => {
             let t0 = Instant::now();
             let reply = batcher.submit(req);
             let us = t0.elapsed().as_micros() as u64;
             rec.record(us);
-            render_reply(&reply, if sample { "log_q" } else { "scores" }, us)
+            sp.mark("execute");
+            let j = render_reply(&reply, if sample { "log_q" } else { "scores" }, us);
+            (j, Some(if sample { "sample" } else { "topk" }))
         }
-        ParsedOp::Update(_) => {
-            err_json("this frontend path is stateless — updates need a connection session")
-        }
+        ParsedOp::Update(_) => (
+            err_json("this frontend path is stateless — updates need a connection session"),
+            None,
+        ),
     }
 }
 
@@ -362,9 +395,12 @@ impl UpdateSession {
     /// everything else dispatches through the batcher, and `stats` grows
     /// the hub's applied/rejected/swap counters.
     pub fn handle(&mut self, rec: &LatencyRecorder, line: &str) -> String {
+        let mut sp = Span::start();
         let batcher = Arc::clone(self.hub.batcher());
-        let out = match parse_op(&batcher.engine(), line) {
-            ParsedOp::Update(frame) => self.update_frame(frame),
+        let parsed = parse_op(&batcher.engine(), line);
+        sp.mark("parse");
+        let (out, slow_op) = match parsed {
+            ParsedOp::Update(frame) => (self.update_frame(frame), None),
             ParsedOp::Stats => {
                 let mut j = stats_json(&batcher, rec);
                 if let Json::Obj(ref mut m) = j {
@@ -373,11 +409,16 @@ impl UpdateSession {
                     m.insert("updates_rejected".into(), Json::Num(u.rejected as f64));
                     m.insert("last_swap_us".into(), Json::Num(u.last_swap_us as f64));
                 }
-                j
+                (j, None)
             }
-            other => dispatch_parsed(&batcher, rec, other),
+            other => dispatch_parsed(&batcher, rec, other, &mut sp),
         };
-        out.to_string()
+        let text = out.to_string();
+        hot().phase_serialize.record(sp.mark("serialize"));
+        if let Some(op) = slow_op {
+            maybe_log_slow(op, &sp, &*batcher.engine());
+        }
+        text
     }
 
     /// Advance the begin → chunk* → commit state machine by one frame.
@@ -460,7 +501,7 @@ pub fn serve_stdin(
         writeln!(out, "{reply}").context("writing stdout")?;
         out.flush().context("flushing stdout")?;
     }
-    eprintln!("{}", rec.report());
+    log::info(&rec.report());
     Ok(())
 }
 
@@ -502,7 +543,7 @@ pub fn serve_tcp(
     addr: &str,
 ) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    eprintln!("serving on {addr} (line-delimited JSON; op topk|sample|info|stats|update)");
+    log::info(&format!("serving on {addr} (line-delimited JSON; op {})", op_names()));
     let hub = UpdateHub::new(batcher, UpdateConfig::default());
     for stream in listener.incoming() {
         let stream = stream.context("accepting connection")?;
@@ -510,7 +551,7 @@ pub fn serve_tcp(
         let rec = Arc::clone(&rec);
         std::thread::spawn(move || {
             if let Err(e) = serve_conn(&hub, &rec, stream) {
-                eprintln!("connection error: {e}");
+                log::warn(&format!("connection error: {e}"));
             }
         });
     }
@@ -591,6 +632,17 @@ mod tests {
         assert_eq!(rec.count(), 3, "three well-formed query requests recorded");
         let stats = handle_line(&b, &rec, r#"{"op":"stats"}"#);
         assert!(stats.contains("requests"), "{stats}");
+
+        // the metrics op surfaces the registry (phase histograms are
+        // registered by now — parse_op recorded into them above) and the
+        // unknown-op error lists it, generated from the same op table
+        let metrics = handle_line(&b, &rec, r#"{"op":"metrics"}"#);
+        assert!(
+            metrics.contains(r#""ok":true"#) && metrics.contains("serve_phase_parse_us"),
+            "{metrics}"
+        );
+        let unknown = handle_line(&b, &rec, r#"{"op":"warp"}"#);
+        assert!(unknown.contains(r#""metrics""#), "{unknown}");
     }
 
     #[test]
@@ -602,8 +654,9 @@ mod tests {
         }
         let r = rec.report();
         assert!(r.contains("10 requests"), "{r}");
-        // sorted [10..=90, 1000]: p50 → index round(0.5·9) = 5 → 60;
-        // p95/p99 → index 9 → 1000
-        assert!(r.contains("p50=60") && r.contains("p95=1000") && r.contains("max=1000"), "{r}");
+        // nearest rank over [10..=90, 1000]: p50 → 5th smallest = 50
+        // (its bucket [50,52) represents as exactly 50); p95/p99 → 1000,
+        // whose bucket representative 1007 clamps to the exact max
+        assert!(r.contains("p50=50") && r.contains("p95=1000") && r.contains("max=1000"), "{r}");
     }
 }

@@ -42,6 +42,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::obs::metrics::hot;
 use crate::sampler::Scratch;
 use crate::serve::query::{Backend, QueryEngine, Reply, Request};
 use crate::serve::snapshot::{fnv1a64, LoadMode, Snapshot, SnapshotKind};
@@ -359,14 +360,16 @@ impl ShardRouter {
             };
             slots.push(ShardSlot { lo, hi, engine });
         }
-        Ok(ShardRouter {
+        let router = ShardRouter {
             slots,
             kind: snap.kind,
             n: snap.n,
             d: snap.d,
             load_mode: LoadMode::Eager,
             load_millis: 0.0,
-        })
+        };
+        router.publish_gauges();
+        Ok(router)
     }
 
     /// [`ShardRouter::from_snapshot`] over the even [`shard_ranges`] split.
@@ -452,14 +455,16 @@ impl ShardRouter {
             Some(k) => k,
             None => bail!("{}: no shard could be loaded — nothing to serve", path.display()),
         };
-        Ok(ShardRouter {
+        let router = ShardRouter {
             slots,
             kind,
             n: manifest.n,
             d: manifest.d,
             load_mode: mode,
             load_millis: 0.0,
-        })
+        };
+        router.publish_gauges();
+        Ok(router)
     }
 
     /// Record how the shards were materialized (reported by `info`).
@@ -473,6 +478,14 @@ impl ShardRouter {
     /// subsequent reply carries the partial flag.
     pub fn drop_shard(&mut self, idx: usize) {
         self.slots[idx].engine = None;
+        self.publish_gauges();
+    }
+
+    /// Push the current shard census into the process-wide metrics
+    /// registry (`shards_live` / `shards_total`).
+    fn publish_gauges(&self) {
+        hot().shards_live.set(self.live_shards() as u64);
+        hot().shards_total.set(self.slots.len() as u64);
     }
 
     /// Total shards (live + empty + down).
@@ -530,6 +543,10 @@ impl ShardRouter {
     /// The bool is the partial flag: true iff a non-empty shard is down.
     pub fn top_k(&self, z: &[f32], k: usize) -> (Vec<(u32, f32)>, bool) {
         let k = k.min(self.live_classes());
+        // phase timings only read the monotonic clock — the scatter order,
+        // merge comparator and truncation are untouched, so answers stay
+        // bit-identical with observability enabled
+        let t_scatter = Instant::now();
         let mut merged: Vec<(f32, u32)> = Vec::new();
         for s in &self.slots {
             if let Some(eng) = &s.engine {
@@ -538,8 +555,11 @@ impl ShardRouter {
                 }
             }
         }
+        let t_merge = Instant::now();
+        hot().phase_scatter.record(t_merge.duration_since(t_scatter).as_micros() as u64);
         merged.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
         merged.truncate(k);
+        hot().phase_merge.record(t_merge.elapsed().as_micros() as u64);
         (merged.into_iter().map(|(sc, c)| (c, sc)).collect(), self.degraded())
     }
 
@@ -559,6 +579,7 @@ impl ShardRouter {
             return (ids, scores, self.degraded());
         }
         // scatter: (lo, per-shard k, [B, ks] ids, [B, ks] scores)
+        let t_scatter = Instant::now();
         let mut parts: Vec<(u32, usize, Vec<u32>, Vec<f32>)> = Vec::new();
         for s in &self.slots {
             if let Some(eng) = &s.engine {
@@ -567,6 +588,8 @@ impl ShardRouter {
                 parts.push((s.lo as u32, ks, pi, ps));
             }
         }
+        let t_merge = Instant::now();
+        hot().phase_scatter.record(t_merge.duration_since(t_scatter).as_micros() as u64);
         // gather: per-row merge by (exact score desc, global id asc)
         let mut merged: Vec<(f32, u32)> = Vec::new();
         for row in 0..b {
@@ -582,6 +605,7 @@ impl ShardRouter {
                 scores[row * k + j] = sc;
             }
         }
+        hot().phase_merge.record(t_merge.elapsed().as_micros() as u64);
         (ids, scores, self.degraded())
     }
 
@@ -706,7 +730,9 @@ impl ShardRouter {
                 }
                 let mut ids = vec![0u32; *m];
                 let mut log_q = vec![0.0f32; *m];
+                let t0 = Instant::now();
                 self.sample_row(q, *m, *seed, 0, &mut ids, &mut log_q, scratch);
+                hot().phase_scatter.record(t0.elapsed().as_micros() as u64);
                 Reply { ids, scores: log_q, partial }
             }
         }

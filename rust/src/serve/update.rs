@@ -50,6 +50,7 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Result};
 
 use crate::index::{DriftTracker, RefreshOutcome};
+use crate::obs::metrics::hot;
 use crate::serve::query::MicroBatcher;
 use crate::serve::snapshot::{fnv1a64, Snapshot};
 use crate::util::Json;
@@ -592,9 +593,13 @@ impl UpdateHub {
             Ok(a) => {
                 self.applied.fetch_add(1, Ordering::Relaxed);
                 self.last_swap_us.store(a.swap.as_micros() as u64, Ordering::Relaxed);
+                hot().updates_applied.inc();
+                hot().update_swap_us.record(a.swap.as_micros() as u64);
             }
-            Err(_) => {
+            Err(e) => {
                 self.rejected.fetch_add(1, Ordering::Relaxed);
+                hot().updates_rejected.inc();
+                crate::obs::log::warn(&format!("update rejected: {e}"));
             }
         }
         res

@@ -27,6 +27,8 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::pipeline::{overlap, Prefetcher};
 use crate::coordinator::pool::WorkerPool;
 use crate::index::RefreshPolicy;
+use crate::obs::log;
+use crate::obs::metrics::hot;
 use crate::runtime::{lit_f32, lit_i32, to_f32, to_scalar_f32, Engine, Executable, Manifest};
 use crate::sampler::{batch::auto_threads, sample_batch_with, Sampler};
 use crate::train::metrics::{EvalResult, MetricAcc};
@@ -491,6 +493,11 @@ impl Trainer {
         let mut bad_epochs = 0usize;
 
         for epoch in 0..self.cfg.epochs {
+            let before = (
+                self.timing.sample_s,
+                self.timing.encode_s,
+                self.timing.rebuild_s + self.timing.refresh_s,
+            );
             self.rebuild_sampler();
 
             // prefetch pipeline: batch generation overlaps the XLA calls
@@ -515,6 +522,7 @@ impl Trainer {
             };
             let mean_loss = loss_sum / count.max(1) as f64;
             train_loss.push(mean_loss);
+            self.record_epoch_metrics(before, epoch, mean_loss);
 
             let ev = self.evaluate(&task, false)?;
             if self.cfg.verbose {
@@ -589,6 +597,25 @@ impl Trainer {
             );
         }
         Ok(())
+    }
+
+    /// Book one epoch's phase-time deltas into the process-wide metrics
+    /// registry (`train_epoch_{sample,encode,refresh}_us` histograms +
+    /// `train_epochs_total`) and emit a debug-level structured epoch line.
+    fn record_epoch_metrics(&self, before: (f64, f64, f64), epoch: usize, mean_loss: f64) {
+        let d_sample = self.timing.sample_s - before.0;
+        let d_encode = self.timing.encode_s - before.1;
+        let d_refresh = self.timing.rebuild_s + self.timing.refresh_s - before.2;
+        let us = |s: f64| (s.max(0.0) * 1e6) as u64;
+        let h = hot();
+        h.train_sample_us.record(us(d_sample));
+        h.train_encode_us.record(us(d_encode));
+        h.train_refresh_us.record(us(d_refresh));
+        h.train_epochs.inc();
+        log::debug(&format!(
+            "epoch {epoch}: loss={mean_loss:.4} sample={d_sample:.3}s \
+             encode={d_encode:.3}s refresh={d_refresh:.3}s"
+        ));
     }
 
     /// The run's wall-clock ledger so far.

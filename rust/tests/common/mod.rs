@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use midx::sampler::fixtures::built_sampler;
 use midx::sampler::SamplerKind;
-use midx::serve::QueryEngine;
+use midx::serve::{QueryEngine, ShardRouter};
 use midx::util::Rng;
 
 /// Build a served engine over a fresh synthetic midx-rq snapshot.
@@ -32,6 +32,14 @@ pub fn snapshot_of(kind: SamplerKind, n: usize, d: usize, seed: u64) -> midx::se
     let table = table(n, d, seed);
     let s = built_sampler(kind, n, d, seed);
     s.snapshot(&table, n, d).unwrap_or_else(|| panic!("{} snapshots", kind.name()))
+}
+
+/// A scatter-gather [`ShardRouter`] over the same synthetic snapshot as
+/// [`engine`], split evenly into `shards` in-process shards (one worker
+/// thread each). The observability suite serves this behind the reactor
+/// to pin the sharded `{"op":"metrics"}` round trip (`shards_live` etc.).
+pub fn shard_router(n: usize, d: usize, seed: u64, shards: usize) -> Arc<ShardRouter> {
+    Arc::new(ShardRouter::split(&snapshot(n, d, seed), shards, 1).unwrap())
 }
 
 /// The deterministic embedding table the fixtures are built over.

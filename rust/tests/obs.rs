@@ -1,0 +1,314 @@
+//! Integration suite for the observability layer (`midx::obs`).
+//!
+//! Covers the tentpole's contracts end to end: histogram percentiles
+//! against a sorted-sample oracle (exact below 32, ≤1/32 relative error
+//! above), registry registration and recording under thread contention,
+//! span phase partitioning, the slow-query line schema and `MIDX_LOG`
+//! filtering through the pure `log::render` core, the `{"op":"metrics"}`
+//! round trip through the reactor over both the monolithic engine and a
+//! sharded `ShardRouter` backend, and — the hard guarantee — that arming
+//! tracing does not change a single answered bit.
+//!
+//! The metrics registry is process-global and cargo runs the tests in
+//! this binary concurrently, so assertions against `Registry::global`
+//! check series presence and lower bounds, never absolute counts; tests
+//! needing exact numbers build their own `Registry::new()`.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use midx::obs::{log, span, Histogram, Registry, Span};
+use midx::serve::{handle_line, LatencyRecorder, MicroBatcher};
+use midx::util::{Json, Rng};
+
+// -- histogram accuracy ----------------------------------------------------
+
+/// Nearest-rank oracle: the value `percentile(p)` promises to approximate.
+fn oracle(sorted: &[u64], p: f64) -> u64 {
+    let n = sorted.len();
+    let rank = (((p / 100.0) * n as f64).ceil().max(1.0) as usize).min(n);
+    sorted[rank - 1]
+}
+
+#[test]
+fn histogram_percentiles_match_sorted_oracle() {
+    // Samples spanning six orders of magnitude, deterministic seed.
+    let mut rng = Rng::new(0x0b5_0b5);
+    let h = Histogram::new();
+    let mut all: Vec<u64> = Vec::with_capacity(10_000);
+    for _ in 0..10_000 {
+        // Log-uniform-ish: pick an octave 0..=20, then a value inside it.
+        let octave = rng.below(21) as u64;
+        let v = (1u64 << octave) + rng.next_u64() % (1u64 << octave);
+        h.record(v);
+        all.push(v);
+    }
+    all.sort_unstable();
+    assert_eq!(h.count(), 10_000);
+    assert_eq!(h.max(), *all.last().unwrap());
+    assert_eq!(h.sum(), all.iter().sum::<u64>());
+
+    for p in [1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 99.9] {
+        let want = oracle(&all, p);
+        let got = h.percentile(p);
+        if want < 32 {
+            assert_eq!(got, want, "p{p}: exact range must be exact");
+        } else {
+            let err = got.abs_diff(want) as f64 / want as f64;
+            assert!(err <= 1.0 / 32.0 + 1e-12, "p{p}: want={want} got={got} err={err}");
+        }
+    }
+    // p100 reports the tracked max exactly, not a bucket midpoint.
+    assert_eq!(h.percentile(100.0), *all.last().unwrap());
+}
+
+#[test]
+fn histogram_is_exact_below_32() {
+    let h = Histogram::new();
+    let mut all = Vec::new();
+    let mut rng = Rng::new(7);
+    for _ in 0..500 {
+        let v = rng.below(32) as u64;
+        h.record(v);
+        all.push(v);
+    }
+    all.sort_unstable();
+    for p in [5.0, 50.0, 95.0, 100.0] {
+        assert_eq!(h.percentile(p), oracle(&all, p), "p{p}");
+    }
+}
+
+// -- registry under contention ---------------------------------------------
+
+#[test]
+fn registry_survives_eight_thread_contention() {
+    let r = Arc::new(Registry::new());
+    // Pre-seed the gauge well clear of zero so concurrent sub() calls can
+    // never saturate regardless of interleaving.
+    r.gauge("open", "gauge under test").add(1_000);
+    let threads: Vec<_> = (0..8)
+        .map(|t| {
+            let r = Arc::clone(&r);
+            std::thread::spawn(move || {
+                // Every thread races the get-or-create path too.
+                let c = r.counter("reqs_total", "counter under test");
+                let g = r.gauge("open", "gauge under test");
+                let h = r.histogram("lat_us", "histogram under test");
+                for i in 0..10_000u64 {
+                    c.inc();
+                    h.record(t as u64 * 10_000 + i);
+                }
+                g.add(5);
+                g.sub(3);
+            })
+        })
+        .collect();
+    for th in threads {
+        th.join().unwrap();
+    }
+    assert_eq!(r.counter("reqs_total", "").get(), 80_000);
+    assert_eq!(r.gauge("open", "").get(), 1_000 + 8 * 2);
+    let h = r.histogram("lat_us", "");
+    assert_eq!(h.count(), 80_000);
+    assert_eq!(h.max(), 7 * 10_000 + 9_999);
+    // Every recorded sample is in some bucket: the percentile walk finds
+    // a rank even at the extremes.
+    assert!(h.percentile(99.0) >= h.percentile(50.0));
+}
+
+// -- span partitioning -----------------------------------------------------
+
+#[test]
+fn span_phase_sum_tracks_wall_time() {
+    let mut sp = Span::start();
+    std::thread::sleep(Duration::from_millis(4));
+    sp.mark("parse");
+    std::thread::sleep(Duration::from_millis(4));
+    sp.mark("execute");
+    sp.mark("serialize");
+    let sum: u64 = sp.phases().iter().map(|(_, us)| us).sum();
+    let total = sp.total_us();
+    // Marks partition [start, last-mark]: the sum can only trail the
+    // total by the time spent after the final mark.
+    assert!(sum <= total, "sum={sum} total={total}");
+    assert!(total - sum < 100_000, "unaccounted gap: sum={sum} total={total}");
+    assert_eq!(
+        sp.phases().iter().map(|(n, _)| *n).collect::<Vec<_>>(),
+        vec!["parse", "execute", "serialize"]
+    );
+}
+
+// -- slow-query schema + log filtering -------------------------------------
+
+// One test fn for everything that mutates the process-wide log level and
+// format: cargo runs this binary's tests concurrently and nothing else in
+// the suite asserts on rendered log output.
+#[test]
+fn slow_query_schema_and_level_filtering() {
+    log::set_format(log::Format::Json);
+    log::set_level(log::Level::Warn);
+
+    // Below the active level: filtered to nothing.
+    assert!(log::render(log::Level::Debug, "hidden", &[]).is_none());
+    assert!(log::render(log::Level::Info, "hidden", &[]).is_none());
+
+    // The slow-query line: exactly what `--trace-slow-ms` emits, rendered
+    // through the same pure core, parses back as one JSON object with the
+    // documented fields.
+    let mut sp = Span::start();
+    sp.mark("parse");
+    sp.mark("execute");
+    sp.mark("serialize");
+    let fields = span::slow_report("sample", &sp, 3, 4, 9);
+    let line = log::render(log::Level::Warn, "slow_query", &fields).unwrap();
+    let j = Json::parse(&line).expect("slow-query line is valid JSON");
+    assert_eq!(j.get("lvl").unwrap().as_str().unwrap(), "warn");
+    assert_eq!(j.get("msg").unwrap().as_str().unwrap(), "slow_query");
+    assert_eq!(j.get("op").unwrap().as_str().unwrap(), "sample");
+    assert_eq!(j.get("shards_live").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(j.get("shards").unwrap().as_usize().unwrap(), 4);
+    assert_eq!(j.get("generation").unwrap().as_usize().unwrap(), 9);
+    assert!(j.get("us").unwrap().as_f64().is_some());
+    assert!(j.get("ts").unwrap().as_f64().unwrap() > 0.0);
+    let phases = j.get("phases").unwrap().as_obj().unwrap();
+    for name in ["parse", "execute", "serialize"] {
+        assert!(phases.contains_key(name), "missing phase {name}");
+    }
+
+    // Error-only silences warns too.
+    log::set_level(log::Level::Error);
+    assert!(log::render(log::Level::Warn, "hidden", &fields).is_none());
+    assert!(log::render(log::Level::Error, "shown", &[]).is_some());
+
+    // Restore the defaults for the rest of the binary.
+    log::set_level(log::Level::Info);
+    log::set_format(log::Format::Pretty);
+}
+
+// -- metrics op round trips ------------------------------------------------
+
+#[cfg(unix)]
+mod round_trip {
+    use super::*;
+    use midx::serve::ReactorConfig;
+
+    fn metrics_of(reply: &str) -> Json {
+        let j = Json::parse(reply).expect("metrics reply parses");
+        assert!(matches!(j.get("ok"), Some(Json::Bool(true))), "{reply}");
+        j.get("metrics").expect("metrics body").clone()
+    }
+
+    fn hist_count(metrics: &Json, name: &str) -> f64 {
+        metrics
+            .get(name)
+            .unwrap_or_else(|| panic!("series {name} missing"))
+            .get("count")
+            .unwrap_or_else(|| panic!("{name} is not a histogram"))
+            .as_f64()
+            .unwrap()
+    }
+
+    #[test]
+    fn metrics_op_over_monolithic_engine() {
+        let d = 8;
+        let eng = common::engine(60, d, 11, 2);
+        let batcher = Arc::new(MicroBatcher::new(eng, Duration::ZERO, 8));
+        let served = common::serve(
+            Arc::clone(&batcher),
+            ReactorConfig { idle_timeout: Duration::ZERO, ..Default::default() },
+        );
+        let mut conn = common::Conn::open(served.addr);
+
+        // Answer real traffic first so the phase histograms have samples.
+        for j in 0..6 {
+            let reply = conn.send(&common::request_line(0, j, d));
+            assert!(reply.contains("\"ok\":true"), "{reply}");
+        }
+        let metrics = metrics_of(&conn.send(r#"{"op":"metrics"}"#));
+
+        // Counters and end-to-end latency: at least this connection's six.
+        assert!(metrics.get("serve_requests_total").unwrap().as_f64().unwrap() >= 6.0);
+        assert!(hist_count(&metrics, "serve_request_us") >= 6.0);
+        // Per-phase serve histograms populated by those requests.
+        for series in [
+            "serve_phase_parse_us",
+            "serve_phase_batch_us",
+            "serve_phase_scan_us",
+            "serve_phase_rerank_us",
+            "serve_phase_serialize_us",
+        ] {
+            assert!(hist_count(&metrics, series) >= 1.0, "{series} never recorded");
+        }
+        // Reactor mirrors: this connection was accepted.
+        assert!(metrics.get("reactor_accepted_total").unwrap().as_f64().unwrap() >= 1.0);
+        // Histogram bodies expose the exact-percentile fields.
+        let req = metrics.get("serve_request_us").unwrap();
+        for k in ["p50", "p95", "p99", "max", "sum"] {
+            assert!(req.get(k).unwrap().as_f64().is_some(), "missing {k}");
+        }
+
+        drop(conn);
+        served.stop();
+    }
+
+    #[test]
+    fn metrics_op_over_sharded_backend() {
+        let d = 8;
+        let router = common::shard_router(60, d, 13, 4);
+        let batcher = Arc::new(MicroBatcher::new(router, Duration::ZERO, 8));
+        let served = common::serve(
+            Arc::clone(&batcher),
+            ReactorConfig { idle_timeout: Duration::ZERO, ..Default::default() },
+        );
+        let mut conn = common::Conn::open(served.addr);
+
+        for j in 0..4 {
+            let reply = conn.send(&common::request_line(1, j, d));
+            assert!(reply.contains("\"ok\":true"), "{reply}");
+        }
+        let metrics = metrics_of(&conn.send(r#"{"op":"metrics"}"#));
+
+        // The router published its census at construction (this binary
+        // builds exactly one, with four live shards)...
+        assert_eq!(metrics.get("shards_live").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(metrics.get("shards_total").unwrap().as_f64().unwrap(), 4.0);
+        // ...and the scatter/merge phases only the sharded path records.
+        assert!(hist_count(&metrics, "serve_phase_scatter_us") >= 1.0);
+        assert!(hist_count(&metrics, "serve_phase_merge_us") >= 1.0);
+
+        drop(conn);
+        served.stop();
+    }
+}
+
+// -- the bit-identity pin --------------------------------------------------
+
+/// Arming tracing (slow-query log at threshold 0 = log every request)
+/// must not change any answered bit: observability only reads the clock.
+#[test]
+fn tracing_never_changes_answered_bits() {
+    let (n, d) = (120, 8);
+    let eng = common::engine(n, d, 17, 2);
+    let batcher = MicroBatcher::new(eng, Duration::ZERO, 1);
+    let rec = LatencyRecorder::new();
+
+    let corpus: Vec<String> =
+        (0..4).flat_map(|c| (0..6).map(move |j| common::request_line(c, j, d))).collect();
+
+    let untraced: Vec<String> =
+        corpus.iter().map(|l| common::strip_us(&handle_line(&batcher, &rec, l))).collect();
+
+    // Arm the slow-query log for every request (threshold 0), then replay
+    // the identical corpus. Restore the disarmed default before asserting
+    // so a failure can't leak the armed state into other tests.
+    span::set_slow_threshold_ms(0);
+    let traced: Vec<String> =
+        corpus.iter().map(|l| common::strip_us(&handle_line(&batcher, &rec, l))).collect();
+    span::clear_slow_threshold();
+
+    for (i, (u, t)) in untraced.iter().zip(&traced).enumerate() {
+        assert_eq!(u, t, "request {i} answered differently with tracing armed");
+    }
+}
