@@ -1,7 +1,7 @@
 //! `cargo bench --bench serve` — serve-layer cost: snapshot export/load,
 //! batched top-k latency percentiles, and reactor connection scaling.
 //!
-//! Ten sections, all artifact-free:
+//! Eleven sections, all artifact-free:
 //!
 //! 1. **Snapshot cost.** Serialize (`to_bytes`) and parse+validate
 //!    (`from_bytes`) throughput at two model sizes, plus one-shot
@@ -36,7 +36,12 @@
 //!    monolithic engine over the same snapshot — the merge overhead the
 //!    sharded tier pays for per-shard fan-out, score-exact top-k fusion,
 //!    and two-stage (shard-then-class) sampling.
-//! 10. **Observability overhead.** The per-sample cost of the always-on
+//! 10. **Remote scatter-gather (unix).** The same shard comparison through
+//!     real sockets: per-shard reactors on loopback behind a
+//!     `RemoteRouter` — what the multi-process tier adds over the
+//!     in-process router (wire serialization, poll-loop collection, and
+//!     the two-wave sample scatter).
+//! 11. **Observability overhead.** The per-sample cost of the always-on
 //!     instrumentation: `Histogram::record` and `Counter::inc` (a few
 //!     relaxed atomics), a percentile read (bucket walk under the scrape
 //!     lock), `Span::mark`, and a full Prometheus render — the numbers
@@ -471,6 +476,83 @@ fn shard_section() {
     }
 }
 
+/// The multi-process tier on loopback: per-shard reactors (one worker
+/// each) behind a `RemoteRouter`, against the monolithic numbers from
+/// `shard_section`. Measures the wire + poll-loop overhead the network
+/// hop adds to the same merge math.
+#[cfg(unix)]
+fn remote_section() {
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use midx::serve::shard::{shard_ranges, slice_snapshot};
+    use midx::serve::{
+        Backend, LatencyRecorder, MicroBatcher, Reactor, ReactorConfig, RemoteConfig,
+        RemoteRouter, Request,
+    };
+
+    let (n, d, k_codewords, k, m) = (20_000usize, 32usize, 32usize, 10usize, 16usize);
+    let snap = snapshot_for(n, d, k_codewords, 53);
+    let mut rng = Rng::new(61);
+    let queries = rand_matrix(&mut rng, 64, d, 0.5);
+    let topk_reqs: Vec<Request> =
+        (0..64).map(|i| Request::TopK { q: queries[i * d..(i + 1) * d].to_vec(), k }).collect();
+
+    println!("\nremote scatter-gather over loopback reactors (N={n}, D={d}, top-{k}, M={m}, B=64)");
+    for &shards in &[1usize, 2, 4] {
+        let ranges = shard_ranges(n, shards).unwrap();
+        let mut fleet = Vec::new();
+        for &(lo, hi) in &ranges {
+            let slice = slice_snapshot(&snap, lo, hi).unwrap();
+            let eng = QueryEngine::new(slice, 1).unwrap();
+            let batcher = Arc::new(MicroBatcher::new(Arc::new(eng), Duration::ZERO, 64));
+            let rec = Arc::new(LatencyRecorder::new());
+            let reactor =
+                Reactor::bind("127.0.0.1:0", batcher, rec, ReactorConfig::default()).unwrap();
+            let addr = reactor.local_addr().unwrap().to_string();
+            let handle = reactor.handle();
+            let thread = std::thread::spawn(move || {
+                let _ = reactor.run();
+            });
+            fleet.push((addr, handle, thread));
+        }
+        let addrs: Vec<String> = fleet.iter().map(|f| f.0.clone()).collect();
+        let router = RemoteRouter::connect(
+            &addrs,
+            RemoteConfig {
+                deadline: Duration::from_secs(30),
+                probe_interval: Duration::from_secs(60),
+                connect_timeout: Duration::from_secs(10),
+            },
+        )
+        .unwrap();
+        percentiles(&format!("serve/remote/s{shards}/topk"), 64, 30, || {
+            std::hint::black_box(router.run_requests(&topk_reqs));
+        });
+        let mut round = 0u64;
+        percentiles(&format!("serve/remote/s{shards}/sample"), 64, 30, || {
+            round = round.wrapping_add(1);
+            let reqs: Vec<Request> = (0..64usize)
+                .map(|i| Request::Sample {
+                    q: queries[i * d..(i + 1) * d].to_vec(),
+                    m,
+                    seed: round * 64 + i as u64,
+                    fallback: false,
+                })
+                .collect();
+            std::hint::black_box(router.run_requests(&reqs));
+        });
+        drop(router);
+        for (_, handle, thread) in fleet {
+            handle.shutdown();
+            let _ = thread.join();
+        }
+    }
+}
+
+#[cfg(not(unix))]
+fn remote_section() {}
+
 /// Per-sample cost of the always-on metrics plumbing. Everything here is
 /// amortized over many operations per timed call so the µs-granularity
 /// harness still resolves the nanosecond-scale record path.
@@ -514,5 +596,6 @@ fn main() {
     reactor_section();
     update_section();
     shard_section();
+    remote_section();
     obs_section();
 }

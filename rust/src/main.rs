@@ -35,7 +35,7 @@ use midx::serve::snapshot::fnv1a64;
 use midx::serve::update::b64_encode;
 use midx::serve::{
     export_shards, serve_stdin, Backend, Delta, LatencyRecorder, LoadMode, MicroBatcher,
-    QueryEngine, ShardRouter, Snapshot, UpdateConfig, UpdateMode,
+    QueryEngine, ShardManifest, ShardRouter, Snapshot, UpdateConfig, UpdateMode,
 };
 use midx::train::TrainConfig;
 use midx::util::check::rand_matrix;
@@ -134,7 +134,10 @@ const USAGE: &str = "usage:
                               partial answers flagged \"partial\":true instead of failing)
   midx serve --snapshot FILE [--fallback FILE] [--tcp ADDR] [--threads N] [--beam F]
              [--load eager|mmap] [--fast-sample] [--no-simd]
-             [--shards [--allow-missing-shards]]
+             [--shards [--allow-missing-shards]] [--shard-id I]
+             [--remote-shards HOST:PORT,... [--remote-deadline-ms N]
+              [--remote-probe-ms N] [--remote-connect-ms N]]
+             [--legacy-tcp]
              [--window-us N] [--max-batch N]
              [--max-conns N] [--queue-cap N] [--idle-ms N]
              [--update-tol F] [--update-iters N] [--update-max-bytes N]
@@ -155,6 +158,20 @@ const USAGE: &str = "usage:
                               --shards serves a shard manifest through the in-process
                               scatter-gather router behind the same frontends — live
                               updates, --fallback and --fast-sample are monolithic-only.
+                              Multi-process serving (unix): --shard-id I serves shard I
+                              of an `export --shards` manifest as its own process (the
+                              slice's placement is reported via {\"op\":\"info\"}), and
+                              --remote-shards ADDR,ADDR,... serves a scatter-gather
+                              router over those per-shard processes (no --snapshot
+                              needed): merged top-k is bit-identical to the monolithic
+                              engine at full --beam, a shard missing the
+                              --remote-deadline-ms budget degrades the answer to
+                              \"partial\":true, dead shards are probed back in every
+                              --remote-probe-ms, and merges are refused while a live
+                              update leaves the fleet on mixed generations.
+                              --legacy-tcp forces the thread-per-connection loop
+                              instead of the reactor (same protocol, no admission
+                              bound; mainly for regression coverage).
                               Observability: {\"op\":\"metrics\"} dumps the process-wide
                               registry (per-phase latency histograms with exact
                               p50/p95/p99, request/connection counters, gauges);
@@ -454,6 +471,131 @@ fn load_shard_router(args: &Args, default_threads: usize) -> Result<ShardRouter>
     Ok(router)
 }
 
+/// `--shard-id I`: load shard I of an `export --shards` manifest as a
+/// monolithic engine over just that slice. The slice snapshot's
+/// `shard_lo` metadata (written at export) flows out through
+/// `{"op":"info"}`, which is how the remote router learns this process's
+/// placement in the global class space.
+fn load_shard_slice(args: &Args) -> Result<QueryEngine> {
+    let id = args.usize_or("shard-id", 0);
+    let path = args.get("snapshot").ok_or_else(|| {
+        anyhow!("--snapshot FILE required (a shard manifest from `midx export --shards`)")
+    })?;
+    for flag in ["fallback", "fast-sample", "shards"] {
+        if args.has(flag) {
+            bail!("--{flag} cannot combine with --shard-id (one slice, one engine)");
+        }
+    }
+    let mode = match args.get("load") {
+        None => LoadMode::Eager,
+        Some(s) => LoadMode::parse(s)
+            .ok_or_else(|| anyhow!("--load must be 'eager' or 'mmap', got '{s}'"))?,
+    };
+    let manifest = ShardManifest::read(Path::new(path))?;
+    let entry = manifest.shards.get(id).ok_or_else(|| {
+        anyhow!("--shard-id {id} out of range: manifest holds {} shards", manifest.shards.len())
+    })?;
+    let dir = match Path::new(path).parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => Path::new(".").to_path_buf(),
+    };
+    let file = dir.join(&entry.file);
+    let t0 = Instant::now();
+    let snap = match mode {
+        // eager loads verify the manifest checksum, mirroring the
+        // in-process router; mmap relies on the snapshot's own header
+        // validation (checksumming would read the whole file)
+        LoadMode::Eager => {
+            let bytes = std::fs::read(&file)
+                .with_context(|| format!("shard {id}: reading {}", file.display()))?;
+            let got = fnv1a64(&bytes);
+            if got != entry.fnv {
+                bail!(
+                    "shard {id} checksum mismatch: {} hashes to {got:016x}, manifest \
+                     says {:016x}",
+                    file.display(),
+                    entry.fnv
+                );
+            }
+            Snapshot::from_bytes(&bytes)
+                .with_context(|| format!("shard {id}: loading {}", file.display()))?
+        }
+        LoadMode::Mmap => Snapshot::read_with(&file, mode)
+            .with_context(|| format!("shard {id}: loading {}", file.display()))?,
+    };
+    if snap.n != entry.hi - entry.lo {
+        bail!(
+            "shard {id}: {} holds {} classes but the manifest range [{},{}) expects {}",
+            file.display(),
+            snap.n,
+            entry.lo,
+            entry.hi,
+            entry.hi - entry.lo
+        );
+    }
+    let load_millis = t0.elapsed().as_secs_f64() * 1e3;
+    let mut engine = QueryEngine::new(snap, args.usize_or("threads", 0))?;
+    engine.set_load_info(mode, load_millis);
+    if args.has("beam") {
+        engine.set_beam_factor(args.usize_or("beam", midx::serve::query::DEFAULT_BEAM_FACTOR));
+    }
+    if engine.shard_lo() != Some(entry.lo) {
+        bail!(
+            "shard {id}: {} placement metadata is missing or disagrees with the manifest \
+             (expected shard_lo={}) — re-export the fleet with `midx export --shards`",
+            file.display(),
+            entry.lo
+        );
+    }
+    log::info(&format!(
+        "loaded shard {id} slice: classes [{},{}) of N={} D={} in {load_millis:.2}ms \
+         ({} load, {} worker threads, simd {})",
+        entry.lo,
+        entry.hi,
+        manifest.n,
+        engine.dim(),
+        mode.name(),
+        engine.workers(),
+        midx::util::math::simd_level().name(),
+    ));
+    Ok(engine)
+}
+
+/// `--remote-shards HOST:PORT,...`: the multi-process scatter-gather
+/// backend (unix only — driven by the same `poll(2)` loop as the
+/// reactor). Placement, dimensions and kind all come from the shard
+/// processes' info handshakes.
+#[cfg(unix)]
+fn load_remote_router(args: &Args) -> Result<Arc<dyn Backend>> {
+    use midx::serve::{RemoteConfig, RemoteRouter};
+    for flag in ["snapshot", "shards", "shard-id", "fallback", "fast-sample", "load"] {
+        if args.has(flag) {
+            bail!(
+                "--{flag} cannot combine with --remote-shards (the fleet's shard \
+                 processes own their snapshots)"
+            );
+        }
+    }
+    let addrs: Vec<String> = args
+        .get("remote-shards")
+        .unwrap_or_default()
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let cfg = RemoteConfig {
+        deadline: Duration::from_millis(args.u64_or("remote-deadline-ms", 2000)),
+        probe_interval: Duration::from_millis(args.u64_or("remote-probe-ms", 1000)),
+        connect_timeout: Duration::from_millis(args.u64_or("remote-connect-ms", 2000)),
+    };
+    Ok(Arc::new(RemoteRouter::connect(&addrs, cfg)?))
+}
+
+#[cfg(not(unix))]
+fn load_remote_router(_args: &Args) -> Result<Arc<dyn Backend>> {
+    bail!("--remote-shards needs the unix poll(2) event loop — unavailable on this platform")
+}
+
 fn cmd_query(args: &Args) -> Result<()> {
     if args.has("shards") {
         return cmd_query_sharded(args);
@@ -572,7 +714,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let bound = spawn_prometheus_exporter(addr)?;
         log::info(&format!("metrics exporter on http://{bound}/metrics (Prometheus text)"));
     }
-    let backend: Arc<dyn Backend> = if args.has("shards") {
+    let backend: Arc<dyn Backend> = if args.has("remote-shards") {
+        // multi-process backend: scatter-gather over per-shard `midx serve
+        // --shard-id` processes; placement comes from their info
+        // handshakes, so no local snapshot is needed
+        load_remote_router(args)?
+    } else if args.has("shard-id") {
+        // one shard of an `export --shards` manifest as its own process:
+        // a monolithic engine over the slice snapshot, whose shard_lo
+        // metadata flows out through {"op":"info"} for the remote router
+        Arc::new(load_shard_slice(args)?)
+    } else if args.has("shards") {
         // sharded backend: S in-process engines behind the scatter-gather
         // router, served through the same MicroBatcher + frontends
         let router = load_shard_router(args, 0)?;
@@ -630,8 +782,11 @@ fn update_config(args: &Args) -> UpdateConfig {
     }
 }
 
-/// TCP serving: the event-driven reactor on unix, the legacy
-/// thread-per-connection loop elsewhere.
+/// TCP serving: the event-driven reactor on unix (unless `--legacy-tcp`
+/// forces the thread-per-connection loop for regression coverage), the
+/// legacy loop elsewhere. Both paths honor the parsed `--update-*` config —
+/// the legacy loop used to silently serve `UpdateConfig::default()`, so
+/// `--update-max-bytes` (and the drift-refresh knobs) were ignored there.
 #[cfg(unix)]
 fn serve_over_tcp(
     args: &Args,
@@ -639,6 +794,10 @@ fn serve_over_tcp(
     batcher: Arc<MicroBatcher>,
     rec: Arc<LatencyRecorder>,
 ) -> Result<()> {
+    if args.has("legacy-tcp") {
+        warn_legacy_inert_flags(args);
+        return midx::serve::serve_tcp(batcher, rec, addr, update_config(args));
+    }
     let cfg = midx::serve::ReactorConfig {
         max_conns: args.usize_or("max-conns", 1024),
         idle_timeout: Duration::from_millis(args.u64_or("idle-ms", 60_000)),
@@ -649,8 +808,7 @@ fn serve_over_tcp(
 }
 
 /// TCP serving fallback for non-unix targets (no `poll(2)`): the legacy
-/// thread-per-connection loop, which has no admission bound — warn about
-/// any reactor knobs that would otherwise be silently inert.
+/// thread-per-connection loop.
 #[cfg(not(unix))]
 fn serve_over_tcp(
     args: &Args,
@@ -658,18 +816,23 @@ fn serve_over_tcp(
     batcher: Arc<MicroBatcher>,
     rec: Arc<LatencyRecorder>,
 ) -> Result<()> {
-    for flag in
-        ["max-conns", "queue-cap", "idle-ms", "update-tol", "update-iters", "update-max-bytes"]
-    {
+    warn_legacy_inert_flags(args);
+    midx::serve::serve_tcp(batcher, rec, addr, update_config(args))
+}
+
+/// Reactor-only knobs that are silently inert on the legacy
+/// thread-per-connection loop (no admission bound, no idle reaping) —
+/// warn instead of ignoring them. The `--update-*` flags are NOT in this
+/// list: both TCP paths honor them.
+fn warn_legacy_inert_flags(args: &Args) {
+    for flag in ["max-conns", "idle-ms"] {
         if args.has(flag) {
             log::warn(&format!(
-                "--{flag} has no effect on this platform — the poll(2) reactor is \
-                 unix-only, falling back to thread-per-connection serving with an unbounded \
-                 queue (no busy backpressure)"
+                "--{flag} has no effect on the thread-per-connection loop — it serves an \
+                 unbounded connection set (no busy backpressure, no idle reaping)"
             ));
         }
     }
-    midx::serve::serve_tcp(batcher, rec, addr)
 }
 
 /// `midx push-update` — the client half of a zero-downtime model update:

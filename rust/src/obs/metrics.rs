@@ -387,6 +387,25 @@ pub struct Hot {
     pub shards_live: Arc<Gauge>,
     /// `shards_total`: total shards in the manifest (sharded backend).
     pub shards_total: Arc<Gauge>,
+    /// `remote_scatter_us`: writing one scatter wave to every live remote
+    /// shard socket (the `RemoteRouter`'s request fan-out).
+    pub remote_scatter_us: Arc<Histogram>,
+    /// `remote_merge_us`: collecting + merging one batch's shard replies.
+    pub remote_merge_us: Arc<Histogram>,
+    /// `remote_probe_us`: one shard health probe round trip (`info` ping).
+    pub remote_probe_us: Arc<Histogram>,
+    /// `remote_probe_failures_total`: failed shard health probes.
+    pub remote_probe_failures: Arc<Counter>,
+    /// `remote_reconnects_total`: shard query connections re-established.
+    pub remote_reconnects: Arc<Counter>,
+    /// `remote_shard_errors_total`: shard socket errors / EOFs mid-query.
+    pub remote_shard_errors: Arc<Counter>,
+    /// `remote_deadline_expired_total`: scatter waves cut off by the
+    /// per-shard deadline (answers degraded to `partial:true`).
+    pub remote_deadline_expired: Arc<Counter>,
+    /// `remote_gen_conflicts_total`: merges refused because shard replies
+    /// carried mixed engine generations (mid-push fleet).
+    pub remote_gen_conflicts: Arc<Counter>,
     /// `pool_workers`: worker threads in the most recent `WorkerPool`.
     pub pool_workers: Arc<Gauge>,
     /// `pool_dispatches_total`: parallel jobs dispatched to a `WorkerPool`.
@@ -431,6 +450,14 @@ pub fn hot() -> &'static Hot {
             engine_generation: r.gauge("engine_generation", "generation of the currently served engine"),
             shards_live: r.gauge("shards_live", "shards currently answering"),
             shards_total: r.gauge("shards_total", "total shards in the manifest"),
+            remote_scatter_us: r.histogram("remote_scatter_us", "scatter wave write to remote shards"),
+            remote_merge_us: r.histogram("remote_merge_us", "collect + merge of remote shard replies"),
+            remote_probe_us: r.histogram("remote_probe_us", "shard health probe round trip"),
+            remote_probe_failures: r.counter("remote_probe_failures_total", "failed shard health probes"),
+            remote_reconnects: r.counter("remote_reconnects_total", "shard query connections re-established"),
+            remote_shard_errors: r.counter("remote_shard_errors_total", "shard socket errors mid-query"),
+            remote_deadline_expired: r.counter("remote_deadline_expired_total", "scatter waves cut off by the deadline"),
+            remote_gen_conflicts: r.counter("remote_gen_conflicts_total", "merges refused on mixed shard generations"),
             pool_workers: r.gauge("pool_workers", "worker threads in the most recent pool"),
             pool_dispatches: r.counter("pool_dispatches_total", "parallel jobs dispatched to a worker pool"),
             train_epochs: r.counter("train_epochs_total", "training epochs completed"),

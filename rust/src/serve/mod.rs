@@ -47,6 +47,16 @@
 //!   merged draws distributed identically (per-shard partition masses
 //!   compose exactly), down shards degrade to explicitly-flagged partial
 //!   answers (DESIGN.md §10).
+//! * [`remote`] (unix) — the **multi-process** scatter-gather tier: a
+//!   [`remote::RemoteRouter`] that speaks the same line-delimited JSON
+//!   protocol to per-shard `midx serve --shard-id` processes over
+//!   non-blocking sockets driven by `poll(2)` — scatter topk / mass /
+//!   sample to every live shard, merge under a per-shard deadline with
+//!   the established `partial:true` degradation, health-probe dead shards
+//!   back in with backoff, and pin merges on the shards' engine
+//!   generations so a fleet mid-`{"op":"update"}` push never blends two
+//!   models into one answer (DESIGN.md §12). Also a [`query::Backend`],
+//!   so the batcher / reactor / stdin frontends serve it unchanged.
 //!
 //! Snapshots cover the static samplers too (uniform, unigram — the alias
 //! table persists verbatim), so a served engine can attach one as a cheap
@@ -63,6 +73,8 @@
 pub mod query;
 #[cfg(unix)]
 pub mod reactor;
+#[cfg(unix)]
+pub mod remote;
 pub mod server;
 pub mod shard;
 pub mod snapshot;
@@ -71,7 +83,12 @@ pub mod update;
 pub use query::{Backend, MicroBatcher, QueryEngine, Reply, Request};
 #[cfg(unix)]
 pub use reactor::{serve_reactor, Reactor, ReactorConfig, ReactorCounters, ReactorHandle};
-pub use server::{handle_line, metrics_json, serve_stdin, serve_tcp, LatencyRecorder, UpdateSession};
+#[cfg(unix)]
+pub use remote::{RemoteConfig, RemoteRouter};
+pub use server::{
+    handle_line, metrics_json, serve_stdin, serve_tcp, serve_tcp_listener, LatencyRecorder,
+    UpdateSession,
+};
 pub use shard::{export_shards, shard_ranges, slice_snapshot, ShardManifest, ShardRouter};
 pub use snapshot::{AliasParts, LoadMode, Snapshot, SnapshotKind};
 pub use update::{Delta, UpdateConfig, UpdateHub, UpdateMode};

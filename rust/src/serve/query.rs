@@ -133,6 +133,12 @@ pub struct QueryEngine {
     /// monotone core version: 0 for a fresh load, +1 per applied live
     /// update (reported by the `info` op, pinned by the update harness)
     generation: u64,
+    /// global id of this engine's first class when it serves a manifest
+    /// slice (the `shard_lo` snapshot meta written by `export --shards`);
+    /// `None` for a whole-space snapshot. The remote scatter-gather router
+    /// reads it from the `info` op to place each shard process in the
+    /// global class space.
+    shard_lo: Option<usize>,
 }
 
 impl QueryEngine {
@@ -164,6 +170,7 @@ impl QueryEngine {
             ),
             _ => unreachable!("static kinds rejected above"),
         };
+        let shard_lo = snap.meta.get("shard_lo").and_then(|j| j.as_usize());
         let threads = if threads == 0 { auto_threads() } else { threads };
         let pool = if threads > 1 { Some(WorkerPool::new(threads)) } else { None };
         Ok(QueryEngine {
@@ -179,7 +186,14 @@ impl QueryEngine {
             fallback: None,
             fallback_snap: None,
             generation: 0,
+            shard_lo,
         })
+    }
+
+    /// Global id of the first class this engine serves when it is a
+    /// manifest slice (`None` for a whole-space snapshot).
+    pub fn shard_lo(&self) -> Option<usize> {
+        self.shard_lo
     }
 
     /// Monotone core version: 0 for a fresh load, advanced by one each
@@ -565,13 +579,14 @@ impl QueryEngine {
     /// Execute one request with per-thread buffers (the unit of work the
     /// [`MicroBatcher`] strides across pool lanes).
     fn execute(&self, req: &Request, scratch: &mut Scratch, tk: &mut TopKScratch) -> Reply {
+        let base = Reply { generation: self.generation, ..Reply::default() };
         match req {
             Request::TopK { q, k } => {
                 let k = (*k).min(self.n);
                 let mut ids = vec![0u32; k];
                 let mut scores = vec![0.0f32; k];
                 self.top_k_into(q, k, scratch, tk, &mut ids, &mut scores);
-                Reply { ids, scores, partial: false }
+                Reply { ids, scores, ..base }
             }
             Request::Sample { q, m, seed, fallback } => {
                 let core = if *fallback {
@@ -582,9 +597,7 @@ impl QueryEngine {
                         // that skips that guard gets an empty reply — a
                         // panic here would kill the shared dispatcher
                         // thread and wedge every other caller
-                        None => {
-                            return Reply { ids: Vec::new(), scores: Vec::new(), partial: false }
-                        }
+                        None => return base,
                     }
                 } else {
                     self.served.core()
@@ -597,7 +610,14 @@ impl QueryEngine {
                     let mut rng = Rng::stream(*seed, 0);
                     core.sample_into(q, u32::MAX, &mut rng, scratch, &mut ids, &mut log_q);
                 }
-                Reply { ids, scores: log_q, partial: false }
+                Reply { ids, scores: log_q, ..base }
+            }
+            Request::Mass { q } => {
+                // always the exact f32 mass (never the u8 fast path): this
+                // is the scatter weight the distributed tier composes, so
+                // it must equal what ShardRouter::sample_row would compute
+                let mass = self.log_partition_mass(q, scratch);
+                Reply { scores: vec![mass], ..base }
             }
         }
     }
@@ -670,6 +690,13 @@ pub trait Backend: Send + Sync {
     /// `(live, total)` shard counts — `(1, 1)` for a monolithic engine. A
     /// backend with `live < total` answers with the partial-result flag set.
     fn shard_info(&self) -> (usize, usize);
+    /// Global id of the backend's first class when it serves a manifest
+    /// slice of a larger class space (a `--shard-id` process). `None` for
+    /// a backend that serves the whole space. Reported by the `info` op so
+    /// the remote router can place each shard process globally.
+    fn shard_lo(&self) -> Option<usize> {
+        None
+    }
     /// The concrete [`QueryEngine`] when this backend is one. The live
     /// update path ([`crate::serve::update::UpdateHub`]) requires it;
     /// sharded backends return `None` and update pushes are rejected with
@@ -722,6 +749,10 @@ impl Backend for QueryEngine {
         (1, 1)
     }
 
+    fn shard_lo(&self) -> Option<usize> {
+        self.shard_lo
+    }
+
     fn as_engine(&self) -> Option<&QueryEngine> {
         Some(self)
     }
@@ -764,15 +795,24 @@ pub enum Request {
         /// serving frontends reject such requests before enqueueing)
         fallback: bool,
     },
+    /// Natural log of the served proposal's unnormalized partition mass
+    /// `Z(q)` — the scatter weight of the distributed serving tier (see
+    /// [`QueryEngine::log_partition_mass`]). The reply carries the mass as
+    /// the single element of `scores` with `ids` empty.
+    Mass {
+        /// query vector [D]
+        q: Vec<f32>,
+    },
 }
 
 /// One serving reply: class ids plus their exact scores (top-k) or log
-/// proposal probabilities (sample).
-#[derive(Clone, Debug, PartialEq)]
+/// proposal probabilities (sample), or the log partition mass (mass).
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Reply {
-    /// class ids, best-first (top-k) or draw order (sample)
+    /// class ids, best-first (top-k) or draw order (sample); empty for mass
     pub ids: Vec<u32>,
-    /// exact scores (top-k) or log q (sample), aligned with `ids`
+    /// exact scores (top-k), log q (sample), or the single log partition
+    /// mass value (mass), aligned with `ids` where ids are present
     pub scores: Vec<f32>,
     /// set when the answer covers only part of the class space (a sharded
     /// backend with one or more shards down — see `serve::shard`): the
@@ -780,6 +820,16 @@ pub struct Reply {
     /// could not be considered. Never silently wrong: degraded answers are
     /// always flagged, and the frontends surface `"partial":true`.
     pub partial: bool,
+    /// engine generation the answer was computed under (0 for a cold load,
+    /// +1 per applied live update). The remote scatter-gather router pins
+    /// merges on it: shard answers from different generations are never
+    /// blended into one reply.
+    pub generation: u64,
+    /// a per-request failure the backend wants surfaced as an error reply
+    /// instead of data (e.g. the remote router's mixed-generation refusal
+    /// or a whole-fleet scatter failure); frontends render
+    /// `{"ok":false,"error":...}` when set and ignore the data fields
+    pub error: Option<String>,
 }
 
 /// How a queued request's reply gets back to its caller: a channel for
@@ -1197,10 +1247,10 @@ mod tests {
             let (i, reply) = h.join().unwrap();
             let want = if i % 2 == 0 {
                 let (ids, scores) = eng.top_k_batch(&queries[i], 4);
-                Reply { ids, scores, partial: false }
+                Reply { ids, scores, ..Reply::default() }
             } else {
                 let (ids, log_q) = eng.sample(&queries[i], 6, 1000 + i as u64);
-                Reply { ids, scores: log_q, partial: false }
+                Reply { ids, scores: log_q, ..Reply::default() }
             };
             assert_eq!(reply, want, "request {i} diverged under coalescing");
         }

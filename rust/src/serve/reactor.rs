@@ -63,28 +63,30 @@ use crate::util::Json;
 // ---------------------------------------------------------------------------
 // poll(2) FFI — the only platform interface the reactor needs.
 
-/// `struct pollfd` (identical layout on every supported unix).
+/// `struct pollfd` (identical layout on every supported unix). Shared
+/// with [`crate::serve::remote`], whose scatter loop drives the same
+/// syscall over its shard sockets.
 #[repr(C)]
-struct PollFd {
-    fd: RawFd,
-    events: i16,
-    revents: i16,
+pub(crate) struct PollFd {
+    pub(crate) fd: RawFd,
+    pub(crate) events: i16,
+    pub(crate) revents: i16,
 }
 
 #[cfg(target_os = "linux")]
-type NfdsT = std::os::raw::c_ulong;
+pub(crate) type NfdsT = std::os::raw::c_ulong;
 #[cfg(all(unix, not(target_os = "linux")))]
-type NfdsT = std::os::raw::c_uint;
+pub(crate) type NfdsT = std::os::raw::c_uint;
 
 extern "C" {
-    fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+    pub(crate) fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
 }
 
-const POLLIN: i16 = 0x001;
-const POLLOUT: i16 = 0x004;
-const POLLERR: i16 = 0x008;
-const POLLHUP: i16 = 0x010;
-const POLLNVAL: i16 = 0x020;
+pub(crate) const POLLIN: i16 = 0x001;
+pub(crate) const POLLOUT: i16 = 0x004;
+pub(crate) const POLLERR: i16 = 0x008;
+pub(crate) const POLLHUP: i16 = 0x010;
+pub(crate) const POLLNVAL: i16 = 0x020;
 
 /// Write-buffer high watermark: past this many unflushed bytes the reactor
 /// stops reading the connection, letting TCP flow control push back on the
@@ -800,7 +802,7 @@ fn process_line(
                 },
             },
         },
-        ParsedOp::Query { req, sample } => {
+        ParsedOp::Query { req, kind, gen } => {
             let t0 = Instant::now();
             let tx = comp_tx.clone();
             let rec = Arc::clone(rec);
@@ -810,11 +812,11 @@ fn process_line(
                 let us = t0.elapsed().as_micros() as u64;
                 rec.record(us);
                 sp.mark("execute");
-                let line = render_reply(&reply, if sample { "log_q" } else { "scores" }, us);
+                let line = render_reply(&reply, kind, gen, us);
                 let line = line.to_string();
                 hot().phase_serialize.record(sp.mark("serialize"));
                 if span::slow_threshold_us().is_some() {
-                    maybe_log_slow(if sample { "sample" } else { "topk" }, &sp, &*bat.engine());
+                    maybe_log_slow(kind.op_name(), &sp, &*bat.engine());
                 }
                 let _ = tx.send(Completion { conn: id, seq, line });
                 wake.wake();

@@ -8,6 +8,8 @@
 //! ← {"ok":true,"ids":[17,3,44,9,20],"scores":[1.91,…],"us":142}
 //! → {"op":"sample","q":[0.1,0.2,0.3,0.4],"m":8,"seed":42}
 //! ← {"ok":true,"ids":[…],"log_q":[…],"us":97}
+//! → {"op":"mass","q":[0.1,0.2,0.3,0.4]}
+//! ← {"ok":true,"log_mass":3.217,"us":61}
 //! → {"op":"info"}
 //! ← {"ok":true,"kind":"midx-rq","n":10000,"d":16,"workers":8}
 //! → {"op":"stats"}
@@ -140,7 +142,7 @@ fn ok_obj() -> std::collections::BTreeMap<String, Json> {
 /// `unknown op` error strings and the serve banners are generated from
 /// this one table, so adding an op (as `metrics` was) cannot drift them
 /// out of sync.
-const OPS: [&str; 6] = ["topk", "sample", "info", "stats", "metrics", "update"];
+const OPS: [&str; 7] = ["topk", "sample", "mass", "info", "stats", "metrics", "update"];
 
 /// The quoted op list used by both error strings: `"topk" | "sample" | …`.
 fn op_list() -> String {
@@ -167,6 +169,29 @@ fn parse_query(req: &Json, d: usize) -> Result<Vec<f32>, String> {
     Ok(v)
 }
 
+/// Which query op a [`ParsedOp::Query`] came from — decides how the reply
+/// renders (the score field name, or the `mass` scalar form).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryKind {
+    /// `topk`: scores render under `"scores"`.
+    TopK,
+    /// `sample`: scores render under `"log_q"`.
+    Sample,
+    /// `mass`: the single score renders as the `"log_mass"` scalar.
+    Mass,
+}
+
+impl QueryKind {
+    /// The op name, for the slow-query log.
+    pub fn op_name(self) -> &'static str {
+        match self {
+            QueryKind::TopK => "topk",
+            QueryKind::Sample => "sample",
+            QueryKind::Mass => "mass",
+        }
+    }
+}
+
 /// A parsed request line, classified by how it must be answered. The
 /// blocking stdin/TCP frontends and the event-driven reactor share this
 /// parser, so the protocol (and every validation error) is identical on
@@ -186,9 +211,12 @@ pub enum ParsedOp {
     Query {
         /// the request to enqueue
         req: Request,
-        /// true for `sample` (the reply's score field is `log_q`, not
-        /// `scores`)
-        sample: bool,
+        /// which op it was (decides the reply's rendering)
+        kind: QueryKind,
+        /// true when the request carried `"gen":true` — the reply then
+        /// reports the engine generation it was computed under (the remote
+        /// scatter-gather router pins merges on it)
+        gen: bool,
     },
     /// `{"op":"update", …}` — one frame of a live model update. Stateful:
     /// frontends route it through an [`UpdateSession`] (blocking paths) or
@@ -218,6 +246,10 @@ fn parse_op_inner(engine: &dyn Backend, line: &str) -> ParsedOp {
         Some(op) => op.to_string(),
         None => return ParsedOp::Reply(err_json(&format!("missing field 'op' ({})", op_list()))),
     };
+    // `"gen":true` asks for the engine generation in the reply; absent by
+    // default so existing replies (and everything byte-diffing them) are
+    // unchanged
+    let gen = matches!(req.get("gen"), Some(Json::Bool(true)));
     match op.as_str() {
         "info" => ParsedOp::Info,
         "stats" => ParsedOp::Stats,
@@ -228,7 +260,14 @@ fn parse_op_inner(engine: &dyn Backend, line: &str) -> ParsedOp {
                 Err(e) => return ParsedOp::Reply(err_json(&e)),
             };
             let k = req.get("k").and_then(|v| v.as_usize()).unwrap_or(10);
-            ParsedOp::Query { req: Request::TopK { q, k }, sample: false }
+            ParsedOp::Query { req: Request::TopK { q, k }, kind: QueryKind::TopK, gen }
+        }
+        "mass" => {
+            let q = match parse_query(&req, engine.dim()) {
+                Ok(q) => q,
+                Err(e) => return ParsedOp::Reply(err_json(&e)),
+            };
+            ParsedOp::Query { req: Request::Mass { q }, kind: QueryKind::Mass, gen }
         }
         "sample" => {
             let q = match parse_query(&req, engine.dim()) {
@@ -258,7 +297,7 @@ fn parse_op_inner(engine: &dyn Backend, line: &str) -> ParsedOp {
                     "no fallback proposal loaded (serve with --fallback SNAPSHOT)",
                 ));
             }
-            ParsedOp::Query { req: Request::Sample { q, m, seed, fallback }, sample: true }
+            ParsedOp::Query { req: Request::Sample { q, m, seed, fallback }, kind: QueryKind::Sample, gen }
         }
         "update" => match parse_update_frame(&req) {
             Ok(frame) => ParsedOp::Update(frame),
@@ -284,6 +323,11 @@ pub fn info_json(engine: &dyn Backend) -> Json {
     let (live, total) = engine.shard_info();
     m.insert("shards".into(), Json::Num(total as f64));
     m.insert("shards_live".into(), Json::Num(live as f64));
+    // only present on a --shard-id slice process: the remote router reads
+    // it to place this shard in the global class space
+    if let Some(lo) = engine.shard_lo() {
+        m.insert("shard_lo".into(), Json::Num(lo as f64));
+    }
     match engine.fallback_kind() {
         Some(kind) => m.insert("fallback".into(), Json::Str(kind.name().to_string())),
         None => m.insert("fallback".into(), Json::Null),
@@ -354,14 +398,14 @@ fn dispatch_parsed(
         ParsedOp::Info => (info_json(&batcher.engine()), None),
         ParsedOp::Stats => (stats_json(batcher, rec), None),
         ParsedOp::Metrics => (metrics_json(), None),
-        ParsedOp::Query { req, sample } => {
+        ParsedOp::Query { req, kind, gen } => {
             let t0 = Instant::now();
             let reply = batcher.submit(req);
             let us = t0.elapsed().as_micros() as u64;
             rec.record(us);
             sp.mark("execute");
-            let j = render_reply(&reply, if sample { "log_q" } else { "scores" }, us);
-            (j, Some(if sample { "sample" } else { "topk" }))
+            let j = render_reply(&reply, kind, gen, us);
+            (j, Some(kind.op_name()))
         }
         ParsedOp::Update(_) => (
             err_json("this frontend path is stateless — updates need a connection session"),
@@ -464,15 +508,40 @@ impl UpdateSession {
     }
 }
 
-pub(crate) fn render_reply(reply: &Reply, score_field: &str, us: u64) -> Json {
+pub(crate) fn render_reply(reply: &Reply, kind: QueryKind, gen: bool, us: u64) -> Json {
+    // a backend-level per-request failure (e.g. the remote router's
+    // mixed-generation refusal) renders as an error reply, not data
+    if let Some(e) = &reply.error {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("ok".to_string(), Json::Bool(false));
+        m.insert("error".to_string(), Json::Str(e.clone()));
+        m.insert("us".to_string(), Json::Num(us as f64));
+        return Json::Obj(m);
+    }
     let mut m = ok_obj();
-    m.insert("ids".into(), from_u32s(&reply.ids));
-    m.insert(score_field.into(), from_f32s(&reply.scores));
+    match kind {
+        QueryKind::TopK => {
+            m.insert("ids".into(), from_u32s(&reply.ids));
+            m.insert("scores".into(), from_f32s(&reply.scores));
+        }
+        QueryKind::Sample => {
+            m.insert("ids".into(), from_u32s(&reply.ids));
+            m.insert("log_q".into(), from_f32s(&reply.scores));
+        }
+        QueryKind::Mass => {
+            let mass = reply.scores.first().copied().unwrap_or(0.0);
+            m.insert("log_mass".into(), Json::Num(mass as f64));
+        }
+    }
     m.insert("us".into(), Json::Num(us as f64));
     // only present when degraded (a sharded backend with a shard down), so
     // healthy replies — and everything diffing them — are unchanged
     if reply.partial {
         m.insert("partial".into(), Json::Bool(true));
+    }
+    // only present when the request asked with "gen":true, same reason
+    if gen {
+        m.insert("generation".into(), Json::Num(reply.generation as f64));
     }
     Json::Obj(m)
 }
@@ -505,11 +574,30 @@ pub fn serve_stdin(
     Ok(())
 }
 
+/// Socket write timeout for the legacy thread-per-connection frontend. A
+/// client that stops draining its socket used to pin its serving thread in
+/// a blocking `write_all` forever — and with it any mid-update
+/// [`UpdateAssembly`] buffer the session held. Past this long with no
+/// write progress the connection is dropped (and the session's partial
+/// update state with it).
+pub const LEGACY_WRITE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
+
+/// True when an I/O error is the socket write timeout firing (Linux
+/// reports `SO_SNDTIMEO` expiry as `EAGAIN` → `WouldBlock`; other
+/// platforms use `TimedOut`).
+fn is_write_stall(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
 fn serve_conn(
     hub: &Arc<UpdateHub>,
     rec: &LatencyRecorder,
     stream: TcpStream,
+    write_timeout: std::time::Duration,
 ) -> std::io::Result<()> {
+    // a stalled client must not pin this thread (or leak a mid-update
+    // assembly) forever: give every reply write a deadline
+    stream.set_write_timeout(Some(write_timeout))?;
     let mut sess = UpdateSession::new(Arc::clone(hub));
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -530,8 +618,10 @@ fn serve_conn(
 /// connections funneling into the shared [`MicroBatcher`] (which is what
 /// coalesces concurrent callers into single batched dispatches). Runs
 /// until the process is killed; per-request latency is queryable live via
-/// `{"op":"stats"}`. All connections share one [`UpdateHub`], so
-/// concurrent `{"op":"update"}` pushes serialize and apply one at a time.
+/// `{"op":"stats"}`. All connections share one [`UpdateHub`] built from
+/// `update` (the parsed `--update-tol` / `--update-iters` /
+/// `--update-max-bytes` flags), so concurrent `{"op":"update"}` pushes
+/// serialize, apply one at a time, and respect the configured limits.
 ///
 /// This is the **legacy** frontend (and the non-unix fallback): it spends
 /// a thread per socket. Production serving goes through the event-driven
@@ -541,17 +631,36 @@ pub fn serve_tcp(
     batcher: Arc<MicroBatcher>,
     rec: Arc<LatencyRecorder>,
     addr: &str,
+    update: UpdateConfig,
 ) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     log::info(&format!("serving on {addr} (line-delimited JSON; op {})", op_names()));
-    let hub = UpdateHub::new(batcher, UpdateConfig::default());
+    serve_tcp_listener(listener, batcher, rec, update)
+}
+
+/// The accept loop behind [`serve_tcp`], taking an already-bound listener
+/// (tests and embedders bind `127.0.0.1:0` themselves to learn the port).
+pub fn serve_tcp_listener(
+    listener: TcpListener,
+    batcher: Arc<MicroBatcher>,
+    rec: Arc<LatencyRecorder>,
+    update: UpdateConfig,
+) -> Result<()> {
+    let hub = UpdateHub::new(batcher, update);
     for stream in listener.incoming() {
         let stream = stream.context("accepting connection")?;
         let hub = Arc::clone(&hub);
         let rec = Arc::clone(&rec);
         std::thread::spawn(move || {
-            if let Err(e) = serve_conn(&hub, &rec, stream) {
-                log::warn(&format!("connection error: {e}"));
+            if let Err(e) = serve_conn(&hub, &rec, stream, LEGACY_WRITE_TIMEOUT) {
+                if is_write_stall(&e) {
+                    log::warn(&format!(
+                        "dropping stalled client: no write progress in {:?} (mid-update state discarded)",
+                        LEGACY_WRITE_TIMEOUT
+                    ));
+                } else {
+                    log::warn(&format!("connection error: {e}"));
+                }
             }
         });
     }
@@ -643,6 +752,108 @@ mod tests {
         );
         let unknown = handle_line(&b, &rec, r#"{"op":"warp"}"#);
         assert!(unknown.contains(r#""metrics""#), "{unknown}");
+    }
+
+    #[test]
+    fn mass_and_generation_protocol() {
+        let (b, d) = batcher();
+        let rec = LatencyRecorder::new();
+        let q: Vec<String> = (0..d).map(|j| format!("0.{}", j + 1)).collect();
+        let strip = |s: &str| s.split(r#","us":"#).next().unwrap().to_string();
+
+        // mass answers the scalar log partition mass, deterministically
+        let mass = handle_line(&b, &rec, &format!(r#"{{"op":"mass","q":[{}]}}"#, q.join(",")));
+        assert!(mass.contains(r#""ok":true"#) && mass.contains(r#""log_mass":"#), "{mass}");
+        let mass2 = handle_line(&b, &rec, &format!(r#"{{"op":"mass","q":[{}]}}"#, q.join(",")));
+        assert_eq!(strip(&mass), strip(&mass2));
+
+        // dimension-checked like every query op
+        let bad = handle_line(&b, &rec, r#"{"op":"mass","q":[1.0]}"#);
+        assert!(bad.contains(r#""ok":false"#), "{bad}");
+
+        // "gen":true stamps the answering generation; absent by default so
+        // existing replies (and everything byte-diffing them) are unchanged
+        let with = handle_line(
+            &b,
+            &rec,
+            &format!(r#"{{"op":"topk","q":[{}],"k":3,"gen":true}}"#, q.join(",")),
+        );
+        assert!(with.contains(r#""generation":0"#), "{with}");
+        let without =
+            handle_line(&b, &rec, &format!(r#"{{"op":"topk","q":[{}],"k":3}}"#, q.join(",")));
+        assert!(!without.contains("generation"), "{without}");
+        assert_eq!(strip(&with).replace(r#","generation":0"#, ""), strip(&without));
+    }
+
+    #[test]
+    fn legacy_tcp_honors_update_config() {
+        // regression for the serve_tcp caller that dropped the parsed
+        // --update-max-bytes: the legacy frontend must enforce the limit
+        // it was handed, not UpdateConfig::default()
+        let (b, _) = batcher();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let cfg = UpdateConfig { max_bytes: 64, ..UpdateConfig::default() };
+        std::thread::spawn({
+            let batcher = Arc::new(b);
+            let rec = Arc::new(LatencyRecorder::new());
+            move || {
+                let _ = serve_tcp_listener(listener, batcher, rec, cfg);
+            }
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        writer
+            .write_all(
+                b"{\"op\":\"update\",\"action\":\"begin\",\"mode\":\"snapshot\",\"bytes\":100000,\"chunks\":1}\n",
+            )
+            .unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(
+            line.contains(r#""ok":false"#) && line.contains("server limit"),
+            "oversize begin must be rejected by the configured limit: {line}"
+        );
+    }
+
+    #[test]
+    fn stalled_writer_drops_connection() {
+        // a client that stops draining its socket must expire the write
+        // timeout and free the serving thread, not pin it forever
+        let (b, d) = batcher();
+        let batcher = Arc::new(b);
+        let rec = LatencyRecorder::new();
+        let hub = UpdateHub::new(Arc::clone(&batcher), UpdateConfig::default());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let t0 = Instant::now();
+        let handle = std::thread::spawn(move || {
+            serve_conn(&hub, &rec, server, Duration::from_millis(200))
+        });
+        // pipeline max-size sample replies (~1.5 MB each) and never read:
+        // the socket buffers fill and the server's reply write stalls
+        let q: Vec<String> = (0..d).map(|j| format!("0.{}", j + 1)).collect();
+        let line = format!(
+            "{{\"op\":\"sample\",\"q\":[{}],\"m\":{},\"seed\":1}}\n",
+            q.join(","),
+            MAX_DRAWS_PER_REQUEST
+        );
+        let mut w = client.try_clone().unwrap();
+        w.set_write_timeout(Some(Duration::from_millis(200))).unwrap();
+        for _ in 0..16 {
+            if w.write_all(line.as_bytes()).is_err() {
+                break;
+            }
+        }
+        let res = handle.join().unwrap();
+        let e = res.expect_err("stalled client must expire the write timeout");
+        assert!(is_write_stall(&e), "unexpected error kind: {e}");
+        assert!(t0.elapsed() < Duration::from_secs(30), "drop must be bounded by the timeout");
+        drop(client);
     }
 
     #[test]

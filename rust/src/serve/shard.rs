@@ -51,7 +51,7 @@ use crate::util::{Json, Rng};
 /// Salt folded into the per-(row, shard) RNG stream for the delegated
 /// within-shard draws, so the shard-choice stream (`Rng::stream(seed, row)`)
 /// and the draw streams never collide.
-const SHARD_DRAW_SALT: u64 = 0xA076_1D64_78BD_642F;
+pub(crate) const SHARD_DRAW_SALT: u64 = 0xA076_1D64_78BD_642F;
 
 /// Contiguous even split of `n` classes into `shards` ranges `[lo, hi)`:
 /// the first `n % shards` shards get one extra class. Errors when `shards`
@@ -78,7 +78,7 @@ pub fn shard_ranges(n: usize, shards: usize) -> Result<Vec<(usize, usize)>> {
 /// Check that `ranges` is a contiguous cover of `0..n` (sorted, no
 /// overlap, no gap). `allow_empty` permits `lo == hi` ranges (in-memory
 /// degenerate splits); manifests never contain them.
-fn validate_cover(ranges: &[(usize, usize)], n: usize, allow_empty: bool) -> Result<()> {
+pub(crate) fn validate_cover(ranges: &[(usize, usize)], n: usize, allow_empty: bool) -> Result<()> {
     if ranges.is_empty() {
         bail!("no shard ranges given");
     }
@@ -714,26 +714,46 @@ impl ShardRouter {
 
     /// Execute one protocol request (the unit the dispatcher batches).
     fn execute(&self, req: &Request, scratch: &mut Scratch) -> Reply {
-        let partial = self.degraded();
+        let base = Reply { partial: self.degraded(), ..Reply::default() };
         match req {
             Request::TopK { q, k } => {
                 let (pairs, _) = self.top_k(q, *k);
                 let (ids, scores) = pairs.into_iter().unzip();
-                Reply { ids, scores, partial }
+                Reply { ids, scores, ..base }
             }
             Request::Sample { q, m, seed, fallback } => {
                 // the frontends reject fallback draws for sharded backends
                 // (fallback_kind() is None); a direct caller degrades to an
                 // empty reply, same as the engine's unattached-fallback path
                 if *fallback || self.slots.iter().all(|s| s.engine.is_none()) {
-                    return Reply { ids: Vec::new(), scores: Vec::new(), partial };
+                    return base;
                 }
                 let mut ids = vec![0u32; *m];
                 let mut log_q = vec![0.0f32; *m];
                 let t0 = Instant::now();
                 self.sample_row(q, *m, *seed, 0, &mut ids, &mut log_q, scratch);
                 hot().phase_scatter.record(t0.elapsed().as_micros() as u64);
-                Reply { ids, scores: log_q, partial }
+                Reply { ids, scores: log_q, ..base }
+            }
+            Request::Mass { q } => {
+                // ln Σ_s Z_s over the live shards, by the same max-shifted
+                // LSE sample_row scatters with — so a router answering the
+                // mass op composes exactly like its own shard choice does
+                let mut lmax = f32::NEG_INFINITY;
+                let mut masses = Vec::with_capacity(self.slots.len());
+                for s in &self.slots {
+                    if let Some(eng) = &s.engine {
+                        let l = eng.log_partition_mass(q, scratch);
+                        lmax = lmax.max(l);
+                        masses.push(l);
+                    }
+                }
+                if masses.is_empty() {
+                    return base;
+                }
+                let total: f64 = masses.iter().map(|&l| ((l - lmax) as f64).exp()).sum();
+                let mass = lmax + total.ln() as f32;
+                Reply { scores: vec![mass], ..base }
             }
         }
     }
@@ -742,7 +762,7 @@ impl ShardRouter {
 /// Linear-scan categorical pick over unnormalized f64 weights that never
 /// lands on a zero weight (a down/empty shard must never be chosen, even
 /// at the `u == 0` boundary the generic `Rng::categorical` can hit).
-fn pick_weighted(rng: &mut Rng, weights: &[f64], total: f64) -> usize {
+pub(crate) fn pick_weighted(rng: &mut Rng, weights: &[f64], total: f64) -> usize {
     debug_assert!(total > 0.0);
     let mut u = rng.next_f64() * total;
     let mut last = usize::MAX;

@@ -567,7 +567,9 @@ impl UpdateHub {
             let old = backend.as_engine().ok_or_else(|| {
                 anyhow!(
                     "live updates need a monolithic engine — this server is sharded; \
-                     re-export the shards and restart (or serve unsharded) to update"
+                     push the update to each shard process individually (the remote \
+                     router pins merges on generation while a fleet push propagates), \
+                     or re-export the shards and restart (or serve unsharded) to update"
                 )
             })?;
             let (snap, outcome) = match mode {

@@ -1,0 +1,318 @@
+//! Multi-process remote serving harness: real `midx serve --shard-id`
+//! child processes (the compiled binary, over an `export --shards`
+//! manifest on disk) behind an in-process [`RemoteRouter`].
+//!
+//! This is the network analogue of `serve_shard.rs`, and it pins the same
+//! contracts end-to-end through actual sockets and process boundaries:
+//!
+//! * merged top-k **bit-identical** to the monolithic engine at full beam
+//!   (scores cross the wire as shortest-round-trip JSON numbers, so not a
+//!   single bit may move);
+//! * merged draws **distribution-identical** — a χ² GOF against the exact
+//!   softmax over exact-midx shards;
+//! * a killed shard process degrades answers to `partial:true` within the
+//!   scatter deadline instead of hanging or failing the query;
+//! * a live-update push that has reached only part of the fleet makes
+//!   merges refuse (mixed generations) until every shard has applied it.
+//!
+//! Unix-only, like the router itself (both ride the `poll(2)` loop).
+#![cfg(unix)]
+
+mod common;
+
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use common::{q_vec, snapshot, snapshot_of};
+use midx::sampler::SamplerKind;
+use midx::serve::{export_shards, Backend, QueryEngine, RemoteConfig, RemoteRouter, Request};
+use midx::stats::divergence::{chi_square_critical, chi_square_gof, softmax_dist};
+
+/// A running `midx serve --shard-id` child; killed on drop so a failing
+/// assertion never leaks server processes.
+struct ShardProc {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for ShardProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// A per-test scratch directory for the exported shard fleet.
+fn fleet_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("midx-serve-remote-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Spawn one shard process on an ephemeral port and wait for its
+/// "serving on ADDR" banner. Stderr keeps draining on a side thread so
+/// the child can never block on a full pipe.
+fn spawn_shard(manifest: &Path, id: usize) -> ShardProc {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_midx"))
+        .args([
+            "serve",
+            "--snapshot",
+            manifest.to_str().unwrap(),
+            "--shard-id",
+            &id.to_string(),
+            "--tcp",
+            "127.0.0.1:0",
+            "--beam",
+            "1000000",
+            "--threads",
+            "1",
+        ])
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawning midx serve shard");
+    let mut reader = BufReader::new(child.stderr.take().unwrap());
+    let mut seen = String::new();
+    let addr = loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("reading shard stderr");
+        assert!(n > 0, "shard {id} exited before announcing an address; stderr:\n{seen}");
+        seen.push_str(&line);
+        if let Some(rest) = line.split("serving on ").nth(1) {
+            break rest.split_whitespace().next().expect("address token").to_string();
+        }
+    };
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while reader.read_line(&mut sink).map(|n| n > 0).unwrap_or(false) {
+            sink.clear();
+        }
+    });
+    ShardProc { child, addr }
+}
+
+/// Export `snap` as an S-shard fleet under a scratch dir, spawn one child
+/// process per shard, and return the running fleet + manifest path.
+fn spawn_fleet(
+    snap: &midx::serve::Snapshot,
+    shards: usize,
+    tag: &str,
+) -> (Vec<ShardProc>, PathBuf) {
+    let dir = fleet_dir(tag);
+    let manifest = dir.join("fleet.midx");
+    export_shards(snap, shards, &manifest).expect("exporting shard fleet");
+    let procs = (0..shards).map(|i| spawn_shard(&manifest, i)).collect();
+    (procs, manifest)
+}
+
+fn router(procs: &[ShardProc], deadline: Duration) -> RemoteRouter {
+    let addrs: Vec<String> = procs.iter().map(|p| p.addr.clone()).collect();
+    RemoteRouter::connect(
+        &addrs,
+        RemoteConfig {
+            deadline,
+            // long probe cadence: tests drive failure + recovery explicitly
+            probe_interval: Duration::from_secs(60),
+            connect_timeout: Duration::from_secs(10),
+        },
+    )
+    .expect("connecting remote router")
+}
+
+fn bits(scores: &[f32]) -> Vec<u32> {
+    scores.iter().map(|s| s.to_bits()).collect()
+}
+
+// -- exactness -------------------------------------------------------------
+
+#[test]
+fn merged_topk_is_bit_identical_to_the_monolithic_engine() {
+    let (n, d, k) = (400usize, 8usize, 10usize);
+    let snap = snapshot(n, d, 0xBEEF);
+    let (procs, _manifest) = spawn_fleet(&snap, 3, "topk");
+    let remote = router(&procs, Duration::from_secs(30));
+    assert_eq!(remote.n_classes(), n);
+    assert_eq!(remote.dim(), d);
+    assert_eq!(remote.shard_info(), (3, 3));
+
+    let mut mono = QueryEngine::new(snap, 1).unwrap();
+    mono.set_beam_factor(usize::MAX);
+
+    let reqs: Vec<Request> =
+        (0..12).map(|c| Request::TopK { q: q_vec(c, 0, d), k }).collect();
+    let replies = remote.run_requests(&reqs);
+    for (c, rep) in replies.iter().enumerate() {
+        assert!(rep.error.is_none(), "query {c}: {:?}", rep.error);
+        assert!(!rep.partial, "query {c}: healthy fleet answered partial");
+        let want = mono.top_k(&q_vec(c, 0, d), k);
+        let want_ids: Vec<u32> = want.iter().map(|&(id, _)| id).collect();
+        let want_scores: Vec<f32> = want.iter().map(|&(_, s)| s).collect();
+        assert_eq!(rep.ids, want_ids, "query {c}: merged ids diverge");
+        assert_eq!(
+            bits(&rep.scores),
+            bits(&want_scores),
+            "query {c}: merged scores are not bit-identical"
+        );
+    }
+}
+
+// -- distribution ----------------------------------------------------------
+
+#[test]
+fn merged_draws_pass_chi_square_against_the_exact_softmax() {
+    // exact-midx shards: each shard's proposal IS its softmax slice and
+    // the masses compose exactly, so merged remote draws must be
+    // indistinguishable from softmax(z·Qᵀ) — even though the draw streams
+    // themselves differ from the in-process router (wire seeds are capped
+    // at 2^53).
+    let (n, d) = (48usize, 8usize);
+    let snap = snapshot_of(SamplerKind::ExactMidx, n, d, 0xE5A7);
+    let z = q_vec(7, 1, d);
+    let probs = softmax_dist(&z, &snap.table, n, d);
+    let (procs, _manifest) = spawn_fleet(&snap, 3, "chi2");
+    let remote = router(&procs, Duration::from_secs(30));
+
+    // two pooled requests keep every per-shard quota far under the wire's
+    // 2^16 draws-per-request cap even if the mass skews to one shard
+    const PER_REQ: usize = 48_000;
+    let reqs = vec![
+        Request::Sample { q: z.clone(), m: PER_REQ, seed: 0xFEED, fallback: false },
+        Request::Sample { q: z.clone(), m: PER_REQ, seed: 0xF00D, fallback: false },
+    ];
+    let replies = remote.run_requests(&reqs);
+    let mut counts = vec![0u64; n];
+    let mut checked = 0usize;
+    for rep in &replies {
+        assert!(rep.error.is_none(), "{:?}", rep.error);
+        assert!(!rep.partial, "healthy fleet answered partial");
+        assert_eq!(rep.ids.len(), PER_REQ, "every draw must be answered");
+        for (t, &id) in rep.ids.iter().enumerate() {
+            counts[id as usize] += 1;
+            // spot-check the merged log q against the exact distribution
+            // (shard log q + shard-mass correction must recompose to the
+            // global log-probability)
+            if t % 997 == 0 {
+                let expect = (probs[id as usize] as f64).ln() as f32;
+                let got = rep.scores[t];
+                assert!(
+                    (got - expect).abs() <= 1e-3 * (1.0 + expect.abs()),
+                    "draw {t}: log q {got} vs exact {expect}"
+                );
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 0);
+    let draws = (2 * PER_REQ) as u64;
+    let (stat, df) = chi_square_gof(&counts, &probs, draws);
+    let crit = chi_square_critical(df, 4.5);
+    assert!(
+        stat < crit,
+        "χ²={stat:.1} ≥ crit={crit:.1} (df={df}): merged remote draws diverge from the \
+         exact softmax"
+    );
+}
+
+// -- failure ---------------------------------------------------------------
+
+#[test]
+fn killed_shard_degrades_to_partial_within_the_deadline() {
+    let (n, d) = (300usize, 6usize);
+    let snap = snapshot(n, d, 0xDEAD);
+    let (mut procs, _manifest) = spawn_fleet(&snap, 3, "kill");
+    let deadline = Duration::from_millis(1500);
+    let remote = router(&procs, deadline);
+
+    // SIGKILL shard 1: no goodbye, no FIN until the kernel reaps it
+    procs[1].child.kill().expect("killing shard 1");
+    procs[1].child.wait().expect("reaping shard 1");
+
+    let t0 = Instant::now();
+    let rep = &remote.run_requests(&[Request::TopK { q: q_vec(3, 0, d), k: 8 }])[0];
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < deadline + Duration::from_secs(5),
+        "query took {elapsed:?} — the deadline must bound a dead shard's damage"
+    );
+    assert!(rep.partial, "a dead shard must flag the merged answer partial");
+    assert!(rep.error.is_none(), "degraded, not failed: {:?}", rep.error);
+    assert!(rep.ids.iter().all(|&c| (c as usize) < n));
+    let (live, total) = remote.shard_info();
+    assert_eq!(total, 3);
+    assert!(live < 3, "the dead shard's connection must have been dropped");
+
+    // the fleet keeps answering (partial) on subsequent queries too
+    let rep = &remote.run_requests(&[Request::Mass { q: q_vec(4, 0, d) }])[0];
+    assert!(rep.partial);
+    assert_eq!(rep.scores.len(), 1);
+    assert!(rep.scores[0].is_finite());
+}
+
+// -- generation pinning ----------------------------------------------------
+
+#[test]
+fn mid_push_mixed_generations_refuse_to_merge() {
+    let (n, d) = (200usize, 6usize);
+    let snap = snapshot(n, d, 0xA11E);
+    let (procs, manifest) = spawn_fleet(&snap, 2, "gen");
+    let remote = router(&procs, Duration::from_secs(30));
+
+    let q = q_vec(5, 0, d);
+    let rep = &remote.run_requests(&[Request::TopK { q: q.clone(), k: 6 }])[0];
+    assert!(rep.error.is_none());
+    assert_eq!(rep.generation, 0);
+
+    // push shard 0's own slice back at it as a whole-snapshot live update:
+    // the model is unchanged but its generation becomes 1, so the fleet is
+    // now mid-push (gen 1 + gen 0)
+    let push = |si: usize| {
+        let file = manifest.with_file_name(format!("fleet.midx.shard{si}"));
+        let status = Command::new(env!("CARGO_BIN_EXE_midx"))
+            .args([
+                "push-update",
+                "--addr",
+                &procs[si].addr,
+                "--next",
+                file.to_str().unwrap(),
+            ])
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .status()
+            .expect("running midx push-update");
+        assert!(status.success(), "push-update to shard {si} failed");
+    };
+    push(0);
+
+    let rep = &remote.run_requests(&[Request::TopK { q: q.clone(), k: 6 }])[0];
+    let err = rep.error.as_deref().unwrap_or_else(|| {
+        panic!("mixed-generation merge must refuse, got ids={:?}", rep.ids)
+    });
+    assert!(err.contains("generation"), "refusal must name the cause: {err}");
+    assert!(rep.ids.is_empty(), "a refused merge must carry no data");
+
+    // sampling refuses too (the mass wave already spans both generations)
+    let rep = &remote.run_requests(&[Request::Sample {
+        q: q.clone(),
+        m: 32,
+        seed: 7,
+        fallback: false,
+    }])[0];
+    assert!(rep.error.is_some(), "mixed-generation sample must refuse");
+
+    // once the push reaches the whole fleet, merges resume on the new
+    // generation — and the answers match the pre-push model bit-for-bit
+    // (the pushed snapshot was the same slice)
+    let before = remote.run_requests(&[Request::TopK { q: q.clone(), k: 6 }]);
+    assert!(before[0].error.is_some());
+    push(1);
+    let rep = &remote.run_requests(&[Request::TopK { q, k: 6 }])[0];
+    assert!(rep.error.is_none(), "settled fleet must merge again: {:?}", rep.error);
+    assert_eq!(rep.generation, 1, "merges must pin on the fleet's new generation");
+    assert!(!rep.partial);
+    assert!(!rep.ids.is_empty());
+}
